@@ -1,0 +1,55 @@
+//! Quickstart: quantize a pretrained tiny-LLaMA with SpinQuant and compare
+//! against the FP baseline and naive RTN — the 60-second tour of the API.
+//!
+//! Run (after `make artifacts`):
+//!     cargo run --release --example quickstart
+
+use anyhow::Result;
+use spinquant::config::{Bits, Method, PipelineConfig};
+use spinquant::coordinator::Pipeline;
+use spinquant::model::Manifest;
+use spinquant::runtime::Runtime;
+
+fn main() -> Result<()> {
+    // 1. Load the AOT artifacts (HLO text + weights + corpora), built once
+    //    by `make artifacts`; python never runs again after that.
+    let mut cfg = PipelineConfig::default();
+    cfg.model = "sq-2m".into();
+    cfg.bits = Bits::parse("4-4-4")?; // W4A4KV4 — the paper's hardest setting
+    cfg.eval_windows = Some(24); // small eval slice for a fast demo
+    cfg.task_items = 8;
+    cfg.cayley_iters = 30;
+
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::cpu()?;
+
+    println!("== SpinQuant quickstart: {} at {} ==\n", cfg.model, cfg.bits.label());
+    for method in [Method::Float, Method::Rtn, Method::SpinQuantHad] {
+        let mut c = cfg.clone();
+        c.method = method;
+        if method == Method::Float {
+            c.bits = Bits::fp();
+        }
+        // 2. The pipeline: fold norms -> (learn + merge rotations) ->
+        //    RTN/GPTQ weights -> ready-to-serve quantized model.
+        let pipe = Pipeline::new(&rt, &manifest, c)?;
+        let qm = pipe.quantize()?;
+        // 3. Evaluate: Wiki-syn perplexity + 0-shot^8 accuracy.
+        let res = pipe.evaluate(&qm)?;
+        println!(
+            "{:<18} acc {:>5.1}%   wiki ppl {:>6.2}",
+            method.name(),
+            res.acc_pct(),
+            res.ppl
+        );
+        if let Some(rot) = &qm.rotation {
+            println!(
+                "{:<18} rotation orthonormality error: {:.2e}",
+                "",
+                rot.orthonormality_error()
+            );
+        }
+    }
+    println!("\nExpected ordering: FloatingPoint >= SpinQuant_had > RTN.");
+    Ok(())
+}

@@ -1,0 +1,220 @@
+"""AOT lowering: every L2 graph -> HLO *text* artifact + manifest.json.
+
+HLO text (not `.serialize()`): jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the published
+`xla` 0.1.6 rust crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact zoo per model (DESIGN.md §6) — bit-widths are runtime scalars so a
+single lowered module covers all W-A-KV rows of paper Table 1:
+
+  fwd_eval_{nohad,had}   (B=8,  S=64) -> logits          perplexity engine
+  fwd_task_{nohad,had}   (B=16, S=32) -> logits          zero-shot harness
+  fwd_stats              (B=8,  S=64) -> logits + taps   Figs. 2/3/8 stats
+  cayley_{nohad,had}     (B=4,  S=64) -> loss, dR1, dR2  rotation learning
+  decode_{fp,nohad,had}  (B=1, cache=max_seq) -> logits  serving / Table 6
+
+The manifest records the exact input ABI (names, shapes, dtypes, order) for
+each artifact; rust/src/runtime asserts against it at load time.
+
+Usage: python -m compile.aot --models sq-2m --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+
+EVAL_B, EVAL_S = 8, 64
+TASK_B, TASK_S = 16, 32
+CAYLEY_B, CAYLEY_S = 4, 64
+DECODE_B = 1
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts(cfg: model_mod.Config):
+    """Return {artifact_name: (fn, [input specs], [input names], [output names])}."""
+    names = model_mod.param_order(cfg)
+    shapes = model_mod.param_shapes(cfg)
+    n_params = len(names)
+    pspecs = [_spec(shapes[n]) for n in names]
+
+    def unpack(args):
+        return dict(zip(names, args[:n_params])), args[n_params:]
+
+    arts = {}
+
+    def fwd_factory(had, B, S):
+        def fn(*args):
+            params, rest = unpack(args)
+            tokens, qcfg = rest
+            return (model_mod.forward(params, tokens, cfg, qcfg=qcfg, had=had),)
+
+        specs = pspecs + [_spec((B, S), jnp.int32), _spec((model_mod.QCFG_LEN,))]
+        innames = names + ["tokens", "qcfg"]
+        return fn, specs, innames, ["logits"]
+
+    arts["fwd_eval_nohad"] = fwd_factory(False, EVAL_B, EVAL_S)
+    arts["fwd_eval_had"] = fwd_factory(True, EVAL_B, EVAL_S)
+    arts["fwd_task_nohad"] = fwd_factory(False, TASK_B, TASK_S)
+    arts["fwd_task_had"] = fwd_factory(True, TASK_B, TASK_S)
+
+    def stats_fn(*args):
+        params, rest = unpack(args)
+        (tokens,) = rest
+        logits, caps = model_mod.forward(params, tokens, cfg, capture=True)
+        return (logits, caps["resid_in"], caps["oproj_in"], caps["ffn_in"],
+                caps["down_in"], caps["k"], caps["v"], caps["head_in"])
+
+    arts["fwd_stats"] = (
+        stats_fn,
+        pspecs + [_spec((EVAL_B, EVAL_S), jnp.int32)],
+        names + ["tokens"],
+        ["logits", "resid_in", "oproj_in", "ffn_in", "down_in", "k", "v", "head_in"],
+    )
+
+    def cayley_factory(had):
+        def fn(*args):
+            params, rest = unpack(args)
+            r1, r2s, tokens, qcfg = rest
+            loss, g1, g2 = model_mod.cayley_loss_and_grads(
+                params, r1, r2s, tokens, cfg, qcfg, had
+            )
+            return (loss, g1, g2)
+
+        d, dh, L = cfg.d_model, cfg.d_head, cfg.n_layers
+        specs = pspecs + [
+            _spec((d, d)),
+            _spec((L, dh, dh)),
+            _spec((CAYLEY_B, CAYLEY_S), jnp.int32),
+            _spec((model_mod.QCFG_LEN,)),
+        ]
+        innames = names + ["r1", "r2s", "tokens", "qcfg"]
+        return fn, specs, innames, ["loss", "grad_r1", "grad_r2s"]
+
+    arts["cayley_nohad"] = cayley_factory(False)
+    arts["cayley_had"] = cayley_factory(True)
+
+    def qat_fn(*args):
+        params, rest = unpack(args)
+        tokens, qcfg = rest
+        loss, grads = model_mod.qat_loss_and_grads(params, tokens, cfg, qcfg)
+        return (loss,) + tuple(grads[n] for n in names)
+
+    arts["qat_grads"] = (
+        qat_fn,
+        pspecs + [_spec((CAYLEY_B, CAYLEY_S), jnp.int32), _spec((model_mod.QCFG_LEN,))],
+        names + ["tokens", "qcfg"],
+        ["loss"] + [f"grad_{n}" for n in names],
+    )
+
+    cache_shape = (cfg.n_layers, DECODE_B, cfg.max_seq, cfg.n_heads, cfg.d_head)
+
+    def decode_factory(quant, had):
+        def fn(*args):
+            params, rest = unpack(args)
+            if quant:
+                token, pos, ck, cv, qcfg = rest
+            else:
+                token, pos, ck, cv = rest
+                qcfg = None
+            return model_mod.decode_step(
+                params, cfg, token, pos, ck, cv, qcfg=qcfg, had=had
+            )
+
+        specs = pspecs + [
+            _spec((DECODE_B,), jnp.int32),
+            _spec((), jnp.int32),
+            _spec(cache_shape),
+            _spec(cache_shape),
+        ]
+        innames = names + ["token", "pos", "cache_k", "cache_v"]
+        if quant:
+            specs.append(_spec((model_mod.QCFG_LEN,)))
+            innames.append("qcfg")
+        return fn, specs, innames, ["logits", "cache_k", "cache_v"]
+
+    arts["decode_fp"] = decode_factory(False, False)
+    arts["decode_nohad"] = decode_factory(True, False)
+    arts["decode_had"] = decode_factory(True, True)
+
+    return arts
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="sq-2m")
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default="", help="comma list of artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_path = os.path.join(args.out, "manifest.json")
+    manifest = {"models": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    only = {a for a in args.only.split(",") if a}
+
+    for mname in args.models.split(","):
+        mname = mname.strip()
+        cfg = model_mod.CONFIGS[mname]
+        arts = build_artifacts(cfg)
+        mentry = manifest["models"].setdefault(mname, {})
+        mentry["config"] = {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "d_head": cfg.d_head, "d_ffn": cfg.d_ffn,
+            "rope_theta": cfg.rope_theta, "max_seq": cfg.max_seq,
+            "n_params": cfg.n_params,
+        }
+        mentry["param_order"] = model_mod.param_order(cfg)
+        mentry.setdefault("artifacts", {})
+        mentry["shapes"] = {
+            "eval": [EVAL_B, EVAL_S], "task": [TASK_B, TASK_S],
+            "cayley": [CAYLEY_B, CAYLEY_S], "decode_batch": DECODE_B,
+        }
+        for aname, (fn, specs, innames, outnames) in arts.items():
+            if only and aname not in only:
+                continue
+            fname = f"{mname}_{aname}.hlo.txt"
+            path = os.path.join(args.out, fname)
+            print(f"lowering {fname} ...", flush=True)
+            text = to_hlo_text(jax.jit(fn).lower(*specs))
+            with open(path, "w") as f:
+                f.write(text)
+            mentry["artifacts"][aname] = {
+                "file": fname,
+                "inputs": [
+                    {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+                    for n, s in zip(innames, specs)
+                ],
+                "outputs": outnames,
+            }
+            print(f"  wrote {path} ({len(text)} chars)", flush=True)
+
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Synthetic corpora — the WikiText-2 / C4 stand-ins (DESIGN.md §3).
+
+A seeded order-1 Markov word process with a Zipf-distributed vocabulary and
+light sentence structure: enough statistical regularity for a byte-level
+tiny-LLaMA to learn (ppl well below the uniform-256 baseline), deterministic
+across runs, and two distinct "datasets" (wiki-syn / c4-syn use different
+seeds, vocabulary sizes and Zipf exponents) for the calibration-robustness
+ablation (paper Table 13).
+
+Generated once at build time by pretrain.py; rust/src/data reads the .bin
+byte streams (train/test splits) directly.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+LETTERS = "abcdefghijklmnopqrstuvwxyz"
+
+
+class SynthCorpus:
+    def __init__(self, seed: int, n_words: int = 1500, zipf_a: float = 1.15,
+                 branching: int = 6):
+        self.rng = np.random.RandomState(seed)
+        self.n_words = n_words
+        self.zipf_a = zipf_a
+        self.branching = branching
+        self.words = self._make_vocab()
+        self.trans = self._make_transitions()
+        # Zipf-ish unigram distribution over rank.
+        ranks = np.arange(1, n_words + 1, dtype=np.float64)
+        p = ranks ** (-zipf_a)
+        self.unigram = p / p.sum()
+
+    def _make_vocab(self):
+        words, seen = [], set()
+        while len(words) < self.n_words:
+            ln = self.rng.randint(2, 10)
+            w = "".join(LETTERS[self.rng.randint(0, 26)] for _ in range(ln))
+            if w not in seen:
+                seen.add(w)
+                words.append(w)
+        return words
+
+    def _make_transitions(self):
+        """Sparse successor sets: each word prefers `branching` successors."""
+        trans = self.rng.randint(0, self.n_words, size=(self.n_words, self.branching))
+        return trans
+
+    def generate(self, n_bytes: int) -> bytes:
+        out = []
+        total = 0
+        w = int(self.rng.randint(0, self.n_words))
+        sent_len = 0
+        target_sent = int(self.rng.randint(5, 15))
+        first = True
+        while total < n_bytes:
+            word = self.words[w]
+            if first:
+                word = word.capitalize()
+                first = False
+            piece = word
+            sent_len += 1
+            if sent_len >= target_sent:
+                piece += "."
+                sent_len = 0
+                target_sent = int(self.rng.randint(5, 15))
+                first = True
+                piece += "\n" if self.rng.rand() < 0.15 else " "
+            else:
+                piece += " "
+            out.append(piece)
+            total += len(piece)
+            # 85%: Markov successor; 15%: fresh Zipf draw (keeps entropy up).
+            if self.rng.rand() < 0.85:
+                w = int(self.trans[w, self.rng.randint(0, self.branching)])
+            else:
+                w = int(self.rng.choice(self.n_words, p=self.unigram))
+        return "".join(out).encode("ascii")[:n_bytes]
+
+
+CORPORA = {
+    # name: (seed, n_words, zipf_a, branching)
+    "wiki-syn": (1001, 1500, 1.15, 6),
+    "c4-syn": (2002, 2200, 1.05, 9),
+}
+
+
+def build_corpus(name: str, train_bytes: int = 393216, test_bytes: int = 49152):
+    seed, n_words, zipf_a, branching = CORPORA[name]
+    c = SynthCorpus(seed, n_words, zipf_a, branching)
+    train = c.generate(train_bytes)
+    test = c.generate(test_bytes)
+    return train, test

@@ -1,0 +1,39 @@
+"""L1 Pallas kernels for SpinQuant (build-time only; interpret=True on CPU).
+
+`USE_PALLAS=0` in the environment swaps every kernel for its pure-jnp oracle
+in `ref.py` — useful for fast artifact builds; pytest validates both paths
+against each other so the swap is behaviour-preserving.
+"""
+
+import os
+
+from . import ref  # noqa: F401
+
+USE_PALLAS = os.environ.get("USE_PALLAS", "1") != "0"
+
+if USE_PALLAS:
+    from .fake_quant import fake_quant, fake_quant_ste  # noqa: F401
+    from .hadamard import fwht  # noqa: F401
+    from .qmatmul import qmatmul, quantize_cols_sym, quantize_rows  # noqa: F401
+else:  # pragma: no cover - exercised via USE_PALLAS=0 builds
+    import jax
+
+    def fake_quant(x, bits, symmetric=0.0, clip_ratio=1.0, interpret=True):
+        return ref.fake_quant_ref(x, bits, axis=-1, symmetric=symmetric, clip_ratio=clip_ratio)
+
+    @jax.custom_vjp
+    def fake_quant_ste(x, bits, symmetric, clip_ratio):
+        return fake_quant(x, bits, symmetric, clip_ratio)
+
+    def _ste_fwd(x, bits, symmetric, clip_ratio):
+        return fake_quant_ste(x, bits, symmetric, clip_ratio), None
+
+    def _ste_bwd(_, g):
+        return g, None, None, None
+
+    fake_quant_ste.defvjp(_ste_fwd, _ste_bwd)
+
+    def fwht(x, interpret=True):
+        return ref.fwht_ref(x)
+
+    from .qmatmul import qmatmul, quantize_cols_sym, quantize_rows  # noqa: F401

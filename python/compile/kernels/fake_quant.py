@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: fused fake-quantization (quantize-dequantize).
+
+The compute hot-spot of every quantized forward pass: for each token row,
+reduce min/max, derive scale/zero-point, round, clamp, dequantize — one
+fused pass over a VMEM-resident tile.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the CUDA implementations in
+QuaRot/Atom do a warp reduction + elementwise pass in shared memory; here
+BlockSpec streams `(BLOCK_ROWS, n)` row tiles HBM->VMEM and the VPU does the
+row reduction and the elementwise quant math in one pass — no second trip to
+HBM for the scales.  Runs with `interpret=True` (CPU PJRT cannot execute
+Mosaic custom-calls), so correctness is validated here and on-TPU efficiency
+is argued structurally (one HBM round-trip per tile).
+
+`bits`, `symmetric` and `clip_ratio` are runtime scalars (SMEM operands) so
+one lowered artifact serves every W-A-KV configuration of paper Table 1;
+`bits >= 16` is a pass-through.
+
+A custom-vjp straight-through estimator (`fake_quant_ste`) wraps the kernel
+for the Cayley-SGD gradient artifact: dL/dx passes through the rounding,
+which is exactly what makes paper Eq. 5 non-zero only under quantization.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_ROWS = 128
+
+
+def _fake_quant_kernel(cfg_ref, x_ref, o_ref):
+    """One (BLOCK_ROWS, n) tile: rowwise min/max -> scale/zp -> q -> dq."""
+    x = x_ref[...]
+    bits = cfg_ref[0]
+    symmetric = cfg_ref[1]
+    clip_ratio = cfg_ref[2]
+
+    xmin = jnp.min(x, axis=-1, keepdims=True) * clip_ratio
+    xmax = jnp.max(x, axis=-1, keepdims=True) * clip_ratio
+
+    # Asymmetric path (paper Eq. 1, beta = min).
+    n_asym = jnp.exp2(bits) - 1.0
+    scale_a = jnp.maximum((xmax - xmin) / n_asym, ref.EPS)
+    dq_a = jnp.clip(jnp.round((x - xmin) / scale_a), 0.0, n_asym) * scale_a + xmin
+
+    # Symmetric path (beta = 0).
+    absmax = jnp.maximum(jnp.abs(xmin), jnp.abs(xmax))
+    n_sym = jnp.exp2(bits - 1.0) - 1.0
+    scale_s = jnp.maximum(absmax / n_sym, ref.EPS)
+    dq_s = jnp.clip(jnp.round(x / scale_s), -n_sym - 1.0, n_sym) * scale_s
+
+    dq = jnp.where(symmetric > 0.5, dq_s, dq_a)
+    o_ref[...] = jnp.where(bits >= 16.0, x, dq)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fake_quant_2d(x, bits, symmetric, clip_ratio, interpret=True):
+    """Pallas fake-quant over a 2D (rows, n) array, per-row groups."""
+    rows, n = x.shape
+    block_rows = min(BLOCK_ROWS, rows)
+    # Grid over row tiles; pallas masks the remainder tile.
+    grid = (pl.cdiv(rows, block_rows),)
+    cfg = jnp.stack(
+        [
+            jnp.asarray(bits, jnp.float32),
+            jnp.asarray(symmetric, jnp.float32),
+            jnp.asarray(clip_ratio, jnp.float32),
+        ]
+    )
+    return pl.pallas_call(
+        _fake_quant_kernel,
+        grid=grid,
+        in_specs=[
+            # cfg scalars: every tile reads the same 3-vector.
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        interpret=interpret,
+    )(cfg, x)
+
+
+def fake_quant(x, bits, symmetric=0.0, clip_ratio=1.0, interpret=True):
+    """Fake-quantize `x` along its last axis (per-token groups).
+
+    Works for any rank: collapses leading dims to rows, calls the 2D kernel.
+    """
+    shape = x.shape
+    y = fake_quant_2d(
+        x.reshape(-1, shape[-1]), bits, symmetric, clip_ratio, interpret=interpret
+    )
+    return y.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator wrapper for the Cayley gradient graph.
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def fake_quant_ste(x, bits, symmetric, clip_ratio):
+    return fake_quant(x, bits, symmetric, clip_ratio)
+
+
+def _ste_fwd(x, bits, symmetric, clip_ratio):
+    return fake_quant_ste(x, bits, symmetric, clip_ratio), None
+
+
+def _ste_bwd(_, g):
+    # Pass-through: d(fake_quant)/dx := I. No gradient to the quant config.
+    return g, None, None, None
+
+
+fake_quant_ste.defvjp(_ste_fwd, _ste_bwd)

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: fast Walsh-Hadamard transform (the online R3/R4 rotations).
+
+SpinQuant_had applies two *online* Hadamard rotations per block: R3 on the
+per-head queries/keys (protects 4-bit KV-cache quantization) and R4 on the
+input of `down_proj` (kills the MLP activation outliers).  QuaRot/QuIP# do
+this with a CUDA warp-butterfly kernel; the TPU rethink (DESIGN.md
+§Hardware-Adaptation) keeps a `(BLOCK_ROWS, n)` tile resident in VMEM and
+runs the log2(n) butterfly stages as reshaped VPU add/sub sweeps — the data
+makes exactly one HBM round-trip, so the op is bandwidth-bound like the CUDA
+original.
+
+The transform is the *normalized Sylvester* Hadamard (symmetric, involutive,
+orthonormal): H = H^T = H^{-1}, so merging the inverse into a weight matrix
+is the same FWHT applied to the weight's input axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 128
+
+
+def _fwht_kernel(x_ref, o_ref, *, n):
+    """Butterfly stages over a VMEM tile; n static so the loop unrolls."""
+    rows = x_ref.shape[0]
+    x = x_ref[...]
+    h = 1
+    while h < n:
+        x = x.reshape(rows, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2).reshape(rows, n)
+        h *= 2
+    o_ref[...] = x * (1.0 / (n**0.5))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fwht_2d(x, interpret=True):
+    rows, n = x.shape
+    assert n & (n - 1) == 0, f"FWHT size must be a power of two, got {n}"
+    block_rows = min(BLOCK_ROWS, rows)
+    grid = (pl.cdiv(rows, block_rows),)
+    return pl.pallas_call(
+        functools.partial(_fwht_kernel, n=n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, n), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def fwht(x, interpret=True):
+    """Normalized FWHT along the last axis of an arbitrary-rank array."""
+    shape = x.shape
+    return fwht_2d(x.reshape(-1, shape[-1]), interpret=interpret).reshape(shape)

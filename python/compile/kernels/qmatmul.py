@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: tiled quantized matmul (dequant-on-load GEMM).
+
+The paper's W4A4 inference multiplies int4 activations by int4 weights.  On
+GPU that is a WMMA int4 tensor-core GEMM; the TPU rethink (DESIGN.md
+§Hardware-Adaptation) instead streams 4-bit-footprint tiles HBM->VMEM,
+dequantizes on load inside VMEM, and feeds the MXU systolic array at its
+native float precision: the memory system sees quantized data, the MXU sees
+floats.  BlockSpec plays the role of the CUDA threadblock tiling.
+
+Here the "quantized" operands are (q, scale, zero) triples with q stored as
+f32 integer values (interpret mode / CPU PJRT has no packed-int4 dtype); the
+packing math lives in rust/src/quant (the runtime side).  The kernel fuses:
+
+    out[bm, bn] = sum_k (qx*sx+zx)[bm, bk] @ (qw*sw)[bk, bn]
+
+accumulating into the revisited output tile across the innermost k grid axis
+(the output block index map is k-independent, the standard Pallas
+multiple-visit accumulation pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BM, BK, BN = 128, 128, 128
+
+
+def _qmm_kernel(qx_ref, sx_ref, zx_ref, qw_ref, sw_ref, o_ref, *, nk):
+    """One (bm, bn) output tile; k is the innermost grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Dequant-on-load: activations per-row asym, weights per-column sym.
+    x = qx_ref[...] * sx_ref[...] + zx_ref[...]
+    w = qw_ref[...] * sw_ref[...]
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def qmatmul(qx, sx, zx, qw, sw, interpret=True):
+    """(m,k) quantized activations x (k,n) quantized weights -> (m,n) f32.
+
+    qx: integer-valued f32 codes; sx, zx: (m, 1) per-row scale / zero-point.
+    qw: integer-valued f32 codes; sw: (1, n) per-column scale.
+    """
+    m, k = qx.shape
+    k2, n = qw.shape
+    assert k == k2
+    bm, bk, bn = min(BM, m), min(BK, k), min(BN, n)
+
+    # Zero-pad to tile multiples: interpret mode pads out-of-bounds loads
+    # with NaN, which would poison the k-axis accumulation. Zero codes with
+    # zero scales/zeros contribute exactly 0 to the dot product.
+    def _pad(a, mults):
+        pads = [(0, -dim % mult) for dim, mult in zip(a.shape, mults)]
+        return jnp.pad(a, pads) if any(p[1] for p in pads) else a
+
+    qx, sx, zx = _pad(qx, (bm, bk)), _pad(sx, (bm, 1)), _pad(zx, (bm, 1))
+    qw, sw = _pad(qw, (bk, bn)), _pad(sw, (1, bn))
+    mp, kp = qx.shape
+    np_ = qw.shape[1]
+
+    nk = pl.cdiv(kp, bk)
+    grid = (pl.cdiv(mp, bm), pl.cdiv(np_, bn), nk)
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(qx, sx, zx, qw, sw)
+    return out[:m, :n]
+
+
+def quantize_rows(x, bits):
+    """Produce (q, scale, zero) per-row asymmetric codes for qmatmul."""
+    n_levels = 2.0 ** bits - 1.0
+    xmin = jnp.min(x, axis=-1, keepdims=True)
+    xmax = jnp.max(x, axis=-1, keepdims=True)
+    scale = jnp.maximum((xmax - xmin) / n_levels, 1e-8)
+    q = jnp.clip(jnp.round((x - xmin) / scale), 0.0, n_levels)
+    return q, scale, xmin
+
+
+def quantize_cols_sym(w, bits):
+    """Produce (q, scale) per-column symmetric codes for qmatmul."""
+    n_sym = 2.0 ** (bits - 1.0) - 1.0
+    absmax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    scale = jnp.maximum(absmax / n_sym, 1e-8)
+    q = jnp.clip(jnp.round(w / scale), -n_sym - 1.0, n_sym)
+    return q, scale

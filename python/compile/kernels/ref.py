@@ -1,0 +1,123 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every kernel in this package has a `*_ref` twin here. python/tests asserts
+allclose between the Pallas (interpret-mode) kernels and these oracles over
+hypothesis-generated shape/value sweeps; the same formulas are re-implemented
+in rust/src/quant and rust/src/hadamard and cross-checked by integration
+tests through the PJRT runtime.
+
+Quantization formulation (paper Eq. 1):
+    symmetric:   alpha = max|x| / (2^(N-1) - 1),  beta = 0
+    asymmetric:  alpha = (max x - min x) / (2^N - 1),  beta = min x
+    x_q = alpha * round((x - beta) / alpha) + beta
+
+Bit-widths are *runtime scalars* so one AOT artifact serves every W-A-KV
+configuration in Table 1: bits >= 16 means pass-through (no quantization).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def fake_quant_ref(
+    x,
+    bits,
+    axis: int = -1,
+    symmetric=False,
+    clip_ratio=1.0,
+):
+    """Quantize-dequantize `x` along `axis` (per-token / per-channel groups).
+
+    Args:
+      x: float array.
+      bits: scalar (python or traced). bits >= 16 -> identity.
+      axis: reduction axis defining the quantization group (e.g. -1 for
+        per-token quantization of (batch, seq, d) activations).
+      symmetric: scalar bool/0-1 flag (may be traced). True -> symmetric.
+      clip_ratio: scalar in (0, 1]; scales the min/max range (Atom-style
+        clipping, Table 12).
+
+    Returns: dequantized array, same shape/dtype as x.
+    """
+    bits = jnp.asarray(bits, dtype=jnp.float32)
+    symmetric = jnp.asarray(symmetric, dtype=jnp.float32)
+    clip_ratio = jnp.asarray(clip_ratio, dtype=jnp.float32)
+
+    xmin = jnp.min(x, axis=axis, keepdims=True) * clip_ratio
+    xmax = jnp.max(x, axis=axis, keepdims=True) * clip_ratio
+
+    # Asymmetric branch.
+    n_asym = jnp.exp2(bits) - 1.0
+    scale_a = jnp.maximum((xmax - xmin) / n_asym, EPS)
+    q_a = jnp.round((x - xmin) / scale_a)
+    q_a = jnp.clip(q_a, 0.0, n_asym)
+    dq_a = q_a * scale_a + xmin
+
+    # Symmetric branch.
+    absmax = jnp.maximum(jnp.abs(xmin), jnp.abs(xmax))
+    n_sym = jnp.exp2(bits - 1.0) - 1.0
+    scale_s = jnp.maximum(absmax / n_sym, EPS)
+    q_s = jnp.round(x / scale_s)
+    q_s = jnp.clip(q_s, -n_sym - 1.0, n_sym)
+    dq_s = q_s * scale_s
+
+    dq = jnp.where(symmetric > 0.5, dq_s, dq_a)
+    return jnp.where(bits >= 16.0, x, dq).astype(x.dtype)
+
+
+def fwht_ref(x):
+    """Normalized fast Walsh-Hadamard transform along the last axis.
+
+    x.shape[-1] must be a power of two. Equivalent to x @ H_n / sqrt(n)
+    with H_n the Sylvester Hadamard matrix (symmetric, H H^T = n I), so the
+    normalized transform is orthonormal and an involution.
+    """
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"FWHT size must be a power of two, got {n}"
+    orig_shape = x.shape
+    x = x.reshape(-1, n)
+    h = 1
+    while h < n:
+        x = x.reshape(-1, n // (2 * h), 2, h)
+        a = x[:, :, 0, :]
+        b = x[:, :, 1, :]
+        x = jnp.stack([a + b, a - b], axis=2).reshape(-1, n)
+        h *= 2
+    return (x / jnp.sqrt(jnp.asarray(n, x.dtype))).reshape(orig_shape)
+
+
+def hadamard_matrix_ref(n):
+    """Dense normalized Sylvester Hadamard matrix (for cross-checks)."""
+    assert n & (n - 1) == 0
+    H = jnp.ones((1, 1), dtype=jnp.float32)
+    while H.shape[0] < n:
+        H = jnp.concatenate(
+            [jnp.concatenate([H, H], axis=1), jnp.concatenate([H, -H], axis=1)],
+            axis=0,
+        )
+    return H / jnp.sqrt(jnp.asarray(n, jnp.float32))
+
+
+def qmatmul_ref(x, w, x_bits, w_bits, x_symmetric=False, w_symmetric=True):
+    """Quantized matmul oracle: fake-quant x per-token (rows) and w
+    per-output-channel, then matmul.  x: (m, k), w: (k, n) -> (m, n).
+    """
+    xq = fake_quant_ref(x, x_bits, axis=-1, symmetric=x_symmetric)
+    # Per-output-channel weight quant: group along k (axis 0 of w).
+    wq = fake_quant_ref(w, w_bits, axis=0, symmetric=w_symmetric)
+    return xq @ wq
+
+
+def kurtosis_ref(x, axis=None):
+    """Pearson kurtosis (not excess): E[(x-mu)^4] / E[(x-mu)^2]^2.
+
+    ~3 for Gaussian; large values indicate outliers (paper Fig. 3a).
+    """
+    mu = jnp.mean(x, axis=axis, keepdims=True)
+    c = x - mu
+    m2 = jnp.mean(c**2, axis=axis)
+    m4 = jnp.mean(c**4, axis=axis)
+    return m4 / jnp.maximum(m2**2, EPS)

@@ -1,0 +1,514 @@
+"""L2: tiny-LLaMA in JAX with SpinQuant rotation/quantization insertion points.
+
+Architecture class matches LLaMA (pre-norm RMSNorm, RoPE, SwiGLU, causal
+attention, untied head) so the paper's rotational-invariance algebra holds
+exactly; sizes are scaled to the 1-core CPU testbed (see DESIGN.md §3).
+
+One forward function serves every artifact variant:
+
+* quantization config is a vector of *runtime scalars* (bits >= 16 means
+  pass-through), so a single lowered module covers all W-A-KV settings of
+  paper Table 1 — weights arrive already quantize-dequantized (RTN/GPTQ
+  happen offline in rust), activations/KV are fake-quantized in-graph via
+  the L1 Pallas kernel;
+* `had=True` inserts the online R3 (q/k head-wise) and R4 (down_proj input)
+  Hadamard rotations — `SpinQuant_had` / QuaRot inference path. The matching
+  H-merge of `w_down` happens offline in rust (or in-graph for the Cayley
+  artifact);
+* `rot=(R1, R2_stack)` rotates weights *in-graph* (differentiably) — the
+  Cayley-SGD loss/grad artifact optimizes R1/R2 through this path with STE
+  fake-quant, paper Eq. 2-5;
+* `capture=True` additionally returns the residual-read activations and
+  KV tensors for the kurtosis / distribution / SNR analyses (Figs. 2, 3, 8).
+
+Python runs only at build time: `aot.py` lowers everything here to HLO text
+that the rust runtime loads via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fake_quant_ste, fwht
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class Config:
+    name: str
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_head: int = 32
+    d_ffn: int = 512
+    rope_theta: float = 10000.0
+    max_seq: int = 128
+
+    @property
+    def n_params(self) -> int:
+        d, f = self.d_model, self.d_ffn
+        per_layer = 4 * d * d + 3 * d * f + 2 * d
+        return self.vocab * d * 2 + self.n_layers * per_layer + d
+
+
+# The model zoo (DESIGN.md §3). All dims are powers of two so Sylvester
+# Hadamard matrices exist for R1 (d_model), R2/R3 (d_head), R4 (d_ffn).
+CONFIGS = {
+    "sq-2m": Config("sq-2m", d_model=128, n_layers=4, n_heads=4, d_head=32, d_ffn=512),
+    "sq-4m": Config("sq-4m", d_model=256, n_layers=4, n_heads=4, d_head=64, d_ffn=1024),
+    "sq-9m": Config("sq-9m", d_model=256, n_layers=8, n_heads=8, d_head=32, d_ffn=1024),
+}
+
+
+def param_order(cfg: Config):
+    """Canonical parameter ordering — the artifact input ABI.
+
+    rust/src/model/mod.rs mirrors this order; aot.py also writes it into
+    artifacts/manifest.json so the rust side can assert agreement.
+    """
+    names = ["emb"]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        names += [
+            p + "attn_norm",
+            p + "wq",
+            p + "wk",
+            p + "wv",
+            p + "wo",
+            p + "ffn_norm",
+            p + "wgate",
+            p + "wup",
+            p + "wdown",
+        ]
+    names += ["final_norm", "head"]
+    return names
+
+
+def param_shapes(cfg: Config):
+    d, f, v = cfg.d_model, cfg.d_ffn, cfg.vocab
+    hd = cfg.n_heads * cfg.d_head
+    shapes = {"emb": (v, d), "final_norm": (d,), "head": (d, v)}
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        shapes[p + "attn_norm"] = (d,)
+        shapes[p + "wq"] = (d, hd)
+        shapes[p + "wk"] = (d, hd)
+        shapes[p + "wv"] = (d, hd)
+        shapes[p + "wo"] = (hd, d)
+        shapes[p + "ffn_norm"] = (d,)
+        shapes[p + "wgate"] = (d, f)
+        shapes[p + "wup"] = (d, f)
+        shapes[p + "wdown"] = (f, d)
+    return shapes
+
+
+# ---------------------------------------------------------------------------
+# Quantization config vector (runtime scalars). Index ABI shared with rust.
+# ---------------------------------------------------------------------------
+# [0] a_bits   [1] kv_bits  [2] a_sym   [3] kv_sym  [4] a_clip  [5] kv_clip
+# [6] w_bits   [7] w_sym    — in-graph weight fake-quant; w_bits=16 (the
+# default) is exact pass-through because RTN/GPTQ weight quantization
+# happens offline in rust. Only the LLM-QAT baseline trains with w_bits<16.
+QCFG_LEN = 8
+
+
+def qcfg_vector(a_bits=16.0, kv_bits=16.0, a_sym=0.0, kv_sym=0.0, a_clip=1.0,
+                kv_clip=1.0, w_bits=16.0, w_sym=1.0):
+    return jnp.asarray(
+        [a_bits, kv_bits, a_sym, kv_sym, a_clip, kv_clip, w_bits, w_sym],
+        jnp.float32,
+    )
+
+
+def _aq(x, qcfg):
+    """Activation fake-quant (per-token, last axis) with STE."""
+    return fake_quant_ste(x, qcfg[0], qcfg[2], qcfg[4])
+
+
+def _kvq(x, qcfg):
+    """KV-cache fake-quant (per-token per-head, last axis = d_head) with STE."""
+    return fake_quant_ste(x, qcfg[1], qcfg[3], qcfg[5])
+
+
+def _wq(w, qcfg):
+    """Weight fake-quant, per-output-channel groups (reduce over the input
+    dim), with STE — used by the in-graph QAT path; pass-through at 16."""
+    return fake_quant_ste(w.T, qcfg[6], qcfg[7], 1.0).T
+
+
+# ---------------------------------------------------------------------------
+# Differentiable online Hadamard (custom vjp: H is symmetric orthogonal, so
+# the pullback of x |-> fwht(x) is fwht itself; avoids AD through pallas).
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def fwht_diff(x):
+    return fwht(x)
+
+
+def _fwht_fwd(x):
+    return fwht_diff(x), None
+
+
+def _fwht_bwd(_, g):
+    return (fwht_diff(g),)
+
+
+fwht_diff.defvjp(_fwht_fwd, _fwht_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, gamma, eps=1e-5):
+    rms = jnp.sqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return x / rms * gamma
+
+
+def rope_angles(cfg: Config, positions):
+    """positions: (S,) int32 -> cos/sin of shape (S, d_head/2)."""
+    half = cfg.d_head // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, dh); rotate consecutive pairs."""
+    b, s, h, dh = x.shape
+    x = x.reshape(b, s, h, dh // 2, 2)
+    x0, x1 = x[..., 0], x[..., 1]
+    c = cos[None, :, None, :]
+    sn = sin[None, :, None, :]
+    y0 = x0 * c - x1 * sn
+    y1 = x0 * sn + x1 * c
+    return jnp.stack([y0, y1], axis=-1).reshape(b, s, h, dh)
+
+
+def _rotate_weights_ingraph(params, cfg: Config, r1, r2s, had: bool):
+    """Differentiable R1/R2 (and constant R4-merge when had) weight rotation.
+
+    Mirrors the offline merge in rust/src/rotation: input-side reads get
+    R1^T W, output-side writes get W R1, W_v gets R2 per head on its output,
+    W_o gets R2^T per head on its input, w_down additionally gets the
+    Hadamard merge on its input axis when the online R4 is active.
+    Assumes RMSNorm scales have been folded (gamma == 1).
+    """
+    out = dict(params)
+    out["emb"] = params["emb"] @ r1
+    out["head"] = r1.T @ params["head"]
+    h, dh = cfg.n_heads, cfg.d_head
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        r2 = r2s[i]
+        out[p + "wq"] = r1.T @ params[p + "wq"]
+        out[p + "wk"] = r1.T @ params[p + "wk"]
+        wv = (r1.T @ params[p + "wv"]).reshape(cfg.d_model, h, dh)
+        out[p + "wv"] = jnp.einsum("dhk,kj->dhj", wv, r2).reshape(cfg.d_model, h * dh)
+        wo = params[p + "wo"].reshape(h, dh, cfg.d_model)
+        wo = jnp.einsum("jk,hkd->hjd", r2.T, wo).reshape(h * dh, cfg.d_model)
+        out[p + "wo"] = wo @ r1
+        out[p + "wgate"] = r1.T @ params[p + "wgate"]
+        out[p + "wup"] = r1.T @ params[p + "wup"]
+        wdown = params[p + "wdown"]
+        if had:
+            # H-merge on the input axis (H symmetric => H @ w == fwht rows).
+            wdown = fwht_diff(wdown.T).T
+        out[p + "wdown"] = wdown @ r1
+    return out
+
+
+def forward(
+    params: dict,
+    tokens,
+    cfg: Config,
+    qcfg=None,
+    had: bool = False,
+    rot: Optional[tuple] = None,
+    capture: bool = False,
+):
+    """Full-sequence forward -> logits (B, S, V).
+
+    qcfg: (QCFG_LEN,) runtime-scalar vector or None (no quant ops at all).
+    had:  online R3 (q/k) + R4 (down input) Hadamard rotations in-graph.
+    rot:  optional (R1, R2_stack) for differentiable in-graph rotation.
+    capture: also return dict of residual-read activations + kv for stats.
+    """
+    if rot is not None:
+        params = _rotate_weights_ingraph(params, cfg, rot[0], rot[1], had)
+
+    B, S = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params["emb"][tokens]
+    cos, sin = rope_angles(cfg, jnp.arange(S))
+    mask = jnp.tril(jnp.ones((S, S), jnp.float32))
+    neg = jnp.asarray(-1e9, jnp.float32)
+
+    caps = {"resid_in": [], "oproj_in": [], "ffn_in": [], "down_in": [], "k": [], "v": []}
+    head_in = None
+
+    def aq(t):
+        return _aq(t, qcfg) if qcfg is not None else t
+
+    def kvq(t):
+        return _kvq(t, qcfg) if qcfg is not None else t
+
+    def wq(t):
+        return _wq(t, qcfg) if qcfg is not None else t
+
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        hsrc = rmsnorm(x, params[p + "attn_norm"])
+        if capture:
+            caps["resid_in"].append(hsrc)
+        hq = aq(hsrc)
+        q = (hq @ wq(params[p + "wq"])).reshape(B, S, h, dh)
+        k = (hq @ wq(params[p + "wk"])).reshape(B, S, h, dh)
+        v = (hq @ wq(params[p + "wv"])).reshape(B, S, h, dh)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        if had:
+            # R3: head-wise online Hadamard on q and k; cancels in q k^T but
+            # Gaussianizes the cached k for low-bit KV quantization.
+            q = fwht_diff(q)
+            k = fwht_diff(k)
+        if capture:
+            caps["k"].append(k)
+            caps["v"].append(v)
+        k = kvq(k)
+        v = kvq(v)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(B, S, h * dh)
+        if capture:
+            caps["oproj_in"].append(o)
+        oq = aq(o)
+        x = x + oq @ wq(params[p + "wo"])
+
+        h2 = rmsnorm(x, params[p + "ffn_norm"])
+        if capture:
+            caps["ffn_in"].append(h2)
+        h2q = aq(h2)
+        g = h2q @ wq(params[p + "wgate"])
+        u = h2q @ wq(params[p + "wup"])
+        m = jax.nn.silu(g) * u
+        if had:
+            m = fwht_diff(m)  # R4: online Hadamard before down_proj.
+        if capture:
+            caps["down_in"].append(m)
+        mq = aq(m)
+        x = x + mq @ wq(params[p + "wdown"])
+
+    hf = rmsnorm(x, params["final_norm"])
+    if capture:
+        head_in = hf
+    logits = aq(hf) @ wq(params["head"])
+
+    if capture:
+        stacked = {name: jnp.stack(vals) for name, vals in caps.items()}
+        stacked["head_in"] = head_in
+        return logits, stacked
+    return logits
+
+
+def next_token_loss(logits, tokens):
+    """Mean cross-entropy of logits[:, :-1] predicting tokens[:, 1:]."""
+    logp = jax.nn.log_softmax(logits[:, :-1, :], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def cayley_loss_and_grads(params, r1, r2s, tokens, cfg: Config, qcfg, had: bool):
+    """Paper Eq. 2: L_Q(R1, R2 | W, X) and its gradients on the rotations.
+
+    Weights stay full precision (Table 3: "Cayley on 16-4-KV" wins);
+    activations/KV are STE-fake-quantized in-graph. Returns
+    (loss, dL/dR1, dL/dR2_stack); the Stiefel retraction (Cayley transform)
+    is applied by the rust coordinator (rust/src/cayley).
+    """
+
+    def loss_fn(r1_, r2s_):
+        logits = forward(params, tokens, cfg, qcfg=qcfg, had=had, rot=(r1_, r2s_))
+        return next_token_loss(logits, tokens)
+
+    loss, grads = jax.value_and_grad(loss_fn, argnums=(0, 1))(r1, r2s)
+    return loss, grads[0], grads[1]
+
+
+def qat_loss_and_grads(params, tokens, cfg: Config, qcfg):
+    """Loss + STE gradients w.r.t. *all weights* of the fully fake-quantized
+    network (weights via qcfg[6:8], activations/KV via qcfg[0:6]).
+
+    This powers the LLM-QAT baseline (rust/src/llmqat drives Adam over these
+    gradients) — quantization-aware training, the strongest non-rotation
+    baseline in paper Table 1.
+    """
+
+    def loss_fn(p):
+        logits = forward(p, tokens, cfg, qcfg=qcfg)
+        return next_token_loss(logits, tokens)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    return loss, grads
+
+
+# ---------------------------------------------------------------------------
+# Single-token decode with a quantized KV-cache (serving path, Table 6/Fig 7)
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: Config, token, pos, cache_k, cache_v, qcfg=None, had=False):
+    """One decode step.
+
+    token: (B,) int32; pos: scalar int32 (0-based position of `token`).
+    cache_k/v: (L, B, max_seq, H, dh) — already quantize-dequantized values.
+    Returns (logits (B, V), new_cache_k, new_cache_v).
+    """
+    B = token.shape[0]
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params["emb"][token]  # (B, D)
+    cos, sin = rope_angles(cfg, pos[None])  # (1, dh/2)
+    # Mask over cache positions: attend to <= pos.
+    idx = jnp.arange(cfg.max_seq)
+    attend = (idx <= pos).astype(jnp.float32)  # (max_seq,)
+    neg = jnp.asarray(-1e9, jnp.float32)
+
+    def aq(t):
+        return _aq(t, qcfg) if qcfg is not None else t
+
+    def kvq(t):
+        return _kvq(t, qcfg) if qcfg is not None else t
+
+    def wq(t):
+        return _wq(t, qcfg) if qcfg is not None else t
+
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        hsrc = rmsnorm(x, params[p + "attn_norm"])
+        hq = aq(hsrc)
+        q = (hq @ wq(params[p + "wq"])).reshape(B, 1, h, dh)
+        k = (hq @ wq(params[p + "wk"])).reshape(B, 1, h, dh)
+        v = (hq @ wq(params[p + "wv"])).reshape(B, 1, h, dh)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        if had:
+            q = fwht_diff(q)
+            k = fwht_diff(k)
+        k = kvq(k)
+        v = kvq(v)
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k[None], (i, 0, pos, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v[None], (i, 0, pos, 0, 0))
+        ck = cache_k[i]  # (B, max_seq, h, dh)
+        cv = cache_v[i]
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, ck) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        att = jnp.where(attend[None, None, None, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, cv).reshape(B, h * dh)
+        x = x + aq(o) @ wq(params[p + "wo"])
+
+        h2 = rmsnorm(x, params[p + "ffn_norm"])
+        h2q = aq(h2)
+        m = jax.nn.silu(h2q @ wq(params[p + "wgate"])) * (h2q @ wq(params[p + "wup"]))
+        if had:
+            m = fwht_diff(m)
+        x = x + aq(m) @ wq(params[p + "wdown"])
+
+    hf = rmsnorm(x, params["final_norm"])
+    logits = aq(hf) @ wq(params["head"])
+    return logits, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# Initialization (with planted outlier basis — DESIGN.md §3)
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: Config, outlier_channels: int = 8, outlier_scale: float = 8.0):
+    """Initialize with a heavy-tailed per-channel residual basis.
+
+    Short CPU pretraining cannot develop LLaMA's emergent outlier channels,
+    so we *train in an outlier basis from step 0*: every write into the
+    residual stream (emb, wo, wdown output columns) is scaled per-channel,
+    with `outlier_channels` channels boosted by ~`outlier_scale`. Training
+    proceeds normally in this basis, so the final function is genuine while
+    activation kurtosis matches the phenomenon rotation must fix (Fig. 2/3).
+    A few d_ffn and kv channels are boosted too (targets for R4 / R2-R3).
+    """
+    keys = jax.random.split(key, 4 + cfg.n_layers * 9)
+    d, f, v = cfg.d_model, cfg.d_ffn, cfg.vocab
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def scale_vec(k, n, n_out, boost):
+        s = jnp.ones((n,))
+        idx = jax.random.choice(k, n, (n_out,), replace=False)
+        mag = boost * (0.75 + 0.5 * jax.random.uniform(k, (n_out,)))
+        return s.at[idx].set(mag)
+
+    d_scale = scale_vec(keys[0], d, outlier_channels, outlier_scale)
+    f_scale = scale_vec(keys[1], f, max(2, outlier_channels // 2), outlier_scale * 0.5)
+    kv_scale = scale_vec(keys[2], h * dh, max(2, outlier_channels // 2), outlier_scale * 0.4)
+
+    def norm(k, shape, gain=1.0):
+        fan_in = shape[0]
+        return gain * jax.random.normal(k, shape) / jnp.sqrt(jnp.asarray(fan_in, jnp.float32))
+
+    params = {}
+    ki = 3
+    params["emb"] = jax.random.normal(keys[ki], (v, d)) * 0.02 * d_scale[None, :]
+    ki += 1
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        params[p + "attn_norm"] = jnp.ones((d,))
+        params[p + "wq"] = norm(keys[ki], (d, h * dh)); ki += 1
+        params[p + "wk"] = norm(keys[ki], (d, h * dh)) * kv_scale[None, :]; ki += 1
+        params[p + "wv"] = norm(keys[ki], (d, h * dh)) * kv_scale[None, :]; ki += 1
+        params[p + "wo"] = norm(keys[ki], (h * dh, d), 0.5) * d_scale[None, :]; ki += 1
+        params[p + "ffn_norm"] = jnp.ones((d,))
+        params[p + "wgate"] = norm(keys[ki], (d, f)) * f_scale[None, :]; ki += 1
+        params[p + "wup"] = norm(keys[ki], (d, f)) * f_scale[None, :]; ki += 1
+        params[p + "wdown"] = norm(keys[ki], (f, d), 0.5) * d_scale[None, :]; ki += 1
+    params["final_norm"] = jnp.ones((d,))
+    params["head"] = norm(keys[ki], (d, v))
+    return params
+
+
+def fold_norm_scales(params, cfg: Config):
+    """Fold RMSNorm gammas into the following linears (paper footnote 3).
+
+    After folding the network is rotation-invariant; gammas become ones.
+    Mirrors rust/src/rotation/fold.rs.
+    """
+    out = dict(params)
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        g_att = params[p + "attn_norm"][:, None]
+        out[p + "wq"] = params[p + "wq"] * g_att
+        out[p + "wk"] = params[p + "wk"] * g_att
+        out[p + "wv"] = params[p + "wv"] * g_att
+        out[p + "attn_norm"] = jnp.ones_like(params[p + "attn_norm"])
+        g_ffn = params[p + "ffn_norm"][:, None]
+        out[p + "wgate"] = params[p + "wgate"] * g_ffn
+        out[p + "wup"] = params[p + "wup"] * g_ffn
+        out[p + "ffn_norm"] = jnp.ones_like(params[p + "ffn_norm"])
+    out["head"] = params["head"] * params["final_norm"][:, None]
+    out["final_norm"] = jnp.ones_like(params["final_norm"])
+    return out
+
+
+def merge_rotations(params, cfg: Config, r1, r2s, merge_r4: bool = False):
+    """Offline (numpy-side) R1/R2 merge — the non-differentiable twin of
+    `_rotate_weights_ingraph`, used by python tests; rust/src/rotation is the
+    production implementation. Requires folded norms."""
+    return jax.tree_util.tree_map(
+        lambda a: a, _rotate_weights_ingraph(params, cfg, r1, r2s, merge_r4)
+    )

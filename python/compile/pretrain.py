@@ -1,0 +1,137 @@
+"""Build-time pretraining of the tiny-LLaMA zoo on the synthetic corpus.
+
+Runs ONCE inside `make artifacts` (python never touches the request path):
+  1. generates the wiki-syn / c4-syn corpora (data.py) into artifacts/data/,
+  2. initializes each model in the planted-outlier basis (model.init_params),
+  3. trains with Adam for a few hundred steps on wiki-syn.train,
+  4. saves weights to artifacts/weights/<model>.sqt + a loss-curve JSON
+     (the end-to-end training-run evidence recorded in EXPERIMENTS.md).
+
+Usage: python -m compile.pretrain --models sq-2m,sq-4m --steps 300 --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model as model_mod
+from .sqt import write_sqt
+
+
+def batches(corpus: np.ndarray, rng: np.random.RandomState, batch: int, seq: int):
+    """Yield random (batch, seq) int32 windows of the byte corpus forever."""
+    n = len(corpus) - seq - 1
+    while True:
+        idx = rng.randint(0, n, size=batch)
+        yield np.stack([corpus[i : i + seq] for i in idx]).astype(np.int32)
+
+
+def adam_init(params):
+    z = lambda p: jax.tree_util.tree_map(jnp.zeros_like, p)
+    return {"m": z(params), "v": z(params), "t": jnp.zeros(())}
+
+
+def make_train_step(cfg: model_mod.Config, lr: float):
+    def loss_fn(params, toks):
+        logits = model_mod.forward(params, toks, cfg)
+        return model_mod.next_token_loss(logits, toks)
+
+    @jax.jit
+    def step(params, opt, toks):
+        loss, grads = jax.value_and_grad(loss_fn)(params, toks)
+        t = opt["t"] + 1.0
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt["m"], grads)
+        v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt["v"], grads)
+        mhat = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1**t), m)
+        vhat = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2**t), v)
+        params = jax.tree_util.tree_map(
+            lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+        )
+        return params, {"m": m, "v": v, "t": t}, loss
+
+    return step
+
+
+def pretrain_model(name: str, corpus: np.ndarray, steps: int, batch: int, seq: int,
+                   lr: float, seed: int = 0):
+    cfg = model_mod.CONFIGS[name]
+    params = model_mod.init_params(jax.random.PRNGKey(seed), cfg)
+    opt = adam_init(params)
+    step = make_train_step(cfg, lr)
+    rng = np.random.RandomState(seed + 7)
+    gen = batches(corpus, rng, batch, seq)
+    log = []
+    t0 = time.time()
+    for s in range(steps):
+        params, opt, loss = step(params, opt, next(gen))
+        if s % 10 == 0 or s == steps - 1:
+            loss_v = float(loss)
+            log.append({"step": s, "loss": loss_v, "elapsed_s": time.time() - t0})
+            print(f"[{name}] step {s:4d} loss {loss_v:.4f} "
+                  f"ppl {np.exp(loss_v):.2f} ({time.time()-t0:.0f}s)", flush=True)
+    return params, log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="sq-2m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1.5e-3)
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+
+    os.makedirs(os.path.join(args.out, "data"), exist_ok=True)
+    os.makedirs(os.path.join(args.out, "weights"), exist_ok=True)
+
+    # 1. Corpora.
+    for cname in data_mod.CORPORA:
+        train, test = data_mod.build_corpus(cname)
+        for split, blob in [("train", train), ("test", test)]:
+            p = os.path.join(args.out, "data", f"{cname}.{split}.bin")
+            with open(p, "wb") as f:
+                f.write(blob)
+            print(f"wrote {p} ({len(blob)} bytes)")
+
+    wiki_train = np.frombuffer(
+        open(os.path.join(args.out, "data", "wiki-syn.train.bin"), "rb").read(),
+        dtype=np.uint8,
+    )
+
+    # 2-4. Train each requested model.
+    for name in args.models.split(","):
+        name = name.strip()
+        params, log = pretrain_model(
+            name, wiki_train, args.steps, args.batch, args.seq, args.lr
+        )
+        wpath = os.path.join(args.out, "weights", f"{name}.sqt")
+        write_sqt(wpath, {k: np.asarray(v) for k, v in params.items()})
+        print(f"wrote {wpath}")
+        with open(os.path.join(args.out, f"pretrain_log_{name}.json"), "w") as f:
+            json.dump(
+                {
+                    "model": name,
+                    "steps": args.steps,
+                    "batch": args.batch,
+                    "seq": args.seq,
+                    "lr": args.lr,
+                    "curve": log,
+                    "n_params": model_mod.CONFIGS[name].n_params,
+                },
+                f,
+                indent=1,
+            )
+
+
+if __name__ == "__main__":
+    main()

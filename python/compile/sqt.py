@@ -1,0 +1,50 @@
+"""SQT — the trivial tensor container shared between python (writer) and
+rust (rust/src/model/sqt.rs, reader+writer).
+
+Layout (little-endian):
+    magic   b"SQT1"
+    u32     n_tensors
+    per tensor:
+        u16   name_len, name bytes (utf-8)
+        u8    ndim
+        u32 x ndim   dims
+        f32 x prod(dims)   data (C order)
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+
+def write_sqt(path: str, tensors: dict):
+    """tensors: name -> np.ndarray (converted to f32, C order)."""
+    with open(path, "wb") as f:
+        f.write(b"SQT1")
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(np.asarray(arr), dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def read_sqt(path: str) -> dict:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == b"SQT1", f"{path}: bad magic"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (ln,) = struct.unpack("<H", f.read(2))
+            name = f.read(ln).decode("utf-8")
+            (nd,) = struct.unpack("<B", f.read(1))
+            dims = struct.unpack(f"<{nd}I", f.read(4 * nd))
+            count = int(np.prod(dims)) if nd else 1
+            data = np.frombuffer(f.read(4 * count), dtype="<f4").reshape(dims)
+            out[name] = data.copy()
+    return out

@@ -1,0 +1,185 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/bit-widths/flags — the CORE correctness signal for
+everything the artifacts quantize at runtime.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fake_quant,
+    fake_quant_ste,
+    fwht,
+    qmatmul,
+    quantize_cols_sym,
+    quantize_rows,
+    ref,
+)
+
+import jax
+
+SET = dict(deadline=None, max_examples=12)
+
+
+def rand(shape, seed=0, scale=3.0):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype(np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    rows=st.integers(1, 200),
+    cols=st.integers(2, 96),
+    bits=st.sampled_from([2.0, 3.0, 4.0, 8.0, 16.0]),
+    sym=st.sampled_from([0.0, 1.0]),
+    clip=st.sampled_from([1.0, 0.9]),
+    seed=st.integers(0, 10_000),
+)
+def test_fake_quant_matches_ref(rows, cols, bits, sym, clip, seed):
+    x = rand((rows, cols), seed)
+    got = fake_quant(x, bits, sym, clip)
+    want = ref.fake_quant_ref(x, bits, axis=-1, symmetric=sym, clip_ratio=clip)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_fake_quant_16_bits_is_identity():
+    x = rand((64, 32), 1)
+    np.testing.assert_array_equal(fake_quant(x, 16.0), x)
+
+
+def test_fake_quant_reduces_levels():
+    x = rand((16, 64), 2)
+    y = np.asarray(fake_quant(x, 3.0))
+    # At 3 bits each row can hold at most 2^3 distinct values.
+    for row in y:
+        assert len(np.unique(row)) <= 8
+
+
+def test_fake_quant_error_shrinks_with_bits():
+    x = rand((32, 64), 3)
+    errs = [float(jnp.mean((fake_quant(x, b) - x) ** 2)) for b in (2.0, 4.0, 8.0)]
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_fake_quant_rank3():
+    x = rand((4, 8, 32), 4)
+    got = fake_quant(x, 4.0)
+    want = ref.fake_quant_ref(x, 4.0, axis=-1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_symmetric_zero_maps_to_zero():
+    x = rand((8, 32), 5)
+    x = x.at[:, 0].set(0.0)
+    y = np.asarray(fake_quant(x, 4.0, symmetric=1.0))
+    np.testing.assert_allclose(y[:, 0], 0.0, atol=1e-6)
+
+
+def test_ste_gradient_passthrough():
+    x = rand((8, 32), 6)
+
+    def f(x_):
+        return jnp.sum(fake_quant_ste(x_, 4.0, 0.0, 1.0) ** 2)
+
+    g = jax.grad(f)(x)
+    # STE: d/dx sum(q(x)^2) = 2*q(x) under the identity jacobian.
+    np.testing.assert_allclose(g, 2 * fake_quant(x, 4.0), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# fwht
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    rows=st.integers(1, 150),
+    logn=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+)
+def test_fwht_matches_dense_hadamard(rows, logn, seed):
+    n = 2**logn
+    x = rand((rows, n), seed)
+    got = fwht(x)
+    want = x @ ref.hadamard_matrix_ref(n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(**SET)
+@given(logn=st.integers(1, 8), seed=st.integers(0, 100))
+def test_fwht_is_involution_and_isometry(logn, seed):
+    x = rand((9, 2**logn), seed)
+    y = fwht(x)
+    np.testing.assert_allclose(fwht(y), x, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(
+        jnp.sum(y * y, axis=-1), jnp.sum(x * x, axis=-1), rtol=1e-4
+    )
+
+
+def test_fwht_rank4():
+    x = rand((2, 3, 4, 32), 7)
+    np.testing.assert_allclose(fwht(x), ref.fwht_ref(x), rtol=1e-4, atol=1e-5)
+
+
+def test_fwht_gaussianizes_outliers():
+    """The paper's core motivation (Fig. 3a): rotation drives kurtosis to ~3."""
+    rng = np.random.RandomState(0)
+    x = rng.randn(512, 128).astype(np.float32)
+    x[:, 5] *= 30.0  # planted outlier channel
+    x[:, 77] *= 18.0
+    k_before = float(ref.kurtosis_ref(jnp.asarray(x)))
+    k_after = float(ref.kurtosis_ref(fwht(jnp.asarray(x))))
+    assert k_before > 20.0
+    assert k_after < 5.0
+
+
+def test_fwht_reduces_quant_error_on_outliers():
+    rng = np.random.RandomState(1)
+    x = rng.randn(256, 128).astype(np.float32)
+    x[:, 3] *= 25.0
+    x = jnp.asarray(x)
+    err_plain = float(jnp.mean((fake_quant(x, 4.0) - x) ** 2))
+    xr = fwht(x)
+    err_rot = float(jnp.mean((fake_quant(xr, 4.0) - xr) ** 2))
+    assert err_rot < err_plain * 0.5
+
+
+# ---------------------------------------------------------------------------
+# qmatmul
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=8)
+@given(
+    m=st.integers(1, 140),
+    k=st.sampled_from([16, 64, 130, 200]),
+    n=st.integers(1, 140),
+    bits=st.sampled_from([4.0, 8.0]),
+    seed=st.integers(0, 1000),
+)
+def test_qmatmul_matches_ref(m, k, n, bits, seed):
+    x = rand((m, k), seed)
+    w = rand((k, n), seed + 1, scale=0.5)
+    q, s, z = quantize_rows(x, bits)
+    qw, sw = quantize_cols_sym(w, bits)
+    got = qmatmul(q, s, z, qw, sw)
+    want = ref.qmatmul_ref(x, w, bits, bits)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_qmatmul_8bit_close_to_exact():
+    x = rand((64, 128), 11)
+    w = rand((128, 64), 12, scale=0.3)
+    q, s, z = quantize_rows(x, 8.0)
+    qw, sw = quantize_cols_sym(w, 8.0)
+    got = np.asarray(qmatmul(q, s, z, qw, sw))
+    exact = np.asarray(x @ w)
+    rel = np.abs(got - exact).mean() / (np.abs(exact).mean() + 1e-9)
+    assert rel < 0.02

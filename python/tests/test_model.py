@@ -1,0 +1,219 @@
+"""L2 model invariants — the algebra the whole paper rests on.
+
+* rotational invariance: R1/R2 (and online R3/R4 with the H-merged w_down)
+  leave the full-precision logits numerically unchanged (paper §3.1);
+* RMSNorm gamma folding preserves the function (paper footnote 3);
+* quantization breaks invariance (that is the point) and bits=16 is exact
+  pass-through, so one artifact serves FP rows too;
+* Cayley gradients vanish without quantization and are non-zero with it
+  (paper Eq. 5 / §B.1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_mod
+from compile.kernels import ref
+
+CFG = model_mod.Config("test", vocab=61, d_model=32, n_layers=2, n_heads=2,
+                       d_head=16, d_ffn=64, max_seq=32)
+
+
+def make_params(seed=0):
+    return model_mod.init_params(jax.random.PRNGKey(seed), CFG,
+                                 outlier_channels=4, outlier_scale=6.0)
+
+
+def tokens(seed=0, b=2, s=16):
+    return jnp.asarray(
+        np.random.RandomState(seed).randint(0, CFG.vocab, (b, s)), jnp.int32
+    )
+
+
+def random_orthogonal(n, seed):
+    a = np.random.RandomState(seed).randn(n, n)
+    q, r = np.linalg.qr(a)
+    q = q * np.sign(np.diag(r))[None, :]
+    return jnp.asarray(q.astype(np.float32))
+
+
+def rotations(seed=0):
+    r1 = random_orthogonal(CFG.d_model, seed)
+    r2s = jnp.stack(
+        [random_orthogonal(CFG.d_head, seed + 1 + i) for i in range(CFG.n_layers)]
+    )
+    return r1, r2s
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_gamma_folding_preserves_logits():
+    params = make_params()
+    # make gammas non-trivial
+    params = {
+        k: (v * 1.7 + 0.1 if k.endswith("norm") else v) for k, v in params.items()
+    }
+    folded = model_mod.fold_norm_scales(params, CFG)
+    t = tokens()
+    a = model_mod.forward(params, t, CFG)
+    b = model_mod.forward(folded, t, CFG)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+    for k, v in folded.items():
+        if k.endswith("norm"):
+            np.testing.assert_array_equal(v, jnp.ones_like(v))
+
+
+def test_r1_r2_rotation_invariance_fp():
+    params = model_mod.fold_norm_scales(make_params(), CFG)
+    r1, r2s = rotations()
+    t = tokens()
+    base = model_mod.forward(params, t, CFG)
+    rot = model_mod.forward(params, t, CFG, rot=(r1, r2s))
+    np.testing.assert_allclose(base, rot, rtol=2e-3, atol=2e-3)
+
+
+def test_online_hadamard_invariance_fp():
+    """R3/R4 (had=True with in-graph H-merge of w_down) keep FP logits."""
+    params = model_mod.fold_norm_scales(make_params(), CFG)
+    r1, r2s = rotations()
+    t = tokens()
+    base = model_mod.forward(params, t, CFG)
+    rot = model_mod.forward(params, t, CFG, rot=(r1, r2s), had=True)
+    np.testing.assert_allclose(base, rot, rtol=2e-3, atol=2e-3)
+
+
+def test_identity_rotation_is_noop():
+    params = model_mod.fold_norm_scales(make_params(), CFG)
+    r1 = jnp.eye(CFG.d_model)
+    r2s = jnp.stack([jnp.eye(CFG.d_head)] * CFG.n_layers)
+    t = tokens()
+    a = model_mod.forward(params, t, CFG)
+    b = model_mod.forward(params, t, CFG, rot=(r1, r2s))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_bits16_qcfg_equals_fp():
+    params = make_params()
+    t = tokens()
+    fp = model_mod.forward(params, t, CFG)
+    q16 = model_mod.forward(params, t, CFG, qcfg=model_mod.qcfg_vector())
+    np.testing.assert_array_equal(fp, q16)
+
+
+def test_quantization_changes_output_and_rotation_helps():
+    params = model_mod.fold_norm_scales(make_params(), CFG)
+    t = tokens()
+    fp = model_mod.forward(params, t, CFG)
+    q4 = model_mod.forward(params, t, CFG, qcfg=model_mod.qcfg_vector(a_bits=4, kv_bits=4))
+    assert float(jnp.mean((q4 - fp) ** 2)) > 1e-6
+
+
+def test_quantized_loss_rotation_dependence():
+    """Different rotations -> different quantized loss (the Fig. 4 variance)."""
+    params = model_mod.fold_norm_scales(make_params(), CFG)
+    t = tokens(3, b=4, s=32)
+    qcfg = model_mod.qcfg_vector(a_bits=4, kv_bits=4)
+    losses = []
+    for seed in range(3):
+        r1, r2s = rotations(seed * 10)
+        logits = model_mod.forward(params, t, CFG, qcfg=qcfg, rot=(r1, r2s))
+        losses.append(float(model_mod.next_token_loss(logits, t)))
+    assert np.std(losses) > 1e-4
+
+
+def test_cayley_grads_zero_without_quant_nonzero_with():
+    params = model_mod.fold_norm_scales(make_params(), CFG)
+    r1, r2s = rotations(5)
+    t = tokens(1, b=2, s=16)
+    loss16, g1_16, g2_16 = model_mod.cayley_loss_and_grads(
+        params, r1, r2s, t, CFG, model_mod.qcfg_vector(), had=False
+    )
+    loss4, g1_4, g2_4 = model_mod.cayley_loss_and_grads(
+        params, r1, r2s, t, CFG, model_mod.qcfg_vector(a_bits=4, kv_bits=4), had=False
+    )
+    def riem(g, r):
+        # Riemannian gradient on the Stiefel manifold: skew(G R^T). The raw
+        # Euclidean gradient is non-zero even for an invariant function
+        # (invariance only holds *on* the manifold); Cayley SGD moves along
+        # the skew projection, which is what Eq. 5 predicts vanishes.
+        y = g @ r.T
+        return float(jnp.max(jnp.abs(y - y.T)))
+
+    scale16 = riem(g1_16, r1)
+    scale4 = riem(g1_4, r1)
+    assert scale16 < 1e-2
+    assert scale4 > 10 * max(scale16, 1e-9)
+    # Both losses are finite and well-formed.
+    assert np.isfinite(float(loss16)) and np.isfinite(float(loss4))
+
+
+def test_capture_shapes():
+    params = make_params()
+    t = tokens()
+    logits, caps = model_mod.forward(params, t, CFG, capture=True)
+    B, S = t.shape
+    assert logits.shape == (B, S, CFG.vocab)
+    assert caps["resid_in"].shape == (CFG.n_layers, B, S, CFG.d_model)
+    assert caps["down_in"].shape == (CFG.n_layers, B, S, CFG.d_ffn)
+    assert caps["k"].shape == (CFG.n_layers, B, S, CFG.n_heads, CFG.d_head)
+
+
+def test_planted_outliers_raise_kurtosis_and_rotation_fixes_it():
+    """End-to-end Fig. 3(a) shape on the untrained model."""
+    params = model_mod.fold_norm_scales(make_params(), CFG)
+    t = tokens(7, b=4, s=32)
+    _, caps = model_mod.forward(params, t, CFG, capture=True)
+    x = caps["resid_in"][0].reshape(-1, CFG.d_model)
+    k_before = float(ref.kurtosis_ref(x))
+    r1, r2s = rotations(11)
+    merged = model_mod.merge_rotations(params, CFG, r1, r2s)
+    _, caps_r = model_mod.forward(merged, t, CFG, capture=True)
+    xr = caps_r["resid_in"][0].reshape(-1, CFG.d_model)
+    k_after = float(ref.kurtosis_ref(xr))
+    assert k_before > 2 * k_after
+
+
+def test_decode_matches_full_forward_fp():
+    params = make_params()
+    t = tokens(9, b=1, s=8)
+    full = model_mod.forward(params, t, CFG)
+    cache_shape = (CFG.n_layers, 1, CFG.max_seq, CFG.n_heads, CFG.d_head)
+    ck = jnp.zeros(cache_shape)
+    cv = jnp.zeros(cache_shape)
+    outs = []
+    for pos in range(t.shape[1]):
+        logits, ck, cv = model_mod.decode_step(
+            params, CFG, t[:, pos], jnp.asarray(pos, jnp.int32), ck, cv
+        )
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, full, rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_full_forward_quant_had():
+    params = make_params()
+    qcfg = model_mod.qcfg_vector(a_bits=8, kv_bits=8)
+    t = tokens(13, b=1, s=8)
+    full = model_mod.forward(params, t, CFG, qcfg=qcfg, had=True)
+    cache_shape = (CFG.n_layers, 1, CFG.max_seq, CFG.n_heads, CFG.d_head)
+    ck = jnp.zeros(cache_shape)
+    cv = jnp.zeros(cache_shape)
+    outs = []
+    for pos in range(t.shape[1]):
+        logits, ck, cv = model_mod.decode_step(
+            params, CFG, t[:, pos], jnp.asarray(pos, jnp.int32), ck, cv,
+            qcfg=qcfg, had=True,
+        )
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(dec, full, rtol=5e-3, atol=5e-3)
+
+
+def test_param_order_matches_shapes():
+    names = model_mod.param_order(CFG)
+    shapes = model_mod.param_shapes(CFG)
+    assert set(names) == set(shapes.keys())
+    assert names[0] == "emb" and names[-1] == "head"

@@ -1,0 +1,103 @@
+//! §Perf experiment: decode-loop KV-cache handling.
+//!
+//! BEFORE (naive): every decode step converts the returned KV-cache buffers
+//! to host tensors and back to literals for the next step.
+//! AFTER (shipped, coordinator::serve): the cache stays as PJRT literals
+//! between steps — zero host round-trips on the steady-state path.
+//!
+//! Run: cargo bench --bench decode_paths   (needs `make artifacts`)
+
+use spinquant::eval::QcfgVec;
+use spinquant::model::{Manifest, Weights};
+use spinquant::runtime::{literal_to_tensor, Executable, Value};
+use spinquant::util::timer::Samples;
+
+fn main() {
+    let manifest = match Manifest::load(std::path::Path::new("artifacts")) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("run `make artifacts` first");
+            return;
+        }
+    };
+    let rt = spinquant::runtime::Runtime::cpu().expect("pjrt");
+    let model = "sq-2m";
+    let w = Weights::load(&manifest.weights_path(model)).unwrap();
+    let exe = rt.load(&manifest, model, "decode_nohad").unwrap();
+    let steps = 64;
+
+    println!("decode path comparison ({model}, {steps} steps, W4A8KV8):");
+    let naive = run_naive(&exe, &w, steps);
+    println!("  naive (cache -> host tensor -> literal each step): {naive:.3} ms/token");
+    let cached = run_cached(&exe, &w, steps);
+    println!("  shipped (cache stays as PJRT literals):            {cached:.3} ms/token");
+    println!("  speedup: {:.2}x", naive / cached);
+}
+
+fn base_literals(exe: &Executable, w: &Weights) -> (Vec<xla::Literal>, usize, usize, usize, usize) {
+    let (mut ti, mut pi, mut ki, mut vi) = (0, 0, 0, 0);
+    let mut values = Vec::new();
+    for (i, (name, shape, _)) in exe.spec.inputs.iter().enumerate() {
+        let v = match name.as_str() {
+            "token" => {
+                ti = i;
+                Value::I32(vec![0; 1], shape.clone())
+            }
+            "pos" => {
+                pi = i;
+                Value::ScalarI32(0)
+            }
+            "cache_k" => {
+                ki = i;
+                Value::F32(spinquant::Tensor::zeros(shape))
+            }
+            "cache_v" => {
+                vi = i;
+                Value::F32(spinquant::Tensor::zeros(shape))
+            }
+            "qcfg" => Value::F32(QcfgVec::fp().with_a_bits(8.0).with_kv_bits(8.0).tensor()),
+            _ => Value::F32(w.get(name).unwrap().clone()),
+        };
+        values.push(v);
+    }
+    (exe.prepare(&values).unwrap(), ti, pi, ki, vi)
+}
+
+fn run_cached(exe: &Executable, w: &Weights, steps: usize) -> f64 {
+    let (mut literals, ti, pi, ki, vi) = base_literals(exe, w);
+    let mut samples = Samples::new();
+    for pos in 0..steps {
+        samples.time(|| {
+            literals[ti] = xla::Literal::vec1(&[65i32]).reshape(&[1]).unwrap();
+            literals[pi] = xla::Literal::scalar(pos as i32);
+            let bufs = exe.run_literals_raw(&literals).unwrap();
+            let mut parts = bufs[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+            let cv = parts.pop().unwrap();
+            let ck = parts.pop().unwrap();
+            literals[ki] = ck;
+            literals[vi] = cv;
+        });
+    }
+    samples.mean_us() / 1e3
+}
+
+fn run_naive(exe: &Executable, w: &Weights, steps: usize) -> f64 {
+    let (mut literals, ti, pi, ki, vi) = base_literals(exe, w);
+    let mut samples = Samples::new();
+    for pos in 0..steps {
+        samples.time(|| {
+            literals[ti] = xla::Literal::vec1(&[65i32]).reshape(&[1]).unwrap();
+            literals[pi] = xla::Literal::scalar(pos as i32);
+            // run_literals converts every output (incl. both caches) to host
+            // tensors; we then pay the tensor->literal conversion again.
+            let outs = exe.run_literals(&literals).unwrap();
+            let ck = &outs[1];
+            let cv = &outs[2];
+            let dims: Vec<i64> = ck.shape.iter().map(|&d| d as i64).collect();
+            literals[ki] = xla::Literal::vec1(&ck.data).reshape(&dims).unwrap();
+            literals[vi] = xla::Literal::vec1(&cv.data).reshape(&dims).unwrap();
+        });
+    }
+    let _ = literal_to_tensor;
+    samples.mean_us() / 1e3
+}

@@ -1,0 +1,91 @@
+//! Micro-benchmarks of the L3 hot-path substrates (std-only harness;
+//! criterion is unavailable offline). Run with `cargo bench`.
+//!
+//! These are the knobs the §Perf pass in EXPERIMENTS.md iterates on: FWHT
+//! (the online-Hadamard cost model for Fig. 7), fake-quant, matmul (rotation
+//! merging), GPTQ, and one Cayley retraction.
+
+use spinquant::bench::bench;
+use spinquant::hadamard;
+use spinquant::linalg;
+use spinquant::quant::{fake_quant, Granularity, QuantSpec};
+use spinquant::tensor::Tensor;
+use spinquant::util::prng::Prng;
+
+fn randn(shape: &[usize], seed: u64) -> Tensor {
+    let mut p = Prng::new(seed);
+    let n: usize = shape.iter().product();
+    Tensor::new(shape.to_vec(), (0..n).map(|_| p.normal()).collect())
+}
+
+fn main() {
+    println!("== spinquant micro-benchmarks (1 iteration = 1 op) ==");
+
+    // FWHT at the model's R3/R4 sizes.
+    for n in [32usize, 128, 512, 1024] {
+        let mut x = randn(&[n], 1);
+        let r = bench(&format!("fwht_row n={n}"), 50, 2000, || {
+            hadamard::fwht_row(&mut x.data);
+        });
+        println!("{}  ({:.1} Melem/s)", r.report(), r.per_second(n as f64) / 1e6);
+    }
+    {
+        let x = randn(&[512, 512], 2);
+        let r = bench("fwht_last_axis 512x512", 3, 60, || hadamard::fwht_last_axis(&x));
+        println!("{}", r.report());
+    }
+
+    // Fake-quant (per-token) at eval-batch shapes.
+    for (rows, d) in [(512usize, 128usize), (512, 512)] {
+        let x = randn(&[rows, d], 3);
+        let spec = QuantSpec {
+            bits: 4.0,
+            symmetric: false,
+            clip_ratio: 1.0,
+            granularity: Granularity::PerRow,
+        };
+        let r = bench(&format!("fake_quant {rows}x{d} 4b"), 3, 100, || fake_quant(&x, &spec));
+        println!("{}  ({:.1} Melem/s)", r.report(), r.per_second((rows * d) as f64) / 1e6);
+    }
+
+    // Matmul at rotation-merge sizes.
+    for n in [128usize, 256] {
+        let a = randn(&[n, n], 4);
+        let b = randn(&[n, n], 5);
+        let r = bench(&format!("matmul {n}x{n}"), 3, 50, || linalg::matmul(&a, &b));
+        let flops = 2.0 * (n as f64).powi(3);
+        println!("{}  ({:.2} GFLOP/s)", r.report(), r.per_second(flops) / 1e9);
+    }
+
+    // GPTQ on one layer.
+    {
+        let k = 256;
+        let w = randn(&[k, 128], 6);
+        let x = randn(&[512, k], 7);
+        let mut acc = spinquant::gptq::HessianAccum::new(k);
+        acc.add_batch(&x);
+        let r = bench("gptq_quantize 256x128 4b", 1, 8, || {
+            spinquant::gptq::gptq_quantize(&w, &acc, 4.0, 0.01).unwrap()
+        });
+        println!("{}", r.report());
+    }
+
+    // One Cayley retraction at R1 size.
+    {
+        let n = 128;
+        let g0 = randn(&[n, n], 8);
+        let rot = linalg::qr_orthogonal(&randn(&[n, n], 9));
+        let r = bench("cayley step (exact) n=128", 2, 20, || {
+            let y = spinquant::cayley::skew_direction(&rot, &g0);
+            spinquant::cayley::cayley_step(&rot, &y, 0.05, spinquant::cayley::Solver::Exact)
+                .unwrap()
+        });
+        println!("{}", r.report());
+        let r = bench("cayley step (fixed-point 4) n=128", 2, 20, || {
+            let y = spinquant::cayley::skew_direction(&rot, &g0);
+            spinquant::cayley::cayley_step(&rot, &y, 0.05, spinquant::cayley::Solver::FixedPoint(4))
+                .unwrap()
+        });
+        println!("{}", r.report());
+    }
+}

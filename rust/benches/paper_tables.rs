@@ -1,0 +1,53 @@
+//! Paper table/figure regeneration as a `cargo bench` target.
+//!
+//! Every exhibit of the paper's evaluation is covered by a harness in
+//! `spinquant::benches_impl` (DESIGN.md §7). A full sweep takes hours on
+//! this 1-core testbed, so `cargo bench` runs a representative fast set by
+//! default; set `SPINQUANT_BENCH_IDS=table1,table2,...` (or `all`) and
+//! `SPINQUANT_BENCH_MODELS=sq-2m,sq-4m,sq-9m` for the full reproduction.
+//! Results append to EXPERIMENTS.md.
+
+use spinquant::benches_impl::run_bench;
+use spinquant::config::PipelineConfig;
+
+const ALL_IDS: &[&str] = &[
+    "table1", "table2", "table3", "table4", "table5", "table6", "table10", "table11",
+    "table12", "table13", "fig2", "fig4", "fig7", "fig8",
+];
+
+fn main() {
+    let ids_env = std::env::var("SPINQUANT_BENCH_IDS").unwrap_or_default();
+    let ids: Vec<String> = if ids_env == "all" {
+        ALL_IDS.iter().map(|s| s.to_string()).collect()
+    } else if !ids_env.is_empty() {
+        ids_env.split(',').map(str::to_string).collect()
+    } else {
+        // Fast representative set: distributions + speed + learned-vs-random.
+        vec!["fig2".into(), "table6".into(), "fig7".into(), "table5".into()]
+    };
+    let models: Vec<String> = std::env::var("SPINQUANT_BENCH_MODELS")
+        .unwrap_or_else(|_| "sq-2m".into())
+        .split(',')
+        .map(str::to_string)
+        .collect();
+
+    let mut cfg = PipelineConfig::default();
+    // Bench-sized eval (override via SPINQUANT_BENCH_FULL=1 for full eval).
+    if std::env::var("SPINQUANT_BENCH_FULL").is_err() {
+        cfg.eval_windows = Some(24);
+        cfg.task_items = 12;
+        cfg.cayley_iters = 40;
+    }
+    let trials: usize = std::env::var("SPINQUANT_BENCH_TRIALS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+
+    for id in &ids {
+        eprintln!("=== bench {id} (models: {models:?}) ===");
+        if let Err(e) = run_bench(&cfg, id, &models, trials, Some(".")) {
+            eprintln!("bench {id} failed: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! `cargo bench` targets use [`Bench`] for warmup + timed iterations with
+//! mean/median/p95 reporting; the paper-table harnesses live in
+//! `rust/benches/` and print the same rows the paper reports.
+
+use std::time::Instant;
+
+use crate::util::timer::Samples;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub median_us: f64,
+    pub p95_us: f64,
+    pub min_us: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>8} iters  mean {:>10.2}us  median {:>10.2}us  p95 {:>10.2}us  min {:>10.2}us",
+            self.name, self.iters, self.mean_us, self.median_us, self.p95_us, self.min_us
+        )
+    }
+
+    /// Throughput helper: items/second given items per iteration.
+    pub fn per_second(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_us / 1e6)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Samples::new();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_us: samples.mean_us(),
+        median_us: samples.median_us(),
+        p95_us: samples.percentile_us(95.0),
+        min_us: samples.min_us(),
+    }
+}
+
+/// Adaptive variant: run for roughly `budget_ms` total.
+pub fn bench_for_ms<T>(name: &str, budget_ms: f64, mut f: impl FnMut() -> T) -> BenchResult {
+    // Calibrate with one run.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let one = t0.elapsed().as_secs_f64() * 1e3;
+    let iters = ((budget_ms / one.max(1e-3)) as usize).clamp(3, 10_000);
+    bench(name, 1, iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("spin", 2, 20, || {
+            let mut s = 0u64;
+            for i in 0..1000u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert_eq!(r.iters, 20);
+        assert!(r.mean_us > 0.0);
+        assert!(r.min_us <= r.median_us);
+        assert!(r.median_us <= r.p95_us + 1e-9);
+        assert!(r.per_second(1000.0) > 0.0);
+        assert!(r.report().contains("spin"));
+    }
+
+    #[test]
+    fn adaptive_bench_bounds_iters() {
+        let r = bench_for_ms("quick", 5.0, || std::hint::black_box(1 + 1));
+        assert!(r.iters >= 3);
+    }
+}

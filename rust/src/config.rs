@@ -1,0 +1,425 @@
+//! Configuration system: typed pipeline/eval configs, a TOML-subset parser
+//! for config files, and the `W-A-KV` bit-spec grammar used throughout the
+//! paper's tables.
+//!
+//! Precedence: defaults < config file (`--config run.toml`) < CLI flags.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Quantization method — every row family in paper Table 1 plus QuaRot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Float,
+    Rtn,
+    SmoothQuant,
+    Gptq,
+    LlmQat,
+    /// Random-rotation baseline (Ashkboos et al.): random Hadamard R1/R2 +
+    /// online R3/R4, NO Cayley learning.
+    QuaRot,
+    /// Learned R1/R2 only, fully merged (zero inference overhead).
+    SpinQuantNoHad,
+    /// Learned R1/R2 + online Hadamard R3/R4.
+    SpinQuantHad,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "float" | "fp" | "fp16" | "fullprecision" => Method::Float,
+            "rtn" => Method::Rtn,
+            "smoothquant" | "sq" => Method::SmoothQuant,
+            "gptq" => Method::Gptq,
+            "llm-qat" | "llmqat" | "qat" => Method::LlmQat,
+            "quarot" => Method::QuaRot,
+            "spinquant-nohad" | "spinquant_no_had" | "nohad" => Method::SpinQuantNoHad,
+            "spinquant-had" | "spinquant_had" | "had" | "spinquant" => Method::SpinQuantHad,
+            other => bail!("unknown method {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Float => "FloatingPoint",
+            Method::Rtn => "RTN",
+            Method::SmoothQuant => "SmoothQuant",
+            Method::Gptq => "GPTQ",
+            Method::LlmQat => "LLM-QAT",
+            Method::QuaRot => "QuaRot",
+            Method::SpinQuantNoHad => "SpinQuant_no_had",
+            Method::SpinQuantHad => "SpinQuant_had",
+        }
+    }
+
+    /// Does this method run the `_had` (online R3/R4) artifacts?
+    pub fn uses_online_hadamard(&self) -> bool {
+        matches!(self, Method::QuaRot | Method::SpinQuantHad)
+    }
+
+    /// Does this method learn R1/R2 with Cayley SGD?
+    pub fn learns_rotation(&self) -> bool {
+        matches!(self, Method::SpinQuantNoHad | Method::SpinQuantHad)
+    }
+
+    pub fn uses_rotation(&self) -> bool {
+        matches!(self, Method::QuaRot | Method::SpinQuantNoHad | Method::SpinQuantHad)
+    }
+}
+
+/// `W-A-KV` bit widths, e.g. "4-8-16" (16 = full precision).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Bits {
+    pub w: f32,
+    pub a: f32,
+    pub kv: f32,
+}
+
+impl Bits {
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split('-').collect();
+        if parts.len() != 3 {
+            bail!("bit spec must be W-A-KV, got {s:?}");
+        }
+        let p = |x: &str| -> Result<f32> {
+            let v: f32 = x.parse().map_err(|_| anyhow!("bad bit width {x:?}"))?;
+            if !(2.0..=16.0).contains(&v) {
+                bail!("bit width {v} out of range [2,16]");
+            }
+            Ok(v)
+        };
+        Ok(Self { w: p(parts[0])?, a: p(parts[1])?, kv: p(parts[2])? })
+    }
+
+    pub fn label(&self) -> String {
+        format!("{}-{}-{}", self.w as u32, self.a as u32, self.kv as u32)
+    }
+
+    pub fn fp() -> Self {
+        Self { w: 16.0, a: 16.0, kv: 16.0 }
+    }
+}
+
+/// Full pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    pub method: Method,
+    pub bits: Bits,
+    /// Weight quantizer used after rotation (GPTQ per the paper's main
+    /// tables; RTN for the ablations).
+    pub use_gptq: bool,
+    /// Activation quant: asymmetric (paper default) + optional clip.
+    pub a_sym: bool,
+    pub a_clip: f32,
+    pub kv_sym: bool,
+    pub kv_clip: f32,
+    /// Rotation init: "hadamard" (paper default) or "orthogonal".
+    pub rotation_init: String,
+    pub rotation_seed: u64,
+    /// Cayley SGD (paper §4.1: lr 1.5 linearly decayed, 100 iters).
+    pub cayley_iters: usize,
+    pub cayley_lr: f32,
+    pub cayley_samples: usize,
+    /// Optimize rotations against W16 ("16-a-kv", Table 3 winner) or the
+    /// weight-quantized net.
+    pub cayley_on_quant_weights: bool,
+    pub calib_corpus: String,
+    pub calib_seed: u64,
+    /// GPTQ calibration batches (through fwd_stats).
+    pub gptq_batches: usize,
+    pub gptq_percdamp: f32,
+    /// LLM-QAT driver.
+    pub qat_steps: usize,
+    pub qat_lr: f32,
+    /// Eval sizing.
+    pub eval_windows: Option<usize>,
+    pub task_items: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            model: "sq-2m".into(),
+            method: Method::SpinQuantHad,
+            bits: Bits { w: 4.0, a: 4.0, kv: 4.0 },
+            use_gptq: true,
+            a_sym: false,
+            a_clip: 1.0,
+            kv_sym: false,
+            kv_clip: 1.0,
+            rotation_init: "hadamard".into(),
+            rotation_seed: 0,
+            cayley_iters: 100,
+            cayley_lr: 1.5,
+            cayley_samples: 256,
+            cayley_on_quant_weights: false,
+            calib_corpus: "wiki-syn".into(),
+            calib_seed: 0,
+            gptq_batches: 8,
+            gptq_percdamp: 0.01,
+            qat_steps: 120,
+            qat_lr: 1e-3,
+            eval_windows: None,
+            task_items: 24,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Apply `key = value` pairs from a parsed TOML table.
+    pub fn apply_toml(&mut self, toml: &Toml) -> Result<()> {
+        for (key, v) in toml.flat() {
+            self.apply_kv(&key, &v.as_string())?;
+        }
+        Ok(())
+    }
+
+    /// Apply one override (shared by TOML and `--key value` CLI flags).
+    pub fn apply_kv(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
+            "model" => self.model = value.to_string(),
+            "method" => self.method = Method::parse(value)?,
+            "bits" => self.bits = Bits::parse(value)?,
+            "use_gptq" => self.use_gptq = parse_bool(value)?,
+            "a_sym" => self.a_sym = parse_bool(value)?,
+            "a_clip" => self.a_clip = value.parse()?,
+            "kv_sym" => self.kv_sym = parse_bool(value)?,
+            "kv_clip" => self.kv_clip = value.parse()?,
+            "rotation_init" => self.rotation_init = value.to_string(),
+            "rotation_seed" => self.rotation_seed = value.parse()?,
+            "cayley_iters" => self.cayley_iters = value.parse()?,
+            "cayley_lr" => self.cayley_lr = value.parse()?,
+            "cayley_samples" => self.cayley_samples = value.parse()?,
+            "cayley_on_quant_weights" => self.cayley_on_quant_weights = parse_bool(value)?,
+            "calib_corpus" => self.calib_corpus = value.to_string(),
+            "calib_seed" => self.calib_seed = value.parse()?,
+            "gptq_batches" => self.gptq_batches = value.parse()?,
+            "gptq_percdamp" => self.gptq_percdamp = value.parse()?,
+            "qat_steps" => self.qat_steps = value.parse()?,
+            "qat_lr" => self.qat_lr = value.parse()?,
+            "eval_windows" => {
+                self.eval_windows = if value == "all" { None } else { Some(value.parse()?) }
+            }
+            "task_items" => self.task_items = value.parse()?,
+            other => bail!("unknown config key {other:?}"),
+        }
+        Ok(())
+    }
+}
+
+fn parse_bool(s: &str) -> Result<bool> {
+    match s {
+        "true" | "1" | "yes" => Ok(true),
+        "false" | "0" | "no" => Ok(false),
+        _ => bail!("expected bool, got {s:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TOML subset parser: [sections], key = value (string/number/bool/array).
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_string(&self) -> String {
+        match self {
+            TomlValue::Str(s) => s.clone(),
+            TomlValue::Num(n) => {
+                if n.fract() == 0.0 {
+                    format!("{}", *n as i64)
+                } else {
+                    format!("{n}")
+                }
+            }
+            TomlValue::Bool(b) => b.to_string(),
+            TomlValue::Arr(a) => {
+                a.iter().map(|v| v.as_string()).collect::<Vec<_>>().join(",")
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Toml {
+    /// section -> key -> value ("" = top level).
+    pub sections: BTreeMap<String, BTreeMap<String, TomlValue>>,
+}
+
+impl Toml {
+    pub fn parse(src: &str) -> Result<Self> {
+        let mut out = Toml::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: bad section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim().to_string();
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow!("line {}: {e}", lineno + 1))?;
+            out.sections.entry(section.clone()).or_default().insert(key, value);
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// Flattened `section.key` (top-level keys stay bare) -> value.
+    pub fn flat(&self) -> Vec<(String, TomlValue)> {
+        let mut out = Vec::new();
+        for (sec, map) in &self.sections {
+            for (k, v) in map {
+                let key = if sec.is_empty() { k.clone() } else { format!("{sec}.{k}") };
+                out.push((key, v.clone()));
+            }
+        }
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    if let Ok(n) = s.parse::<f64>() {
+        return Ok(TomlValue::Num(n));
+    }
+    // Bare strings (method names etc.) are accepted for ergonomics.
+    Ok(TomlValue::Str(s.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for (s, m) in [
+            ("rtn", Method::Rtn),
+            ("spinquant-had", Method::SpinQuantHad),
+            ("SPINQUANT-NOHAD", Method::SpinQuantNoHad),
+            ("quarot", Method::QuaRot),
+            ("fp", Method::Float),
+        ] {
+            assert_eq!(Method::parse(s).unwrap(), m);
+        }
+        assert!(Method::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn bits_parse() {
+        let b = Bits::parse("4-8-16").unwrap();
+        assert_eq!((b.w, b.a, b.kv), (4.0, 8.0, 16.0));
+        assert_eq!(b.label(), "4-8-16");
+        assert!(Bits::parse("4-8").is_err());
+        assert!(Bits::parse("1-8-8").is_err());
+        assert!(Bits::parse("4-x-8").is_err());
+    }
+
+    #[test]
+    fn toml_parses_sections_and_types() {
+        let src = r#"
+            # experiment config
+            model = "sq-2m"
+            bits = "4-4-4"     # W-A-KV
+            [cayley]
+            iters = 100
+            lr = 1.5
+            on = true
+            seeds = [1, 2, 3]
+        "#;
+        let t = Toml::parse(src).unwrap();
+        assert_eq!(t.get("", "model"), Some(&TomlValue::Str("sq-2m".into())));
+        assert_eq!(t.get("cayley", "iters"), Some(&TomlValue::Num(100.0)));
+        assert_eq!(t.get("cayley", "on"), Some(&TomlValue::Bool(true)));
+        assert_eq!(
+            t.get("cayley", "seeds"),
+            Some(&TomlValue::Arr(vec![
+                TomlValue::Num(1.0),
+                TomlValue::Num(2.0),
+                TomlValue::Num(3.0)
+            ]))
+        );
+    }
+
+    #[test]
+    fn toml_errors() {
+        assert!(Toml::parse("[unclosed").is_err());
+        assert!(Toml::parse("novalue").is_err());
+    }
+
+    #[test]
+    fn pipeline_overrides() {
+        let mut c = PipelineConfig::default();
+        c.apply_kv("method", "gptq").unwrap();
+        c.apply_kv("bits", "3-8-8").unwrap();
+        c.apply_kv("cayley_iters", "10").unwrap();
+        assert_eq!(c.method, Method::Gptq);
+        assert_eq!(c.bits.w, 3.0);
+        assert_eq!(c.cayley_iters, 10);
+        assert!(c.apply_kv("nope", "1").is_err());
+    }
+
+    #[test]
+    fn method_properties() {
+        assert!(Method::SpinQuantHad.uses_online_hadamard());
+        assert!(!Method::SpinQuantNoHad.uses_online_hadamard());
+        assert!(Method::SpinQuantNoHad.learns_rotation());
+        assert!(Method::QuaRot.uses_rotation());
+        assert!(!Method::QuaRot.learns_rotation());
+        assert!(!Method::Gptq.uses_rotation());
+    }
+}

@@ -1,0 +1,160 @@
+//! Rotation learning loop (paper §3.2 / §4.1): drives Cayley SGD over the
+//! `cayley_{nohad,had}` gradient artifacts.
+//!
+//! Division of labour: the PJRT artifact computes the Euclidean gradients
+//! dL/dR1, dL/dR2ᵢ of the *activation-quantized* network loss (weights stay
+//! FP — Table 3's winning configuration, unless
+//! `cayley_on_quant_weights` asks for in-graph weight quant too); this rust
+//! loop owns the Stiefel-manifold retraction, the 1.5 → 0 linear lr decay,
+//! and the calibration batching.
+
+use anyhow::Result;
+
+use crate::cayley::{linear_decay_lr, CayleySgd, Solver};
+use crate::eval::QcfgVec;
+use crate::model::Weights;
+use crate::rotation::RotationSet;
+use crate::runtime::Value;
+use crate::tensor::Tensor;
+
+use super::Pipeline;
+
+/// Outcome telemetry of one learning run.
+#[derive(Clone, Debug)]
+pub struct CayleyRun {
+    pub losses: Vec<f32>,
+    pub final_orth_error: f32,
+}
+
+/// Learn R1/R2 starting from `init`, minimizing the quantized-network loss.
+pub fn learn_rotations(
+    pipe: &Pipeline,
+    folded_weights: &Weights,
+    init: RotationSet,
+    had: bool,
+    meta: &mut std::collections::BTreeMap<String, f64>,
+) -> Result<RotationSet> {
+    let (rot, run) = learn_rotations_detailed(pipe, folded_weights, init, had)?;
+    if let (Some(first), Some(last)) = (run.losses.first(), run.losses.last()) {
+        meta.insert("cayley_loss_first".into(), *first as f64);
+        meta.insert("cayley_loss_last".into(), *last as f64);
+    }
+    meta.insert("cayley_orth_error".into(), run.final_orth_error as f64);
+    Ok(rot)
+}
+
+pub fn learn_rotations_detailed(
+    pipe: &Pipeline,
+    folded_weights: &Weights,
+    init: RotationSet,
+    had: bool,
+) -> Result<(RotationSet, CayleyRun)> {
+    let cfg = &pipe.cfg;
+
+    let artifact = if had { "cayley_had" } else { "cayley_nohad" };
+    let exe = pipe.rt.load(pipe.manifest, &cfg.model, artifact)?;
+
+    // Rotation-learning qcfg: activations/KV at target bits; weights FP by
+    // default (Table 3), optionally quantized in-graph for the ablation.
+    let mut qcfg = QcfgVec::from_pipeline(cfg);
+    if cfg.cayley_on_quant_weights {
+        qcfg = qcfg.with_w_bits(cfg.bits.w);
+    }
+
+    // Locate dynamic inputs.
+    let r1_idx = exe.input_index("r1")?;
+    let r2s_idx = exe.input_index("r2s")?;
+    let tokens_idx = exe.input_index("tokens")?;
+    let (batch, seq) = {
+        let (_, shape, _) = &exe.spec.inputs[tokens_idx];
+        (shape[0], shape[1])
+    };
+
+    // Static inputs (weights + qcfg) as literals, once.
+    let mut values = Vec::with_capacity(exe.spec.inputs.len());
+    for (name, shape, _) in &exe.spec.inputs {
+        let v = match name.as_str() {
+            "r1" => Value::F32(init.r1.clone()),
+            "r2s" => Value::F32(stack_r2s(&init.r2s)),
+            "tokens" => Value::I32(vec![0; shape.iter().product()], shape.clone()),
+            "qcfg" => Value::F32(qcfg.tensor()),
+            _ => Value::F32(folded_weights.get(name)?.clone()),
+        };
+        values.push(v);
+    }
+    let mut literals = exe.prepare(&values)?;
+
+    // Calibration windows: cfg.cayley_samples sequences, cycled in batches.
+    let corpus = pipe.load_corpus("train")?;
+    let windows = corpus.calib_windows(seq, cfg.cayley_samples.max(batch), cfg.calib_seed);
+
+    let mut r1 = init.r1.clone();
+    let mut r2s = init.r2s.clone();
+    let mut opt_r1 = CayleySgd::new(cfg.cayley_lr, 0.9, Solver::Exact);
+    let mut opt_r2: Vec<CayleySgd> =
+        (0..r2s.len()).map(|_| CayleySgd::new(cfg.cayley_lr, 0.9, Solver::Exact)).collect();
+
+    let mut losses = Vec::with_capacity(cfg.cayley_iters);
+    for iter in 0..cfg.cayley_iters {
+        // Batch for this iteration (cycled).
+        let start = (iter * batch) % windows.len().max(1);
+        let mut chunk: Vec<Vec<i32>> = Vec::with_capacity(batch);
+        for b in 0..batch {
+            chunk.push(windows[(start + b) % windows.len()].clone());
+        }
+        let flat: Vec<i32> = chunk.concat();
+        literals[tokens_idx] =
+            xla::Literal::vec1(&flat).reshape(&[batch as i64, seq as i64])?;
+        literals[r1_idx] = tensor_literal(&r1)?;
+        literals[r2s_idx] = tensor_literal(&stack_r2s(&r2s))?;
+
+        let outs = exe.run_literals(&literals)?;
+        let loss = outs[0].data[0];
+        losses.push(loss);
+        let g1 = &outs[1];
+        let g2s = &outs[2];
+
+        let lr = linear_decay_lr(cfg.cayley_lr, iter, cfg.cayley_iters);
+        // R2 steps use a head-dim-scaled lr (same schedule, smaller matrices).
+        opt_r1.step(&mut r1, g1, lr)?;
+        for (l, opt) in opt_r2.iter_mut().enumerate() {
+            let g2 = g2s.index0(l);
+            opt.step(&mut r2s[l], &g2, lr)?;
+        }
+        crate::debug!("cayley iter {iter}: loss {loss:.4} lr {lr:.3}");
+    }
+
+    let rot = RotationSet { r1, r2s };
+    let run = CayleyRun { final_orth_error: rot.orthonormality_error(), losses };
+    Ok((rot, run))
+}
+
+fn stack_r2s(r2s: &[Tensor]) -> Tensor {
+    let l = r2s.len();
+    let dh = r2s[0].shape[0];
+    let mut out = Tensor::zeros(&[l, dh, dh]);
+    for (i, r) in r2s.iter().enumerate() {
+        out.data[i * dh * dh..(i + 1) * dh * dh].copy_from_slice(&r.data);
+    }
+    out
+}
+
+fn tensor_literal(t: &Tensor) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_r2s_layout() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 2], vec![5., 6., 7., 8.]);
+        let s = stack_r2s(&[a.clone(), b.clone()]);
+        assert_eq!(s.shape, vec![2, 2, 2]);
+        assert_eq!(s.index0(0), a);
+        assert_eq!(s.index0(1), b);
+    }
+}

@@ -1,0 +1,410 @@
+//! The SpinQuant pipeline coordinator — L3's brain.
+//!
+//! Orchestrates: weight loading → RMSNorm folding → rotation construction /
+//! Cayley learning → rotation merging → weight quantization (RTN/GPTQ) →
+//! evaluation (perplexity + zero-shot) → reporting. Every paper method
+//! (Table 1 row family) is a branch of [`Pipeline::quantize`].
+//!
+//! Submodules: [`cayley_driver`] (rotation learning loop over the PJRT grad
+//! artifact), [`qat`] (LLM-QAT baseline trainer), [`serve`] (decode loop,
+//! KV-cache manager, request scheduler).
+
+pub mod cayley_driver;
+pub mod qat;
+pub mod serve;
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Method, PipelineConfig};
+use crate::data::Corpus;
+use crate::eval::{self, EvalSession, QcfgVec};
+use crate::gptq::HessianAccum;
+use crate::hadamard;
+use crate::model::{Manifest, ModelConfig, Weights};
+use crate::rotation::{self, RotationKind, RotationSet};
+use crate::runtime::{Executable, Runtime};
+use crate::smoothquant;
+use crate::tensor::Tensor;
+
+/// The result of the quantization pipeline: everything the eval/serving
+/// path needs. Weights are stored dequantized (the artifacts consume f32),
+/// with the integer grids already applied.
+pub struct QuantizedModel {
+    pub weights: Weights,
+    pub qcfg: QcfgVec,
+    pub had: bool,
+    pub rotation: Option<RotationSet>,
+    /// Pipeline telemetry (cayley loss curve endpoints, timings...).
+    pub meta: BTreeMap<String, f64>,
+}
+
+/// Per-linear calibration captures from one or more `fwd_stats` runs.
+pub struct CalibStats {
+    /// site -> stacked capture (layers, rows, dim); head_in has layers=1.
+    pub captures: BTreeMap<String, Tensor>,
+}
+
+pub struct Pipeline<'rt> {
+    pub rt: &'rt Runtime,
+    pub manifest: &'rt Manifest,
+    pub cfg: PipelineConfig,
+    pub model_cfg: ModelConfig,
+}
+
+impl<'rt> Pipeline<'rt> {
+    pub fn new(rt: &'rt Runtime, manifest: &'rt Manifest, cfg: PipelineConfig) -> Result<Self> {
+        let model_cfg = manifest.config(&cfg.model)?;
+        manifest.check_param_order(&model_cfg)?;
+        Ok(Self { rt, manifest, cfg, model_cfg })
+    }
+
+    pub fn load_base_weights(&self) -> Result<Weights> {
+        let w = Weights::load(&self.manifest.weights_path(&self.cfg.model))?;
+        w.validate(&self.model_cfg)?;
+        Ok(w)
+    }
+
+    pub fn load_corpus(&self, split: &str) -> Result<Corpus> {
+        Corpus::load(&self.manifest.data_path(&self.cfg.calib_corpus, split))
+    }
+
+    fn fwd_artifact_name(had: bool, kind: &str) -> String {
+        format!("fwd_{kind}_{}", if had { "had" } else { "nohad" })
+    }
+
+    /// Run fwd_stats over `n_batches` calibration batches and accumulate
+    /// per-site captures (concatenated along the row axis).
+    pub fn collect_stats(&self, weights: &Weights, n_batches: usize) -> Result<CalibStats> {
+        let exe = self.rt.load(self.manifest, &self.cfg.model, "fwd_stats")?;
+        let mut session = EvalSession::new(&exe, weights, None)?;
+        let corpus = self.load_corpus("train")?;
+        let windows = corpus.calib_windows(
+            session.seq,
+            n_batches * session.batch,
+            self.cfg.calib_seed ^ 0x57A75,
+        );
+        let out_names = exe.spec.outputs.clone();
+        let mut captures: BTreeMap<String, Tensor> = BTreeMap::new();
+        for chunk in windows.chunks(session.batch) {
+            let outs = session.run(chunk)?;
+            for (name, t) in out_names.iter().zip(outs) {
+                if name == "logits" {
+                    continue;
+                }
+                // Normalize to (layers, rows, dim).
+                let norm = normalize_capture(name, &t, &self.model_cfg);
+                captures
+                    .entry(name.clone())
+                    .and_modify(|acc| *acc = concat_rows(acc, &norm))
+                    .or_insert(norm);
+            }
+        }
+        Ok(CalibStats { captures })
+    }
+
+    /// GPTQ Hessian accumulation from the stats captures.
+    /// `had`: apply the online R4 Hadamard to the down_proj input capture
+    /// (the stats artifact taps pre-R4; the real `_had` network quantizes
+    /// post-R4 against the H-merged w_down).
+    fn hessians(&self, stats: &CalibStats, had: bool) -> Result<BTreeMap<String, HessianAccum>> {
+        let cfg = &self.model_cfg;
+        let mut hs: BTreeMap<String, HessianAccum> = BTreeMap::new();
+        let mut feed = |name: String, x: &Tensor| {
+            let k = x.last_dim();
+            hs.entry(name).or_insert_with(|| HessianAccum::new(k)).add_batch(x);
+        };
+        for l in 0..cfg.n_layers {
+            let p = format!("layers.{l}.");
+            let resid = stats.captures["resid_in"].index0(l);
+            for w in ["wq", "wk", "wv"] {
+                feed(format!("{p}{w}"), &resid);
+            }
+            feed(format!("{p}wo"), &stats.captures["oproj_in"].index0(l));
+            let ffn = stats.captures["ffn_in"].index0(l);
+            feed(format!("{p}wgate"), &ffn);
+            feed(format!("{p}wup"), &ffn);
+            let mut down = stats.captures["down_in"].index0(l);
+            if had {
+                down = hadamard::fwht_last_axis(&down);
+            }
+            feed(format!("{p}wdown"), &down);
+        }
+        feed("head".to_string(), &stats.captures["head_in"].index0(0));
+        Ok(hs)
+    }
+
+    /// Quantize every linear weight (RTN or GPTQ). Norms and the embedding
+    /// stay FP (standard in all compared methods).
+    fn quantize_weights(
+        &self,
+        weights: &Weights,
+        hessians: Option<&BTreeMap<String, HessianAccum>>,
+    ) -> Result<Weights> {
+        let bits = self.cfg.bits.w;
+        if bits >= 16.0 {
+            return Ok(weights.clone());
+        }
+        let mut out = weights.clone();
+        for name in self.model_cfg.param_order() {
+            let is_linear = name.ends_with("wq")
+                || name.ends_with("wk")
+                || name.ends_with("wv")
+                || name.ends_with("wo")
+                || name.ends_with("wgate")
+                || name.ends_with("wup")
+                || name.ends_with("wdown")
+                || name == "head";
+            if !is_linear {
+                continue;
+            }
+            let w = weights.get(&name)?;
+            let q = match hessians.and_then(|h| h.get(&name)) {
+                Some(h) => crate::gptq::gptq_quantize(w, h, bits, self.cfg.gptq_percdamp)
+                    .with_context(|| format!("GPTQ on {name}"))?,
+                None => crate::gptq::rtn_quantize(w, bits),
+            };
+            out.set(&name, q);
+        }
+        Ok(out)
+    }
+
+    fn rotation_kind(&self) -> Result<RotationKind> {
+        Ok(match self.cfg.rotation_init.as_str() {
+            "hadamard" => RotationKind::RandomHadamard,
+            "orthogonal" | "fp" => RotationKind::RandomOrthogonal,
+            "identity" => RotationKind::Identity,
+            other => bail!("unknown rotation_init {other:?}"),
+        })
+    }
+
+    /// The full quantization pipeline for the configured method.
+    pub fn quantize(&self) -> Result<QuantizedModel> {
+        let t0 = std::time::Instant::now();
+        let mut meta = BTreeMap::new();
+        let base = self.load_base_weights()?;
+        let folded = rotation::fold_norm_scales(&base, &self.model_cfg)?;
+        let method = self.cfg.method;
+        let had = method.uses_online_hadamard();
+        let qcfg = match method {
+            Method::Float => QcfgVec::fp(),
+            _ => QcfgVec::from_pipeline(&self.cfg),
+        };
+
+        let (weights, rotation) = match method {
+            Method::Float => (folded, None),
+            Method::Rtn => (self.quantize_weights(&folded, None)?, None),
+            Method::Gptq => {
+                let stats = self.collect_stats(&folded, self.cfg.gptq_batches)?;
+                let hs = self.hessians(&stats, false)?;
+                (self.quantize_weights(&folded, Some(&hs))?, None)
+            }
+            Method::SmoothQuant => {
+                let stats = self.collect_stats(&folded, self.cfg.gptq_batches)?;
+                let mut act = smoothquant::ActStats::new(&self.model_cfg);
+                for l in 0..self.model_cfg.n_layers {
+                    smoothquant::ActStats::absorb(
+                        &mut act.attn_in[l],
+                        &stats.captures["resid_in"].index0(l),
+                    );
+                    smoothquant::ActStats::absorb(
+                        &mut act.ffn_in[l],
+                        &stats.captures["ffn_in"].index0(l),
+                    );
+                }
+                smoothquant::ActStats::absorb(
+                    &mut act.head_in,
+                    &stats.captures["head_in"].index0(0),
+                );
+                let smoothed = smoothquant::apply(&folded, &self.model_cfg, &act, 0.5)?;
+                (self.quantize_weights(&smoothed, None)?, None)
+            }
+            Method::LlmQat => {
+                let trained = qat::train(self, &folded, &mut meta)?;
+                (self.quantize_weights(&trained, None)?, None)
+            }
+            Method::QuaRot => {
+                // Random Hadamard R1/R2 + online R3/R4, no learning.
+                return self.quantize_rotated(
+                    RotationKind::RandomHadamard,
+                    self.cfg.rotation_seed,
+                    false,
+                    true,
+                );
+            }
+            Method::SpinQuantNoHad | Method::SpinQuantHad => {
+                return self.quantize_rotated(
+                    self.rotation_kind()?,
+                    self.cfg.rotation_seed,
+                    true,
+                    had,
+                );
+            }
+        };
+
+        meta.insert("pipeline_seconds".into(), t0.elapsed().as_secs_f64());
+        Ok(QuantizedModel { weights, qcfg, had, rotation, meta })
+    }
+
+    /// The rotation-family pipeline (QuaRot / SpinQuant / the Table 2 & 4
+    /// ablation arms): build or learn R1/R2, merge, weight-quantize.
+    /// Exposed so the bench harnesses can sweep (kind, seed, learn, had)
+    /// combinations directly.
+    pub fn quantize_rotated(
+        &self,
+        kind: RotationKind,
+        seed: u64,
+        learn: bool,
+        had: bool,
+    ) -> Result<QuantizedModel> {
+        let t0 = std::time::Instant::now();
+        let mut meta = BTreeMap::new();
+        let base = self.load_base_weights()?;
+        let folded = rotation::fold_norm_scales(&base, &self.model_cfg)?;
+        let qcfg = QcfgVec::from_pipeline(&self.cfg);
+        let init = RotationSet::build(&self.model_cfg, kind, seed);
+        let rot = if learn {
+            cayley_driver::learn_rotations(self, &folded, init, had, &mut meta)?
+        } else {
+            init
+        };
+        let merged = rotation::merge(&folded, &self.model_cfg, &rot, had)?;
+        let hs = if self.cfg.use_gptq && self.cfg.bits.w < 16.0 {
+            let stats = self.collect_stats(&merged, self.cfg.gptq_batches)?;
+            Some(self.hessians(&stats, had)?)
+        } else {
+            None
+        };
+        let weights = self.quantize_weights(&merged, hs.as_ref())?;
+        meta.insert("pipeline_seconds".into(), t0.elapsed().as_secs_f64());
+        Ok(QuantizedModel { weights, qcfg, had, rotation: Some(rot), meta })
+    }
+
+    /// Load the forward executable matching a quantized model.
+    pub fn fwd_exe(&self, qm: &QuantizedModel, kind: &str) -> Result<Executable> {
+        self.rt.load(self.manifest, &self.cfg.model, &Self::fwd_artifact_name(qm.had, kind))
+    }
+
+    /// Full paper-style evaluation: Wiki perplexity + 0-shot^8 average.
+    pub fn evaluate(&self, qm: &QuantizedModel) -> Result<EvalResult> {
+        let test = self.load_corpus("test")?;
+        // Perplexity.
+        let eval_exe = self.fwd_exe(qm, "eval")?;
+        let mut session = EvalSession::new(&eval_exe, &qm.weights, Some(qm.qcfg))?;
+        let windows = test.eval_windows(session.seq, self.cfg.eval_windows);
+        let ppl = eval::perplexity(&mut session, &windows)?;
+        drop(session);
+
+        // Zero-shot tasks.
+        let task_exe = self.fwd_exe(qm, "task")?;
+        let mut tsession = EvalSession::new(&task_exe, &qm.weights, Some(qm.qcfg))?;
+        let other = Corpus::load(&self.manifest.data_path("c4-syn", "test")).ok();
+        let seq = tsession.seq;
+        let suites = crate::data::build_task_suites(
+            &test,
+            other.as_ref(),
+            self.cfg.task_items,
+            seq / 2,
+            seq / 2,
+            4,
+            0xBEEF,
+        );
+        let (per_suite, avg) = eval::zero_shot(&mut tsession, &suites)?;
+        Ok(EvalResult { ppl, per_suite, zero_shot_avg: avg })
+    }
+}
+
+/// Evaluation outcome for one (method, bits, model) cell of Table 1.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub ppl: f64,
+    pub per_suite: Vec<(String, f64)>,
+    pub zero_shot_avg: f64,
+}
+
+impl EvalResult {
+    /// Accuracy in percent, like the paper's tables.
+    pub fn acc_pct(&self) -> f64 {
+        self.zero_shot_avg * 100.0
+    }
+}
+
+/// Normalize a capture tensor to (layers, rows, dim).
+fn normalize_capture(name: &str, t: &Tensor, cfg: &ModelConfig) -> Tensor {
+    match name {
+        // (L, B, S, D) or (L, B, S, F)
+        "resid_in" | "oproj_in" | "ffn_in" | "down_in" => {
+            let l = t.shape[0];
+            let d = *t.shape.last().unwrap();
+            let rows = t.numel() / (l * d);
+            t.clone().reshape(&[l, rows, d]).unwrap()
+        }
+        // (L, B, S, H, dh) -> per-head rows
+        "k" | "v" => {
+            let l = t.shape[0];
+            let dh = cfg.d_head;
+            let rows = t.numel() / (l * dh);
+            t.clone().reshape(&[l, rows, dh]).unwrap()
+        }
+        // (B, S, D) -> (1, rows, D)
+        "head_in" => {
+            let d = *t.shape.last().unwrap();
+            let rows = t.numel() / d;
+            t.clone().reshape(&[1, rows, d]).unwrap()
+        }
+        _ => t.clone(),
+    }
+}
+
+fn concat_rows(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape[0], b.shape[0]);
+    assert_eq!(a.shape[2], b.shape[2]);
+    let (l, ra, d) = (a.shape[0], a.shape[1], a.shape[2]);
+    let rb = b.shape[1];
+    let mut out = Tensor::zeros(&[l, ra + rb, d]);
+    for layer in 0..l {
+        let dst = &mut out.data[layer * (ra + rb) * d..];
+        dst[..ra * d].copy_from_slice(&a.data[layer * ra * d..(layer + 1) * ra * d]);
+        dst[ra * d..(ra + rb) * d]
+            .copy_from_slice(&b.data[layer * rb * d..(layer + 1) * rb * d]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat_rows_stacks_per_layer() {
+        let a = Tensor::new(vec![2, 1, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 2, 2], vec![5., 6., 7., 8., 9., 10., 11., 12.]);
+        let c = concat_rows(&a, &b);
+        assert_eq!(c.shape, vec![2, 3, 2]);
+        assert_eq!(c.index0(0).data, vec![1., 2., 5., 6., 7., 8.]);
+        assert_eq!(c.index0(1).data, vec![3., 4., 9., 10., 11., 12.]);
+    }
+
+    #[test]
+    fn normalize_capture_shapes() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            vocab: 256,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 4,
+            d_ffn: 16,
+            rope_theta: 1e4,
+            max_seq: 8,
+            n_params: 0,
+        };
+        let t = Tensor::zeros(&[2, 3, 5, 8]);
+        assert_eq!(normalize_capture("resid_in", &t, &cfg).shape, vec![2, 15, 8]);
+        let kv = Tensor::zeros(&[2, 3, 5, 2, 4]);
+        assert_eq!(normalize_capture("k", &kv, &cfg).shape, vec![2, 30, 4]);
+        let h = Tensor::zeros(&[3, 5, 8]);
+        assert_eq!(normalize_capture("head_in", &h, &cfg).shape, vec![1, 15, 8]);
+    }
+}

@@ -1,0 +1,118 @@
+//! LLM-QAT baseline (Liu et al. 2023): quantization-aware training with
+//! straight-through estimators on weights, activations and the KV cache.
+//!
+//! The `qat_grads` artifact returns the loss and dL/dW for *every* weight
+//! of the fully fake-quantized network; this module drives Adam over those
+//! gradients. Substitution note (DESIGN.md §3): the original is data-free
+//! (it self-generates data from the FP model); we train on the synthetic
+//! calibration corpus instead, which exercises the identical QAT mechanics.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::eval::QcfgVec;
+use crate::model::Weights;
+use crate::runtime::Value;
+use crate::tensor::Tensor;
+
+use super::Pipeline;
+
+struct Adam {
+    m: Tensor,
+    v: Tensor,
+}
+
+/// Train the folded weights with STE fake-quant at the pipeline's bit
+/// widths; returns the adapted (still FP-valued) weights. The caller applies
+/// the final deployment RTN pass so weights land exactly on the grid.
+pub fn train(
+    pipe: &Pipeline,
+    folded: &Weights,
+    meta: &mut BTreeMap<String, f64>,
+) -> Result<Weights> {
+    let cfg = &pipe.cfg;
+    let exe = pipe.rt.load(pipe.manifest, &cfg.model, "qat_grads")?;
+
+    let qcfg = QcfgVec::from_pipeline(cfg).with_w_bits(cfg.bits.w);
+    let tokens_idx = exe.input_index("tokens")?;
+    let (batch, seq) = {
+        let (_, shape, _) = &exe.spec.inputs[tokens_idx];
+        (shape[0], shape[1])
+    };
+
+    let order = pipe.model_cfg.param_order();
+    let mut weights = folded.clone();
+    let mut values = Vec::with_capacity(exe.spec.inputs.len());
+    for (name, shape, _) in &exe.spec.inputs {
+        let v = match name.as_str() {
+            "tokens" => Value::I32(vec![0; shape.iter().product()], shape.clone()),
+            "qcfg" => Value::F32(qcfg.tensor()),
+            _ => Value::F32(weights.get(name)?.clone()),
+        };
+        values.push(v);
+    }
+    let mut literals = exe.prepare(&values)?;
+
+    // Adam state per parameter.
+    let mut state: BTreeMap<String, Adam> = order
+        .iter()
+        .map(|n| {
+            let t = weights.get(n).unwrap();
+            (
+                n.clone(),
+                Adam { m: Tensor::zeros(&t.shape.clone()), v: Tensor::zeros(&t.shape.clone()) },
+            )
+        })
+        .collect();
+
+    let corpus = pipe.load_corpus("train")?;
+    let windows = corpus.calib_windows(seq, cfg.qat_steps * batch, cfg.calib_seed ^ 0x9A7);
+
+    let (b1, b2, eps) = (0.9f32, 0.95f32, 1e-8f32);
+    let mut first_loss = None;
+    let mut last_loss = 0.0f32;
+    for step in 0..cfg.qat_steps {
+        let start = (step * batch) % windows.len().max(1);
+        let mut flat = Vec::with_capacity(batch * seq);
+        for b in 0..batch {
+            flat.extend_from_slice(&windows[(start + b) % windows.len()]);
+        }
+        literals[tokens_idx] =
+            xla::Literal::vec1(&flat).reshape(&[batch as i64, seq as i64])?;
+        let outs = exe.run_literals(&literals)?;
+        let loss = outs[0].data[0];
+        first_loss.get_or_insert(loss);
+        last_loss = loss;
+
+        let t = (step + 1) as f32;
+        let bc1 = 1.0 - b1.powf(t);
+        let bc2 = 1.0 - b2.powf(t);
+        // outputs: loss, then grads in param order.
+        for (pi, name) in order.iter().enumerate() {
+            let g = &outs[1 + pi];
+            let w = weights.tensors.get_mut(name).unwrap();
+            let st = state.get_mut(name).unwrap();
+            for i in 0..w.data.len() {
+                let gi = g.data[i];
+                st.m.data[i] = b1 * st.m.data[i] + (1.0 - b1) * gi;
+                st.v.data[i] = b2 * st.v.data[i] + (1.0 - b2) * gi * gi;
+                let mhat = st.m.data[i] / bc1;
+                let vhat = st.v.data[i] / bc2;
+                w.data[i] -= cfg.qat_lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+        // Refresh weight literals for the next step.
+        for (ii, (name, _, _)) in exe.spec.inputs.iter().enumerate() {
+            if name != "tokens" && name != "qcfg" {
+                let t = weights.get(name)?;
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                literals[ii] = xla::Literal::vec1(&t.data).reshape(&dims)?;
+            }
+        }
+        crate::debug!("qat step {step}: loss {loss:.4}");
+    }
+    meta.insert("qat_loss_first".into(), first_loss.unwrap_or(0.0) as f64);
+    meta.insert("qat_loss_last".into(), last_loss as f64);
+    Ok(weights)
+}

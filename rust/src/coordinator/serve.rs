@@ -1,0 +1,279 @@
+//! Serving path: token-by-token decode with a quantized KV-cache, latency
+//! measurement (paper Table 6 / Fig. 7), and a threaded request scheduler.
+//!
+//! The decode artifacts (`decode_fp` / `decode_nohad` / `decode_had`) take
+//! the whole KV cache as an input and return the updated cache; the
+//! [`GenerationSession`] keeps the cache as PJRT literals between steps so
+//! the steady-state loop does no tensor<->literal conversion for the cache.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::eval::QcfgVec;
+use crate::model::Weights;
+use crate::runtime::{Executable, Value};
+use crate::util::timer::Samples;
+
+/// Which decode artifact to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeVariant {
+    Fp,
+    QuantNoHad,
+    QuantHad,
+}
+
+impl DecodeVariant {
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            DecodeVariant::Fp => "decode_fp",
+            DecodeVariant::QuantNoHad => "decode_nohad",
+            DecodeVariant::QuantHad => "decode_had",
+        }
+    }
+}
+
+/// One active generation with its KV cache.
+pub struct GenerationSession<'e> {
+    exe: &'e Executable,
+    literals: Vec<xla::Literal>,
+    token_idx: usize,
+    pos_idx: usize,
+    cache_k_idx: usize,
+    cache_v_idx: usize,
+    pub max_seq: usize,
+    pub pos: usize,
+    pub step_times: Samples,
+}
+
+impl<'e> GenerationSession<'e> {
+    pub fn new(exe: &'e Executable, weights: &Weights, qcfg: Option<QcfgVec>) -> Result<Self> {
+        let mut values = Vec::with_capacity(exe.spec.inputs.len());
+        let (mut token_idx, mut pos_idx, mut ck, mut cv) = (None, None, None, None);
+        let mut max_seq = 0usize;
+        for (i, (name, shape, _)) in exe.spec.inputs.iter().enumerate() {
+            let v = match name.as_str() {
+                "token" => {
+                    token_idx = Some(i);
+                    Value::I32(vec![0; shape.iter().product()], shape.clone())
+                }
+                "pos" => {
+                    pos_idx = Some(i);
+                    Value::ScalarI32(0)
+                }
+                "cache_k" => {
+                    ck = Some(i);
+                    max_seq = shape[2];
+                    Value::F32(crate::tensor::Tensor::zeros(shape))
+                }
+                "cache_v" => {
+                    cv = Some(i);
+                    Value::F32(crate::tensor::Tensor::zeros(shape))
+                }
+                "qcfg" => Value::F32(
+                    qcfg.ok_or_else(|| anyhow!("{}: needs qcfg", exe.label))?.tensor(),
+                ),
+                _ => Value::F32(weights.get(name)?.clone()),
+            };
+            values.push(v);
+        }
+        let literals = exe.prepare(&values)?;
+        Ok(Self {
+            exe,
+            literals,
+            token_idx: token_idx.ok_or_else(|| anyhow!("no token input"))?,
+            pos_idx: pos_idx.ok_or_else(|| anyhow!("no pos input"))?,
+            cache_k_idx: ck.ok_or_else(|| anyhow!("no cache_k input"))?,
+            cache_v_idx: cv.ok_or_else(|| anyhow!("no cache_v input"))?,
+            max_seq,
+            pos: 0,
+            step_times: Samples::new(),
+        })
+    }
+
+    /// Feed one token, advance the cache, return the logits (V,).
+    pub fn step(&mut self, token: u8) -> Result<Vec<f32>> {
+        if self.pos >= self.max_seq {
+            anyhow::bail!("KV cache full ({} positions)", self.max_seq);
+        }
+        let t0 = Instant::now();
+        self.literals[self.token_idx] =
+            xla::Literal::vec1(&[token as i32]).reshape(&[1])?;
+        self.literals[self.pos_idx] = xla::Literal::scalar(self.pos as i32);
+        let bufs = self.exe.run_literals_raw(&self.literals)?;
+        let result = bufs[0][0].to_literal_sync()?;
+        let mut parts = result.to_tuple()?;
+        // outputs: logits, cache_k, cache_v — keep caches as literals.
+        let cache_v = parts.pop().ok_or_else(|| anyhow!("missing cache_v"))?;
+        let cache_k = parts.pop().ok_or_else(|| anyhow!("missing cache_k"))?;
+        let logits_lit = parts.pop().ok_or_else(|| anyhow!("missing logits"))?;
+        self.literals[self.cache_k_idx] = cache_k;
+        self.literals[self.cache_v_idx] = cache_v;
+        self.pos += 1;
+        let logits = logits_lit.to_vec::<f32>()?;
+        self.step_times.push(t0.elapsed().as_secs_f64() * 1e6);
+        Ok(logits)
+    }
+
+    /// Greedy generation from a byte prompt.
+    pub fn generate(&mut self, prompt: &[u8], n_new: usize) -> Result<Vec<u8>> {
+        let mut last = Vec::new();
+        for &b in prompt {
+            last = self.step(b)?;
+        }
+        let mut out = Vec::with_capacity(n_new);
+        for _ in 0..n_new {
+            if self.pos >= self.max_seq {
+                break;
+            }
+            let next = argmax(&last) as u8;
+            out.push(next);
+            last = self.step(next)?;
+        }
+        Ok(out)
+    }
+
+    pub fn ms_per_token(&self) -> f64 {
+        self.step_times.mean_us() / 1e3
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// Request scheduler: a worker thread owns the PJRT state (it is !Send);
+// clients submit prompts over a channel and receive completions.
+// ---------------------------------------------------------------------------
+
+/// A generation request.
+pub struct Request {
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+}
+
+/// A completed generation.
+#[derive(Debug)]
+pub struct Response {
+    pub id: usize,
+    pub completion: Vec<u8>,
+    pub latency_ms: f64,
+    pub ms_per_token: f64,
+}
+
+enum Msg {
+    Submit(usize, Request),
+    Shutdown,
+}
+
+/// Single-worker serving front: FIFO queue + per-request KV-cache reset.
+/// (PJRT handles are not `Send`, so the worker thread constructs everything
+/// it needs via the factory closure and owns it for its lifetime.)
+pub struct Server {
+    tx: mpsc::Sender<Msg>,
+    rx_resp: mpsc::Receiver<Result<Response, String>>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    next_id: usize,
+}
+
+impl Server {
+    /// `factory` runs on the worker thread and must produce a closure that
+    /// serves one request (typically wrapping a fresh GenerationSession).
+    pub fn spawn<F, S>(factory: F) -> Self
+    where
+        F: FnOnce() -> Result<S> + Send + 'static,
+        S: FnMut(&Request) -> Result<(Vec<u8>, f64)>,
+    {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (tx_resp, rx_resp) = mpsc::channel();
+        let handle = std::thread::spawn(move || {
+            let mut serve_one = match factory() {
+                Ok(s) => s,
+                Err(e) => {
+                    let _ = tx_resp.send(Err(format!("worker init failed: {e:#}")));
+                    return;
+                }
+            };
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    Msg::Submit(id, req) => {
+                        let t0 = Instant::now();
+                        let resp = serve_one(&req)
+                            .map(|(completion, ms_per_token)| Response {
+                                id,
+                                completion,
+                                latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                                ms_per_token,
+                            })
+                            .map_err(|e| format!("{e:#}"));
+                        let _ = tx_resp.send(resp);
+                    }
+                    Msg::Shutdown => break,
+                }
+            }
+        });
+        Self { tx, rx_resp, handle: Some(handle), next_id: 0 }
+    }
+
+    pub fn submit(&mut self, req: Request) -> usize {
+        let id = self.next_id;
+        self.next_id += 1;
+        let _ = self.tx.send(Msg::Submit(id, req));
+        id
+    }
+
+    pub fn recv(&self) -> Result<Response> {
+        match self.rx_resp.recv() {
+            Ok(Ok(r)) => Ok(r),
+            Ok(Err(e)) => Err(anyhow!(e)),
+            Err(_) => Err(anyhow!("server worker hung up")),
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn server_round_trips_requests() {
+        let mut server = Server::spawn(|| {
+            Ok(move |req: &Request| {
+                // Echo worker: "generates" the reversed prompt.
+                let mut out = req.prompt.clone();
+                out.reverse();
+                out.truncate(req.max_new_tokens);
+                Ok((out, 0.5))
+            })
+        });
+        let id0 = server.submit(Request { prompt: b"abc".to_vec(), max_new_tokens: 8 });
+        let id1 = server.submit(Request { prompt: b"hello".to_vec(), max_new_tokens: 2 });
+        let r0 = server.recv().unwrap();
+        let r1 = server.recv().unwrap();
+        assert_eq!(r0.id, id0);
+        assert_eq!(r0.completion, b"cba".to_vec());
+        assert_eq!(r1.id, id1);
+        assert_eq!(r1.completion, b"ol".to_vec());
+    }
+}

@@ -1,0 +1,299 @@
+//! Data plumbing: corpus loading, evaluation chunking, calibration
+//! sampling, and the synthetic zero-shot task suites.
+//!
+//! The corpora (wiki-syn / c4-syn) are generated once at build time by
+//! `python/compile/data.py`; this module only *reads* the byte streams —
+//! python never runs at evaluation time.
+//!
+//! ## Zero-shot tasks
+//!
+//! The paper evaluates on 8 commonsense suites (BoolQ, PIQA, SIQA,
+//! HellaSwag, WinoGrande, ARC-e/c, OBQA) scored lm-eval-harness style:
+//! each item has one true continuation and distractors, the model picks the
+//! choice with the highest length-normalized logprob. We build 8 synthetic
+//! suites from the held-out corpus with one corruption family per suite
+//! (difficulty varies per family, like the real benchmark spread); the
+//! *relative* accuracy of quantization methods tracks logprob fidelity,
+//! which is the quantity the paper's tables compare.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::prng::Prng;
+
+/// A byte-level corpus (vocab = 256).
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub bytes: Vec<u8>,
+    pub name: String,
+}
+
+impl Corpus {
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading corpus {path:?}"))?;
+        if bytes.is_empty() {
+            bail!("corpus {path:?} is empty");
+        }
+        let name = path.file_name().unwrap_or_default().to_string_lossy().to_string();
+        Ok(Self { bytes, name })
+    }
+
+    pub fn from_bytes(name: &str, bytes: Vec<u8>) -> Self {
+        Self { bytes, name: name.to_string() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Non-overlapping evaluation windows of length `seq` (perplexity eval).
+    pub fn eval_windows(&self, seq: usize, limit: Option<usize>) -> Vec<Vec<i32>> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i + seq <= self.bytes.len() {
+            out.push(self.bytes[i..i + seq].iter().map(|&b| b as i32).collect());
+            i += seq;
+            if let Some(l) = limit {
+                if out.len() >= l {
+                    break;
+                }
+            }
+        }
+        out
+    }
+
+    /// Random calibration windows (rotation learning / GPTQ / QAT).
+    pub fn calib_windows(&self, seq: usize, count: usize, seed: u64) -> Vec<Vec<i32>> {
+        let mut rng = Prng::new(seed ^ 0xCA11B);
+        let max_start = self.bytes.len().saturating_sub(seq + 1);
+        (0..count)
+            .map(|_| {
+                let s = rng.below(max_start.max(1));
+                self.bytes[s..s + seq].iter().map(|&b| b as i32).collect()
+            })
+            .collect()
+    }
+}
+
+/// One multiple-choice item: a shared context and `n_choices` continuations
+/// (choice 0 is always the true one pre-shuffle; `correct` gives its
+/// post-shuffle index).
+#[derive(Clone, Debug)]
+pub struct TaskItem {
+    pub context: Vec<i32>,
+    pub choices: Vec<Vec<i32>>,
+    pub correct: usize,
+}
+
+/// A task suite (one corruption family).
+#[derive(Clone, Debug)]
+pub struct TaskSuite {
+    pub name: String,
+    pub items: Vec<TaskItem>,
+}
+
+/// The 8 corruption families standing in for the paper's 8 benchmarks.
+pub const TASK_NAMES: [&str; 8] = [
+    "shuffle", "random", "reverse", "elsewhere", "caseflip", "noise", "shift", "crossdom",
+];
+
+fn corrupt(
+    family: &str,
+    truth: &[u8],
+    corpus: &Corpus,
+    other: Option<&Corpus>,
+    rng: &mut Prng,
+) -> Vec<u8> {
+    let n = truth.len();
+    match family {
+        "shuffle" => {
+            let mut v = truth.to_vec();
+            rng.shuffle(&mut v);
+            v
+        }
+        "random" => (0..n).map(|_| (32 + rng.below(95)) as u8).collect(),
+        "reverse" => truth.iter().rev().copied().collect(),
+        "elsewhere" => {
+            let s = rng.below(corpus.len().saturating_sub(n + 1).max(1));
+            corpus.bytes[s..s + n].to_vec()
+        }
+        "caseflip" => truth
+            .iter()
+            .map(|&b| match b {
+                b'a'..=b'z' => b - 32,
+                b'A'..=b'Z' => b + 32,
+                _ => b,
+            })
+            .collect(),
+        "noise" => truth
+            .iter()
+            .map(|&b| {
+                if rng.uniform() < 0.3 {
+                    (32 + rng.below(95)) as u8
+                } else {
+                    b
+                }
+            })
+            .collect(),
+        "shift" => {
+            // continuation shifted one byte late — locally plausible text,
+            // misaligned with the context.
+            let mut v = truth.to_vec();
+            v.rotate_right(1);
+            v
+        }
+        "crossdom" => {
+            let src = other.unwrap_or(corpus);
+            let s = rng.below(src.len().saturating_sub(n + 1).max(1));
+            src.bytes[s..s + n].to_vec()
+        }
+        _ => unreachable!("unknown corruption family {family}"),
+    }
+}
+
+/// Build all 8 suites from a held-out corpus.
+///
+/// `ctx_len + choice_len` must fit the task artifact's sequence length.
+pub fn build_task_suites(
+    corpus: &Corpus,
+    other: Option<&Corpus>,
+    items_per_suite: usize,
+    ctx_len: usize,
+    choice_len: usize,
+    n_choices: usize,
+    seed: u64,
+) -> Vec<TaskSuite> {
+    let mut suites = Vec::new();
+    for (si, family) in TASK_NAMES.iter().enumerate() {
+        let mut rng = Prng::new(seed.wrapping_add(si as u64 * 7919));
+        let mut items = Vec::new();
+        let span = ctx_len + choice_len;
+        for _ in 0..items_per_suite {
+            let start = rng.below(corpus.len().saturating_sub(span + 1).max(1));
+            let context: Vec<i32> =
+                corpus.bytes[start..start + ctx_len].iter().map(|&b| b as i32).collect();
+            let truth = &corpus.bytes[start + ctx_len..start + span];
+            let mut choices: Vec<Vec<i32>> =
+                vec![truth.iter().map(|&b| b as i32).collect()];
+            while choices.len() < n_choices {
+                let c = corrupt(family, truth, corpus, other, &mut rng);
+                choices.push(c.iter().map(|&b| b as i32).collect());
+            }
+            // Shuffle choice order, track the truth.
+            let mut order: Vec<usize> = (0..n_choices).collect();
+            rng.shuffle(&mut order);
+            let correct = order.iter().position(|&o| o == 0).unwrap();
+            let choices = order.iter().map(|&o| choices[o].clone()).collect();
+            items.push(TaskItem { context, choices, correct });
+        }
+        suites.push(TaskSuite { name: family.to_string(), items });
+    }
+    suites
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        let mut p = Prng::new(3);
+        let words = ["alpha ", "beta ", "gamma ", "delta. ", "epsilon "];
+        let mut s = String::new();
+        while s.len() < 20_000 {
+            s.push_str(words[p.below(words.len())]);
+        }
+        Corpus::from_bytes("test", s.into_bytes())
+    }
+
+    #[test]
+    fn eval_windows_cover_non_overlapping() {
+        let c = corpus();
+        let w = c.eval_windows(64, None);
+        assert_eq!(w.len(), c.len() / 64);
+        assert!(w.iter().all(|x| x.len() == 64));
+        assert_ne!(w[0], w[1]);
+        let limited = c.eval_windows(64, Some(5));
+        assert_eq!(limited.len(), 5);
+    }
+
+    #[test]
+    fn calib_windows_deterministic_per_seed() {
+        let c = corpus();
+        let a = c.calib_windows(32, 10, 7);
+        let b = c.calib_windows(32, 10, 7);
+        let d = c.calib_windows(32, 10, 8);
+        assert_eq!(a, b);
+        assert_ne!(a, d);
+    }
+
+    #[test]
+    fn token_range_is_byte_range() {
+        let c = corpus();
+        for w in c.eval_windows(32, Some(20)) {
+            assert!(w.iter().all(|&t| (0..256).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn suites_have_all_families_and_valid_items() {
+        let c = corpus();
+        let suites = build_task_suites(&c, None, 6, 16, 16, 4, 1);
+        assert_eq!(suites.len(), 8);
+        for s in &suites {
+            assert_eq!(s.items.len(), 6);
+            for item in &s.items {
+                assert_eq!(item.context.len(), 16);
+                assert_eq!(item.choices.len(), 4);
+                assert!(item.correct < 4);
+                assert!(item.choices.iter().all(|c| c.len() == 16));
+            }
+        }
+    }
+
+    #[test]
+    fn truth_choice_is_real_continuation() {
+        let c = corpus();
+        let suites = build_task_suites(&c, None, 4, 16, 16, 4, 2);
+        // For the "random" family the distractors are ASCII noise, so the
+        // correct choice must differ from all distractors.
+        let suite = suites.iter().find(|s| s.name == "random").unwrap();
+        for item in &suite.items {
+            let truth = &item.choices[item.correct];
+            for (i, ch) in item.choices.iter().enumerate() {
+                if i != item.correct {
+                    assert_ne!(truth, ch);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn corruptions_preserve_length() {
+        let c = corpus();
+        let mut rng = Prng::new(5);
+        let truth = &c.bytes[100..116];
+        for fam in TASK_NAMES {
+            let corrupted = corrupt(fam, truth, &c, None, &mut rng);
+            assert_eq!(corrupted.len(), truth.len(), "{fam}");
+        }
+    }
+
+    #[test]
+    fn deterministic_suites() {
+        let c = corpus();
+        let a = build_task_suites(&c, None, 3, 8, 8, 4, 9);
+        let b = build_task_suites(&c, None, 3, 8, 8, 4, 9);
+        for (x, y) in a.iter().zip(&b) {
+            for (i, j) in x.items.iter().zip(&y.items) {
+                assert_eq!(i.context, j.context);
+                assert_eq!(i.correct, j.correct);
+            }
+        }
+    }
+}

@@ -1,0 +1,389 @@
+//! Evaluation engines: perplexity, zero-shot task scoring, and the
+//! activation-statistics / SNR analyses behind Figs. 2, 3 and 8 / Table 14.
+//!
+//! All model compute goes through the AOT artifacts via PJRT; this module
+//! owns batching, cross-entropy, choice scoring, and the statistics.
+//! Weight literals are converted once per session and reused across batches
+//! (the dominant cost at these model sizes is the conversion, not the
+//! matmuls — see EXPERIMENTS.md §Perf).
+
+use anyhow::{anyhow, Result};
+
+use crate::data::TaskSuite;
+use crate::model::Weights;
+use crate::runtime::{Executable, Value};
+use crate::tensor::Tensor;
+
+/// The 8-scalar runtime quantization vector — ABI mirror of
+/// `python/compile/model.py::qcfg_vector`:
+/// `[a_bits, kv_bits, a_sym, kv_sym, a_clip, kv_clip, w_bits, w_sym]`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QcfgVec(pub [f32; 8]);
+
+impl QcfgVec {
+    pub fn fp() -> Self {
+        Self([16.0, 16.0, 0.0, 0.0, 1.0, 1.0, 16.0, 1.0])
+    }
+
+    pub fn from_pipeline(cfg: &crate::config::PipelineConfig) -> Self {
+        // Weight quantization happens offline (RTN/GPTQ), so w_bits stays 16
+        // here; only the LLM-QAT training driver sets it.
+        Self([
+            cfg.bits.a,
+            cfg.bits.kv,
+            if cfg.a_sym { 1.0 } else { 0.0 },
+            if cfg.kv_sym { 1.0 } else { 0.0 },
+            cfg.a_clip,
+            cfg.kv_clip,
+            16.0,
+            1.0,
+        ])
+    }
+
+    pub fn with_a_bits(mut self, bits: f32) -> Self {
+        self.0[0] = bits;
+        self
+    }
+
+    pub fn with_kv_bits(mut self, bits: f32) -> Self {
+        self.0[1] = bits;
+        self
+    }
+
+    pub fn with_w_bits(mut self, bits: f32) -> Self {
+        self.0[6] = bits;
+        self
+    }
+
+    pub fn tensor(&self) -> Tensor {
+        Tensor::from_vec(self.0.to_vec())
+    }
+}
+
+/// A reusable forward-pass session over one artifact: weight literals are
+/// prepared once; per call only the token (and qcfg) literals are rebuilt.
+pub struct EvalSession<'e> {
+    exe: &'e Executable,
+    literals: Vec<xla::Literal>,
+    tokens_idx: usize,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl<'e> EvalSession<'e> {
+    pub fn new(exe: &'e Executable, weights: &Weights, qcfg: Option<QcfgVec>) -> Result<Self> {
+        let mut values = Vec::with_capacity(exe.spec.inputs.len());
+        let mut tokens_idx = None;
+        let mut batch = 0;
+        let mut seq = 0;
+        for (i, (name, shape, dtype)) in exe.spec.inputs.iter().enumerate() {
+            match name.as_str() {
+                "tokens" => {
+                    tokens_idx = Some(i);
+                    batch = shape[0];
+                    seq = shape[1];
+                    values.push(Value::I32(vec![0; shape.iter().product()], shape.clone()));
+                }
+                "qcfg" => {
+                    let q = qcfg.ok_or_else(|| anyhow!("{}: artifact needs qcfg", exe.label))?;
+                    values.push(Value::F32(q.tensor()));
+                }
+                _ => {
+                    let t = weights.get(name)?;
+                    debug_assert_eq!(&t.shape, shape, "{name} {dtype}");
+                    values.push(Value::F32(t.clone()));
+                }
+            }
+        }
+        let literals = exe.prepare(&values)?;
+        Ok(Self {
+            exe,
+            literals,
+            tokens_idx: tokens_idx.ok_or_else(|| anyhow!("artifact has no tokens input"))?,
+            batch,
+            seq,
+        })
+    }
+
+    /// Run one batch of token windows; returns all artifact outputs.
+    pub fn run(&mut self, windows: &[Vec<i32>]) -> Result<Vec<Tensor>> {
+        let v = Value::tokens(windows, self.batch, self.seq);
+        self.literals[self.tokens_idx] = match v {
+            Value::I32(flat, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&flat).reshape(&dims)?
+            }
+            _ => unreachable!(),
+        };
+        self.exe.run_literals(&self.literals)
+    }
+
+    /// Run and return just the logits (output 0), shape (B, S, V).
+    pub fn logits(&mut self, windows: &[Vec<i32>]) -> Result<Tensor> {
+        Ok(self.run(windows)?.remove(0))
+    }
+}
+
+/// Stable log-softmax NLL of next-token prediction over one window.
+/// logits: (S, V) row-major slice; tokens: the window (len S).
+/// Returns (sum nll, count) over positions 0..S-1 predicting 1..S.
+pub fn window_nll(logits: &[f32], tokens: &[i32], vocab: usize) -> (f64, usize) {
+    let s = tokens.len();
+    let mut sum = 0.0f64;
+    for pos in 0..s - 1 {
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        let target = tokens[pos + 1] as usize;
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse: f32 = row.iter().map(|&l| (l - m).exp()).sum::<f32>().ln() + m;
+        sum += (lse - row[target]) as f64;
+    }
+    (sum, s - 1)
+}
+
+/// Perplexity over a set of equal-length windows (the paper's Wiki column).
+pub fn perplexity(session: &mut EvalSession, windows: &[Vec<i32>]) -> Result<f64> {
+    let b = session.batch;
+    let s = session.seq;
+    let vocab = 256;
+    let mut total_nll = 0.0f64;
+    let mut total_cnt = 0usize;
+    for chunk in windows.chunks(b) {
+        let logits = session.logits(chunk)?;
+        debug_assert_eq!(logits.shape, vec![b, s, vocab]);
+        for (row, window) in chunk.iter().enumerate() {
+            let l = &logits.data[row * s * vocab..(row + 1) * s * vocab];
+            let (nll, cnt) = window_nll(l, window, vocab);
+            total_nll += nll;
+            total_cnt += cnt;
+        }
+    }
+    Ok((total_nll / total_cnt.max(1) as f64).exp())
+}
+
+// ---------------------------------------------------------------------------
+// Zero-shot multiple-choice scoring (lm-eval-harness style)
+// ---------------------------------------------------------------------------
+
+/// Pack one (context, choice) pair into a fixed-length window (0-padded).
+fn pack_item(context: &[i32], choice: &[i32], seq: usize) -> Vec<i32> {
+    let mut v = Vec::with_capacity(seq);
+    v.extend_from_slice(context);
+    v.extend_from_slice(choice);
+    v.truncate(seq);
+    while v.len() < seq {
+        v.push(0);
+    }
+    v
+}
+
+/// Mean logprob of the choice tokens given the context (length-normalized).
+fn choice_score(logits: &[f32], window: &[i32], ctx_len: usize, choice_len: usize, vocab: usize) -> f64 {
+    let mut sum = 0.0f64;
+    let mut cnt = 0usize;
+    for pos in ctx_len.saturating_sub(1)..(ctx_len + choice_len - 1).min(window.len() - 1) {
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        let target = window[pos + 1] as usize;
+        let m = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse: f32 = row.iter().map(|&l| (l - m).exp()).sum::<f32>().ln() + m;
+        sum += (row[target] - lse) as f64;
+        cnt += 1;
+    }
+    sum / cnt.max(1) as f64
+}
+
+/// Evaluate one suite: fraction of items whose true continuation wins.
+pub fn suite_accuracy(session: &mut EvalSession, suite: &TaskSuite) -> Result<f64> {
+    let seq = session.seq;
+    let b = session.batch;
+    let vocab = 256;
+    // Flatten all (item, choice) rows, then batch them through the artifact.
+    let mut rows: Vec<Vec<i32>> = Vec::new();
+    let mut meta: Vec<(usize, usize, usize)> = Vec::new(); // (item, ctx_len, choice_len)
+    for (ii, item) in suite.items.iter().enumerate() {
+        for choice in &item.choices {
+            rows.push(pack_item(&item.context, choice, seq));
+            meta.push((ii, item.context.len(), choice.len()));
+        }
+    }
+    let mut scores = vec![Vec::new(); suite.items.len()];
+    let mut cursor = 0usize;
+    for chunk in rows.chunks(b) {
+        let logits = session.logits(chunk)?;
+        for (row_in_batch, window) in chunk.iter().enumerate() {
+            let (item, ctx_len, choice_len) = meta[cursor];
+            let l = &logits.data[row_in_batch * seq * vocab..(row_in_batch + 1) * seq * vocab];
+            scores[item].push(choice_score(l, window, ctx_len, choice_len, vocab));
+            cursor += 1;
+        }
+    }
+    let mut correct = 0usize;
+    for (item, sc) in suite.items.iter().zip(&scores) {
+        let best = sc
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if best == item.correct {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / suite.items.len().max(1) as f64)
+}
+
+/// Evaluate all suites; returns per-suite accuracy + the paper's 0-shot^8 avg.
+pub fn zero_shot(session: &mut EvalSession, suites: &[TaskSuite]) -> Result<(Vec<(String, f64)>, f64)> {
+    let mut per = Vec::new();
+    for suite in suites {
+        let acc = suite_accuracy(session, suite)?;
+        per.push((suite.name.clone(), acc));
+    }
+    let avg = per.iter().map(|(_, a)| a).sum::<f64>() / per.len().max(1) as f64;
+    Ok((per, avg))
+}
+
+// ---------------------------------------------------------------------------
+// Activation statistics / SNR (Figs. 2, 3, 8; Table 14)
+// ---------------------------------------------------------------------------
+
+/// Per-layer activation statistics from one `fwd_stats` run.
+#[derive(Clone, Debug)]
+pub struct LayerStats {
+    pub site: String,
+    pub layer: usize,
+    pub kurtosis: f32,
+    /// 4-bit per-token quantization MSE (Fig. 3b).
+    pub quant_mse_4bit: f32,
+    /// 4-bit SQNR in dB.
+    pub sqnr_db_4bit: f32,
+    /// Per-channel absmax (for the Fig. 2 distribution plots).
+    pub channel_absmax: Vec<f32>,
+}
+
+/// Compute stats for every layer of a stacked capture tensor (L, B, S, D).
+pub fn capture_stats(site: &str, t: &Tensor) -> Vec<LayerStats> {
+    let l = t.shape[0];
+    let spec = crate::quant::QuantSpec::activation(4.0);
+    (0..l)
+        .map(|layer| {
+            let x = t.index0(layer);
+            let d = x.last_dim();
+            let mut absmax = vec![0.0f32; d];
+            for r in 0..x.rows_2d() {
+                for (a, &v) in absmax.iter_mut().zip(x.row(r)) {
+                    *a = a.max(v.abs());
+                }
+            }
+            LayerStats {
+                site: site.to_string(),
+                layer,
+                kurtosis: x.kurtosis(),
+                quant_mse_4bit: crate::quant::quant_error_mse(&x, &spec),
+                sqnr_db_4bit: crate::quant::sqnr_db(&x, &spec),
+                channel_absmax: absmax,
+            }
+        })
+        .collect()
+}
+
+/// End-to-end signal-to-quantization-noise ratio between FP logits and
+/// quantized logits (paper Table 14 / Fig. 8a).
+pub fn e2e_snr_db(fp_logits: &Tensor, q_logits: &Tensor) -> f32 {
+    Tensor::snr_db(fp_logits, q_logits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qcfg_abi() {
+        let q = QcfgVec::fp();
+        assert_eq!(q.0[0], 16.0);
+        let q = q.with_a_bits(4.0).with_kv_bits(8.0).with_w_bits(3.0);
+        assert_eq!(q.0, [4.0, 8.0, 0.0, 0.0, 1.0, 1.0, 3.0, 1.0]);
+        assert_eq!(q.tensor().shape, vec![8]);
+    }
+
+    #[test]
+    fn window_nll_uniform_logits() {
+        // Uniform logits -> nll = ln(V) per position.
+        let vocab = 7;
+        let s = 5;
+        let logits = vec![0.0f32; s * vocab];
+        let tokens: Vec<i32> = (0..s as i32).collect();
+        let (nll, cnt) = window_nll(&logits, &tokens, vocab);
+        assert_eq!(cnt, s - 1);
+        let per = nll / cnt as f64;
+        assert!((per - (vocab as f64).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn window_nll_confident_correct() {
+        let vocab = 4;
+        let tokens = vec![0, 2, 1];
+        let mut logits = vec![0.0f32; 3 * vocab];
+        logits[2] = 20.0; // position 0 predicts token 2 ✓
+        logits[vocab + 1] = 20.0; // position 1 predicts token 1 ✓
+        let (nll, cnt) = window_nll(&logits, &tokens, vocab);
+        assert_eq!(cnt, 2);
+        assert!(nll < 1e-3, "nll={nll}");
+    }
+
+    #[test]
+    fn pack_item_layout() {
+        let w = pack_item(&[1, 2, 3], &[4, 5], 8);
+        assert_eq!(w, vec![1, 2, 3, 4, 5, 0, 0, 0]);
+        let w = pack_item(&[1, 2, 3], &[4, 5, 6, 7, 8, 9], 6);
+        assert_eq!(w, vec![1, 2, 3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn choice_score_prefers_predicted() {
+        // Model that deterministically predicts token 1 everywhere.
+        let vocab = 4;
+        let seq = 6;
+        let mut logits = vec![0.0f32; seq * vocab];
+        for p in 0..seq {
+            logits[p * vocab + 1] = 10.0;
+        }
+        let ctx = [3, 3];
+        let good = pack_item(&ctx, &[1, 1], seq);
+        let bad = pack_item(&ctx, &[2, 2], seq);
+        let sg = choice_score(&logits, &good, 2, 2, vocab);
+        let sb = choice_score(&logits, &bad, 2, 2, vocab);
+        assert!(sg > sb);
+    }
+
+    #[test]
+    fn capture_stats_detect_outliers() {
+        let mut p = crate::util::prng::Prng::new(1);
+        let (l, rows, d) = (2, 64, 32);
+        let mut data: Vec<f32> = (0..l * rows * d).map(|_| p.normal()).collect();
+        // plant outliers in layer 1 channel 5
+        for r in 0..rows {
+            data[l / 2 * 0 + (1 * rows + r) * d + 5] *= 30.0;
+        }
+        let t = Tensor::new(vec![l, rows, d], data);
+        let stats = capture_stats("resid", &t);
+        assert_eq!(stats.len(), 2);
+        assert!(stats[1].kurtosis > stats[0].kurtosis * 2.0);
+        assert!(stats[1].quant_mse_4bit > stats[0].quant_mse_4bit);
+        let mx = stats[1]
+            .channel_absmax
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(mx, 5);
+    }
+
+    #[test]
+    fn e2e_snr_sanity() {
+        let a = Tensor::from_vec(vec![1.0, 2.0, 3.0, 4.0]);
+        let b = a.map(|x| x + 0.01);
+        let c = a.map(|x| x + 1.0);
+        assert!(e2e_snr_db(&a, &b) > e2e_snr_db(&a, &c));
+    }
+}

@@ -1,0 +1,192 @@
+//! Fast Walsh-Hadamard transform — the L3 twin of the Pallas kernel
+//! (`python/compile/kernels/hadamard.py`) and the workhorse behind:
+//!
+//! * building dense (randomized) Hadamard rotation matrices for R1/R2
+//!   (`random_hadamard`), footnote 2 of the paper;
+//! * the offline H-merge of `w_down` for `SpinQuant_had` (`fwht_rows`);
+//! * baseline cost accounting for the online-Hadamard overhead (Table 6).
+//!
+//! Uses the normalized *Sylvester* construction: H is symmetric, involutive
+//! and orthonormal, so H^-1 = H^T = H.
+
+use crate::tensor::Tensor;
+use crate::util::prng::Prng;
+
+/// In-place unnormalized butterfly pass over one row of length n = 2^k.
+#[inline]
+pub fn fwht_row_unnormalized(x: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two());
+    let mut h = 1;
+    while h < n {
+        let stride = h * 2;
+        let mut base = 0;
+        while base < n {
+            for i in base..base + h {
+                let a = x[i];
+                let b = x[i + h];
+                x[i] = a + b;
+                x[i + h] = a - b;
+            }
+            base += stride;
+        }
+        h = stride;
+    }
+}
+
+/// Normalized FWHT of one row (multiplies by H_n / sqrt(n)).
+pub fn fwht_row(x: &mut [f32]) {
+    fwht_row_unnormalized(x);
+    let inv = 1.0 / (x.len() as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Normalized FWHT along the last axis of a tensor (any rank).
+pub fn fwht_last_axis(t: &Tensor) -> Tensor {
+    let n = t.last_dim();
+    assert!(n.is_power_of_two(), "FWHT size {n} must be a power of two");
+    let mut out = t.clone();
+    let rows = out.rows_2d();
+    for r in 0..rows {
+        fwht_row(&mut out.data[r * n..(r + 1) * n]);
+    }
+    out
+}
+
+/// Apply H to the *rows* (first axis) of a 2D tensor: out = H @ W.
+/// Used for the w_down H-merge (`SpinQuant_had`): H symmetric => H @ W is
+/// the FWHT of W^T's rows, transposed back.
+pub fn fwht_rows(w: &Tensor) -> Tensor {
+    assert_eq!(w.ndim(), 2);
+    let t = crate::linalg::transpose(w);
+    let t = fwht_last_axis(&t);
+    crate::linalg::transpose(&t)
+}
+
+/// Dense normalized Sylvester Hadamard matrix H_n / sqrt(n).
+pub fn hadamard_matrix(n: usize) -> Tensor {
+    assert!(n.is_power_of_two());
+    let mut h = Tensor::eye(n);
+    for i in 0..n {
+        fwht_row(h.row_mut(i));
+    }
+    // H applied to identity rows yields H itself (symmetric).
+    h
+}
+
+/// Randomized Hadamard rotation: H · diag(s), s ∈ {±1}^n (paper footnote 2:
+/// 2^n distinct random Hadamard matrices from one H).
+pub fn random_hadamard(n: usize, seed: u64) -> Tensor {
+    let mut p = Prng::new(seed ^ 0x48414441);
+    let signs: Vec<f32> = (0..n).map(|_| p.sign()).collect();
+    let mut h = hadamard_matrix(n);
+    for i in 0..n {
+        let row = h.row_mut(i);
+        for (v, s) in row.iter_mut().zip(&signs) {
+            *v *= s;
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{matmul, orthonormality_error};
+    use crate::testing::prop::{forall, Gen};
+
+    #[test]
+    fn matches_dense_matrix() {
+        let n = 16;
+        let h = hadamard_matrix(n);
+        let mut p = Prng::new(5);
+        let x = Tensor::new(vec![3, n], (0..3 * n).map(|_| p.normal()).collect());
+        let via_fwht = fwht_last_axis(&x);
+        let via_mat = matmul(&x, &h);
+        for (a, b) in via_fwht.data.iter().zip(&via_mat.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn hadamard_is_orthonormal_and_symmetric() {
+        for logn in 1..=9 {
+            let n = 1 << logn;
+            let h = hadamard_matrix(n);
+            assert!(orthonormality_error(&h) < 1e-4, "n={n}");
+            let ht = crate::linalg::transpose(&h);
+            for (a, b) in h.data.iter().zip(&ht.data) {
+                assert!((a - b).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn randomized_hadamard_is_orthonormal() {
+        for seed in 0..5 {
+            let h = random_hadamard(64, seed);
+            assert!(orthonormality_error(&h) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn distinct_seeds_distinct_matrices() {
+        let a = random_hadamard(32, 1);
+        let b = random_hadamard(32, 2);
+        assert!(a.sub(&b).max_abs() > 1e-3);
+    }
+
+    #[test]
+    fn prop_involution_and_isometry() {
+        forall(97, 40, |g: &mut Gen| {
+            let logn = g.int(1, 8);
+            let n = 1usize << logn;
+            let rows = g.int(1, 6);
+            let x = g.tensor(&[rows, n], 4.0);
+            let y = fwht_last_axis(&x);
+            let back = fwht_last_axis(&y);
+            for (a, b) in x.data.iter().zip(&back.data) {
+                if (a - b).abs() > 1e-3 {
+                    return Err(format!("involution broke: {a} vs {b} (n={n})"));
+                }
+            }
+            let nx = x.frob_norm();
+            let ny = y.frob_norm();
+            if (nx - ny).abs() > 1e-2 * nx.max(1.0) {
+                return Err(format!("not an isometry: {nx} vs {ny}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fwht_rows_is_left_multiply() {
+        let n = 8;
+        let h = hadamard_matrix(n);
+        let mut p = Prng::new(9);
+        let w = Tensor::new(vec![n, 5], (0..n * 5).map(|_| p.normal()).collect());
+        let got = fwht_rows(&w);
+        let want = matmul(&h, &w);
+        for (a, b) in got.data.iter().zip(&want.data) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gaussianizes_planted_outliers() {
+        // The paper's core claim in miniature (Fig. 3a).
+        let mut p = Prng::new(13);
+        let (rows, n) = (256, 128);
+        let mut x = Tensor::new(vec![rows, n], (0..rows * n).map(|_| p.normal()).collect());
+        for r in 0..rows {
+            x.data[r * n + 17] *= 25.0;
+            x.data[r * n + 90] *= 12.0;
+        }
+        let before = x.kurtosis();
+        let after = fwht_last_axis(&x).kurtosis();
+        assert!(before > 20.0, "before={before}");
+        assert!(after < 5.0, "after={after}");
+    }
+}

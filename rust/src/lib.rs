@@ -1,0 +1,53 @@
+//! # SpinQuant — LLM quantization with learned rotations
+//!
+//! Rust + JAX + Pallas reproduction of *"SpinQuant: LLM Quantization with
+//! Learned Rotations"* (ICLR 2025). Three-layer architecture:
+//!
+//! * **L1** (build time): Pallas kernels — fused fake-quant, fast
+//!   Walsh-Hadamard transform, dequant-on-load matmul (`python/compile/kernels`).
+//! * **L2** (build time): tiny-LLaMA forward/backward graphs with rotation
+//!   and quantization insertion points, AOT-lowered to HLO text
+//!   (`python/compile/model.py`, `aot.py`).
+//! * **L3** (run time, this crate): the SpinQuant pipeline — RTN/GPTQ
+//!   weight quantization, rotation construction and merging, Cayley-SGD
+//!   rotation learning on the Stiefel manifold, baselines (SmoothQuant,
+//!   QuaRot, LLM-QAT), a PJRT runtime that loads the AOT artifacts, a
+//!   batched evaluation engine (perplexity + zero-shot tasks), a serving
+//!   loop with a quantized KV-cache, and the benchmark harnesses that
+//!   regenerate every table and figure of the paper.
+//!
+//! Python never runs on the request path: `make artifacts` runs once, then
+//! the `spinquant` binary is self-contained.
+//!
+//! Quick start (after `make artifacts`):
+//! ```bash
+//! spinquant quantize --model sq-2m --method spinquant-had --bits 4-4-4
+//! spinquant eval     --model sq-2m --method spinquant-had --bits 4-4-4
+//! spinquant bench-table --id table1 --models sq-2m
+//! ```
+
+pub mod bench;
+pub mod benches_impl;
+pub mod cayley;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod gptq;
+pub mod hadamard;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod rotation;
+pub mod runtime;
+pub mod smoothquant;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+
+pub use tensor::Tensor;
+
+/// Crate-wide result alias (anyhow is the only error dependency available
+/// in the offline vendor set; thiserror-style enums are overkill here).
+pub type Result<T> = anyhow::Result<T>;

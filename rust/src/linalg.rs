@@ -1,0 +1,416 @@
+//! Dense linear algebra substrate (BLAS/LAPACK-free, cache-tiled).
+//!
+//! Sized for this project's matrices (d_model <= 256, d_ffn <= 1024):
+//! matmul variants, Householder QR (random orthogonal rotations), Cholesky
+//! (GPTQ Hessian), triangular solves, and Gaussian elimination inverse
+//! (exact Cayley transform). Everything is f32 in row-major order.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+const TILE: usize = 64;
+
+/// C = A(m,k) @ B(k,n), cache-tiled i-k-j loop order.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut c = Tensor::zeros(&[m, n]);
+    let (ad, bd, cd) = (&a.data, &b.data, &mut c.data);
+    for i0 in (0..m).step_by(TILE) {
+        let i1 = (i0 + TILE).min(m);
+        for k0 in (0..k).step_by(TILE) {
+            let k1 = (k0 + TILE).min(k);
+            for i in i0..i1 {
+                let crow = &mut cd[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let aik = ad[i * k + kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n..(kk + 1) * n];
+                    for (cv, bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+    c
+}
+
+/// C = A^T(m,k) @ B(m,n) — A stored as (m, k).
+pub fn matmul_tn(a: &Tensor, b: &Tensor) -> Tensor {
+    matmul(&transpose(a), b)
+}
+
+/// C = A(m,k) @ B^T(n,k) — B stored as (n, k).
+pub fn matmul_nt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (n, k2) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2);
+    let mut c = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        let arow = a.row(i);
+        for j in 0..n {
+            let brow = b.row(j);
+            let mut s = 0.0f32;
+            for t in 0..k {
+                s += arow[t] * brow[t];
+            }
+            c.data[i * n + j] = s;
+        }
+    }
+    c
+}
+
+pub fn transpose(a: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    let (m, n) = (a.shape[0], a.shape[1]);
+    let mut t = Tensor::zeros(&[n, m]);
+    for i in 0..m {
+        for j in 0..n {
+            t.data[j * m + i] = a.data[i * n + j];
+        }
+    }
+    t
+}
+
+/// y = x @ A for a single row vector x (len k), A (k, n).
+pub fn vecmat(x: &[f32], a: &Tensor) -> Vec<f32> {
+    let (k, n) = (a.shape[0], a.shape[1]);
+    assert_eq!(x.len(), k);
+    let mut y = vec![0.0f32; n];
+    for (kk, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let row = a.row(kk);
+        for (yv, av) in y.iter_mut().zip(row) {
+            *yv += xv * av;
+        }
+    }
+    let _ = k;
+    y
+}
+
+/// Householder QR; returns Q (m, m) with det-sign fixup so the distribution
+/// over Q is Haar when A is Gaussian (random rotation construction, §2.2).
+pub fn qr_orthogonal(a: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    let n = a.shape[0];
+    assert_eq!(n, a.shape[1], "square input required");
+    let mut r = a.clone();
+    let mut q = Tensor::eye(n);
+    for col in 0..n - 1 {
+        // Householder vector for column `col` below the diagonal.
+        let mut norm = 0.0f32;
+        for i in col..n {
+            let v = r.at2(i, col);
+            norm += v * v;
+        }
+        norm = norm.sqrt();
+        if norm < 1e-12 {
+            continue;
+        }
+        let r0 = r.at2(col, col);
+        let alpha = if r0 >= 0.0 { -norm } else { norm };
+        let mut v = vec![0.0f32; n];
+        v[col] = r0 - alpha;
+        for i in col + 1..n {
+            v[i] = r.at2(i, col);
+        }
+        let vtv: f32 = v.iter().map(|x| x * x).sum();
+        if vtv < 1e-20 {
+            continue;
+        }
+        let beta = 2.0 / vtv;
+        // R <- (I - beta v v^T) R
+        for j in col..n {
+            let mut dot = 0.0f32;
+            for i in col..n {
+                dot += v[i] * r.at2(i, j);
+            }
+            let f = beta * dot;
+            for i in col..n {
+                let cur = r.at2(i, j);
+                r.set2(i, j, cur - f * v[i]);
+            }
+        }
+        // Q <- Q (I - beta v v^T)
+        for i in 0..n {
+            let mut dot = 0.0f32;
+            for jj in col..n {
+                dot += q.at2(i, jj) * v[jj];
+            }
+            let f = beta * dot;
+            for jj in col..n {
+                let cur = q.at2(i, jj);
+                q.set2(i, jj, cur - f * v[jj]);
+            }
+        }
+    }
+    // Sign fixup: make diag(R) positive so Q is Haar-distributed.
+    for j in 0..n {
+        if r.at2(j, j) < 0.0 {
+            for i in 0..n {
+                let cur = q.at2(i, j);
+                q.set2(i, j, -cur);
+            }
+        }
+    }
+    q
+}
+
+/// Cholesky factorization A = L L^T (lower). Errors if not SPD.
+pub fn cholesky(a: &Tensor) -> Result<Tensor> {
+    assert_eq!(a.ndim(), 2);
+    let n = a.shape[0];
+    assert_eq!(n, a.shape[1]);
+    let mut l = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at2(i, j);
+            for k in 0..j {
+                s -= l.at2(i, k) * l.at2(j, k);
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("matrix not SPD at pivot {i} (s={s})");
+                }
+                l.set2(i, j, s.sqrt());
+            } else {
+                l.set2(i, j, s / l.at2(j, j));
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Inverse of an SPD matrix via Cholesky.
+pub fn spd_inverse(a: &Tensor) -> Result<Tensor> {
+    let n = a.shape[0];
+    let l = cholesky(a)?;
+    // Solve L L^T X = I column by column.
+    let mut inv = Tensor::zeros(&[n, n]);
+    let mut y = vec![0.0f32; n];
+    for col in 0..n {
+        // forward solve L y = e_col
+        for i in 0..n {
+            let mut s = if i == col { 1.0 } else { 0.0 };
+            for k in 0..i {
+                s -= l.at2(i, k) * y[k];
+            }
+            y[i] = s / l.at2(i, i);
+        }
+        // back solve L^T x = y
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= l.at2(k, i) * inv.at2(k, col);
+            }
+            inv.set2(i, col, s / l.at2(i, i));
+        }
+    }
+    Ok(inv)
+}
+
+/// General matrix inverse by Gauss-Jordan with partial pivoting.
+pub fn inverse(a: &Tensor) -> Result<Tensor> {
+    assert_eq!(a.ndim(), 2);
+    let n = a.shape[0];
+    assert_eq!(n, a.shape[1]);
+    let mut m = a.clone();
+    let mut inv = Tensor::eye(n);
+    for col in 0..n {
+        // pivot
+        let mut p = col;
+        let mut best = m.at2(col, col).abs();
+        for r in col + 1..n {
+            let v = m.at2(r, col).abs();
+            if v > best {
+                best = v;
+                p = r;
+            }
+        }
+        if best < 1e-12 {
+            bail!("singular matrix at column {col}");
+        }
+        if p != col {
+            for j in 0..n {
+                let (a1, a2) = (m.at2(col, j), m.at2(p, j));
+                m.set2(col, j, a2);
+                m.set2(p, j, a1);
+                let (b1, b2) = (inv.at2(col, j), inv.at2(p, j));
+                inv.set2(col, j, b2);
+                inv.set2(p, j, b1);
+            }
+        }
+        let d = m.at2(col, col);
+        for j in 0..n {
+            m.set2(col, j, m.at2(col, j) / d);
+            inv.set2(col, j, inv.at2(col, j) / d);
+        }
+        for r in 0..n {
+            if r == col {
+                continue;
+            }
+            let f = m.at2(r, col);
+            if f == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                let mv = m.at2(r, j) - f * m.at2(col, j);
+                m.set2(r, j, mv);
+                let iv = inv.at2(r, j) - f * inv.at2(col, j);
+                inv.set2(r, j, iv);
+            }
+        }
+    }
+    Ok(inv)
+}
+
+/// || A^T A - I ||_inf — orthonormality check used by rotation/cayley tests.
+pub fn orthonormality_error(a: &Tensor) -> f32 {
+    let n = a.shape[0];
+    let gram = matmul_tn(a, a);
+    let mut err = 0.0f32;
+    for i in 0..n {
+        for j in 0..n {
+            let target = if i == j { 1.0 } else { 0.0 };
+            err = err.max((gram.at2(i, j) - target).abs());
+        }
+    }
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn randn(shape: &[usize], seed: u64) -> Tensor {
+        let mut p = Prng::new(seed);
+        let n: usize = shape.iter().product();
+        Tensor::new(shape.to_vec(), (0..n).map(|_| p.normal()).collect())
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![3, 2], vec![7., 8., 9., 10., 11., 12.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let a = randn(&[17, 17], 1);
+        let c = matmul(&a, &Tensor::eye(17));
+        for (x, y) in a.data.iter().zip(&c.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let a = randn(&[9, 13], 2);
+        let b = randn(&[13, 7], 3);
+        let c1 = matmul(&a, &b);
+        let c2 = matmul_nt(&a, &transpose(&b));
+        let c3 = matmul_tn(&transpose(&a), &b);
+        for ((x, y), z) in c1.data.iter().zip(&c2.data).zip(&c3.data) {
+            assert!((x - y).abs() < 1e-4);
+            assert!((x - z).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn vecmat_matches_matmul() {
+        let a = randn(&[6, 5], 4);
+        let x: Vec<f32> = (0..6).map(|i| i as f32 * 0.3 - 1.0).collect();
+        let xm = Tensor::new(vec![1, 6], x.clone());
+        let want = matmul(&xm, &a);
+        let got = vecmat(&x, &a);
+        for (g, w) in got.iter().zip(&want.data) {
+            assert!((g - w).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn qr_produces_orthogonal() {
+        for seed in 0..4 {
+            let a = randn(&[32, 32], seed);
+            let q = qr_orthogonal(&a);
+            assert!(orthonormality_error(&q) < 1e-4, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let a = randn(&[12, 20], 5);
+        // SPD: A A^T + I
+        let mut spd = matmul_nt(&a, &a);
+        for i in 0..12 {
+            let v = spd.at2(i, i) + 1.0;
+            spd.set2(i, i, v);
+        }
+        let l = cholesky(&spd).unwrap();
+        let back = matmul_nt(&l, &l);
+        for (x, y) in spd.data.iter().zip(&back.data) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_spd() {
+        let m = Tensor::new(vec![2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, -1
+        assert!(cholesky(&m).is_err());
+    }
+
+    #[test]
+    fn spd_inverse_works() {
+        let a = randn(&[10, 16], 6);
+        let mut spd = matmul_nt(&a, &a);
+        for i in 0..10 {
+            let v = spd.at2(i, i) + 2.0;
+            spd.set2(i, i, v);
+        }
+        let inv = spd_inverse(&spd).unwrap();
+        let prod = matmul(&spd, &inv);
+        for i in 0..10 {
+            for j in 0..10 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at2(i, j) - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn general_inverse_works() {
+        let mut a = randn(&[14, 14], 7);
+        for i in 0..14 {
+            let v = a.at2(i, i) + 4.0;
+            a.set2(i, i, v); // diagonally dominant => nonsingular
+        }
+        let inv = inverse(&a).unwrap();
+        let prod = matmul(&a, &inv);
+        for i in 0..14 {
+            for j in 0..14 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((prod.at2(i, j) - want).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_rejects_singular() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 2., 4.]);
+        assert!(inverse(&a).is_err());
+    }
+}

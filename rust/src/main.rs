@@ -1,0 +1,246 @@
+//! `spinquant` — the L3 leader binary.
+//!
+//! Subcommands:
+//!   quantize     run the PTQ pipeline, save quantized weights (.sqt)
+//!   eval         quantize + evaluate (Wiki ppl, 0-shot^8 avg)
+//!   optimize     learn rotations only; report loss curve + orthonormality
+//!   serve        interactive-ish demo: generate completions for prompts
+//!   bench-table  regenerate one paper table/figure (see --id list)
+//!   selftest     end-to-end smoke: artifacts load + tiny eval
+//!   info         list models/artifacts found in artifacts/
+//!
+//! Flags are `--key value` pairs matching config::PipelineConfig keys, plus
+//! `--config file.toml`. Example:
+//!   spinquant eval --model sq-2m --method spinquant-had --bits 4-4-4
+
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, Context, Result};
+use spinquant::config::{PipelineConfig, Toml};
+use spinquant::coordinator::{serve, Pipeline};
+use spinquant::info;
+use spinquant::model::Manifest;
+use spinquant::report::{fmt_acc, fmt_ppl, Table};
+use spinquant::runtime::Runtime;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: spinquant <quantize|eval|optimize|serve|bench-table|selftest|info> [--key value ...]\n\
+         common flags: --model sq-2m --method spinquant-had --bits 4-4-4 --config run.toml\n\
+         bench-table:  --id table1|table2|table3|table4|table5|table6|table10|table11|table12|table13|fig2|fig3|fig4|fig7|fig8 [--models a,b] [--out EXPERIMENTS.md]"
+    );
+    std::process::exit(2);
+}
+
+struct Args {
+    cmd: String,
+    flags: Vec<(String, String)>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut argv: VecDeque<String> = std::env::args().skip(1).collect();
+    let cmd = argv.pop_front().unwrap_or_default();
+    if cmd.is_empty() || cmd == "-h" || cmd == "--help" {
+        usage();
+    }
+    let mut flags = Vec::new();
+    while let Some(a) = argv.pop_front() {
+        let key = a
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got {a:?}"))?
+            .to_string();
+        let val = argv.pop_front().ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+        flags.push((key, val));
+    }
+    Ok(Args { cmd, flags })
+}
+
+fn build_config(args: &Args) -> Result<(PipelineConfig, Vec<(String, String)>)> {
+    let mut cfg = PipelineConfig::default();
+    // config file first, then CLI overrides.
+    if let Some((_, path)) = args.flags.iter().find(|(k, _)| k == "config") {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        cfg.apply_toml(&Toml::parse(&text)?)?;
+    }
+    let mut extra = Vec::new();
+    for (k, v) in &args.flags {
+        if k == "config" {
+            continue;
+        }
+        if cfg.apply_kv(k, v).is_err() {
+            extra.push((k.clone(), v.clone()));
+        }
+    }
+    Ok((cfg, extra))
+}
+
+fn get_extra<'a>(extra: &'a [(String, String)], key: &str) -> Option<&'a str> {
+    extra.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+fn run() -> Result<()> {
+    let args = parse_args()?;
+    let (cfg, extra) = build_config(&args)?;
+
+    match args.cmd.as_str() {
+        "info" => cmd_info(&cfg),
+        "selftest" => cmd_selftest(&cfg),
+        "quantize" => cmd_quantize(&cfg, &extra),
+        "eval" => cmd_eval(&cfg),
+        "optimize" => cmd_optimize(&cfg),
+        "serve" => cmd_serve(&cfg, &extra),
+        "bench-table" => {
+            let id = get_extra(&extra, "id").ok_or_else(|| anyhow!("bench-table needs --id"))?;
+            let models: Vec<String> = get_extra(&extra, "models")
+                .unwrap_or(&cfg.model)
+                .split(',')
+                .map(str::to_string)
+                .collect();
+            let trials: usize =
+                get_extra(&extra, "trials").map(|v| v.parse()).transpose()?.unwrap_or(24);
+            spinquant_benches::run_bench(&cfg, id, &models, trials, get_extra(&extra, "out"))
+        }
+        _ => usage(),
+    }
+}
+
+fn cmd_info(cfg: &PipelineConfig) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    println!("artifacts dir: {:?}", cfg.artifacts_dir);
+    for m in manifest.models() {
+        let mc = manifest.config(&m)?;
+        println!(
+            "model {m}: d_model={} layers={} heads={} d_ffn={} (~{:.1}M params)",
+            mc.d_model,
+            mc.n_layers,
+            mc.n_heads,
+            mc.d_ffn,
+            mc.n_params as f64 / 1e6
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selftest(cfg: &PipelineConfig) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut fast = cfg.clone();
+    fast.eval_windows = Some(4);
+    fast.task_items = 4;
+    fast.method = spinquant::config::Method::Rtn;
+    let pipe = Pipeline::new(&rt, &manifest, fast)?;
+    let qm = pipe.quantize()?;
+    let res = pipe.evaluate(&qm)?;
+    println!("selftest OK: ppl={:.2} acc={:.1}%", res.ppl, res.acc_pct());
+    Ok(())
+}
+
+fn cmd_quantize(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::cpu()?;
+    let pipe = Pipeline::new(&rt, &manifest, cfg.clone())?;
+    let qm = pipe.quantize()?;
+    let out = get_extra(extra, "save")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| {
+            cfg.artifacts_dir.join(format!(
+                "{}_{}_{}.quant.sqt",
+                cfg.model,
+                cfg.method.name(),
+                cfg.bits.label()
+            ))
+        });
+    qm.weights.save(&out)?;
+    info!("saved quantized weights to {out:?}");
+    for (k, v) in &qm.meta {
+        println!("  {k}: {v:.4}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(cfg: &PipelineConfig) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::cpu()?;
+    let pipe = Pipeline::new(&rt, &manifest, cfg.clone())?;
+    let qm = pipe.quantize()?;
+    let res = pipe.evaluate(&qm)?;
+    let mut t = Table::new(
+        &format!("{} {} ({})", cfg.model, cfg.method.name(), cfg.bits.label()),
+        &["0-shot^8 Avg (%)", "Wiki ppl"],
+    );
+    t.row(vec![fmt_acc(res.acc_pct()), fmt_ppl(res.ppl)]);
+    println!("{}", t.to_markdown());
+    for (name, acc) in &res.per_suite {
+        println!("  {name:<10} {:.1}%", acc * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_optimize(cfg: &PipelineConfig) -> Result<()> {
+    use spinquant::coordinator::cayley_driver;
+    use spinquant::rotation::{fold_norm_scales, RotationKind, RotationSet};
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::cpu()?;
+    let pipe = Pipeline::new(&rt, &manifest, cfg.clone())?;
+    let base = pipe.load_base_weights()?;
+    let folded = fold_norm_scales(&base, &pipe.model_cfg)?;
+    let init = RotationSet::build(&pipe.model_cfg, RotationKind::RandomHadamard, cfg.rotation_seed);
+    let had = cfg.method.uses_online_hadamard();
+    let (rot, run) = cayley_driver::learn_rotations_detailed(&pipe, &folded, init, had)?;
+    println!(
+        "cayley: {} iters, loss {:.4} -> {:.4}, orthonormality error {:.2e}",
+        run.losses.len(),
+        run.losses.first().unwrap_or(&f32::NAN),
+        run.losses.last().unwrap_or(&f32::NAN),
+        run.final_orth_error
+    );
+    let out = cfg.artifacts_dir.join(format!("{}_rotations.sqt", cfg.model));
+    let mut tensors = std::collections::BTreeMap::new();
+    tensors.insert("r1".to_string(), rot.r1.clone());
+    for (i, r2) in rot.r2s.iter().enumerate() {
+        tensors.insert(format!("r2.{i}"), r2.clone());
+    }
+    spinquant::model::sqt::write_sqt(&out, &tensors)?;
+    info!("saved learned rotations to {out:?}");
+    Ok(())
+}
+
+fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let rt = Runtime::cpu()?;
+    let pipe = Pipeline::new(&rt, &manifest, cfg.clone())?;
+    let qm = pipe.quantize()?;
+    let variant = match (cfg.method, qm.had) {
+        (spinquant::config::Method::Float, _) => serve::DecodeVariant::Fp,
+        (_, true) => serve::DecodeVariant::QuantHad,
+        (_, false) => serve::DecodeVariant::QuantNoHad,
+    };
+    let exe = rt.load(&manifest, &cfg.model, variant.artifact())?;
+    let qcfg = if variant == serve::DecodeVariant::Fp { None } else { Some(qm.qcfg) };
+    let prompt = get_extra(extra, "prompt").unwrap_or("The ").as_bytes().to_vec();
+    let n_new: usize = get_extra(extra, "tokens").map(|v| v.parse()).transpose()?.unwrap_or(48);
+    let mut session = serve::GenerationSession::new(&exe, &qm.weights, qcfg)?;
+    let out = session.generate(&prompt, n_new)?;
+    println!(
+        "prompt: {:?}\ncompletion: {:?}\n{:.2} ms/token ({} steps)",
+        String::from_utf8_lossy(&prompt),
+        String::from_utf8_lossy(&out),
+        session.ms_per_token(),
+        session.step_times.len()
+    );
+    Ok(())
+}
+
+/// Paper-table harnesses live in the library-adjacent module below so both
+/// `spinquant bench-table` and `cargo bench` share the exact same code.
+mod spinquant_benches {
+    pub use spinquant::benches_impl::run_bench;
+}

@@ -1,0 +1,305 @@
+//! Model definition mirror: configs, weight store, SQT container IO, and
+//! the artifact manifest. The *authoritative* compute graphs live in L2
+//! (python/compile/model.py); this module owns the runtime-side metadata
+//! and weight manipulation the quantization pipeline needs.
+
+pub mod sqt;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Mirror of python `compile.model.Config` (values come from the manifest,
+/// so the two sides cannot drift silently).
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub rope_theta: f32,
+    pub max_seq: usize,
+    pub n_params: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(name: &str, j: &Json) -> Result<Self> {
+        let u = |k: &str| -> Result<usize> {
+            j.req(k)?.as_usize().ok_or_else(|| anyhow!("config key {k} not a number"))
+        };
+        Ok(Self {
+            name: name.to_string(),
+            vocab: u("vocab")?,
+            d_model: u("d_model")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            d_head: u("d_head")?,
+            d_ffn: u("d_ffn")?,
+            rope_theta: j.req("rope_theta")?.as_f64().unwrap_or(10000.0) as f32,
+            max_seq: u("max_seq")?,
+            n_params: u("n_params")?,
+        })
+    }
+
+    /// Canonical parameter order — must equal python `model.param_order`.
+    pub fn param_order(&self) -> Vec<String> {
+        let mut names = vec!["emb".to_string()];
+        for i in 0..self.n_layers {
+            for suffix in
+                ["attn_norm", "wq", "wk", "wv", "wo", "ffn_norm", "wgate", "wup", "wdown"]
+            {
+                names.push(format!("layers.{i}.{suffix}"));
+            }
+        }
+        names.push("final_norm".to_string());
+        names.push("head".to_string());
+        names
+    }
+
+    pub fn param_shape(&self, name: &str) -> Result<Vec<usize>> {
+        let (d, f, v) = (self.d_model, self.d_ffn, self.vocab);
+        let hd = self.n_heads * self.d_head;
+        let shape = if name == "emb" {
+            vec![v, d]
+        } else if name == "head" {
+            vec![d, v]
+        } else if name == "final_norm" {
+            vec![d]
+        } else if let Some(rest) = name.split('.').nth(2) {
+            match rest {
+                "attn_norm" | "ffn_norm" => vec![d],
+                "wq" | "wk" | "wv" => vec![d, hd],
+                "wo" => vec![hd, d],
+                "wgate" | "wup" => vec![d, f],
+                "wdown" => vec![f, d],
+                _ => bail!("unknown param {name}"),
+            }
+        } else {
+            bail!("unknown param {name}");
+        };
+        Ok(shape)
+    }
+}
+
+/// A full set of model weights, keyed by canonical names.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn new() -> Self {
+        Self { tensors: BTreeMap::new() }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).ok_or_else(|| anyhow!("missing weight {name}"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let tensors = sqt::read_sqt(path).with_context(|| format!("loading {path:?}"))?;
+        Ok(Self { tensors })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        sqt::write_sqt(path, &self.tensors)
+    }
+
+    /// Verify every canonical parameter exists with the right shape.
+    pub fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        for name in cfg.param_order() {
+            let t = self.get(&name)?;
+            let want = cfg.param_shape(&name)?;
+            if t.shape != want {
+                bail!("weight {name}: shape {:?}, expected {want:?}", t.shape);
+            }
+        }
+        Ok(())
+    }
+
+    /// Tensors in canonical artifact-input order.
+    pub fn ordered(&self, cfg: &ModelConfig) -> Result<Vec<&Tensor>> {
+        cfg.param_order().iter().map(|n| self.get(n)).collect()
+    }
+
+    /// Map over every weight tensor (by name) into a new set.
+    pub fn map(&self, f: impl Fn(&str, &Tensor) -> Tensor) -> Self {
+        let tensors =
+            self.tensors.iter().map(|(k, v)| (k.clone(), f(k, v))).collect::<BTreeMap<_, _>>();
+        Self { tensors }
+    }
+}
+
+impl Default for Weights {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Parsed artifacts/manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: std::path::PathBuf,
+    json: Json,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    /// (name, shape, dtype) in execution order.
+    pub inputs: Vec<(String, Vec<usize>, String)>,
+    pub outputs: Vec<String>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        Ok(Self { root: artifacts_dir.to_path_buf(), json: Json::parse(&text)? })
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        self.json
+            .get("models")
+            .and_then(|m| m.as_obj())
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
+    pub fn config(&self, model: &str) -> Result<ModelConfig> {
+        let j = self.json.req("models")?.req(model)?.req("config")?;
+        ModelConfig::from_json(model, j)
+    }
+
+    /// Assert python and rust agree on the parameter ABI.
+    pub fn check_param_order(&self, cfg: &ModelConfig) -> Result<()> {
+        let j = self.json.req("models")?.req(&cfg.name)?.req("param_order")?;
+        let py: Vec<&str> =
+            j.as_arr().unwrap_or(&[]).iter().filter_map(|v| v.as_str()).collect();
+        let rs = cfg.param_order();
+        if py.len() != rs.len() || py.iter().zip(&rs).any(|(a, b)| a != b) {
+            bail!("param_order mismatch between manifest and rust for {}", cfg.name);
+        }
+        Ok(())
+    }
+
+    pub fn artifact(&self, model: &str, name: &str) -> Result<ArtifactSpec> {
+        let j = self.json.req("models")?.req(model)?.req("artifacts")?.req(name)?;
+        let file = j.req("file")?.as_str().unwrap_or_default().to_string();
+        let mut inputs = Vec::new();
+        for inp in j.req("inputs")?.as_arr().unwrap_or(&[]) {
+            let n = inp.req("name")?.as_str().unwrap_or_default().to_string();
+            let shape = inp
+                .req("shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            let dtype = inp.req("dtype")?.as_str().unwrap_or("float32").to_string();
+            inputs.push((n, shape, dtype));
+        }
+        let outputs = j
+            .req("outputs")?
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_str().map(str::to_string))
+            .collect();
+        Ok(ArtifactSpec { file, inputs, outputs })
+    }
+
+    pub fn weights_path(&self, model: &str) -> std::path::PathBuf {
+        self.root.join("weights").join(format!("{model}.sqt"))
+    }
+
+    pub fn data_path(&self, corpus: &str, split: &str) -> std::path::PathBuf {
+        self.root.join("data").join(format!("{corpus}.{split}.bin"))
+    }
+
+    pub fn artifact_path(&self, spec: &ArtifactSpec) -> std::path::PathBuf {
+        self.root.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 61,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 16,
+            d_ffn: 64,
+            rope_theta: 10000.0,
+            max_seq: 32,
+            n_params: 0,
+        }
+    }
+
+    #[test]
+    fn param_order_structure() {
+        let c = cfg();
+        let order = c.param_order();
+        assert_eq!(order.len(), 2 + 9 * c.n_layers + 1);
+        assert_eq!(order[0], "emb");
+        assert_eq!(order[1], "layers.0.attn_norm");
+        assert_eq!(order.last().unwrap(), "head");
+    }
+
+    #[test]
+    fn shapes() {
+        let c = cfg();
+        assert_eq!(c.param_shape("emb").unwrap(), vec![61, 32]);
+        assert_eq!(c.param_shape("layers.1.wo").unwrap(), vec![32, 32]);
+        assert_eq!(c.param_shape("layers.0.wdown").unwrap(), vec![64, 32]);
+        assert!(c.param_shape("layers.0.bogus").is_err());
+    }
+
+    #[test]
+    fn weights_validate() {
+        let c = cfg();
+        let mut w = Weights::new();
+        for name in c.param_order() {
+            w.set(&name, Tensor::zeros(&c.param_shape(&name).unwrap()));
+        }
+        w.validate(&c).unwrap();
+        w.set("emb", Tensor::zeros(&[2, 2]));
+        assert!(w.validate(&c).is_err());
+    }
+
+    #[test]
+    fn manifest_parsing() {
+        let src = r#"{"models":{"t":{"config":{"vocab":61,"d_model":32,"n_layers":2,
+          "n_heads":2,"d_head":16,"d_ffn":64,"rope_theta":10000.0,"max_seq":32,"n_params":123},
+          "param_order":["emb"],
+          "artifacts":{"fwd":{"file":"t_fwd.hlo.txt",
+            "inputs":[{"name":"emb","shape":[61,32],"dtype":"float32"},
+                      {"name":"tokens","shape":[8,64],"dtype":"int32"}],
+            "outputs":["logits"]}}}}}"#;
+        let m = Manifest { root: "/tmp".into(), json: Json::parse(src).unwrap() };
+        assert_eq!(m.models(), vec!["t".to_string()]);
+        let c = m.config("t").unwrap();
+        assert_eq!(c.d_ffn, 64);
+        let a = m.artifact("t", "fwd").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].2, "int32");
+        assert_eq!(a.outputs, vec!["logits".to_string()]);
+    }
+}

@@ -1,0 +1,109 @@
+//! SQT tensor container IO — byte-compatible with python/compile/sqt.py.
+//!
+//! Layout (little-endian): magic "SQT1", u32 count, then per tensor:
+//! u16 name_len, name, u8 ndim, u32×ndim dims, f32×numel data.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+pub fn write_sqt(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?,
+    );
+    f.write_all(b"SQT1")?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        let nb = name.as_bytes();
+        if nb.len() > u16::MAX as usize {
+            bail!("tensor name too long");
+        }
+        f.write_all(&(nb.len() as u16).to_le_bytes())?;
+        f.write_all(nb)?;
+        f.write_all(&[t.ndim() as u8])?;
+        for &d in &t.shape {
+            f.write_all(&(d as u32).to_le_bytes())?;
+        }
+        // Bulk write the payload.
+        let bytes: Vec<u8> = t.data.iter().flat_map(|v| v.to_le_bytes()).collect();
+        f.write_all(&bytes)?;
+    }
+    Ok(())
+}
+
+pub fn read_sqt(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+    );
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != b"SQT1" {
+        bail!("{path:?}: bad SQT magic {magic:?}");
+    }
+    let mut buf4 = [0u8; 4];
+    f.read_exact(&mut buf4)?;
+    let count = u32::from_le_bytes(buf4);
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let mut buf2 = [0u8; 2];
+        f.read_exact(&mut buf2)?;
+        let name_len = u16::from_le_bytes(buf2) as usize;
+        let mut name_bytes = vec![0u8; name_len];
+        f.read_exact(&mut name_bytes)?;
+        let name = String::from_utf8(name_bytes)?;
+        let mut nd = [0u8; 1];
+        f.read_exact(&mut nd)?;
+        let mut shape = Vec::with_capacity(nd[0] as usize);
+        for _ in 0..nd[0] {
+            f.read_exact(&mut buf4)?;
+            shape.push(u32::from_le_bytes(buf4) as usize);
+        }
+        let numel: usize = shape.iter().product::<usize>().max(if nd[0] == 0 { 1 } else { 0 });
+        let mut bytes = vec![0u8; numel * 4];
+        f.read_exact(&mut bytes)?;
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.insert(name, Tensor::new(shape, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("sqt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.sqt");
+        let mut m = BTreeMap::new();
+        m.insert("a".to_string(), Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        m.insert("b.long/name".to_string(), Tensor::scalar(-7.25));
+        m.insert("c".to_string(), Tensor::zeros(&[4]));
+        write_sqt(&path, &m).unwrap();
+        let back = read_sqt(&path).unwrap();
+        assert_eq!(m.len(), back.len());
+        for (k, v) in &m {
+            assert_eq!(&back[k], v, "{k}");
+        }
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("sqt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.sqt");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(read_sqt(&path).is_err());
+    }
+}

@@ -1,0 +1,370 @@
+//! Quantization core (paper Eq. 1) — the L3 twin of the Pallas fake-quant
+//! kernel, bit-exact with `python/compile/kernels/ref.py` (same EPS, same
+//! round-half-to-even), verified end-to-end through PJRT by integration
+//! tests.
+//!
+//! Covers: symmetric/asymmetric grids, per-tensor / per-row(-token) /
+//! per-column(-output-channel) granularity, range clipping (Table 12),
+//! integer code emission + int4/int8 packing (memory accounting for the
+//! serving path), and the error metrics used across Figs. 3/8.
+
+use crate::tensor::Tensor;
+
+pub const EPS: f32 = 1e-8;
+
+/// Quantization grid granularity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One scale for the whole tensor.
+    PerTensor,
+    /// One scale per row (per-token activation quantization).
+    PerRow,
+    /// One scale per column (per-output-channel weight quantization).
+    PerColumn,
+}
+
+/// Full quantizer specification.
+#[derive(Clone, Copy, Debug)]
+pub struct QuantSpec {
+    pub bits: f32,
+    pub symmetric: bool,
+    pub clip_ratio: f32,
+    pub granularity: Granularity,
+}
+
+impl QuantSpec {
+    pub fn weight(bits: f32) -> Self {
+        // Paper default: per-output-channel symmetric weight grids.
+        Self { bits, symmetric: true, clip_ratio: 1.0, granularity: Granularity::PerColumn }
+    }
+
+    pub fn activation(bits: f32) -> Self {
+        // Paper default (Table 12): per-token asymmetric, no clipping.
+        Self { bits, symmetric: false, clip_ratio: 1.0, granularity: Granularity::PerRow }
+    }
+
+    pub fn kv(bits: f32) -> Self {
+        Self { bits, symmetric: false, clip_ratio: 1.0, granularity: Granularity::PerRow }
+    }
+
+    pub fn is_noop(&self) -> bool {
+        self.bits >= 16.0
+    }
+}
+
+/// Quantize-dequantize one contiguous group in place.
+/// Matches ref.py: asymmetric levels 2^b - 1 (zero-point = min), symmetric
+/// levels ±(2^(b-1)-1) with clamp at -2^(b-1).
+fn fake_quant_group(xs: &mut [f32], bits: f32, symmetric: bool, clip: f32) {
+    if xs.is_empty() {
+        return;
+    }
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &x in xs.iter() {
+        mn = mn.min(x);
+        mx = mx.max(x);
+    }
+    mn *= clip;
+    mx *= clip;
+    if symmetric {
+        let absmax = mn.abs().max(mx.abs());
+        let n_sym = (bits - 1.0).exp2() - 1.0;
+        let scale = (absmax / n_sym).max(EPS);
+        for x in xs.iter_mut() {
+            let q = (*x / scale).round_ties_even().clamp(-n_sym - 1.0, n_sym);
+            *x = q * scale;
+        }
+    } else {
+        let n_asym = bits.exp2() - 1.0;
+        let scale = ((mx - mn) / n_asym).max(EPS);
+        for x in xs.iter_mut() {
+            let q = ((*x - mn) / scale).round_ties_even().clamp(0.0, n_asym);
+            *x = q * scale + mn;
+        }
+    }
+}
+
+/// Quantize-dequantize a tensor according to `spec`.
+pub fn fake_quant(t: &Tensor, spec: &QuantSpec) -> Tensor {
+    if spec.is_noop() {
+        return t.clone();
+    }
+    let mut out = t.clone();
+    match spec.granularity {
+        Granularity::PerTensor => {
+            fake_quant_group(&mut out.data, spec.bits, spec.symmetric, spec.clip_ratio);
+        }
+        Granularity::PerRow => {
+            let n = out.last_dim();
+            let rows = out.rows_2d();
+            for r in 0..rows {
+                fake_quant_group(
+                    &mut out.data[r * n..(r + 1) * n],
+                    spec.bits,
+                    spec.symmetric,
+                    spec.clip_ratio,
+                );
+            }
+        }
+        Granularity::PerColumn => {
+            assert_eq!(t.ndim(), 2, "per-column quantization expects 2D weights");
+            let (rows, cols) = (t.shape[0], t.shape[1]);
+            let mut col = vec![0.0f32; rows];
+            for c in 0..cols {
+                for r in 0..rows {
+                    col[r] = out.data[r * cols + c];
+                }
+                fake_quant_group(&mut col, spec.bits, spec.symmetric, spec.clip_ratio);
+                for r in 0..rows {
+                    out.data[r * cols + c] = col[r];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Quantize one group to integer codes + (scale, zero) metadata.
+pub fn quantize_group_codes(xs: &[f32], bits: f32, symmetric: bool) -> (Vec<i32>, f32, f32) {
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &x in xs {
+        mn = mn.min(x);
+        mx = mx.max(x);
+    }
+    if symmetric {
+        let n_sym = (bits - 1.0).exp2() - 1.0;
+        let scale = (mn.abs().max(mx.abs()) / n_sym).max(EPS);
+        let codes = xs
+            .iter()
+            .map(|&x| (x / scale).round_ties_even().clamp(-n_sym - 1.0, n_sym) as i32)
+            .collect();
+        (codes, scale, 0.0)
+    } else {
+        let n_asym = bits.exp2() - 1.0;
+        let scale = ((mx - mn) / n_asym).max(EPS);
+        let codes = xs
+            .iter()
+            .map(|&x| ((x - mn) / scale).round_ties_even().clamp(0.0, n_asym) as i32)
+            .collect();
+        (codes, scale, mn)
+    }
+}
+
+pub fn dequantize_codes(codes: &[i32], scale: f32, zero: f32) -> Vec<f32> {
+    codes.iter().map(|&q| q as f32 * scale + zero).collect()
+}
+
+/// Pack unsigned 4-bit codes two-per-byte (low nibble first) — the storage
+/// format the serving path would ship; used for memory-footprint accounting.
+pub fn pack_int4(codes: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    for pair in codes.chunks(2) {
+        let lo = (pair[0].clamp(0, 15)) as u8;
+        let hi = if pair.len() > 1 { (pair[1].clamp(0, 15)) as u8 } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+pub fn unpack_int4(bytes: &[u8], n: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(n);
+    for &b in bytes {
+        out.push((b & 0x0F) as i32);
+        if out.len() < n {
+            out.push((b >> 4) as i32);
+        }
+        if out.len() >= n {
+            break;
+        }
+    }
+    out.truncate(n);
+    out
+}
+
+/// Bytes needed to store a tensor at `bits` (+ per-group scale/zero in f16
+/// equivalents) — the memory-saving headline of PTQ.
+pub fn quantized_size_bytes(numel: usize, groups: usize, bits: f32, symmetric: bool) -> usize {
+    let payload = (numel as f64 * bits as f64 / 8.0).ceil() as usize;
+    let meta_per_group = if symmetric { 2 } else { 4 }; // f16 scale (+ zero)
+    payload + groups * meta_per_group
+}
+
+/// Quantization error metrics (Fig. 3b/c).
+pub fn quant_error_mse(t: &Tensor, spec: &QuantSpec) -> f32 {
+    t.mse(&fake_quant(t, spec))
+}
+
+/// Signal-to-quantization-noise ratio in dB.
+pub fn sqnr_db(t: &Tensor, spec: &QuantSpec) -> f32 {
+    Tensor::snr_db(t, &fake_quant(t, spec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::prop::{forall, Gen};
+
+    fn spec(bits: f32, sym: bool, g: Granularity) -> QuantSpec {
+        QuantSpec { bits, symmetric: sym, clip_ratio: 1.0, granularity: g }
+    }
+
+    #[test]
+    fn noop_at_16_bits() {
+        let mut g = Gen { rng: crate::util::prng::Prng::new(1) };
+        let t = g.tensor(&[8, 16], 3.0);
+        let q = fake_quant(&t, &spec(16.0, false, Granularity::PerRow));
+        assert_eq!(t, q);
+    }
+
+    #[test]
+    fn prop_idempotent() {
+        // fake_quant(fake_quant(x)) == fake_quant(x): quantized values lie on
+        // the grid, so re-quantizing with the same spec is a fixed point.
+        forall(11, 40, |g: &mut Gen| {
+            let rows = g.int(1, 20);
+            let cols = g.int(2, 40);
+            let scale = g.f32(0.1, 8.0);
+            let t = g.tensor(&[rows, cols], scale);
+            let sp = spec(
+                *g.pick(&[2.0, 3.0, 4.0, 8.0]),
+                g.bool(),
+                *g.pick(&[Granularity::PerTensor, Granularity::PerRow]),
+            );
+            let q1 = fake_quant(&t, &sp);
+            let q2 = fake_quant(&q1, &sp);
+            if q1.sub(&q2).max_abs() > 1e-4 * (1.0 + q1.max_abs()) {
+                return Err("not idempotent".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_level_count_bound() {
+        forall(12, 30, |g: &mut Gen| {
+            let bits = *g.pick(&[2.0f32, 3.0, 4.0]);
+            let t = g.tensor(&[1, 64], 5.0);
+            let q = fake_quant(&t, &spec(bits, false, Granularity::PerRow));
+            let mut vals: Vec<i64> = q.data.iter().map(|&x| (x * 1e4).round() as i64).collect();
+            vals.sort_unstable();
+            vals.dedup();
+            let max_levels = (bits.exp2() as usize) + 1; // rounding slack
+            if vals.len() > max_levels {
+                return Err(format!("{} distinct values for {} bits", vals.len(), bits));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_error_decreases_with_bits() {
+        forall(13, 30, |g: &mut Gen| {
+            let t = g.tensor(&[4, 32], 2.0);
+            let e2 = quant_error_mse(&t, &spec(2.0, false, Granularity::PerRow));
+            let e4 = quant_error_mse(&t, &spec(4.0, false, Granularity::PerRow));
+            let e8 = quant_error_mse(&t, &spec(8.0, false, Granularity::PerRow));
+            if !(e2 >= e4 && e4 >= e8) {
+                return Err(format!("e2={e2} e4={e4} e8={e8}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_values_within_range() {
+        forall(14, 40, |g: &mut Gen| {
+            let t = g.tensor(&[3, 24], 4.0);
+            let sp = spec(4.0, false, Granularity::PerRow);
+            let q = fake_quant(&t, &sp);
+            for r in 0..3 {
+                let row = t.row(r);
+                let (mn, mx) = row
+                    .iter()
+                    .fold((f32::INFINITY, f32::NEG_INFINITY), |(a, b), &x| (a.min(x), b.max(x)));
+                for &v in q.row(r) {
+                    if v < mn - 1e-4 || v > mx + 1e-4 {
+                        return Err(format!("value {v} outside [{mn},{mx}]"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn symmetric_preserves_zero() {
+        let t = Tensor::new(vec![1, 4], vec![0.0, 1.0, -2.0, 3.0]);
+        let q = fake_quant(&t, &spec(4.0, true, Granularity::PerRow));
+        assert_eq!(q.data[0], 0.0);
+    }
+
+    #[test]
+    fn per_column_matches_transposed_per_row() {
+        let mut g = Gen { rng: crate::util::prng::Prng::new(5) };
+        let t = g.tensor(&[12, 7], 2.0);
+        let qc = fake_quant(&t, &spec(4.0, true, Granularity::PerColumn));
+        let tr = crate::linalg::transpose(&t);
+        let qr = fake_quant(&tr, &spec(4.0, true, Granularity::PerRow));
+        let qr_t = crate::linalg::transpose(&qr);
+        assert!(qc.sub(&qr_t).max_abs() < 1e-6);
+    }
+
+    #[test]
+    fn codes_roundtrip() {
+        let mut g = Gen { rng: crate::util::prng::Prng::new(6) };
+        let t = g.tensor(&[64], 3.0);
+        for sym in [false, true] {
+            let (codes, scale, zero) = quantize_group_codes(&t.data, 4.0, sym);
+            let deq = dequantize_codes(&codes, scale, zero);
+            let direct = {
+                let mut v = t.data.clone();
+                fake_quant_group(&mut v, 4.0, sym, 1.0);
+                v
+            };
+            for (a, b) in deq.iter().zip(&direct) {
+                assert!((a - b).abs() < 1e-5, "sym={sym}");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_pack_roundtrip() {
+        let codes: Vec<i32> = (0..31).map(|i| i % 16).collect();
+        let packed = pack_int4(&codes);
+        assert_eq!(packed.len(), 16);
+        assert_eq!(unpack_int4(&packed, 31), codes);
+    }
+
+    #[test]
+    fn size_accounting() {
+        // 4-bit, per-row groups of 128: 1M weights -> ~0.5MB + metadata.
+        let bytes = quantized_size_bytes(1 << 20, (1 << 20) / 128, 4.0, true);
+        assert!(bytes > (1 << 19) && bytes < (1 << 19) + 40_000);
+    }
+
+    #[test]
+    fn clipping_reduces_range() {
+        let t = Tensor::new(vec![1, 5], vec![-10.0, -1.0, 0.0, 1.0, 10.0]);
+        let clipped = QuantSpec {
+            bits: 8.0,
+            symmetric: false,
+            clip_ratio: 0.5,
+            granularity: Granularity::PerRow,
+        };
+        let q = fake_quant(&t, &clipped);
+        assert!(q.max_abs() <= 5.0 + 1e-4);
+    }
+
+    #[test]
+    fn rotation_improves_sqnr_on_outliers() {
+        // Integration of quant + hadamard: the paper's mechanism end-to-end.
+        let mut g = Gen { rng: crate::util::prng::Prng::new(77) };
+        let x = g.outlier_tensor(128, 64, 25.0);
+        let sp = spec(4.0, false, Granularity::PerRow);
+        let before = sqnr_db(&x, &sp);
+        let after = sqnr_db(&crate::hadamard::fwht_last_axis(&x), &sp);
+        assert!(after > before + 3.0, "before={before} after={after}");
+    }
+}

@@ -1,0 +1,134 @@
+//! Report writers: markdown tables (paper-style rows) and JSON result
+//! files, plus the EXPERIMENTS.md appender used by the bench harnesses.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+/// A simple markdown table builder.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            let _ = writeln!(out, "### {}\n", self.title);
+        }
+        let widths: Vec<usize> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain(std::iter::once(h.len()))
+                    .max()
+                    .unwrap_or(3)
+            })
+            .collect();
+        let line = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                let _ = write!(s, " {c:w$} |");
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.headers));
+        let mut sep = String::from("|");
+        for w in &widths {
+            let _ = write!(sep, "{:-<1$}|", "", w + 2);
+        }
+        let _ = writeln!(out, "{sep}");
+        for r in &self.rows {
+            let _ = writeln!(out, "{}", line(r));
+        }
+        out
+    }
+}
+
+/// Format helpers matching the paper's precision conventions.
+pub fn fmt_acc(v: f64) -> String {
+    format!("{v:.1}")
+}
+
+pub fn fmt_ppl(v: f64) -> String {
+    if !v.is_finite() {
+        return "inf".to_string();
+    }
+    if v >= 100.0 {
+        // Paper writes 1e2/2e3 for blown-up perplexities.
+        let exp = v.log10().floor();
+        let mant = (v / 10f64.powf(exp)).round();
+        format!("{}e{}", mant as i64, exp as i64)
+    } else {
+        format!("{v:.1}")
+    }
+}
+
+/// Append a section to EXPERIMENTS.md (creates the file if missing).
+pub fn append_experiments(repo_root: &Path, section: &str) -> Result<()> {
+    let path = repo_root.join("EXPERIMENTS.md");
+    let mut existing = std::fs::read_to_string(&path).unwrap_or_default();
+    if existing.is_empty() {
+        existing.push_str("# SpinQuant — Experiment Log\n\n");
+    }
+    existing.push_str(section);
+    if !section.ends_with('\n') {
+        existing.push('\n');
+    }
+    std::fs::write(&path, existing)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_markdown() {
+        let mut t = Table::new("Demo", &["Method", "Acc", "Wiki"]);
+        t.row(vec!["RTN".into(), "35.6".into(), "2e3".into()]);
+        t.row(vec!["SpinQuant_had".into(), "64.0".into(), "5.9".into()]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| Method"));
+        assert!(md.contains("| SpinQuant_had | 64.0 | 5.9"));
+        let seps = md.lines().nth(3).unwrap();
+        assert!(seps.starts_with('|'));
+    }
+
+    #[test]
+    fn ppl_formatting() {
+        assert_eq!(fmt_ppl(5.86), "5.9");
+        assert_eq!(fmt_ppl(2047.0), "2e3");
+        assert_eq!(fmt_ppl(132.0), "1e2");
+        assert_eq!(fmt_ppl(f64::INFINITY), "inf");
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,344 @@
+//! Rotation parameterization (paper §3.1): construction, RMSNorm folding,
+//! and the offline merge of R1/R2 (and the R4 H-merge) into model weights.
+//!
+//! This is the production twin of `python/compile/model.py::
+//! _rotate_weights_ingraph` — the python version is differentiable and used
+//! by the Cayley grad artifact; this one rewrites the stored weights so the
+//! *unmodified* `fwd_*_nohad` / `fwd_*_had` artifacts execute the rotated
+//! network (SpinQuant_no_had needs zero inference changes, §4.2).
+//!
+//! Merge algebra (pre-norm transformer with folded gammas):
+//!   emb    <- emb R1            (residual writes rotated)
+//!   wq,wk,wv,wgate,wup <- R1^T W   (residual reads unrotated)
+//!   wo,wdown           <- W R1     (block outputs rotated back into stream)
+//!   head   <- R1^T head
+//!   wv     <- wv R2 (per head)   wo <- R2^T wo (per head)
+//!   wdown  <- H wdown            (iff the online R4 Hadamard is active)
+
+use anyhow::Result;
+
+use crate::hadamard;
+use crate::linalg::{matmul, matmul_tn};
+use crate::model::{ModelConfig, Weights};
+use crate::tensor::Tensor;
+use crate::util::prng::Prng;
+
+/// How to build a rotation matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RotationKind {
+    Identity,
+    /// Haar-random orthogonal (QR of a Gaussian) — "random FP rotation".
+    RandomOrthogonal,
+    /// Randomized Hadamard H·diag(±1) — paper footnote 2.
+    RandomHadamard,
+}
+
+/// The full rotation set for one model: R1 (d_model) + per-layer R2 (d_head).
+/// R3/R4 are online Hadamards (never materialized; the `_had` artifacts
+/// apply them in-graph, and `merge` folds the R4 inverse into w_down).
+#[derive(Clone, Debug)]
+pub struct RotationSet {
+    pub r1: Tensor,
+    pub r2s: Vec<Tensor>,
+}
+
+impl RotationSet {
+    pub fn identity(cfg: &ModelConfig) -> Self {
+        Self {
+            r1: Tensor::eye(cfg.d_model),
+            r2s: vec![Tensor::eye(cfg.d_head); cfg.n_layers],
+        }
+    }
+
+    pub fn build(cfg: &ModelConfig, kind: RotationKind, seed: u64) -> Self {
+        let make = |n: usize, s: u64| -> Tensor {
+            match kind {
+                RotationKind::Identity => Tensor::eye(n),
+                RotationKind::RandomOrthogonal => {
+                    let mut p = Prng::new(s);
+                    let g = Tensor::new(
+                        vec![n, n],
+                        (0..n * n).map(|_| p.normal()).collect(),
+                    );
+                    crate::linalg::qr_orthogonal(&g)
+                }
+                RotationKind::RandomHadamard => hadamard::random_hadamard(n, s),
+            }
+        };
+        Self {
+            r1: make(cfg.d_model, seed),
+            r2s: (0..cfg.n_layers)
+                .map(|i| make(cfg.d_head, seed.wrapping_add(1000 + i as u64)))
+                .collect(),
+        }
+    }
+
+    pub fn orthonormality_error(&self) -> f32 {
+        let mut e = crate::linalg::orthonormality_error(&self.r1);
+        for r2 in &self.r2s {
+            e = e.max(crate::linalg::orthonormality_error(r2));
+        }
+        e
+    }
+}
+
+/// Fold RMSNorm gammas into the following linears (paper footnote 3).
+/// After folding every `*_norm` weight is all-ones and the network is
+/// rotation-invariant. Mirrors python `fold_norm_scales`.
+pub fn fold_norm_scales(w: &Weights, cfg: &ModelConfig) -> Result<Weights> {
+    let mut out = w.clone();
+    let scale_rows = |t: &Tensor, g: &Tensor| -> Tensor {
+        // t: (d, n), g: (d,) -> diag(g) @ t
+        let (d, n) = (t.shape[0], t.shape[1]);
+        let mut r = t.clone();
+        for i in 0..d {
+            let gi = g.data[i];
+            for j in 0..n {
+                r.data[i * n + j] *= gi;
+            }
+        }
+        r
+    };
+    for i in 0..cfg.n_layers {
+        let p = format!("layers.{i}.");
+        let g_att = w.get(&format!("{p}attn_norm"))?.clone();
+        for name in ["wq", "wk", "wv"] {
+            let t = scale_rows(w.get(&format!("{p}{name}"))?, &g_att);
+            out.set(&format!("{p}{name}"), t);
+        }
+        out.set(&format!("{p}attn_norm"), Tensor::ones(&[cfg.d_model]));
+        let g_ffn = w.get(&format!("{p}ffn_norm"))?.clone();
+        for name in ["wgate", "wup"] {
+            let t = scale_rows(w.get(&format!("{p}{name}"))?, &g_ffn);
+            out.set(&format!("{p}{name}"), t);
+        }
+        out.set(&format!("{p}ffn_norm"), Tensor::ones(&[cfg.d_model]));
+    }
+    let g_final = w.get("final_norm")?.clone();
+    out.set("head", scale_rows(w.get("head")?, &g_final));
+    out.set("final_norm", Tensor::ones(&[cfg.d_model]));
+    Ok(out)
+}
+
+/// Apply R2 to w_v's output, per head: wv (d, H*dh) -> wv · blockdiag(R2).
+fn rotate_wv(wv: &Tensor, r2: &Tensor, n_heads: usize, d_head: usize) -> Tensor {
+    let d = wv.shape[0];
+    let mut out = Tensor::zeros(&[d, n_heads * d_head]);
+    for row in 0..d {
+        for h in 0..n_heads {
+            let base = h * d_head;
+            for j in 0..d_head {
+                let mut s = 0.0f32;
+                for k in 0..d_head {
+                    s += wv.data[row * n_heads * d_head + base + k] * r2.data[k * d_head + j];
+                }
+                out.data[row * n_heads * d_head + base + j] = s;
+            }
+        }
+    }
+    out
+}
+
+/// Apply R2^T to w_o's input, per head: wo (H*dh, d) -> blockdiag(R2)^T · wo.
+fn rotate_wo(wo: &Tensor, r2: &Tensor, n_heads: usize, d_head: usize) -> Tensor {
+    let d = wo.shape[1];
+    let mut out = Tensor::zeros(&[n_heads * d_head, d]);
+    for h in 0..n_heads {
+        let base = h * d_head;
+        for j in 0..d_head {
+            for col in 0..d {
+                let mut s = 0.0f32;
+                for k in 0..d_head {
+                    // (R2^T)[j,k] = R2[k,j]
+                    s += r2.data[k * d_head + j] * wo.data[(base + k) * d + col];
+                }
+                out.data[(base + j) * d + col] = s;
+            }
+        }
+    }
+    out
+}
+
+/// Merge the rotation set into the weights (requires folded norms).
+/// `merge_r4`: additionally left-multiply every w_down by H (use with the
+/// `_had` artifacts, which apply the online R4 to the activation).
+pub fn merge(w: &Weights, cfg: &ModelConfig, rot: &RotationSet, merge_r4: bool) -> Result<Weights> {
+    let mut out = w.clone();
+    let r1 = &rot.r1;
+    out.set("emb", matmul(w.get("emb")?, r1));
+    out.set("head", matmul_tn(r1, w.get("head")?));
+    for i in 0..cfg.n_layers {
+        let p = format!("layers.{i}.");
+        let r2 = &rot.r2s[i];
+        for name in ["wq", "wk", "wgate", "wup"] {
+            let t = matmul_tn(r1, w.get(&format!("{p}{name}"))?);
+            out.set(&format!("{p}{name}"), t);
+        }
+        let wv = matmul_tn(r1, w.get(&format!("{p}wv"))?);
+        out.set(&format!("{p}wv"), rotate_wv(&wv, r2, cfg.n_heads, cfg.d_head));
+        let wo = rotate_wo(w.get(&format!("{p}wo"))?, r2, cfg.n_heads, cfg.d_head);
+        out.set(&format!("{p}wo"), matmul(&wo, r1));
+        let mut wdown = w.get(&format!("{p}wdown"))?.clone();
+        if merge_r4 {
+            wdown = hadamard::fwht_rows(&wdown);
+        }
+        out.set(&format!("{p}wdown"), matmul(&wdown, r1));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 13,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_head: 8,
+            d_ffn: 32,
+            rope_theta: 10000.0,
+            max_seq: 16,
+            n_params: 0,
+        }
+    }
+
+    fn random_weights(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut p = Prng::new(seed);
+        let mut w = Weights::new();
+        for name in cfg.param_order() {
+            let shape = cfg.param_shape(&name).unwrap();
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = if name.ends_with("norm") {
+                (0..n).map(|_| 1.0 + 0.3 * p.normal()).collect()
+            } else {
+                (0..n).map(|_| p.normal() * 0.1).collect()
+            };
+            w.set(&name, Tensor::new(shape, data));
+        }
+        w
+    }
+
+    #[test]
+    fn rotation_kinds_are_orthonormal() {
+        let c = cfg();
+        for kind in [
+            RotationKind::Identity,
+            RotationKind::RandomOrthogonal,
+            RotationKind::RandomHadamard,
+        ] {
+            for seed in 0..3 {
+                let r = RotationSet::build(&c, kind, seed);
+                assert!(r.orthonormality_error() < 1e-4, "{kind:?} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn identity_merge_is_noop() {
+        let c = cfg();
+        let w = random_weights(&c, 1);
+        let folded = fold_norm_scales(&w, &c).unwrap();
+        let merged = merge(&folded, &c, &RotationSet::identity(&c), false).unwrap();
+        for name in c.param_order() {
+            let a = folded.get(&name).unwrap();
+            let b = merged.get(&name).unwrap();
+            assert!(a.sub(b).max_abs() < 1e-4, "{name}");
+        }
+    }
+
+    #[test]
+    fn fold_makes_gammas_one() {
+        let c = cfg();
+        let w = random_weights(&c, 2);
+        let folded = fold_norm_scales(&w, &c).unwrap();
+        for name in c.param_order() {
+            if name.ends_with("norm") {
+                let t = folded.get(&name).unwrap();
+                assert!(t.sub(&Tensor::ones(&t.shape.clone())).max_abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_preserves_shapes() {
+        let c = cfg();
+        let w = fold_norm_scales(&random_weights(&c, 3), &c).unwrap();
+        let rot = RotationSet::build(&c, RotationKind::RandomHadamard, 4);
+        for merge_r4 in [false, true] {
+            let m = merge(&w, &c, &rot, merge_r4).unwrap();
+            m.validate(&c).unwrap();
+        }
+    }
+
+    #[test]
+    fn double_merge_with_inverse_restores() {
+        // Merging R then R^T (as a new rotation) must restore the original
+        // weights: checks the full left/right multiply bookkeeping.
+        let c = cfg();
+        let w = fold_norm_scales(&random_weights(&c, 5), &c).unwrap();
+        let rot = RotationSet::build(&c, RotationKind::RandomOrthogonal, 6);
+        let inv = RotationSet {
+            r1: crate::linalg::transpose(&rot.r1),
+            r2s: rot.r2s.iter().map(crate::linalg::transpose).collect(),
+        };
+        let merged = merge(&w, &c, &rot, false).unwrap();
+        let back = merge(&merged, &c, &inv, false).unwrap();
+        for name in c.param_order() {
+            let a = w.get(&name).unwrap();
+            let b = back.get(&name).unwrap();
+            assert!(a.sub(b).max_abs() < 1e-3, "{name}: {}", a.sub(b).max_abs());
+        }
+    }
+
+    #[test]
+    fn r2_blockdiag_roundtrip() {
+        let _c = cfg();
+        let mut p = Prng::new(7);
+        let wv = Tensor::new(vec![16, 16], (0..256).map(|_| p.normal()).collect());
+        let r2 = crate::hadamard::random_hadamard(8, 3);
+        let rot = rotate_wv(&wv, &r2, 2, 8);
+        let back = rotate_wv(&rot, &crate::linalg::transpose(&r2), 2, 8);
+        assert!(wv.sub(&back).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn wv_wo_pair_cancels() {
+        // (x wv R2)(R2^T wo) == (x wv) wo for every head: the paper's Fig. 5.
+        let _c = cfg();
+        let mut p = Prng::new(8);
+        let wv = Tensor::new(vec![16, 16], (0..256).map(|_| p.normal()).collect());
+        let wo = Tensor::new(vec![16, 16], (0..256).map(|_| p.normal()).collect());
+        let x = Tensor::new(vec![5, 16], (0..80).map(|_| p.normal()).collect());
+        let r2 = crate::hadamard::random_hadamard(8, 9);
+        let base = matmul(&matmul(&x, &wv), &wo);
+        let wv_r = rotate_wv(&wv, &r2, 2, 8);
+        let wo_r = rotate_wo(&wo, &r2, 2, 8);
+        let rot = matmul(&matmul(&x, &wv_r), &wo_r);
+        assert!(base.sub(&rot).max_abs() < 1e-3);
+    }
+
+    #[test]
+    fn merged_weights_have_lower_kurtosis() {
+        // Rotation blends the planted outlier columns of emb into all
+        // channels (paper Fig. 2 on the weight side).
+        let c = cfg();
+        let mut w = random_weights(&c, 10);
+        // plant outlier output channels on emb
+        let emb = w.get("emb").unwrap().clone();
+        let mut emb2 = emb.clone();
+        for r in 0..emb2.shape[0] {
+            emb2.data[r * c.d_model + 3] *= 20.0;
+        }
+        w.set("emb", emb2);
+        let folded = fold_norm_scales(&w, &c).unwrap();
+        let rot = RotationSet::build(&c, RotationKind::RandomHadamard, 11);
+        let merged = merge(&folded, &c, &rot, false).unwrap();
+        let k_before = folded.get("emb").unwrap().kurtosis();
+        let k_after = merged.get("emb").unwrap().kurtosis();
+        assert!(k_before > 2.0 * k_after, "before={k_before} after={k_after}");
+    }
+}

@@ -1,0 +1,262 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them from
+//! the rust request path (the only place model compute ever happens at
+//! run time — python is build-time only).
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute::<Literal>`. HLO *text* is the interchange
+//! format because xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos.
+//!
+//! The manifest (written by aot.py) pins the input ABI; [`Executable::run`]
+//! validates count/shape/dtype before dispatch so a drifted artifact fails
+//! loudly instead of producing garbage.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::model::{ArtifactSpec, Manifest};
+use crate::tensor::Tensor;
+
+/// An input value for artifact execution.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+    ScalarI32(i32),
+}
+
+impl Value {
+    pub fn tokens(batch: &[Vec<i32>], b: usize, s: usize) -> Value {
+        let mut flat = Vec::with_capacity(b * s);
+        for row in batch.iter().take(b) {
+            assert_eq!(row.len(), s);
+            flat.extend_from_slice(row);
+        }
+        // Pad missing rows by repeating the last one (callers mask them out).
+        while flat.len() < b * s {
+            let start = flat.len() - s;
+            let repeat: Vec<i32> = flat[start..].to_vec();
+            flat.extend(repeat);
+        }
+        Value::I32(flat, vec![b, s])
+    }
+
+    fn shape(&self) -> Vec<usize> {
+        match self {
+            Value::F32(t) => t.shape.clone(),
+            Value::I32(_, s) => s.clone(),
+            Value::ScalarI32(_) => vec![],
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            Value::F32(_) => "float32",
+            Value::I32(..) | Value::ScalarI32(_) => "int32",
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Value::F32(t) => {
+                let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&t.data).reshape(&dims)?
+            }
+            Value::I32(v, shape) => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(v).reshape(&dims)?
+            }
+            Value::ScalarI32(v) => xla::Literal::scalar(*v),
+        })
+    }
+}
+
+/// The PJRT client (one per process).
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one artifact.
+    pub fn load(&self, manifest: &Manifest, model: &str, artifact: &str) -> Result<Executable> {
+        let spec = manifest.artifact(model, artifact)?;
+        let path = manifest.artifact_path(&spec);
+        self.load_spec(&path, spec, &format!("{model}/{artifact}"))
+    }
+
+    pub fn load_spec(&self, path: &Path, spec: ArtifactSpec, label: &str) -> Result<Executable> {
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {label}"))?;
+        crate::debug!("compiled {label} in {:.1}ms", t0.elapsed().as_secs_f64() * 1e3);
+        Ok(Executable { exe, spec, label: label.to_string() })
+    }
+}
+
+/// A compiled artifact + its manifest ABI.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+    pub label: String,
+}
+
+impl Executable {
+    pub fn n_inputs(&self) -> usize {
+        self.spec.inputs.len()
+    }
+
+    /// Validate inputs against the manifest ABI.
+    fn validate(&self, inputs: &[Value]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: {} inputs provided, artifact expects {}",
+                self.label,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        for (v, (name, shape, dtype)) in inputs.iter().zip(&self.spec.inputs) {
+            if &v.shape() != shape {
+                bail!(
+                    "{}: input {name:?} shape {:?}, artifact expects {:?}",
+                    self.label,
+                    v.shape(),
+                    shape
+                );
+            }
+            if v.dtype() != dtype {
+                bail!("{}: input {name:?} dtype {} != {}", self.label, v.dtype(), dtype);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with validation; returns output tensors in manifest order.
+    pub fn run(&self, inputs: &[Value]) -> Result<Vec<Tensor>> {
+        self.validate(inputs)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute pre-converted literals (hot path: callers cache the weight
+    /// literals across calls and only rebuild the small dynamic inputs).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let bufs = self.exe.execute::<xla::Literal>(literals)?;
+        let result = bufs[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(literal_to_tensor(&p)?);
+        }
+        Ok(out)
+    }
+
+    /// Execute and return the raw output buffers (serving hot path: the
+    /// decode loop keeps the KV cache as literals without tensor round
+    /// trips; see coordinator::serve).
+    pub fn run_literals_raw(
+        &self,
+        literals: &[xla::Literal],
+    ) -> Result<Vec<Vec<xla::PjRtBuffer>>> {
+        Ok(self.exe.execute::<xla::Literal>(literals)?)
+    }
+
+    /// Convert values to literals without running (for cached hot loops).
+    pub fn prepare(&self, inputs: &[Value]) -> Result<Vec<xla::Literal>> {
+        self.validate(inputs)?;
+        inputs.iter().map(|v| v.to_literal()).collect()
+    }
+
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.spec
+            .inputs
+            .iter()
+            .position(|(n, _, _)| n == name)
+            .ok_or_else(|| anyhow!("{}: no input named {name:?}", self.label))
+    }
+}
+
+pub fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data: Vec<f32> = match lit.ty()? {
+        xla::ElementType::F32 => lit.to_vec::<f32>()?,
+        xla::ElementType::S32 => lit.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect(),
+        other => bail!("unsupported output element type {other:?}"),
+    };
+    Ok(Tensor::new(dims, data))
+}
+
+/// Convenience: convert an i32 token literal back (used by tests).
+pub fn tensor_to_tokens(t: &Tensor) -> Vec<i32> {
+    t.data.iter().map(|&v| v as i32).collect()
+}
+
+/// Cache of compiled executables keyed by (model, artifact).
+pub struct ExecutableCache<'rt> {
+    rt: &'rt Runtime,
+    manifest: &'rt Manifest,
+    cache: BTreeMap<(String, String), std::rc::Rc<Executable>>,
+}
+
+impl<'rt> ExecutableCache<'rt> {
+    pub fn new(rt: &'rt Runtime, manifest: &'rt Manifest) -> Self {
+        Self { rt, manifest, cache: BTreeMap::new() }
+    }
+
+    pub fn get(&mut self, model: &str, artifact: &str) -> Result<std::rc::Rc<Executable>> {
+        let key = (model.to_string(), artifact.to_string());
+        if let Some(e) = self.cache.get(&key) {
+            return Ok(e.clone());
+        }
+        let e = std::rc::Rc::new(self.rt.load(self.manifest, model, artifact)?);
+        self.cache.insert(key, e.clone());
+        Ok(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shapes_and_dtypes() {
+        let v = Value::F32(Tensor::zeros(&[2, 3]));
+        assert_eq!(v.shape(), vec![2, 3]);
+        assert_eq!(v.dtype(), "float32");
+        let t = Value::tokens(&[vec![1, 2], vec![3, 4]], 2, 2);
+        assert_eq!(t.shape(), vec![2, 2]);
+        assert_eq!(t.dtype(), "int32");
+        assert_eq!(Value::ScalarI32(5).shape(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn tokens_pads_short_batches() {
+        let t = Value::tokens(&[vec![1, 2, 3]], 3, 3);
+        if let Value::I32(flat, shape) = t {
+            assert_eq!(shape, vec![3, 3]);
+            assert_eq!(flat.len(), 9);
+            assert_eq!(&flat[..3], &[1, 2, 3]);
+            assert_eq!(&flat[3..6], &[1, 2, 3]);
+        } else {
+            panic!("wrong variant");
+        }
+    }
+}

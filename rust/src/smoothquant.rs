@@ -1,0 +1,236 @@
+//! SmoothQuant baseline (Xiao et al. 2023) — per-channel difficulty
+//! migration from activations to weights.
+//!
+//! For every linear that reads a *scaled* input (q/k/v after attn_norm,
+//! gate/up after ffn_norm, head after final_norm) compute
+//! `s_j = max|X_j|^alpha / max|W_j|^(1-alpha)`, then fold `1/s` into the preceding RMSNorm gamma and `s` into the weight
+//! rows. The quantized network sees activations divided by `s` (smoothed)
+//! and weights multiplied by `s` — function unchanged in full precision.
+//!
+//! o-proj and down-proj inputs have no preceding static scale in a LLaMA
+//! block, so (as in the reference implementation) they are left untouched.
+//! Activation absmax statistics come from the `fwd_stats` artifact taps.
+
+use anyhow::Result;
+
+use crate::model::{ModelConfig, Weights};
+use crate::tensor::Tensor;
+
+/// Per-channel activation absmax for each smoothing site.
+#[derive(Clone, Debug, Default)]
+pub struct ActStats {
+    /// `resid_in[layer][channel]` — input to wq/wk/wv (post attn_norm).
+    pub attn_in: Vec<Vec<f32>>,
+    /// `ffn_in[layer][channel]` — input to wgate/wup (post ffn_norm).
+    pub ffn_in: Vec<Vec<f32>>,
+    /// input to the head (post final_norm).
+    pub head_in: Vec<f32>,
+}
+
+impl ActStats {
+    pub fn new(cfg: &ModelConfig) -> Self {
+        Self {
+            attn_in: vec![vec![0.0; cfg.d_model]; cfg.n_layers],
+            ffn_in: vec![vec![0.0; cfg.d_model]; cfg.n_layers],
+            head_in: vec![0.0; cfg.d_model],
+        }
+    }
+
+    /// Fold a capture tensor of shape (..., d) into a per-channel absmax.
+    pub fn absorb(acc: &mut [f32], t: &Tensor) {
+        let d = t.last_dim();
+        assert_eq!(acc.len(), d);
+        for r in 0..t.rows_2d() {
+            for (a, &v) in acc.iter_mut().zip(t.row(r)) {
+                *a = a.max(v.abs());
+            }
+        }
+    }
+}
+
+/// Per-channel weight absmax across a set of row-indexed weights.
+fn weight_absmax_rows(ws: &[&Tensor]) -> Vec<f32> {
+    let d = ws[0].shape[0];
+    let mut out = vec![0.0f32; d];
+    for w in ws {
+        assert_eq!(w.shape[0], d);
+        let n = w.shape[1];
+        for (i, acc) in out.iter_mut().enumerate() {
+            for j in 0..n {
+                *acc = acc.max(w.data[i * n + j].abs());
+            }
+        }
+    }
+    out
+}
+
+fn smoothing_scales(act_max: &[f32], w_max: &[f32], alpha: f32) -> Vec<f32> {
+    act_max
+        .iter()
+        .zip(w_max)
+        .map(|(&a, &w)| {
+            let s = a.max(1e-5).powf(alpha) / w.max(1e-5).powf(1.0 - alpha);
+            s.clamp(1e-3, 1e3)
+        })
+        .collect()
+}
+
+/// Apply SmoothQuant: returns smoothed weights (gammas updated in place in
+/// the returned set). `alpha` defaults to the paper's 0.5.
+pub fn apply(w: &Weights, cfg: &ModelConfig, stats: &ActStats, alpha: f32) -> Result<Weights> {
+    let mut out = w.clone();
+
+    let scale_site = |out: &mut Weights,
+                      norm_name: &str,
+                      weight_names: &[String],
+                      act_max: &[f32]|
+     -> Result<()> {
+        let ws: Vec<&Tensor> =
+            weight_names.iter().map(|n| w.get(n)).collect::<Result<_>>()?;
+        let wmax = weight_absmax_rows(&ws);
+        let s = smoothing_scales(act_max, &wmax, alpha);
+        // gamma <- gamma / s
+        let gamma = w.get(norm_name)?;
+        let new_gamma = Tensor::new(
+            gamma.shape.clone(),
+            gamma.data.iter().zip(&s).map(|(g, sv)| g / sv).collect(),
+        );
+        out.set(norm_name, new_gamma);
+        // W <- diag(s) W
+        for name in weight_names {
+            let t = w.get(name)?;
+            let (d, n) = (t.shape[0], t.shape[1]);
+            let mut r = t.clone();
+            for i in 0..d {
+                for j in 0..n {
+                    r.data[i * n + j] *= s[i];
+                }
+            }
+            out.set(name, r);
+        }
+        Ok(())
+    };
+
+    for i in 0..cfg.n_layers {
+        let p = format!("layers.{i}.");
+        scale_site(
+            &mut out,
+            &format!("{p}attn_norm"),
+            &[format!("{p}wq"), format!("{p}wk"), format!("{p}wv")],
+            &stats.attn_in[i],
+        )?;
+        scale_site(
+            &mut out,
+            &format!("{p}ffn_norm"),
+            &[format!("{p}wgate"), format!("{p}wup")],
+            &stats.ffn_in[i],
+        )?;
+    }
+    scale_site(&mut out, "final_norm", &["head".to_string()], &stats.head_in)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            vocab: 13,
+            d_model: 8,
+            n_layers: 1,
+            n_heads: 2,
+            d_head: 4,
+            d_ffn: 16,
+            rope_theta: 10000.0,
+            max_seq: 16,
+            n_params: 0,
+        }
+    }
+
+    fn weights(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut p = Prng::new(seed);
+        let mut w = Weights::new();
+        for name in cfg.param_order() {
+            let shape = cfg.param_shape(&name).unwrap();
+            let n: usize = shape.iter().product();
+            let data = if name.ends_with("norm") {
+                vec![1.0; n]
+            } else {
+                (0..n).map(|_| p.normal() * 0.2).collect()
+            };
+            w.set(&name, Tensor::new(shape, data));
+        }
+        w
+    }
+
+    #[test]
+    fn scales_balance_outliers() {
+        let act = vec![100.0, 1.0, 1.0, 1.0];
+        let wmx = vec![0.1, 0.1, 0.1, 0.1];
+        let s = smoothing_scales(&act, &wmx, 0.5);
+        assert!(s[0] > 5.0 * s[1], "outlier channel should get big scale: {s:?}");
+    }
+
+    #[test]
+    fn function_preserved_in_fp() {
+        // gamma/s composed with diag(s) W must be the identity transform:
+        // (x * gamma/s) @ (diag(s) W) == (x * gamma) @ W.
+        let c = cfg();
+        let w = weights(&c, 1);
+        let mut stats = ActStats::new(&c);
+        let mut p = Prng::new(2);
+        for l in 0..c.n_layers {
+            for v in stats.attn_in[l].iter_mut() {
+                *v = p.uniform() * 10.0 + 0.1;
+            }
+            for v in stats.ffn_in[l].iter_mut() {
+                *v = p.uniform() * 10.0 + 0.1;
+            }
+        }
+        for v in stats.head_in.iter_mut() {
+            *v = p.uniform() * 10.0 + 0.1;
+        }
+        let sm = apply(&w, &c, &stats, 0.5).unwrap();
+        // simulate the site: x (rows, d) normalized input
+        let x = Tensor::new(vec![4, 8], (0..32).map(|_| p.normal()).collect());
+        let site = |wts: &Weights, norm: &str, lin: &str| -> Tensor {
+            let g = wts.get(norm).unwrap();
+            let mut xg = x.clone();
+            for r in 0..4 {
+                for j in 0..8 {
+                    xg.data[r * 8 + j] *= g.data[j];
+                }
+            }
+            crate::linalg::matmul(&xg, wts.get(lin).unwrap())
+        };
+        let base = site(&w, "layers.0.attn_norm", "layers.0.wq");
+        let smoothed = site(&sm, "layers.0.attn_norm", "layers.0.wq");
+        assert!(base.sub(&smoothed).max_abs() < 1e-4);
+    }
+
+    #[test]
+    fn smoothing_reduces_activation_outlier_difficulty() {
+        // After folding gamma/s, the effective activation seen by the
+        // quantizer is x/s: outlier channels shrink.
+        let act = vec![80.0, 1.0, 1.0, 2.0];
+        let wmx = vec![0.5, 0.5, 0.5, 0.5];
+        let s = smoothing_scales(&act, &wmx, 0.5);
+        let effective: Vec<f32> = act.iter().zip(&s).map(|(a, sv)| a / sv).collect();
+        let spread_before = act.iter().cloned().fold(0.0f32, f32::max)
+            / act.iter().cloned().fold(f32::INFINITY, f32::min);
+        let spread_after = effective.iter().cloned().fold(0.0f32, f32::max)
+            / effective.iter().cloned().fold(f32::INFINITY, f32::min);
+        assert!(spread_after < spread_before * 0.5);
+    }
+
+    #[test]
+    fn absorb_tracks_max() {
+        let mut acc = vec![0.0f32; 3];
+        let t = Tensor::new(vec![2, 3], vec![1., -5., 2., 3., 1., -1.]);
+        ActStats::absorb(&mut acc, &t);
+        assert_eq!(acc, vec![3.0, 5.0, 2.0]);
+    }
+}

@@ -1,0 +1,285 @@
+//! Dense row-major f32 tensor — the substrate every L3 algorithm works on.
+//!
+//! Deliberately minimal (no ndarray in the offline vendor set): shapes are
+//! `Vec<usize>`, storage is a flat `Vec<f32>` in C order, and the linear
+//! algebra lives in [`crate::linalg`]. Conversion to/from PJRT literals is
+//! in [`crate::runtime`].
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not match data length {}",
+            shape,
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        Self { shape: shape.to_vec(), data: vec![1.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        Self { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Self { shape: vec![data.len()], data }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut t = Self::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Number of rows when viewed as (rows, last_dim).
+    pub fn rows_2d(&self) -> usize {
+        let last = *self.shape.last().unwrap_or(&1);
+        if last == 0 { 0 } else { self.numel() / last }
+    }
+
+    pub fn last_dim(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Self> {
+        if shape.iter().product::<usize>() != self.numel() {
+            bail!("cannot reshape {:?} -> {:?}", self.shape, shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    /// 2D element access (row-major).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert_eq!(self.ndim(), 2);
+        let c = self.shape[1];
+        self.data[i * c + j] = v;
+    }
+
+    /// Borrow row `i` of a 2D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = *self.shape.last().unwrap();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = *self.shape.last().unwrap();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Self { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn scale(&self, s: f32) -> Self {
+        self.map(|x| x * s)
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Self { shape: self.shape.clone(), data }
+    }
+
+    pub fn sub(&self, other: &Self) -> Self {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Self { shape: self.shape.clone(), data }
+    }
+
+    pub fn mul_elem(&self, other: &Self) -> Self {
+        assert_eq!(self.shape, other.shape);
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a * b).collect();
+        Self { shape: self.shape.clone(), data }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.numel() as f32
+    }
+
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Mean squared difference — the quantization-error metric of Fig. 3b/c.
+    pub fn mse(&self, other: &Self) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| {
+                let d = a - b;
+                d * d
+            })
+            .sum::<f32>()
+            / self.numel() as f32
+    }
+
+    /// Signal-to-noise ratio in dB against a reference (paper Table 14).
+    pub fn snr_db(reference: &Self, noisy: &Self) -> f32 {
+        let sig: f32 = reference.data.iter().map(|x| x * x).sum();
+        let noise: f32 = reference
+            .data
+            .iter()
+            .zip(&noisy.data)
+            .map(|(a, b)| {
+                let d = a - b;
+                d * d
+            })
+            .sum();
+        10.0 * (sig / noise.max(1e-20)).log10()
+    }
+
+    /// Pearson kurtosis over all entries (~3 for Gaussian; paper Fig. 3a).
+    pub fn kurtosis(&self) -> f32 {
+        let n = self.numel() as f64;
+        if n < 2.0 {
+            return 0.0;
+        }
+        let mu = self.data.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let (mut m2, mut m4) = (0.0f64, 0.0f64);
+        for &x in &self.data {
+            let c = x as f64 - mu;
+            let c2 = c * c;
+            m2 += c2;
+            m4 += c2 * c2;
+        }
+        m2 /= n;
+        m4 /= n;
+        (m4 / (m2 * m2).max(1e-24)) as f32
+    }
+
+    /// Extract subtensor `t[idx]` along axis 0.
+    pub fn index0(&self, idx: usize) -> Tensor {
+        assert!(self.ndim() >= 1 && idx < self.shape[0]);
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor::new(
+            self.shape[1..].to_vec(),
+            self.data[idx * inner..(idx + 1) * inner].to_vec(),
+        )
+    }
+
+    /// Flatten to (rows, last_dim) view parameters.
+    pub fn as_2d(&self) -> (usize, usize) {
+        (self.rows_2d(), self.last_dim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+        assert_eq!(t.rows_2d(), 2);
+        assert_eq!(t.last_dim(), 3);
+    }
+
+    #[test]
+    fn eye_and_reshape() {
+        let i = Tensor::eye(3);
+        assert_eq!(i.at2(1, 1), 1.0);
+        assert_eq!(i.at2(0, 2), 0.0);
+        let r = i.reshape(&[9]).unwrap();
+        assert_eq!(r.shape, vec![9]);
+        assert!(Tensor::eye(2).reshape(&[3]).is_err());
+    }
+
+    #[test]
+    fn arithmetic() {
+        let a = Tensor::from_vec(vec![1., 2., 3.]);
+        let b = Tensor::from_vec(vec![4., 5., 6.]);
+        assert_eq!(a.add(&b).data, vec![5., 7., 9.]);
+        assert_eq!(b.sub(&a).data, vec![3., 3., 3.]);
+        assert_eq!(a.mul_elem(&b).data, vec![4., 10., 18.]);
+        assert_eq!(a.scale(2.0).data, vec![2., 4., 6.]);
+    }
+
+    #[test]
+    fn stats() {
+        let a = Tensor::from_vec(vec![3., -4.]);
+        assert_eq!(a.max_abs(), 4.0);
+        assert_eq!(a.frob_norm(), 5.0);
+        let b = Tensor::from_vec(vec![3., -4.]);
+        assert_eq!(a.mse(&b), 0.0);
+        assert!(Tensor::snr_db(&a, &b) > 100.0);
+    }
+
+    #[test]
+    fn kurtosis_gaussian_vs_outlier() {
+        let mut p = crate::util::prng::Prng::new(0);
+        let g: Vec<f32> = (0..10_000).map(|_| p.normal()).collect();
+        let kg = Tensor::from_vec(g.clone()).kurtosis();
+        assert!((kg - 3.0).abs() < 0.3, "gaussian kurtosis {kg}");
+        let mut o = g;
+        for i in 0..20 {
+            o[i * 37] *= 40.0;
+        }
+        let ko = Tensor::from_vec(o).kurtosis();
+        assert!(ko > 30.0, "outlier kurtosis {ko}");
+    }
+
+    #[test]
+    fn index0_extracts() {
+        let t = Tensor::new(vec![2, 2, 2], (0..8).map(|x| x as f32).collect());
+        let s = t.index0(1);
+        assert_eq!(s.shape, vec![2, 2]);
+        assert_eq!(s.data, vec![4., 5., 6., 7.]);
+    }
+}

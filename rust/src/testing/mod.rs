@@ -1,0 +1,4 @@
+//! In-repo mini property-testing framework (proptest is not in the offline
+//! vendor set). See [`prop`].
+
+pub mod prop;

@@ -1,0 +1,95 @@
+//! Tiny property-test runner: seeded generators + `forall`.
+//!
+//! Not a proptest replacement (no shrinking), but gives us the important
+//! part — many randomized cases per invariant, reproducible from the seed
+//! printed on failure.
+
+use crate::tensor::Tensor;
+use crate::util::prng::Prng;
+
+/// Random value generator handed to each property case.
+pub struct Gen {
+    pub rng: Prng,
+}
+
+impl Gen {
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.uniform() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 0
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    /// Gaussian tensor with entries scaled by `scale`.
+    pub fn tensor(&mut self, shape: &[usize], scale: f32) -> Tensor {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| self.rng.normal() * scale).collect();
+        Tensor::new(shape.to_vec(), data)
+    }
+
+    /// Gaussian tensor with a few boosted "outlier" columns (the LLM
+    /// activation shape this paper is about).
+    pub fn outlier_tensor(&mut self, rows: usize, cols: usize, boost: f32) -> Tensor {
+        let mut t = self.tensor(&[rows, cols], 1.0);
+        let n_out = 1 + self.rng.below(3.min(cols));
+        for _ in 0..n_out {
+            let c = self.rng.below(cols);
+            for r in 0..rows {
+                t.data[r * cols + c] *= boost;
+            }
+        }
+        t
+    }
+}
+
+/// Run `cases` randomized checks of `prop`; panic with the failing seed.
+pub fn forall<F>(seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed.wrapping_mul(1_000_003).wrapping_add(case as u64);
+        let mut g = Gen { rng: Prng::new(case_seed) };
+        if let Err(msg) = prop(&mut g) {
+            panic!("property failed (seed={seed}, case={case}, case_seed={case_seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(1, 50, |g| {
+            let x = g.f32(-5.0, 5.0);
+            if x.abs() <= 5.0 { Ok(()) } else { Err(format!("{x}")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(2, 50, |g| {
+            let x = g.int(0, 100);
+            if x < 90 { Ok(()) } else { Err(format!("x={x}")) }
+        });
+    }
+
+    #[test]
+    fn outlier_tensor_has_outliers() {
+        let mut g = Gen { rng: Prng::new(3) };
+        let t = g.outlier_tensor(64, 32, 30.0);
+        assert!(t.kurtosis() > 10.0);
+    }
+}

@@ -1,0 +1,35 @@
+//! Substrate utilities: PRNG, JSON parsing, timing, logging.
+//!
+//! The offline vendor set contains only the `xla` crate's dependency
+//! closure, so `rand` / `serde_json` / `log` are re-implemented here at the
+//! (small) size this project needs.
+
+pub mod json;
+pub mod prng;
+pub mod timer;
+
+/// Simple leveled stderr logger, controlled by `SPINQUANT_LOG` (0..=2).
+pub fn log_level() -> u8 {
+    std::env::var("SPINQUANT_LOG")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1)
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 1 {
+            eprintln!("[info] {}", format!($($arg)*));
+        }
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log_level() >= 2 {
+            eprintln!("[debug] {}", format!($($arg)*));
+        }
+    };
+}

@@ -1,0 +1,97 @@
+//! Wall-clock timing helpers used by the serving loop, the latency tables
+//! (paper Table 6 / Fig. 7), and the micro-bench harness.
+
+use std::time::Instant;
+
+/// Collects duration samples and reports robust statistics.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    us: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, micros: f64) {
+        self.us.push(micros);
+    }
+
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.push(t0.elapsed().as_secs_f64() * 1e6);
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.us.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.us.is_empty()
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.us.is_empty() {
+            return 0.0;
+        }
+        self.us.iter().sum::<f64>() / self.us.len() as f64
+    }
+
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() - 1) as f64 * p / 100.0).round() as usize;
+        v[idx]
+    }
+
+    pub fn median_us(&self) -> f64 {
+        self.percentile_us(50.0)
+    }
+
+    pub fn min_us(&self) -> f64 {
+        self.us.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn stddev_us(&self) -> f64 {
+        if self.us.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean_us();
+        let var = self.us.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / (self.us.len() - 1) as f64;
+        var.sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats() {
+        let mut s = Samples::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 100.0] {
+            s.push(v);
+        }
+        assert_eq!(s.len(), 5);
+        assert!((s.mean_us() - 22.0).abs() < 1e-9);
+        assert_eq!(s.median_us(), 3.0);
+        assert_eq!(s.min_us(), 1.0);
+        assert!(s.percentile_us(100.0) == 100.0);
+    }
+
+    #[test]
+    fn times_closure() {
+        let mut s = Samples::new();
+        let out = s.time(|| 41 + 1);
+        assert_eq!(out, 42);
+        assert_eq!(s.len(), 1);
+        assert!(s.mean_us() >= 0.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Cross-layer integration tests: rust substrates x AOT artifacts x PJRT.
+//!
+//! These need `make artifacts` to have run (they are skipped with a notice
+//! otherwise, so `cargo test` works in a fresh checkout too).
+//!
+//! The crown jewels here are the *invariance* tests: the rust-side rotation
+//! merge must leave the FP logits of the real lowered artifact unchanged —
+//! that single check exercises the L3 merge algebra, the manifest ABI, the
+//! literal conversion and the L2 graph together.
+
+use spinquant::config::{Bits, Method, PipelineConfig};
+use spinquant::coordinator::{serve, Pipeline};
+use spinquant::eval::{EvalSession, QcfgVec};
+use spinquant::model::Manifest;
+use spinquant::rotation::{fold_norm_scales, merge, RotationKind, RotationSet};
+use spinquant::runtime::Runtime;
+use spinquant::Tensor;
+
+const MODEL: &str = "sq-2m";
+
+fn setup() -> Option<(Manifest, Runtime)> {
+    let dir = std::path::PathBuf::from("artifacts");
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(_) => {
+            eprintln!("skipping integration test: run `make artifacts` first");
+            return None;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    Some((manifest, rt))
+}
+
+fn test_windows(n: usize, seq: usize) -> Vec<Vec<i32>> {
+    // Deterministic fake byte windows (any bytes are valid tokens).
+    (0..n)
+        .map(|i| (0..seq).map(|j| ((i * 31 + j * 7) % 96 + 32) as i32).collect())
+        .collect()
+}
+
+#[test]
+fn manifest_and_weights_agree_with_python() {
+    let Some((manifest, _)) = setup() else { return };
+    for model in manifest.models() {
+        let cfg = manifest.config(&model).unwrap();
+        manifest.check_param_order(&cfg).unwrap();
+        let w = spinquant::model::Weights::load(&manifest.weights_path(&model)).unwrap();
+        w.validate(&cfg).unwrap();
+    }
+}
+
+#[test]
+fn fp_forward_produces_finite_logits() {
+    let Some((manifest, rt)) = setup() else { return };
+    let exe = rt.load(&manifest, MODEL, "fwd_eval_nohad").unwrap();
+    let w = spinquant::model::Weights::load(&manifest.weights_path(MODEL)).unwrap();
+    let mut s = EvalSession::new(&exe, &w, Some(QcfgVec::fp())).unwrap();
+    let windows = test_windows(s.batch, s.seq);
+    let logits = s.logits(&windows).unwrap();
+    assert_eq!(logits.shape, vec![s.batch, s.seq, 256]);
+    assert!(logits.data.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn rust_rotation_merge_preserves_fp_logits_through_pjrt() {
+    // THE invariance check (paper §3.1) through the real artifact.
+    let Some((manifest, rt)) = setup() else { return };
+    let mcfg = manifest.config(MODEL).unwrap();
+    let exe = rt.load(&manifest, MODEL, "fwd_eval_nohad").unwrap();
+    let base = spinquant::model::Weights::load(&manifest.weights_path(MODEL)).unwrap();
+    let folded = fold_norm_scales(&base, &mcfg).unwrap();
+    let windows = test_windows(8, 64);
+
+    let mut s0 = EvalSession::new(&exe, &base, Some(QcfgVec::fp())).unwrap();
+    let l_base = s0.logits(&windows).unwrap();
+    drop(s0);
+
+    // Folding alone must be exact-ish.
+    let mut s1 = EvalSession::new(&exe, &folded, Some(QcfgVec::fp())).unwrap();
+    let l_folded = s1.logits(&windows).unwrap();
+    drop(s1);
+    let fold_err = l_base.sub(&l_folded).max_abs();
+    assert!(fold_err < 5e-3, "gamma folding changed logits by {fold_err}");
+
+    // Rotation merge must be invariant too.
+    for kind in [RotationKind::RandomHadamard, RotationKind::RandomOrthogonal] {
+        let rot = RotationSet::build(&mcfg, kind, 3);
+        let merged = merge(&folded, &mcfg, &rot, false).unwrap();
+        let mut s2 = EvalSession::new(&exe, &merged, Some(QcfgVec::fp())).unwrap();
+        let l_rot = s2.logits(&windows).unwrap();
+        let err = l_base.sub(&l_rot).max_abs();
+        let scale = l_base.max_abs();
+        assert!(
+            err < 2e-2 * scale.max(1.0),
+            "{kind:?}: rotation broke FP invariance: err {err} (scale {scale})"
+        );
+    }
+}
+
+#[test]
+fn online_hadamard_artifact_matches_nohad_in_fp() {
+    // fwd_eval_had(H-merged w_down) == fwd_eval_nohad(plain) at FP:
+    // R3 cancels inside attention, R4 cancels against the merged H.
+    let Some((manifest, rt)) = setup() else { return };
+    let mcfg = manifest.config(MODEL).unwrap();
+    let base = spinquant::model::Weights::load(&manifest.weights_path(MODEL)).unwrap();
+    let folded = fold_norm_scales(&base, &mcfg).unwrap();
+    let windows = test_windows(8, 64);
+
+    let exe_no = rt.load(&manifest, MODEL, "fwd_eval_nohad").unwrap();
+    let mut s_no = EvalSession::new(&exe_no, &folded, Some(QcfgVec::fp())).unwrap();
+    let l_no = s_no.logits(&windows).unwrap();
+    drop(s_no);
+
+    let rot = RotationSet::identity(&mcfg);
+    let merged_h = merge(&folded, &mcfg, &rot, true).unwrap(); // only the H-merge
+    let exe_had = rt.load(&manifest, MODEL, "fwd_eval_had").unwrap();
+    let mut s_had = EvalSession::new(&exe_had, &merged_h, Some(QcfgVec::fp())).unwrap();
+    let l_had = s_had.logits(&windows).unwrap();
+
+    let err = l_no.sub(&l_had).max_abs();
+    assert!(err < 2e-2 * l_no.max_abs().max(1.0), "online Hadamard not invariant: {err}");
+}
+
+#[test]
+fn rust_quantizer_matches_pallas_kernel_through_pjrt() {
+    // Run the task artifact at a_bits=16 vs 4: the in-graph (Pallas-lowered)
+    // fake-quant must alter logits; and per-row rust fake_quant of a capture
+    // must be idempotent with the kernel's output grid.
+    let Some((manifest, rt)) = setup() else { return };
+    let w = spinquant::model::Weights::load(&manifest.weights_path(MODEL)).unwrap();
+    let exe = rt.load(&manifest, MODEL, "fwd_task_nohad").unwrap();
+    let windows = test_windows(16, 32);
+    let mut fp = EvalSession::new(&exe, &w, Some(QcfgVec::fp())).unwrap();
+    let l16 = fp.logits(&windows).unwrap();
+    drop(fp);
+    let mut q = EvalSession::new(&exe, &w, Some(QcfgVec::fp().with_a_bits(4.0))).unwrap();
+    let l4 = q.logits(&windows).unwrap();
+    assert!(l16.sub(&l4).max_abs() > 1e-4, "4-bit activations must perturb logits");
+    // And the kv path too.
+    drop(q);
+    let mut qkv = EvalSession::new(&exe, &w, Some(QcfgVec::fp().with_kv_bits(3.0))).unwrap();
+    let lkv = qkv.logits(&windows).unwrap();
+    assert!(l16.sub(&lkv).max_abs() > 1e-4, "3-bit KV must perturb logits");
+}
+
+#[test]
+fn decode_agrees_with_full_forward() {
+    // Token-by-token decode with the KV cache must reproduce the full-seq
+    // forward logits (same FP weights).
+    let Some((manifest, rt)) = setup() else { return };
+    let w = spinquant::model::Weights::load(&manifest.weights_path(MODEL)).unwrap();
+    let exe_full = rt.load(&manifest, MODEL, "fwd_eval_nohad").unwrap();
+    let mut s = EvalSession::new(&exe_full, &w, Some(QcfgVec::fp())).unwrap();
+    let prompt: Vec<i32> = b"Alpha beta gamma".iter().map(|&b| b as i32).collect();
+    let mut window = prompt.clone();
+    window.resize(s.seq, b' ' as i32);
+    let full = s.logits(&std::iter::repeat(window.clone()).take(s.batch).collect::<Vec<_>>())
+        .unwrap();
+    drop(s);
+
+    let exe_dec = rt.load(&manifest, MODEL, "decode_fp").unwrap();
+    let mut gen = serve::GenerationSession::new(&exe_dec, &w, None).unwrap();
+    let mut last = Vec::new();
+    for &t in prompt.iter() {
+        last = gen.step(t as u8).unwrap();
+    }
+    // Compare logits at the last prompt position.
+    let pos = prompt.len() - 1;
+    let v = 256;
+    let full_row = &full.data[pos * v..(pos + 1) * v];
+    let mut max_err = 0.0f32;
+    for (a, b) in full_row.iter().zip(&last) {
+        max_err = max_err.max((a - b).abs());
+    }
+    assert!(max_err < 2e-3 * full.max_abs().max(1.0), "decode mismatch {max_err}");
+}
+
+#[test]
+fn full_rtn_pipeline_beats_nothing_and_spinquant_beats_rtn_on_ppl() {
+    // Small-scale end-to-end ordering check (the Table 1 shape):
+    // FP <= SpinQuant_no_had <= RTN on perplexity at W4A4.
+    let Some((manifest, rt)) = setup() else { return };
+    let mut cfg = PipelineConfig::default();
+    cfg.model = MODEL.into();
+    cfg.bits = Bits::parse("4-4-16").unwrap();
+    cfg.use_gptq = false;
+    cfg.eval_windows = Some(12);
+    cfg.task_items = 4;
+    cfg.cayley_iters = 25;
+
+    let run = |method: Method| -> f64 {
+        let mut c = cfg.clone();
+        c.method = method;
+        if method == Method::Float {
+            c.bits = Bits::fp();
+        }
+        let pipe = Pipeline::new(&rt, &manifest, c).unwrap();
+        let qm = pipe.quantize().unwrap();
+        pipe.evaluate(&qm).unwrap().ppl
+    };
+    let fp = run(Method::Float);
+    let rtn = run(Method::Rtn);
+    let spin = run(Method::SpinQuantNoHad);
+    assert!(fp < rtn, "fp {fp} should beat rtn {rtn}");
+    assert!(
+        spin < rtn + 0.05,
+        "spinquant ({spin}) should not lose to plain RTN ({rtn}) at W4A4"
+    );
+}
+
+#[test]
+fn quantized_weights_are_on_grid() {
+    let Some((manifest, rt)) = setup() else { return };
+    let mut cfg = PipelineConfig::default();
+    cfg.model = MODEL.into();
+    cfg.method = Method::Rtn;
+    cfg.bits = Bits::parse("4-8-8").unwrap();
+    let pipe = Pipeline::new(&rt, &manifest, cfg).unwrap();
+    let qm = pipe.quantize().unwrap();
+    // Every linear weight column must have at most 2^4 distinct values.
+    let w = qm.weights.get("layers.0.wq").unwrap();
+    let (rows, cols) = (w.shape[0], w.shape[1]);
+    for c in 0..cols.min(8) {
+        let mut vals: Vec<i64> =
+            (0..rows).map(|r| (w.data[r * cols + c] * 1e5).round() as i64).collect();
+        vals.sort_unstable();
+        vals.dedup();
+        assert!(vals.len() <= 16, "column {c} has {} levels", vals.len());
+    }
+    let _ = Tensor::zeros(&[1]);
+}
