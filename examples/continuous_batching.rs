@@ -1,0 +1,105 @@
+//! Continuous-batching demo: requests join and leave a running batch.
+//!
+//! Spins up the `serve` scheduler over 4 KV-cache slots, floods it with a
+//! burst of mixed-size requests, then injects a latecomer mid-decode — the
+//! latecomer is admitted the step after a slot frees and finishes while
+//! longer requests are still generating, which is the whole point of
+//! continuous batching: no request waits for the batch to drain.
+//!
+//! Runs against the PJRT engine when `make artifacts` has been run, and
+//! against the deterministic in-process mock engine otherwise, so the demo
+//! works in a fresh checkout too.
+//!
+//! Run: cargo run --release --example continuous_batching
+
+use anyhow::Result;
+use spinquant::eval::QcfgVec;
+use spinquant::model::{Manifest, Weights};
+use spinquant::runtime::Runtime;
+use spinquant::serve::{
+    DecodeEngine, DecodeVariant, GenRequest, MockEngine, PjrtEngine, Sampler, Scheduler,
+};
+
+const BATCH: usize = 4;
+
+fn demo<E: DecodeEngine>(engine: E, engine_name: &str) -> Result<()> {
+    let mut sched = Scheduler::new(engine, 64)?;
+    println!(
+        "engine: {engine_name} ({} slots, {} cache positions)\n",
+        sched.slot_capacity(),
+        sched.engine().max_seq()
+    );
+
+    // A burst: more requests than slots, mixed budgets.
+    let burst: &[(&[u8], usize)] = &[
+        (b"The quick ", 40),
+        (b"Alpha beta ", 6),
+        (b"Some words ", 24),
+        (b"Q: what is ", 8),
+        (b"Lorem ipsum ", 12),
+        (b"Hello ", 4),
+    ];
+    for (i, (prompt, budget)) in burst.iter().enumerate() {
+        let id = sched.submit(GenRequest::sampled(
+            prompt,
+            *budget,
+            Sampler::top_k(8, 0.8),
+            7 + i as u64,
+        ))?;
+        println!("submitted request {id} ({budget} tokens) {:?}", String::from_utf8_lossy(prompt));
+    }
+
+    // Decode a while, then inject a latecomer mid-flight.
+    let mut finished = Vec::new();
+    for _ in 0..6 {
+        finished.extend(sched.step()?);
+    }
+    let late = sched.submit(GenRequest::sampled(b"LATE! ", 5, Sampler::top_k(8, 0.8), 99))?;
+    println!(
+        "\n>>> request {late} submitted mid-decode (queue {}, in flight {}/{})\n",
+        sched.queue_depth(),
+        sched.in_flight(),
+        sched.slot_capacity()
+    );
+    while !sched.is_idle() {
+        for c in sched.step()? {
+            println!(
+                "finished request {:>2}: {:>3} tokens, ttft {:>7.2} ms, total {:>8.2} ms{}",
+                c.id,
+                c.completion.len(),
+                c.ttft_ms.unwrap_or(f64::NAN),
+                c.latency_ms,
+                if c.id == late { "   <- the latecomer" } else { "" }
+            );
+            finished.push(c);
+        }
+    }
+
+    let long_finished_last = finished.last().map(|c| c.id == 0).unwrap_or(false);
+    println!(
+        "\nthe latecomer {} the longest request to drain",
+        if long_finished_last { "did not wait for" } else { "finished around" }
+    );
+    println!("\n{}", sched.metrics.table("serving metrics").to_markdown());
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    // PJRT when artifacts exist, mock otherwise.
+    if let Ok(manifest) = Manifest::load(std::path::Path::new("artifacts")) {
+        let rt = Runtime::cpu()?;
+        let artifact = DecodeVariant::QuantNoHad.artifact_batched(BATCH);
+        match rt.load(&manifest, "sq-2m", &artifact) {
+            Ok(exe) => {
+                let weights = Weights::load(&manifest.weights_path("sq-2m"))?;
+                let qcfg = QcfgVec::fp().with_a_bits(8.0).with_kv_bits(8.0);
+                let engine = PjrtEngine::new(exe, &weights, Some(qcfg))?;
+                return demo(engine, "pjrt decode_nohad_b4 (W16A8KV8)");
+            }
+            Err(e) => eprintln!("no {artifact} artifact ({e:#}); falling back to the mock engine"),
+        }
+    } else {
+        eprintln!("no artifacts (run `make artifacts`); using the mock engine");
+    }
+    demo(MockEngine::new(BATCH, 128, 256), "deterministic mock")
+}

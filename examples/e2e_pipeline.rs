@@ -17,10 +17,11 @@
 
 use anyhow::Result;
 use spinquant::config::{Bits, Method, PipelineConfig};
-use spinquant::coordinator::{serve, Pipeline};
+use spinquant::coordinator::Pipeline;
 use spinquant::model::Manifest;
 use spinquant::report::{append_experiments, Table};
 use spinquant::runtime::Runtime;
+use spinquant::serve;
 
 fn main() -> Result<()> {
     let model = std::env::args().nth(1).unwrap_or_else(|| "sq-2m".to_string());

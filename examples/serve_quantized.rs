@@ -9,10 +9,10 @@
 
 use anyhow::Result;
 use spinquant::config::{Bits, Method, PipelineConfig};
-use spinquant::coordinator::serve::{GenerationSession, Request, Server};
 use spinquant::coordinator::Pipeline;
 use spinquant::model::Manifest;
 use spinquant::runtime::Runtime;
+use spinquant::serve::{GenerationSession, Request, Server};
 
 fn main() -> Result<()> {
     let mut cfg = PipelineConfig::default();
@@ -40,7 +40,7 @@ fn main() -> Result<()> {
     let prompts: Vec<&[u8]> = vec![b"The ", b"Alpha beta ", b"Some words ", b"Q: "];
     println!("submitting {} requests to the quantized server...\n", prompts.len());
     for p in &prompts {
-        server.submit(Request { prompt: p.to_vec(), max_new_tokens: 32 });
+        server.submit(Request { prompt: p.to_vec(), max_new_tokens: 32 })?;
     }
     let mut total_ms = 0.0;
     for _ in 0..prompts.len() {

@@ -13,6 +13,8 @@ single lowered module covers all W-A-KV rows of paper Table 1:
   fwd_stats              (B=8,  S=64) -> logits + taps   Figs. 2/3/8 stats
   cayley_{nohad,had}     (B=4,  S=64) -> loss, dR1, dR2  rotation learning
   decode_{fp,nohad,had}  (B=1, cache=max_seq) -> logits  serving / Table 6
+  decode_*_b{4,8}        (B slots, per-slot pos) -> logits   continuous
+                         batching (rust/src/serve scheduler + slot manager)
 
 The manifest records the exact input ABI (names, shapes, dtypes, order) for
 each artifact; rust/src/runtime asserts against it at load time.
@@ -36,6 +38,9 @@ EVAL_B, EVAL_S = 8, 64
 TASK_B, TASK_S = 16, 32
 CAYLEY_B, CAYLEY_S = 4, 64
 DECODE_B = 1
+# Slot counts for the continuous-batching decode artifacts (the serving
+# bench sweeps batch \in {1, 4, 8}; 1 reuses the scalar-pos artifact).
+DECODE_BATCHES = (4, 8)
 
 
 def to_hlo_text(lowered) -> str:
@@ -156,6 +161,37 @@ def build_artifacts(cfg: model_mod.Config):
     arts["decode_nohad"] = decode_factory(True, False)
     arts["decode_had"] = decode_factory(True, True)
 
+    def decode_batched_factory(quant, had, batch):
+        cache_shape_b = (cfg.n_layers, batch, cfg.max_seq, cfg.n_heads, cfg.d_head)
+
+        def fn(*args):
+            params, rest = unpack(args)
+            if quant:
+                token, pos, ck, cv, qcfg = rest
+            else:
+                token, pos, ck, cv = rest
+                qcfg = None
+            return model_mod.decode_step_batched(
+                params, cfg, token, pos, ck, cv, qcfg=qcfg, had=had
+            )
+
+        specs = pspecs + [
+            _spec((batch,), jnp.int32),
+            _spec((batch,), jnp.int32),
+            _spec(cache_shape_b),
+            _spec(cache_shape_b),
+        ]
+        innames = names + ["token", "pos", "cache_k", "cache_v"]
+        if quant:
+            specs.append(_spec((model_mod.QCFG_LEN,)))
+            innames.append("qcfg")
+        return fn, specs, innames, ["logits", "cache_k", "cache_v"]
+
+    for batch in DECODE_BATCHES:
+        arts[f"decode_fp_b{batch}"] = decode_batched_factory(False, False, batch)
+        arts[f"decode_nohad_b{batch}"] = decode_batched_factory(True, False, batch)
+        arts[f"decode_had_b{batch}"] = decode_batched_factory(True, True, batch)
+
     return arts
 
 
@@ -191,6 +227,7 @@ def main():
         mentry["shapes"] = {
             "eval": [EVAL_B, EVAL_S], "task": [TASK_B, TASK_S],
             "cayley": [CAYLEY_B, CAYLEY_S], "decode_batch": DECODE_B,
+            "decode_batches": list(DECODE_BATCHES),
         }
         for aname, (fn, specs, innames, outnames) in arts.items():
             if only and aname not in only:

@@ -368,20 +368,62 @@ def qat_loss_and_grads(params, tokens, cfg: Config, qcfg):
 
 
 def decode_step(params, cfg: Config, token, pos, cache_k, cache_v, qcfg=None, had=False):
-    """One decode step.
+    """One decode step with a shared position across the batch.
 
     token: (B,) int32; pos: scalar int32 (0-based position of `token`).
+    cache_k/v: (L, B, max_seq, H, dh) — already quantize-dequantized values.
+    Returns (logits (B, V), new_cache_k, new_cache_v).
+
+    Thin wrapper over `decode_step_batched` (the single implementation of
+    the decode math): the scalar position is broadcast to every slot. The
+    scalar-`pos` input ABI of the `decode_{fp,nohad,had}` artifacts is
+    unchanged.
+    """
+    B = token.shape[0]
+    pos_vec = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    return decode_step_batched(
+        params, cfg, token, pos_vec, cache_k, cache_v, qcfg=qcfg, had=had
+    )
+
+
+def decode_step_batched(params, cfg: Config, token, pos, cache_k, cache_v,
+                        qcfg=None, had=False):
+    """One decode step over B independent KV-cache *slots*.
+
+    The continuous-batching serving engine (rust/src/serve) drives this:
+    every slot advances one token per call, but slots are at *independent*
+    positions — a request admitted mid-flight starts at pos 0 while its
+    neighbours keep decoding. Per-slot RoPE angles and per-slot causal
+    masks (`idx <= pos[b]`) keep the lanes fully isolated, which is also
+    what makes slot reuse safe without zeroing the cache: a fresh request
+    can never attend past its own position into a previous occupant's
+    stale keys/values.
+
+    token: (B,) int32; pos: (B,) int32 (0-based position of each token).
     cache_k/v: (L, B, max_seq, H, dh) — already quantize-dequantized values.
     Returns (logits (B, V), new_cache_k, new_cache_v).
     """
     B = token.shape[0]
     h, dh = cfg.n_heads, cfg.d_head
     x = params["emb"][token]  # (B, D)
-    cos, sin = rope_angles(cfg, pos[None])  # (1, dh/2)
-    # Mask over cache positions: attend to <= pos.
+    half = dh // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]  # (B, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
     idx = jnp.arange(cfg.max_seq)
-    attend = (idx <= pos).astype(jnp.float32)  # (max_seq,)
+    attend = (idx[None, :] <= pos[:, None]).astype(jnp.float32)  # (B, max_seq)
     neg = jnp.asarray(-1e9, jnp.float32)
+    lanes = jnp.arange(B)
+
+    def rope1(t):
+        """Per-slot RoPE on a single position; t: (B, h, dh)."""
+        tr = t.reshape(B, h, dh // 2, 2)
+        t0, t1 = tr[..., 0], tr[..., 1]
+        c = cos[:, None, :]
+        sn = sin[:, None, :]
+        y0 = t0 * c - t1 * sn
+        y1 = t0 * sn + t1 * c
+        return jnp.stack([y0, y1], axis=-1).reshape(B, h, dh)
 
     def aq(t):
         return _aq(t, qcfg) if qcfg is not None else t
@@ -396,24 +438,24 @@ def decode_step(params, cfg: Config, token, pos, cache_k, cache_v, qcfg=None, ha
         p = f"layers.{i}."
         hsrc = rmsnorm(x, params[p + "attn_norm"])
         hq = aq(hsrc)
-        q = (hq @ wq(params[p + "wq"])).reshape(B, 1, h, dh)
-        k = (hq @ wq(params[p + "wk"])).reshape(B, 1, h, dh)
-        v = (hq @ wq(params[p + "wv"])).reshape(B, 1, h, dh)
-        q = apply_rope(q, cos, sin)
-        k = apply_rope(k, cos, sin)
+        q = (hq @ wq(params[p + "wq"])).reshape(B, h, dh)
+        k = (hq @ wq(params[p + "wk"])).reshape(B, h, dh)
+        v = (hq @ wq(params[p + "wv"])).reshape(B, h, dh)
+        q = rope1(q)
+        k = rope1(k)
         if had:
             q = fwht_diff(q)
             k = fwht_diff(k)
         k = kvq(k)
         v = kvq(v)
-        cache_k = jax.lax.dynamic_update_slice(cache_k, k[None], (i, 0, pos, 0, 0))
-        cache_v = jax.lax.dynamic_update_slice(cache_v, v[None], (i, 0, pos, 0, 0))
+        cache_k = cache_k.at[i, lanes, pos].set(k)
+        cache_v = cache_v.at[i, lanes, pos].set(v)
         ck = cache_k[i]  # (B, max_seq, h, dh)
         cv = cache_v[i]
-        att = jnp.einsum("bqhd,bkhd->bhqk", q, ck) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
-        att = jnp.where(attend[None, None, None, :] > 0, att, neg)
+        att = jnp.einsum("bhd,bkhd->bhk", q, ck) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        att = jnp.where(attend[:, None, :] > 0, att, neg)
         att = jax.nn.softmax(att, axis=-1)
-        o = jnp.einsum("bhqk,bkhd->bqhd", att, cv).reshape(B, h * dh)
+        o = jnp.einsum("bhk,bkhd->bhd", att, cv).reshape(B, h * dh)
         x = x + aq(o) @ wq(params[p + "wo"])
 
         h2 = rmsnorm(x, params[p + "ffn_norm"])

@@ -71,6 +71,9 @@ def test_aot_builds_all_artifact_specs():
         "fwd_stats", "cayley_nohad", "cayley_had", "qat_grads",
         "decode_fp", "decode_nohad", "decode_had",
     }
+    # Continuous-batching decode artifacts (rust/src/serve), per batch size.
+    for b in aot.DECODE_BATCHES:
+        expected |= {f"decode_fp_b{b}", f"decode_nohad_b{b}", f"decode_had_b{b}"}
     assert set(arts) == expected
     # Input ABI: params first (in order), extras after.
     names = model_mod.param_order(cfg)
@@ -78,6 +81,17 @@ def test_aot_builds_all_artifact_specs():
         assert innames[: len(names)] == names, aname
         assert len(specs) == len(innames), aname
         assert outnames, aname
+    # Batched decode ABI: token and pos are per-slot vectors, caches carry
+    # the slot dimension.
+    for b in aot.DECODE_BATCHES:
+        _, specs, innames, outnames = arts[f"decode_nohad_b{b}"]
+        byname = dict(zip(innames, specs))
+        assert byname["token"].shape == (b,)
+        assert byname["pos"].shape == (b,)
+        assert byname["cache_k"].shape == (
+            cfg.n_layers, b, cfg.max_seq, cfg.n_heads, cfg.d_head
+        )
+        assert outnames == ["logits", "cache_k", "cache_v"]
 
 
 def test_aot_lowering_produces_hlo_text():

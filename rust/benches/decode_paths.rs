@@ -2,7 +2,7 @@
 //!
 //! BEFORE (naive): every decode step converts the returned KV-cache buffers
 //! to host tensors and back to literals for the next step.
-//! AFTER (shipped, coordinator::serve): the cache stays as PJRT literals
+//! AFTER (shipped, spinquant::serve): the cache stays as PJRT literals
 //! between steps — zero host round-trips on the steady-state path.
 //!
 //! Run: cargo bench --bench decode_paths   (needs `make artifacts`)

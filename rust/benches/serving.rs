@@ -1,0 +1,126 @@
+//! Serving throughput bench: continuous batching at batch sizes {1, 4, 8}.
+//!
+//! Drives the `serve` scheduler over a fixed synthetic workload and reports
+//! tokens/sec + latency percentiles per batch size, leaving a
+//! machine-readable trajectory in `BENCH_serving.json` so later PRs can be
+//! compared against this one.
+//!
+//! Engine selection: the PJRT engine is used when `make artifacts` has run
+//! (batch 1 via `decode_nohad`, batch N via `decode_nohad_b{N}`); otherwise
+//! the deterministic mock engine benches the scheduler itself, so this
+//! target always produces numbers.
+//!
+//! Run: cargo bench --bench serving
+
+use spinquant::eval::QcfgVec;
+use spinquant::model::{Manifest, Weights};
+use spinquant::report;
+use spinquant::runtime::Runtime;
+use spinquant::serve::{
+    DecodeVariant, GenRequest, MockEngine, PjrtEngine, Sampler, Scheduler, ServingMetrics,
+};
+use spinquant::util::json::{self, Json};
+
+const BATCHES: [usize; 3] = [1, 4, 8];
+const MODEL: &str = "sq-2m";
+const N_REQUESTS: usize = 32;
+const MAX_NEW: usize = 24;
+
+/// The fixed workload: byte prompts of varying length, seeded top-k
+/// sampling so every engine sees the same request stream.
+fn workload() -> Vec<GenRequest> {
+    (0..N_REQUESTS)
+        .map(|i| {
+            let len = 4 + (i % 6);
+            let prompt: Vec<u8> = (0..len).map(|j| (32 + ((i * 17 + j * 5) % 90)) as u8).collect();
+            GenRequest::sampled(&prompt, MAX_NEW, Sampler::top_k(8, 0.8), 1000 + i as u64)
+        })
+        .collect()
+}
+
+fn run_mock(batch: usize) -> anyhow::Result<ServingMetrics> {
+    let engine = MockEngine::new(batch, 128, 256);
+    let mut sched = Scheduler::new(engine, N_REQUESTS)?;
+    sched.serve_all(workload())?;
+    Ok(sched.metrics)
+}
+
+fn run_pjrt(manifest: &Manifest, rt: &Runtime, batch: usize) -> anyhow::Result<ServingMetrics> {
+    let artifact = DecodeVariant::QuantNoHad.artifact_batched(batch);
+    let exe = rt.load(manifest, MODEL, &artifact)?;
+    let weights = Weights::load(&manifest.weights_path(MODEL))?;
+    // W-quant is offline; serve the raw weights at A8/KV8 like the Table 6
+    // harness — the bench measures serving throughput, not quality.
+    let qcfg = QcfgVec::fp().with_a_bits(8.0).with_kv_bits(8.0);
+    let engine = PjrtEngine::new(exe, &weights, Some(qcfg))?;
+    let mut sched = Scheduler::new(engine, N_REQUESTS)?;
+    sched.serve_all(workload())?;
+    Ok(sched.metrics)
+}
+
+fn main() {
+    let pjrt_ctx = Manifest::load(std::path::Path::new("artifacts"))
+        .ok()
+        .and_then(|m| Runtime::cpu().ok().map(|rt| (m, rt)));
+    if pjrt_ctx.is_none() {
+        eprintln!("no artifacts (run `make artifacts`); benching the mock engine instead");
+    }
+
+    let labels: Vec<String> = BATCHES.iter().map(|b| format!("batch_{b}")).collect();
+    let mut rows: Vec<(&str, Json)> = Vec::new();
+    let mut engines_used: Vec<&str> = Vec::new();
+    println!(
+        "{:<10} {:>8} {:>10} {:>12} {:>12} {:>12} {:>12}",
+        "batch", "engine", "tokens", "tok/s", "p50 ms/tok", "p95", "p99"
+    );
+    for (i, &batch) in BATCHES.iter().enumerate() {
+        let (label, metrics) = match &pjrt_ctx {
+            Some((manifest, rt)) => match run_pjrt(manifest, rt, batch) {
+                Ok(m) => ("pjrt", m),
+                Err(e) => {
+                    eprintln!("batch {batch}: PJRT engine unavailable ({e:#}); using mock");
+                    ("mock", run_mock(batch).expect("mock engine"))
+                }
+            },
+            None => ("mock", run_mock(batch).expect("mock engine")),
+        };
+        engines_used.push(label);
+        println!(
+            "{:<10} {:>8} {:>10} {:>12.1} {:>12.3} {:>12.3} {:>12.3}",
+            batch,
+            label,
+            metrics.tokens_generated,
+            metrics.tokens_per_sec(),
+            metrics.token_ms_p50(),
+            metrics.token_ms_p95(),
+            metrics.token_ms_p99()
+        );
+        let mut row = metrics.to_json();
+        if let Json::Obj(m) = &mut row {
+            m.insert("engine".to_string(), json::s(label));
+            m.insert("batch".to_string(), json::num(batch as f64));
+        }
+        rows.push((labels[i].as_str(), row));
+    }
+
+    // Top-level engine label is only non-"mixed" when every batch size ran
+    // on the same engine; per-batch rows always carry their own label.
+    let engine_label = match engines_used.first() {
+        Some(first) if engines_used.iter().all(|e| e == first) => *first,
+        Some(_) => "mixed",
+        None => "none",
+    };
+    let out = json::obj(vec![
+        ("bench", json::s("serving")),
+        ("model", json::s(MODEL)),
+        ("engine", json::s(engine_label)),
+        ("requests", json::num(N_REQUESTS as f64)),
+        ("max_new_tokens", json::num(MAX_NEW as f64)),
+        ("batches", json::obj(rows.iter().map(|(k, v)| (*k, v.clone())).collect())),
+    ]);
+    let path = std::path::Path::new("BENCH_serving.json");
+    match report::write_json(path, &out) {
+        Ok(()) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("failed to write {}: {e:#}", path.display()),
+    }
+}

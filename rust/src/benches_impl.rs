@@ -11,8 +11,9 @@
 use anyhow::{bail, Result};
 
 use crate::config::{Bits, Method, PipelineConfig};
-use crate::coordinator::{serve, Pipeline};
+use crate::coordinator::Pipeline;
 use crate::eval::{self, EvalSession, QcfgVec};
+use crate::serve;
 use crate::model::Manifest;
 use crate::report::{fmt_acc, fmt_ppl, Table};
 use crate::rotation::RotationKind;

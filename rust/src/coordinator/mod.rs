@@ -6,12 +6,15 @@
 //! (Table 1 row family) is a branch of [`Pipeline::quantize`].
 //!
 //! Submodules: [`cayley_driver`] (rotation learning loop over the PJRT grad
-//! artifact), [`qat`] (LLM-QAT baseline trainer), [`serve`] (decode loop,
-//! KV-cache manager, request scheduler).
+//! artifact) and [`qat`] (LLM-QAT baseline trainer). The decode loop,
+//! KV-cache slot manager and request scheduler were promoted to the
+//! top-level [`crate::serve`] subsystem (continuous batching); the old
+//! `coordinator::serve` path is re-exported for compatibility.
 
 pub mod cayley_driver;
 pub mod qat;
-pub mod serve;
+
+pub use crate::serve;
 
 use std::collections::BTreeMap;
 

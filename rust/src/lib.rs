@@ -12,9 +12,12 @@
 //!   weight quantization, rotation construction and merging, Cayley-SGD
 //!   rotation learning on the Stiefel manifold, baselines (SmoothQuant,
 //!   QuaRot, LLM-QAT), a PJRT runtime that loads the AOT artifacts, a
-//!   batched evaluation engine (perplexity + zero-shot tasks), a serving
-//!   loop with a quantized KV-cache, and the benchmark harnesses that
-//!   regenerate every table and figure of the paper.
+//!   batched evaluation engine (perplexity + zero-shot tasks), a
+//!   continuous-batching serving engine (`serve`: slot-based KV-cache
+//!   manager, admission scheduler with mid-flight join, seeded
+//!   greedy/temperature/top-k/top-p samplers, and serving metrics —
+//!   TTFT, latency percentiles, tokens/sec), and the benchmark harnesses
+//!   that regenerate every table and figure of the paper.
 //!
 //! Python never runs on the request path: `make artifacts` runs once, then
 //! the `spinquant` binary is self-contained.
@@ -23,6 +26,8 @@
 //! ```bash
 //! spinquant quantize --model sq-2m --method spinquant-had --bits 4-4-4
 //! spinquant eval     --model sq-2m --method spinquant-had --bits 4-4-4
+//! spinquant serve    --model sq-2m --batch 4 --sampler top-k \
+//!                    --temperature 0.8 --max-new-tokens 48
 //! spinquant bench-table --id table1 --models sq-2m
 //! ```
 
@@ -41,6 +46,7 @@ pub mod quant;
 pub mod report;
 pub mod rotation;
 pub mod runtime;
+pub mod serve;
 pub mod smoothquant;
 pub mod tensor;
 pub mod testing;

@@ -4,7 +4,13 @@
 //!   quantize     run the PTQ pipeline, save quantized weights (.sqt)
 //!   eval         quantize + evaluate (Wiki ppl, 0-shot^8 avg)
 //!   optimize     learn rotations only; report loss curve + orthonormality
-//!   serve        interactive-ish demo: generate completions for prompts
+//!   serve        continuous-batching serving demo over the quantized KV
+//!                cache (rust/src/serve): `--batch N` slots, seeded
+//!                `--sampler greedy|temperature|top-k|top-p` with
+//!                `--temperature/--top-k/--top-p/--seed`, per-request
+//!                `--max-new-tokens`, `--prompt "a|b|c"` (one request per
+//!                `|`-separated prompt); prints completions + TTFT /
+//!                latency-percentile / tokens-per-sec metrics
 //!   bench-table  regenerate one paper table/figure (see --id list)
 //!   selftest     end-to-end smoke: artifacts load + tiny eval
 //!   info         list models/artifacts found in artifacts/
@@ -12,16 +18,18 @@
 //! Flags are `--key value` pairs matching config::PipelineConfig keys, plus
 //! `--config file.toml`. Example:
 //!   spinquant eval --model sq-2m --method spinquant-had --bits 4-4-4
+//!   spinquant serve --model sq-2m --batch 4 --sampler top-k --temperature 0.8
 
 use std::collections::VecDeque;
 
 use anyhow::{anyhow, Context, Result};
 use spinquant::config::{PipelineConfig, Toml};
-use spinquant::coordinator::{serve, Pipeline};
+use spinquant::coordinator::Pipeline;
 use spinquant::info;
 use spinquant::model::Manifest;
 use spinquant::report::{fmt_acc, fmt_ppl, Table};
 use spinquant::runtime::Runtime;
+use spinquant::serve;
 
 fn main() {
     if let Err(e) = run() {
@@ -34,6 +42,8 @@ fn usage() -> ! {
     eprintln!(
         "usage: spinquant <quantize|eval|optimize|serve|bench-table|selftest|info> [--key value ...]\n\
          common flags: --model sq-2m --method spinquant-had --bits 4-4-4 --config run.toml\n\
+         serve:        --batch 1|4|8 --sampler greedy|temperature|top-k|top-p --temperature 0.8\n\
+                       --top-k 40 --top-p 0.95 --seed 0 --max-new-tokens 48 --prompt \"a|b|c\"\n\
          bench-table:  --id table1|table2|table3|table4|table5|table6|table10|table11|table12|table13|fig2|fig3|fig4|fig7|fig8 [--models a,b] [--out EXPERIMENTS.md]"
     );
     std::process::exit(2);
@@ -214,6 +224,8 @@ fn cmd_optimize(cfg: &PipelineConfig) -> Result<()> {
 }
 
 fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
+    use spinquant::serve::{GenRequest, PjrtEngine, Sampler, Scheduler};
+
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let rt = Runtime::cpu()?;
     let pipe = Pipeline::new(&rt, &manifest, cfg.clone())?;
@@ -223,19 +235,78 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
         (_, true) => serve::DecodeVariant::QuantHad,
         (_, false) => serve::DecodeVariant::QuantNoHad,
     };
-    let exe = rt.load(&manifest, &cfg.model, variant.artifact())?;
+
+    // Serving knobs.
+    let mut batch: usize =
+        get_extra(extra, "batch").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let temperature: f32 =
+        get_extra(extra, "temperature").map(|v| v.parse()).transpose()?.unwrap_or(0.8);
+    let top_k: usize = get_extra(extra, "top-k").map(|v| v.parse()).transpose()?.unwrap_or(40);
+    let top_p: f32 = get_extra(extra, "top-p").map(|v| v.parse()).transpose()?.unwrap_or(0.95);
+    let seed: u64 = get_extra(extra, "seed").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let sampler = Sampler::parse(
+        get_extra(extra, "sampler").unwrap_or("greedy"),
+        temperature,
+        top_k,
+        top_p,
+    )?;
+    let n_new: usize = get_extra(extra, "max-new-tokens")
+        .or_else(|| get_extra(extra, "tokens"))
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(48);
+    // `|`-separated prompts become independent requests.
+    let prompts: Vec<Vec<u8>> = get_extra(extra, "prompt")
+        .unwrap_or("The |Alpha beta |Some words |Q: ")
+        .split('|')
+        .filter(|p| !p.is_empty())
+        .map(|p| p.as_bytes().to_vec())
+        .collect();
+
+    // Load the batched artifact when batch > 1; fall back to batch 1 when
+    // the artifact set predates continuous batching.
+    let exe = match rt.load(&manifest, &cfg.model, &variant.artifact_batched(batch)) {
+        Ok(e) => e,
+        Err(e) if batch > 1 => {
+            eprintln!(
+                "note: no {} artifact ({e:#}); falling back to batch 1 \
+                 (re-run `make artifacts` for batched decode)",
+                variant.artifact_batched(batch)
+            );
+            batch = 1;
+            rt.load(&manifest, &cfg.model, variant.artifact())?
+        }
+        Err(e) => return Err(e),
+    };
     let qcfg = if variant == serve::DecodeVariant::Fp { None } else { Some(qm.qcfg) };
-    let prompt = get_extra(extra, "prompt").unwrap_or("The ").as_bytes().to_vec();
-    let n_new: usize = get_extra(extra, "tokens").map(|v| v.parse()).transpose()?.unwrap_or(48);
-    let mut session = serve::GenerationSession::new(&exe, &qm.weights, qcfg)?;
-    let out = session.generate(&prompt, n_new)?;
+    let engine = PjrtEngine::new(exe, &qm.weights, qcfg)?;
+    let mut sched = Scheduler::new(engine, 1024)?;
+
     println!(
-        "prompt: {:?}\ncompletion: {:?}\n{:.2} ms/token ({} steps)",
-        String::from_utf8_lossy(&prompt),
-        String::from_utf8_lossy(&out),
-        session.ms_per_token(),
-        session.step_times.len()
+        "serving {} request(s) on {} slot(s), sampler {}, max {} new tokens",
+        prompts.len(),
+        batch,
+        sampler.name(),
+        n_new
     );
+    let reqs = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| GenRequest::sampled(p, n_new, sampler, seed.wrapping_add(i as u64)));
+    let mut done = sched.serve_all(reqs)?;
+    done.sort_by_key(|c| c.id);
+    for c in &done {
+        println!(
+            "request {}: ttft {:>7.2} ms, total {:>8.1} ms  {:?} -> {:?}",
+            c.id,
+            c.ttft_ms.unwrap_or(f64::NAN),
+            c.latency_ms,
+            String::from_utf8_lossy(&c.prompt),
+            String::from_utf8_lossy(&c.completion)
+        );
+    }
+    println!();
+    println!("{}", sched.metrics.table(&format!("serving metrics (batch={batch})")).to_markdown());
     Ok(())
 }
 

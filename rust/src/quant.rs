@@ -338,6 +338,61 @@ mod tests {
     }
 
     #[test]
+    fn prop_int4_pack_roundtrips_any_length() {
+        // Odd lengths exercise the half-filled trailing byte.
+        forall(21, 60, |g: &mut Gen| {
+            let n = g.int(1, 65);
+            let codes: Vec<i32> = (0..n).map(|_| g.int(0, 15) as i32).collect();
+            let packed = pack_int4(&codes);
+            if packed.len() != n.div_ceil(2) {
+                return Err(format!("{n} codes packed into {} bytes", packed.len()));
+            }
+            let back = unpack_int4(&packed, n);
+            if back != codes {
+                return Err(format!("roundtrip mismatch at n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_codes_roundtrip_within_one_step() {
+        // dequantize(quantize(x)) must stay within half a quantization step
+        // of x for every in-range value, symmetric and asymmetric alike.
+        forall(22, 60, |g: &mut Gen| {
+            let n = g.int(2, 96);
+            let scale = g.f32(0.05, 6.0);
+            let t = g.tensor(&[n], scale);
+            let bits = *g.pick(&[3.0f32, 4.0, 8.0]);
+            let sym = g.bool();
+            let (codes, s, z) = quantize_group_codes(&t.data, bits, sym);
+            let deq = dequantize_codes(&codes, s, z);
+            // Codes must fit the advertised integer grid.
+            let (lo, hi) = if sym {
+                let m = (bits - 1.0).exp2() as i32;
+                (-m, m - 1)
+            } else {
+                (0, bits.exp2() as i32 - 1)
+            };
+            for &c in &codes {
+                if c < lo || c > hi {
+                    return Err(format!("code {c} outside [{lo},{hi}] at {bits} bits"));
+                }
+            }
+            let tol = 0.5 * s * (1.0 + 1e-3) + 1e-6;
+            for (&x, &d) in t.data.iter().zip(&deq) {
+                if (x - d).abs() > tol {
+                    return Err(format!(
+                        "sym={sym} bits={bits}: |{x} - {d}| = {} > step/2 = {tol}",
+                        (x - d).abs()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn size_accounting() {
         // 4-bit, per-row groups of 128: 1M weights -> ~0.5MB + metadata.
         let bytes = quantized_size_bytes(1 << 20, (1 << 20) / 128, 4.0, true);

@@ -1,10 +1,13 @@
 //! Report writers: markdown tables (paper-style rows) and JSON result
-//! files, plus the EXPERIMENTS.md appender used by the bench harnesses.
+//! files (e.g. the `BENCH_serving.json` perf trajectory), plus the
+//! EXPERIMENTS.md appender used by the bench harnesses.
 
 use std::fmt::Write as _;
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
 
 /// A simple markdown table builder.
 #[derive(Clone, Debug, Default)]
@@ -85,6 +88,14 @@ pub fn fmt_ppl(v: f64) -> String {
     }
 }
 
+/// Write a JSON report file (used by the bench harnesses to leave
+/// machine-readable perf trajectories like `BENCH_serving.json`).
+pub fn write_json(path: &Path, value: &Json) -> Result<()> {
+    std::fs::write(path, value.to_string() + "\n")
+        .with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
 /// Append a section to EXPERIMENTS.md (creates the file if missing).
 pub fn append_experiments(repo_root: &Path, section: &str) -> Result<()> {
     let path = repo_root.join("EXPERIMENTS.md");
@@ -130,5 +141,20 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn write_json_roundtrips() {
+        let dir = std::env::temp_dir().join("spinquant_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.json");
+        let j = crate::util::json::obj(vec![
+            ("tokens_per_sec", crate::util::json::num(123.5)),
+            ("engine", crate::util::json::s("mock")),
+        ]);
+        write_json(&path, &j).unwrap();
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back.req("tokens_per_sec").unwrap().as_f64(), Some(123.5));
+        let _ = std::fs::remove_file(&path);
     }
 }

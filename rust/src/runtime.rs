@@ -170,7 +170,7 @@ impl Executable {
 
     /// Execute and return the raw output buffers (serving hot path: the
     /// decode loop keeps the KV cache as literals without tensor round
-    /// trips; see coordinator::serve).
+    /// trips; see crate::serve::engine).
     pub fn run_literals_raw(
         &self,
         literals: &[xla::Literal],

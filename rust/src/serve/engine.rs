@@ -1,0 +1,444 @@
+//! Decode engines: the batched single-step interface the scheduler drives.
+//!
+//! [`PjrtEngine`] wraps one `decode_*` artifact (B = 1) or `decode_*_b{N}`
+//! artifact (B = N slots) and keeps the KV cache as PJRT literals between
+//! steps — zero host round-trips on the steady-state path (see
+//! `benches/decode_paths.rs` for the before/after of that optimisation).
+//! [`MockEngine`] is a deterministic in-process stand-in whose logits depend
+//! only on a slot's token history, so scheduler and sampler behaviour can be
+//! tested (and benched) without artifacts, and a request's generation is
+//! identical regardless of batch composition.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::eval::QcfgVec;
+use crate::model::Weights;
+use crate::runtime::{Executable, Value};
+use crate::util::prng::Prng;
+use crate::util::timer::Samples;
+
+/// Which decode artifact family to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecodeVariant {
+    Fp,
+    QuantNoHad,
+    QuantHad,
+}
+
+impl DecodeVariant {
+    /// The single-slot (B = 1) artifact name.
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            DecodeVariant::Fp => "decode_fp",
+            DecodeVariant::QuantNoHad => "decode_nohad",
+            DecodeVariant::QuantHad => "decode_had",
+        }
+    }
+
+    /// The batched artifact name for `batch` slots (`decode_*_b{N}`),
+    /// falling back to the scalar name at batch 1.
+    pub fn artifact_batched(&self, batch: usize) -> String {
+        if batch <= 1 {
+            self.artifact().to_string()
+        } else {
+            format!("{}_b{batch}", self.artifact())
+        }
+    }
+}
+
+/// One decode iteration over a fixed set of KV-cache slots.
+///
+/// `step` feeds `tokens[b]` at position `pos[b]` into every slot `b` with
+/// `active[b]` set and returns per-slot next-token logits. Inactive slots
+/// are stepped with a placeholder token at position 0; because the decode
+/// graphs mask attention to `idx <= pos`, whatever such a step writes into
+/// a free slot's cache is invisible to any future occupant (which starts at
+/// `pos = 0` and overwrites from there).
+pub trait DecodeEngine {
+    /// Number of KV-cache slots (the batch dimension B).
+    fn slots(&self) -> usize;
+
+    /// Cache capacity per slot (positions).
+    fn max_seq(&self) -> usize;
+
+    /// Advance every slot one token; returns logits per slot (empty vec for
+    /// inactive slots is allowed but not required).
+    fn step(&mut self, tokens: &[i32], pos: &[i32], active: &[bool]) -> Result<Vec<Vec<f32>>>;
+
+    /// Forget per-slot state when a slot is reused for a new request.
+    fn reset_slot(&mut self, slot: usize);
+}
+
+// ---------------------------------------------------------------------------
+// Shared PJRT decode-artifact binding (used by PjrtEngine and the legacy
+// GenerationSession so the input-ABI parsing and literal recycling exist
+// exactly once).
+// ---------------------------------------------------------------------------
+
+/// Prepared input literals + the index map for one decode artifact.
+struct DecodeBinding {
+    literals: Vec<xla::Literal>,
+    token_idx: usize,
+    pos_idx: usize,
+    /// Legacy B=1 artifacts take `pos` as a scalar; batched ones as (B,).
+    pos_scalar: bool,
+    cache_k_idx: usize,
+    cache_v_idx: usize,
+    n_slots: usize,
+    max_seq: usize,
+}
+
+impl DecodeBinding {
+    /// Bind weights/qcfg/zeroed caches to the artifact's input ABI.
+    fn new(exe: &Executable, weights: &Weights, qcfg: Option<QcfgVec>) -> Result<Self> {
+        let mut values = Vec::with_capacity(exe.spec.inputs.len());
+        let (mut token_idx, mut pos_idx, mut ck, mut cv) = (None, None, None, None);
+        let mut pos_scalar = false;
+        let mut n_slots = 0usize;
+        let mut max_seq = 0usize;
+        for (i, (name, shape, _)) in exe.spec.inputs.iter().enumerate() {
+            let v = match name.as_str() {
+                "token" => {
+                    token_idx = Some(i);
+                    n_slots = shape.first().copied().unwrap_or(1);
+                    Value::I32(vec![0; shape.iter().product()], shape.clone())
+                }
+                "pos" => {
+                    pos_idx = Some(i);
+                    if shape.is_empty() {
+                        pos_scalar = true;
+                        Value::ScalarI32(0)
+                    } else {
+                        Value::I32(vec![0; shape.iter().product()], shape.clone())
+                    }
+                }
+                "cache_k" => {
+                    ck = Some(i);
+                    max_seq = shape[2];
+                    Value::F32(crate::tensor::Tensor::zeros(shape))
+                }
+                "cache_v" => {
+                    cv = Some(i);
+                    Value::F32(crate::tensor::Tensor::zeros(shape))
+                }
+                "qcfg" => Value::F32(
+                    qcfg.ok_or_else(|| anyhow!("{}: needs qcfg", exe.label))?.tensor(),
+                ),
+                _ => Value::F32(weights.get(name)?.clone()),
+            };
+            values.push(v);
+        }
+        let literals = exe.prepare(&values)?;
+        if pos_scalar && n_slots != 1 {
+            bail!("{}: scalar pos input but {} token slots", exe.label, n_slots);
+        }
+        Ok(Self {
+            literals,
+            token_idx: token_idx.ok_or_else(|| anyhow!("no token input"))?,
+            pos_idx: pos_idx.ok_or_else(|| anyhow!("no pos input"))?,
+            pos_scalar,
+            cache_k_idx: ck.ok_or_else(|| anyhow!("no cache_k input"))?,
+            cache_v_idx: cv.ok_or_else(|| anyhow!("no cache_v input"))?,
+            n_slots,
+            max_seq,
+        })
+    }
+
+    /// Run one decode step: rebuild the token/pos literals, execute, keep
+    /// the returned caches as literals (zero host round-trips), return the
+    /// flat logits (n_slots * V).
+    fn step(&mut self, exe: &Executable, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+        if tokens.len() != self.n_slots || pos.len() != self.n_slots {
+            bail!(
+                "{}: step arity {} / {}, artifact has {} slots",
+                exe.label,
+                tokens.len(),
+                pos.len(),
+                self.n_slots
+            );
+        }
+        for (b, &p) in pos.iter().enumerate() {
+            if (p as usize) >= self.max_seq {
+                bail!("slot {b}: KV cache full ({} positions)", self.max_seq);
+            }
+        }
+        self.literals[self.token_idx] =
+            xla::Literal::vec1(tokens).reshape(&[self.n_slots as i64])?;
+        self.literals[self.pos_idx] = if self.pos_scalar {
+            xla::Literal::scalar(pos[0])
+        } else {
+            xla::Literal::vec1(pos).reshape(&[self.n_slots as i64])?
+        };
+        let bufs = exe.run_literals_raw(&self.literals)?;
+        let result = bufs[0][0].to_literal_sync()?;
+        let mut parts = result.to_tuple()?;
+        // outputs: logits, cache_k, cache_v — keep caches as literals.
+        let cache_v = parts.pop().ok_or_else(|| anyhow!("missing cache_v"))?;
+        let cache_k = parts.pop().ok_or_else(|| anyhow!("missing cache_k"))?;
+        let logits_lit = parts.pop().ok_or_else(|| anyhow!("missing logits"))?;
+        self.literals[self.cache_k_idx] = cache_k;
+        self.literals[self.cache_v_idx] = cache_v;
+        Ok(logits_lit.to_vec::<f32>()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT-backed engine
+// ---------------------------------------------------------------------------
+
+/// The production engine: one compiled decode artifact, weight + cache
+/// literals prepared once, token/pos literals rebuilt per step.
+pub struct PjrtEngine {
+    exe: Executable,
+    bind: DecodeBinding,
+    pub step_times: Samples,
+}
+
+impl PjrtEngine {
+    /// Build from a compiled decode artifact (takes ownership so callers
+    /// can move the engine into schedulers/threads without self-reference).
+    pub fn new(exe: Executable, weights: &Weights, qcfg: Option<QcfgVec>) -> Result<Self> {
+        let bind = DecodeBinding::new(&exe, weights, qcfg)?;
+        Ok(Self { exe, bind, step_times: Samples::new() })
+    }
+
+    pub fn label(&self) -> &str {
+        &self.exe.label
+    }
+
+    pub fn ms_per_step(&self) -> f64 {
+        self.step_times.mean_us() / 1e3
+    }
+}
+
+impl DecodeEngine for PjrtEngine {
+    fn slots(&self) -> usize {
+        self.bind.n_slots
+    }
+
+    fn max_seq(&self) -> usize {
+        self.bind.max_seq
+    }
+
+    fn step(&mut self, tokens: &[i32], pos: &[i32], _active: &[bool]) -> Result<Vec<Vec<f32>>> {
+        let t0 = Instant::now();
+        let flat = self.bind.step(&self.exe, tokens, pos)?;
+        self.step_times.push(t0.elapsed().as_secs_f64() * 1e6);
+        let vocab = flat.len() / self.bind.n_slots.max(1);
+        Ok(flat.chunks(vocab).map(|c| c.to_vec()).collect())
+    }
+
+    fn reset_slot(&mut self, _slot: usize) {
+        // Nothing to do: attention masking (`idx <= pos`) makes a previous
+        // occupant's stale cache entries unreachable once the slot restarts
+        // at pos = 0.
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic mock engine (tests + artifact-free benches)
+// ---------------------------------------------------------------------------
+
+/// A deterministic fake model. Logits for a slot are a pure function of the
+/// slot's token *history* (not of the slot index, the batch composition, or
+/// the wall clock), so the same request produces the same generation at any
+/// batch size — exactly the property continuous-batching tests need.
+///
+/// It also asserts the scheduler's contract: a step's `pos[b]` must equal
+/// the number of tokens already fed into slot `b`, and reused slots must be
+/// reset. Violations are reported as errors instead of silent corruption.
+pub struct MockEngine {
+    n_slots: usize,
+    max_seq: usize,
+    vocab: usize,
+    history: Vec<Vec<i32>>,
+    /// Total engine steps executed (for batching-efficiency assertions).
+    pub steps: usize,
+}
+
+impl MockEngine {
+    pub fn new(slots: usize, max_seq: usize, vocab: usize) -> Self {
+        Self { n_slots: slots, max_seq, vocab, history: vec![Vec::new(); slots], steps: 0 }
+    }
+
+    /// Deterministic logits from a token history: a pseudo-random base
+    /// (hash-seeded, so temperature sampling has texture) plus a strong
+    /// peak on the "predicted" next token.
+    fn logits_for(history: &[i32], vocab: usize) -> Vec<f32> {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for &t in history {
+            h = (h ^ t as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        let mut rng = Prng::new(h);
+        let mut logits: Vec<f32> = (0..vocab).map(|_| rng.uniform() * 4.0).collect();
+        let last = *history.last().unwrap_or(&0) as usize;
+        let peak = (last * 31 + history.len() * 7 + 13) % vocab;
+        logits[peak] += 8.0;
+        logits
+    }
+}
+
+impl DecodeEngine for MockEngine {
+    fn slots(&self) -> usize {
+        self.n_slots
+    }
+
+    fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    fn step(&mut self, tokens: &[i32], pos: &[i32], active: &[bool]) -> Result<Vec<Vec<f32>>> {
+        if tokens.len() != self.n_slots || pos.len() != self.n_slots || active.len() != self.n_slots
+        {
+            bail!("mock engine: step arity mismatch ({} slots)", self.n_slots);
+        }
+        self.steps += 1;
+        let mut out = Vec::with_capacity(self.n_slots);
+        for b in 0..self.n_slots {
+            if !active[b] {
+                out.push(Vec::new());
+                continue;
+            }
+            if pos[b] as usize != self.history[b].len() {
+                bail!(
+                    "mock engine: slot {b} stepped at pos {} but holds {} tokens \
+                     (scheduler position tracking broken, or slot reused without reset)",
+                    pos[b],
+                    self.history[b].len()
+                );
+            }
+            if self.history[b].len() >= self.max_seq {
+                bail!("mock engine: slot {b} cache full ({} positions)", self.max_seq);
+            }
+            self.history[b].push(tokens[b]);
+            out.push(Self::logits_for(&self.history[b], self.vocab));
+        }
+        Ok(out)
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        self.history[slot].clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Single-request convenience session (paper Table 6 / Fig. 7 harnesses)
+// ---------------------------------------------------------------------------
+
+/// One active generation with its KV cache over a B=1 decode artifact.
+/// Kept for the latency harnesses and the legacy `Server`; the batched
+/// serving path goes through [`PjrtEngine`] + [`super::Scheduler`]. The
+/// artifact binding and step mechanics are shared with [`PjrtEngine`]
+/// through [`DecodeBinding`].
+pub struct GenerationSession<'e> {
+    exe: &'e Executable,
+    bind: DecodeBinding,
+    pub max_seq: usize,
+    pub pos: usize,
+    pub step_times: Samples,
+}
+
+impl<'e> GenerationSession<'e> {
+    pub fn new(exe: &'e Executable, weights: &Weights, qcfg: Option<QcfgVec>) -> Result<Self> {
+        let bind = DecodeBinding::new(exe, weights, qcfg)?;
+        if bind.n_slots != 1 {
+            bail!(
+                "{}: GenerationSession is single-request; artifact has {} slots \
+                 (use PjrtEngine + Scheduler)",
+                exe.label,
+                bind.n_slots
+            );
+        }
+        let max_seq = bind.max_seq;
+        Ok(Self { exe, bind, max_seq, pos: 0, step_times: Samples::new() })
+    }
+
+    /// Feed one token, advance the cache, return the logits (V,).
+    pub fn step(&mut self, token: u8) -> Result<Vec<f32>> {
+        if self.pos >= self.max_seq {
+            bail!("KV cache full ({} positions)", self.max_seq);
+        }
+        let t0 = Instant::now();
+        let logits = self.bind.step(self.exe, &[token as i32], &[self.pos as i32])?;
+        self.pos += 1;
+        self.step_times.push(t0.elapsed().as_secs_f64() * 1e6);
+        Ok(logits)
+    }
+
+    /// Greedy generation from a byte prompt.
+    pub fn generate(&mut self, prompt: &[u8], n_new: usize) -> Result<Vec<u8>> {
+        let mut last = Vec::new();
+        for &b in prompt {
+            last = self.step(b)?;
+        }
+        let mut out = Vec::with_capacity(n_new);
+        for _ in 0..n_new {
+            if self.pos >= self.max_seq {
+                break;
+            }
+            let next = super::sampling::argmax(&last) as u8;
+            out.push(next);
+            last = self.step(next)?;
+        }
+        Ok(out)
+    }
+
+    pub fn ms_per_token(&self) -> f64 {
+        self.step_times.mean_us() / 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(DecodeVariant::Fp.artifact(), "decode_fp");
+        assert_eq!(DecodeVariant::QuantHad.artifact_batched(1), "decode_had");
+        assert_eq!(DecodeVariant::QuantNoHad.artifact_batched(8), "decode_nohad_b8");
+    }
+
+    #[test]
+    fn mock_is_deterministic_and_slot_independent() {
+        let mut a = MockEngine::new(2, 16, 64);
+        let mut b = MockEngine::new(4, 16, 64);
+        // Same history in slot 0 of engine A and slot 3 of engine B.
+        let la = a.step(&[7, 9], &[0, 0], &[true, true]).unwrap();
+        let lb = b
+            .step(&[1, 2, 3, 7], &[0, 0, 0, 0], &[true, true, true, true])
+            .unwrap();
+        assert_eq!(la[0], lb[3]);
+        assert_ne!(la[0], la[1]);
+    }
+
+    #[test]
+    fn mock_rejects_position_drift() {
+        let mut e = MockEngine::new(1, 16, 32);
+        e.step(&[5], &[0], &[true]).unwrap();
+        // Correct pos is 1; claiming 0 again must fail loudly.
+        assert!(e.step(&[6], &[0], &[true]).is_err());
+        // After a reset the slot restarts at 0.
+        e.reset_slot(0);
+        e.step(&[6], &[0], &[true]).unwrap();
+    }
+
+    #[test]
+    fn mock_enforces_capacity() {
+        let mut e = MockEngine::new(1, 2, 8);
+        e.step(&[1], &[0], &[true]).unwrap();
+        e.step(&[1], &[1], &[true]).unwrap();
+        assert!(e.step(&[1], &[2], &[true]).is_err());
+    }
+
+    #[test]
+    fn mock_inactive_slots_untouched() {
+        let mut e = MockEngine::new(2, 8, 16);
+        let out = e.step(&[3, 0], &[0, 0], &[true, false]).unwrap();
+        assert_eq!(out[1].len(), 0);
+        assert_eq!(e.history[1].len(), 0);
+        assert_eq!(e.history[0].len(), 1);
+    }
+}

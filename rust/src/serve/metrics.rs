@@ -1,0 +1,187 @@
+//! Serving telemetry: TTFT, per-token latency percentiles, tokens/sec,
+//! queue depth and in-flight occupancy — the numbers a serving fleet is
+//! tuned by, exportable as JSON (for `BENCH_serving.json` trajectories)
+//! and as a markdown table through [`crate::report`].
+
+use crate::report::Table;
+use crate::util::json::{self, Json};
+use crate::util::timer::Samples;
+
+/// Rolling counters for one scheduler run. All durations are stored in
+/// microseconds ([`Samples`] convention); accessors convert to ms.
+#[derive(Clone, Debug, Default)]
+pub struct ServingMetrics {
+    /// Engine step latency (us), one sample per decode step.
+    pub step_us: Samples,
+    /// User-perceived per-token latency (us): the duration of the step that
+    /// produced the token, one sample per *generated* token.
+    pub token_us: Samples,
+    /// Time to first generated token (us), one sample per request.
+    pub ttft_us: Samples,
+    /// Total request latency (us), submit -> completion.
+    pub request_us: Samples,
+    /// Admission-queue depth, sampled once per step.
+    pub queue_depth: Samples,
+    /// Occupied slots, sampled once per step.
+    pub in_flight: Samples,
+    pub tokens_generated: usize,
+    pub requests_completed: usize,
+}
+
+impl ServingMetrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one engine step: its latency, how many tokens it yielded,
+    /// and the scheduler state around it.
+    pub fn record_step(&mut self, step_us: f64, new_tokens: usize, in_flight: usize, queue: usize) {
+        self.step_us.push(step_us);
+        for _ in 0..new_tokens {
+            self.token_us.push(step_us);
+        }
+        self.tokens_generated += new_tokens;
+        self.in_flight.push(in_flight as f64);
+        self.queue_depth.push(queue as f64);
+    }
+
+    /// Record a completed request (latencies in microseconds).
+    pub fn record_completion(&mut self, request_us: f64, ttft_us: Option<f64>) {
+        self.requests_completed += 1;
+        self.request_us.push(request_us);
+        if let Some(t) = ttft_us {
+            self.ttft_us.push(t);
+        }
+    }
+
+    /// Decode busy time: the sum of step latencies, in seconds. In the
+    /// single-threaded scheduler this is the serving wall clock.
+    pub fn busy_secs(&self) -> f64 {
+        self.step_us.mean_us() * self.step_us.len() as f64 / 1e6
+    }
+
+    /// Aggregate generation throughput over the whole run.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let s = self.busy_secs();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        self.tokens_generated as f64 / s
+    }
+
+    pub fn token_ms_p50(&self) -> f64 {
+        self.token_us.percentile_us(50.0) / 1e3
+    }
+
+    pub fn token_ms_p95(&self) -> f64 {
+        self.token_us.percentile_us(95.0) / 1e3
+    }
+
+    pub fn token_ms_p99(&self) -> f64 {
+        self.token_us.percentile_us(99.0) / 1e3
+    }
+
+    pub fn ttft_ms_p50(&self) -> f64 {
+        self.ttft_us.percentile_us(50.0) / 1e3
+    }
+
+    pub fn ttft_ms_p95(&self) -> f64 {
+        self.ttft_us.percentile_us(95.0) / 1e3
+    }
+
+    pub fn mean_queue_depth(&self) -> f64 {
+        self.queue_depth.mean_us()
+    }
+
+    pub fn mean_in_flight(&self) -> f64 {
+        self.in_flight.mean_us()
+    }
+
+    /// JSON export (the `BENCH_serving.json` row shape).
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("requests", json::num(self.requests_completed as f64)),
+            ("tokens", json::num(self.tokens_generated as f64)),
+            ("steps", json::num(self.step_us.len() as f64)),
+            ("tokens_per_sec", json::num(self.tokens_per_sec())),
+            ("token_ms_p50", json::num(self.token_ms_p50())),
+            ("token_ms_p95", json::num(self.token_ms_p95())),
+            ("token_ms_p99", json::num(self.token_ms_p99())),
+            ("ttft_ms_p50", json::num(self.ttft_ms_p50())),
+            ("ttft_ms_p95", json::num(self.ttft_ms_p95())),
+            ("request_ms_mean", json::num(self.request_us.mean_us() / 1e3)),
+            ("mean_queue_depth", json::num(self.mean_queue_depth())),
+            ("mean_in_flight", json::num(self.mean_in_flight())),
+        ])
+    }
+
+    /// One-row markdown table for CLI output.
+    pub fn table(&self, title: &str) -> Table {
+        let mut t = Table::new(
+            title,
+            &["req", "tokens", "tok/s", "p50 ms/tok", "p95", "p99", "TTFT p50 ms", "queue avg"],
+        );
+        t.row(vec![
+            format!("{}", self.requests_completed),
+            format!("{}", self.tokens_generated),
+            format!("{:.1}", self.tokens_per_sec()),
+            format!("{:.2}", self.token_ms_p50()),
+            format!("{:.2}", self.token_ms_p95()),
+            format!("{:.2}", self.token_ms_p99()),
+            format!("{:.2}", self.ttft_ms_p50()),
+            format!("{:.1}", self.mean_queue_depth()),
+        ]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_and_percentiles() {
+        let mut m = ServingMetrics::new();
+        // 4 steps of 1000us, each producing 2 tokens -> 8 tokens in 4ms.
+        for _ in 0..4 {
+            m.record_step(1000.0, 2, 2, 1);
+        }
+        assert_eq!(m.tokens_generated, 8);
+        assert!((m.busy_secs() - 0.004).abs() < 1e-9);
+        assert!((m.tokens_per_sec() - 2000.0).abs() < 1e-6);
+        assert!((m.token_ms_p50() - 1.0).abs() < 1e-9);
+        assert!((m.token_ms_p99() - 1.0).abs() < 1e-9);
+        assert!((m.mean_queue_depth() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn completions_feed_ttft_and_latency() {
+        let mut m = ServingMetrics::new();
+        m.record_completion(10_000.0, Some(2_000.0));
+        m.record_completion(20_000.0, None);
+        assert_eq!(m.requests_completed, 2);
+        assert_eq!(m.ttft_us.len(), 1);
+        assert!((m.ttft_ms_p50() - 2.0).abs() < 1e-9);
+        assert!((m.request_us.mean_us() - 15_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut m = ServingMetrics::new();
+        m.record_step(500.0, 1, 1, 0);
+        let j = m.to_json();
+        assert_eq!(j.req("tokens").unwrap().as_f64(), Some(1.0));
+        assert!(j.req("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        // Serializes cleanly.
+        assert!(j.to_string().contains("token_ms_p99"));
+    }
+
+    #[test]
+    fn empty_metrics_are_zero_not_nan() {
+        let m = ServingMetrics::new();
+        assert_eq!(m.tokens_per_sec(), 0.0);
+        assert_eq!(m.token_ms_p99(), 0.0);
+        let md = m.table("t").to_markdown();
+        assert!(md.contains("### t"));
+    }
+}

@@ -1,0 +1,41 @@
+//! The serving subsystem: continuous batching over the quantized KV cache.
+//!
+//! The paper's headline systems claim (Table 6 / Fig. 7) is that 4-bit
+//! W/A/KV SpinQuant models are cheap enough to *serve*; this module is the
+//! runtime that actually serves them. It promotes and absorbs the old
+//! single-request `coordinator::serve` loop into five pieces:
+//!
+//! * [`engine`] — the [`DecodeEngine`] trait: step a whole *batch* of slots
+//!   through one decode iteration. Implementations: [`PjrtEngine`] (the
+//!   real thing, over the `decode_*` / `decode_*_b{N}` AOT artifacts, KV
+//!   cache kept as PJRT literals between steps) and [`MockEngine`] (a
+//!   deterministic in-process model for scheduler/sampler tests and for
+//!   benching the scheduler itself without artifacts).
+//! * [`slots`] — [`SlotMap`], the slot-based KV-cache bookkeeping:
+//!   allocate/free/advance with per-slot position tracking and strict
+//!   capacity accounting. Slot reuse needs no cache zeroing: the decode
+//!   graphs mask attention to `idx <= pos`, so a freshly admitted request
+//!   starting at `pos = 0` can never observe a previous occupant's stale
+//!   keys/values.
+//! * [`scheduler`] — [`Scheduler`], the continuous-batching loop: an
+//!   admission queue with backpressure, mid-flight join (a request enters
+//!   the batch on the step after a slot frees, without draining in-flight
+//!   requests) and evict ([`Scheduler::cancel`] frees a slot immediately),
+//!   per-request token budgets, and completion accounting. The legacy
+//!   threaded FIFO front ([`Server`]) also lives here.
+//! * [`sampling`] — greedy / temperature / top-k / top-p samplers, seeded
+//!   via [`crate::util::prng`] so generations are exactly reproducible.
+//! * [`metrics`] — time-to-first-token, per-token latency percentiles,
+//!   tokens/sec, queue depth; exportable as JSON through [`crate::report`].
+
+pub mod engine;
+pub mod metrics;
+pub mod sampling;
+pub mod scheduler;
+pub mod slots;
+
+pub use engine::{DecodeEngine, DecodeVariant, GenerationSession, MockEngine, PjrtEngine};
+pub use metrics::ServingMetrics;
+pub use sampling::{argmax, Sampler, SamplerKind};
+pub use scheduler::{Completion, GenRequest, Request, Response, Scheduler, Server};
+pub use slots::SlotMap;

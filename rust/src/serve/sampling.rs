@@ -1,0 +1,246 @@
+//! Token samplers: greedy, temperature, top-k, top-p (nucleus).
+//!
+//! Every sampler draws from a caller-supplied [`Prng`], so a fixed seed
+//! reproduces a generation exactly; `temperature <= 0` degrades to greedy
+//! by construction. All comparisons are NaN-safe: NaN logits (which a
+//! numerically blown-up quantized model can emit) are treated as -inf
+//! instead of panicking mid-serve.
+
+use anyhow::{bail, Result};
+
+use crate::util::prng::Prng;
+
+/// NaN-safe argmax: NaN entries are skipped (treated as -inf); returns 0
+/// for empty or all-NaN input. Regression guard for the old
+/// `partial_cmp().unwrap()` panic on NaN logits.
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best: Option<(usize, f32)> = None;
+    for (i, &v) in xs.iter().enumerate() {
+        if v.is_nan() {
+            continue;
+        }
+        match best {
+            Some((_, bv)) if bv >= v => {}
+            _ => best = Some((i, v)),
+        }
+    }
+    best.map(|(i, _)| i).unwrap_or(0)
+}
+
+/// Candidate-set policy applied before the softmax draw.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SamplerKind {
+    /// Always the argmax; temperature is ignored.
+    Greedy,
+    /// Full-vocabulary softmax at `temperature`.
+    Temperature,
+    /// Keep the k most likely tokens, renormalize.
+    TopK(usize),
+    /// Keep the smallest prefix of the sorted distribution with cumulative
+    /// probability >= p, renormalize.
+    TopP(f32),
+}
+
+/// A decoding policy: candidate selection + temperature.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Sampler {
+    pub kind: SamplerKind,
+    pub temperature: f32,
+}
+
+impl Sampler {
+    pub fn greedy() -> Self {
+        Self { kind: SamplerKind::Greedy, temperature: 0.0 }
+    }
+
+    pub fn temperature(t: f32) -> Self {
+        Self { kind: SamplerKind::Temperature, temperature: t }
+    }
+
+    pub fn top_k(k: usize, t: f32) -> Self {
+        Self { kind: SamplerKind::TopK(k), temperature: t }
+    }
+
+    pub fn top_p(p: f32, t: f32) -> Self {
+        Self { kind: SamplerKind::TopP(p), temperature: t }
+    }
+
+    /// Parse a CLI sampler spec (`--sampler` + knobs).
+    pub fn parse(name: &str, temperature: f32, top_k: usize, top_p: f32) -> Result<Self> {
+        Ok(match name.to_ascii_lowercase().as_str() {
+            "greedy" | "argmax" => Self::greedy(),
+            "temperature" | "temp" | "softmax" => Self::temperature(temperature),
+            "top-k" | "topk" | "top_k" => Self::top_k(top_k, temperature),
+            "top-p" | "topp" | "top_p" | "nucleus" => Self::top_p(top_p, temperature),
+            other => bail!("unknown sampler {other:?} (greedy|temperature|top-k|top-p)"),
+        })
+    }
+
+    pub fn name(&self) -> String {
+        match self.kind {
+            SamplerKind::Greedy => "greedy".to_string(),
+            SamplerKind::Temperature => format!("temperature(t={})", self.temperature),
+            SamplerKind::TopK(k) => format!("top-k(k={k}, t={})", self.temperature),
+            SamplerKind::TopP(p) => format!("top-p(p={p}, t={})", self.temperature),
+        }
+    }
+
+    /// Draw one token index from `logits`. Deterministic given (`self`,
+    /// `logits`, the PRNG state).
+    pub fn sample(&self, logits: &[f32], rng: &mut Prng) -> usize {
+        if logits.is_empty() {
+            return 0;
+        }
+        if matches!(self.kind, SamplerKind::Greedy) || self.temperature <= 0.0 {
+            return argmax(logits);
+        }
+        // Candidates sorted by descending logit, NaNs dropped.
+        let mut idx: Vec<usize> = (0..logits.len()).filter(|&i| !logits[i].is_nan()).collect();
+        if idx.is_empty() {
+            return 0;
+        }
+        idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+        let m = logits[idx[0]];
+        let mut ws: Vec<f32> =
+            idx.iter().map(|&i| ((logits[i] - m) / self.temperature).exp()).collect();
+        match self.kind {
+            SamplerKind::TopK(k) => {
+                let k = k.clamp(1, idx.len());
+                idx.truncate(k);
+                ws.truncate(k);
+            }
+            SamplerKind::TopP(p) => {
+                let total: f32 = ws.iter().sum();
+                let target = p.clamp(0.0, 1.0) * total;
+                let mut cum = 0.0f32;
+                let mut cut = ws.len();
+                for (j, &w) in ws.iter().enumerate() {
+                    cum += w;
+                    if cum >= target {
+                        cut = j + 1;
+                        break;
+                    }
+                }
+                idx.truncate(cut);
+                ws.truncate(cut);
+            }
+            _ => {}
+        }
+        let sum: f32 = ws.iter().sum();
+        if sum <= 0.0 || !sum.is_finite() {
+            return idx[0];
+        }
+        let mut r = rng.uniform() * sum;
+        for (j, &w) in ws.iter().enumerate() {
+            if r < w {
+                return idx[j];
+            }
+            r -= w;
+        }
+        *idx.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_works() {
+        assert_eq!(argmax(&[0.1, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[]), 0);
+    }
+
+    #[test]
+    fn argmax_survives_nan() {
+        // Regression: the old partial_cmp().unwrap() panicked here.
+        assert_eq!(argmax(&[1.0, f32::NAN, 3.0, 2.0]), 2);
+        assert_eq!(argmax(&[f32::NAN, f32::NAN]), 0);
+        assert_eq!(argmax(&[f32::NAN, 0.5]), 1);
+        assert_eq!(argmax(&[f32::NEG_INFINITY, -1.0]), 1);
+    }
+
+    #[test]
+    fn zero_temperature_matches_greedy() {
+        let logits = [0.3, 2.0, -1.5, 1.9];
+        let mut rng = Prng::new(1);
+        for s in [
+            Sampler::temperature(0.0),
+            Sampler::top_k(3, 0.0),
+            Sampler::top_p(0.9, 0.0),
+            Sampler::greedy(),
+        ] {
+            assert_eq!(s.sample(&logits, &mut rng), argmax(&logits), "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn same_seed_same_draws() {
+        let s = Sampler::top_k(8, 1.3);
+        let mut a = Prng::new(42);
+        let mut b = Prng::new(42);
+        let mut p = Prng::new(9);
+        for _ in 0..50 {
+            let logits: Vec<f32> = (0..32).map(|_| p.normal() * 2.0).collect();
+            assert_eq!(s.sample(&logits, &mut a), s.sample(&logits, &mut b));
+        }
+    }
+
+    #[test]
+    fn top_k_one_is_greedy() {
+        let s = Sampler::top_k(1, 2.0);
+        let mut rng = Prng::new(5);
+        let mut p = Prng::new(6);
+        for _ in 0..20 {
+            let logits: Vec<f32> = (0..16).map(|_| p.normal()).collect();
+            assert_eq!(s.sample(&logits, &mut rng), argmax(&logits));
+        }
+    }
+
+    #[test]
+    fn top_p_tiny_is_greedy() {
+        let s = Sampler::top_p(1e-6, 1.0);
+        let mut rng = Prng::new(5);
+        let logits = [0.0, 5.0, 1.0, 4.9];
+        for _ in 0..20 {
+            assert_eq!(s.sample(&logits, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_covers_support_but_respects_peaks() {
+        let s = Sampler::temperature(1.0);
+        let mut rng = Prng::new(7);
+        let logits = [2.0f32, 2.0, -30.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..500 {
+            counts[s.sample(&logits, &mut rng)] += 1;
+        }
+        assert!(counts[0] > 100 && counts[1] > 100, "{counts:?}");
+        assert_eq!(counts[2], 0);
+    }
+
+    #[test]
+    fn sampling_with_nan_logits_never_panics() {
+        let logits = [f32::NAN, 1.0, f32::NAN, 0.5];
+        let mut rng = Prng::new(3);
+        for s in [Sampler::temperature(1.0), Sampler::top_k(2, 1.0), Sampler::top_p(0.9, 1.0)] {
+            let t = s.sample(&logits, &mut rng);
+            assert!(t == 1 || t == 3, "{}", s.name());
+        }
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(Sampler::parse("greedy", 0.7, 5, 0.9).unwrap(), Sampler::greedy());
+        assert_eq!(
+            Sampler::parse("top-k", 0.7, 5, 0.9).unwrap(),
+            Sampler::top_k(5, 0.7)
+        );
+        assert_eq!(
+            Sampler::parse("nucleus", 0.7, 5, 0.9).unwrap(),
+            Sampler::top_p(0.9, 0.7)
+        );
+        assert!(Sampler::parse("bogus", 1.0, 1, 1.0).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Slot-based KV-cache bookkeeping.
+//!
+//! The decode artifacts hold one KV cache per batch lane ("slot"); this
+//! module owns the accounting: which slots are free, which request occupies
+//! which slot, and how far each slot's cache has been written. The cache
+//! *contents* live inside the engine (as PJRT literals); correctness of
+//! slot reuse comes from the graphs' `idx <= pos` attention mask, so
+//! [`SlotMap`] never needs to zero anything — it only has to keep positions
+//! honest, which [`crate::serve::MockEngine`] cross-checks in tests.
+
+use anyhow::{bail, Result};
+
+/// Occupancy record for one slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotInfo {
+    /// Request id occupying the slot.
+    pub id: u64,
+    /// Next cache position to be written (== tokens fed so far).
+    pub pos: usize,
+}
+
+/// Allocate / free / advance over a fixed set of KV-cache slots with strict
+/// capacity accounting: `active_count() + free_count() == capacity()` is an
+/// invariant, and positions can never pass `max_seq`.
+#[derive(Clone, Debug)]
+pub struct SlotMap {
+    max_seq: usize,
+    state: Vec<Option<SlotInfo>>,
+}
+
+impl SlotMap {
+    pub fn new(capacity: usize, max_seq: usize) -> Self {
+        Self { max_seq, state: vec![None; capacity] }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.state.len()
+    }
+
+    pub fn max_seq(&self) -> usize {
+        self.max_seq
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.state.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.capacity() - self.active_count()
+    }
+
+    pub fn is_active(&self, slot: usize) -> bool {
+        self.state.get(slot).map(|s| s.is_some()).unwrap_or(false)
+    }
+
+    /// Occupant of a slot, if any.
+    pub fn info(&self, slot: usize) -> Option<SlotInfo> {
+        self.state.get(slot).copied().flatten()
+    }
+
+    /// Next write position of an occupied slot.
+    pub fn pos(&self, slot: usize) -> Option<usize> {
+        self.info(slot).map(|s| s.pos)
+    }
+
+    /// Claim the lowest-numbered free slot for request `id`; positions start
+    /// at 0. Returns `None` when every slot is occupied.
+    pub fn allocate(&mut self, id: u64) -> Option<usize> {
+        let slot = self.state.iter().position(|s| s.is_none())?;
+        self.state[slot] = Some(SlotInfo { id, pos: 0 });
+        Some(slot)
+    }
+
+    /// Release an occupied slot; returns the request id it held.
+    pub fn release(&mut self, slot: usize) -> Result<u64> {
+        if slot >= self.state.len() {
+            bail!("slot {slot} out of range (capacity {})", self.capacity());
+        }
+        match self.state[slot].take() {
+            Some(info) => Ok(info.id),
+            None => bail!("slot {slot} released twice"),
+        }
+    }
+
+    /// Advance an occupied slot's position by one written token; returns the
+    /// new position. Fails if the slot is free or its cache is already full.
+    pub fn advance(&mut self, slot: usize) -> Result<usize> {
+        let max_seq = self.max_seq;
+        match self.state.get_mut(slot) {
+            Some(Some(info)) => {
+                if info.pos >= max_seq {
+                    bail!("slot {slot}: KV cache full ({max_seq} positions)");
+                }
+                info.pos += 1;
+                Ok(info.pos)
+            }
+            Some(None) => bail!("slot {slot} advanced while free"),
+            None => bail!("slot {slot} out of range (capacity {})", self.capacity()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_up_to_capacity_then_none() {
+        let mut m = SlotMap::new(2, 8);
+        let a = m.allocate(10).unwrap();
+        let b = m.allocate(11).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(m.allocate(12), None);
+        assert_eq!(m.active_count(), 2);
+        assert_eq!(m.free_count(), 0);
+    }
+
+    #[test]
+    fn release_frees_and_reuses_at_pos_zero() {
+        let mut m = SlotMap::new(1, 8);
+        let s = m.allocate(1).unwrap();
+        m.advance(s).unwrap();
+        m.advance(s).unwrap();
+        assert_eq!(m.pos(s), Some(2));
+        assert_eq!(m.release(s).unwrap(), 1);
+        assert!(!m.is_active(s));
+        let s2 = m.allocate(2).unwrap();
+        assert_eq!(s2, s);
+        assert_eq!(m.pos(s2), Some(0));
+    }
+
+    #[test]
+    fn double_release_and_free_advance_fail() {
+        let mut m = SlotMap::new(1, 8);
+        let s = m.allocate(1).unwrap();
+        m.release(s).unwrap();
+        assert!(m.release(s).is_err());
+        assert!(m.advance(s).is_err());
+        assert!(m.release(99).is_err());
+    }
+
+    #[test]
+    fn advance_stops_at_max_seq() {
+        let mut m = SlotMap::new(1, 2);
+        let s = m.allocate(1).unwrap();
+        assert_eq!(m.advance(s).unwrap(), 1);
+        assert_eq!(m.advance(s).unwrap(), 2);
+        assert!(m.advance(s).is_err());
+    }
+
+    #[test]
+    fn accounting_invariant_under_churn() {
+        let mut m = SlotMap::new(3, 4);
+        let mut held = Vec::new();
+        for id in 0..10u64 {
+            if let Some(s) = m.allocate(id) {
+                held.push(s);
+            }
+            assert!(m.active_count() <= m.capacity());
+            assert_eq!(m.active_count() + m.free_count(), m.capacity());
+            if held.len() == 3 {
+                let s = held.remove(0);
+                m.release(s).unwrap();
+            }
+        }
+    }
+}
