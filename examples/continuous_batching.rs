@@ -93,7 +93,14 @@ fn main() -> Result<()> {
             Ok(exe) => {
                 let weights = Weights::load(&manifest.weights_path("sq-2m"))?;
                 let qcfg = QcfgVec::fp().with_a_bits(8.0).with_kv_bits(8.0);
-                let engine = PjrtEngine::new(exe, &weights, Some(qcfg))?;
+                let mut engine = PjrtEngine::new(exe, &weights, Some(qcfg))?;
+                // Batched prefill when the artifact exists: prompts reach
+                // their first token in ceil(len/16) calls instead of len.
+                let pname = DecodeVariant::QuantNoHad.artifact_prefill(BATCH, 16);
+                match rt.load(&manifest, "sq-2m", &pname) {
+                    Ok(pexe) => engine = engine.with_prefill(pexe, &weights, Some(qcfg))?,
+                    Err(_) => eprintln!("no {pname} artifact; prompts use the decode loop"),
+                }
                 return demo(engine, "pjrt decode_nohad_b4 (W16A8KV8)");
             }
             Err(e) => eprintln!("no {artifact} artifact ({e:#}); falling back to the mock engine"),
@@ -101,5 +108,8 @@ fn main() -> Result<()> {
     } else {
         eprintln!("no artifacts (run `make artifacts`); using the mock engine");
     }
-    demo(MockEngine::new(BATCH, 128, 256), "deterministic mock")
+    demo(
+        MockEngine::new(BATCH, 128, 256).with_prefill_chunk(8),
+        "deterministic mock (8-token prefill chunks)",
+    )
 }

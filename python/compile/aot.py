@@ -15,6 +15,9 @@ single lowered module covers all W-A-KV rows of paper Table 1:
   decode_{fp,nohad,had}  (B=1, cache=max_seq) -> logits  serving / Table 6
   decode_*_b{4,8}        (B slots, per-slot pos) -> logits   continuous
                          batching (rust/src/serve scheduler + slot manager)
+  prefill_*_b{4,8}_t{16,64}  (B slots, T tokens/slot, per-slot pos +
+                         n_valid) -> last-valid logits    batched prompt
+                         prefill: ceil(len/T) calls to first token
 
 The manifest records the exact input ABI (names, shapes, dtypes, order) for
 each artifact; rust/src/runtime asserts against it at load time.
@@ -41,6 +44,9 @@ DECODE_B = 1
 # Slot counts for the continuous-batching decode artifacts (the serving
 # bench sweeps batch \in {1, 4, 8}; 1 reuses the scalar-pos artifact).
 DECODE_BATCHES = (4, 8)
+# Chunk sizes for the batched multi-token prefill artifacts: a prompt is
+# consumed in ceil(len/T) prefill calls instead of len decode calls.
+PREFILL_TS = (16, 64)
 
 
 def to_hlo_text(lowered) -> str:
@@ -192,6 +198,39 @@ def build_artifacts(cfg: model_mod.Config):
         arts[f"decode_nohad_b{batch}"] = decode_batched_factory(True, False, batch)
         arts[f"decode_had_b{batch}"] = decode_batched_factory(True, True, batch)
 
+    def prefill_factory(quant, had, batch, t_chunk):
+        cache_shape_b = (cfg.n_layers, batch, cfg.max_seq, cfg.n_heads, cfg.d_head)
+
+        def fn(*args):
+            params, rest = unpack(args)
+            if quant:
+                tokens, pos, n_valid, ck, cv, qcfg = rest
+            else:
+                tokens, pos, n_valid, ck, cv = rest
+                qcfg = None
+            return model_mod.prefill_batched(
+                params, cfg, tokens, pos, n_valid, ck, cv, qcfg=qcfg, had=had
+            )
+
+        specs = pspecs + [
+            _spec((batch, t_chunk), jnp.int32),
+            _spec((batch,), jnp.int32),
+            _spec((batch,), jnp.int32),
+            _spec(cache_shape_b),
+            _spec(cache_shape_b),
+        ]
+        innames = names + ["tokens", "pos", "n_valid", "cache_k", "cache_v"]
+        if quant:
+            specs.append(_spec((model_mod.QCFG_LEN,)))
+            innames.append("qcfg")
+        return fn, specs, innames, ["logits", "cache_k", "cache_v"]
+
+    for batch in DECODE_BATCHES:
+        for t_chunk in PREFILL_TS:
+            arts[f"prefill_fp_b{batch}_t{t_chunk}"] = prefill_factory(False, False, batch, t_chunk)
+            arts[f"prefill_nohad_b{batch}_t{t_chunk}"] = prefill_factory(True, False, batch, t_chunk)
+            arts[f"prefill_had_b{batch}_t{t_chunk}"] = prefill_factory(True, True, batch, t_chunk)
+
     return arts
 
 
@@ -228,6 +267,7 @@ def main():
             "eval": [EVAL_B, EVAL_S], "task": [TASK_B, TASK_S],
             "cayley": [CAYLEY_B, CAYLEY_S], "decode_batch": DECODE_B,
             "decode_batches": list(DECODE_BATCHES),
+            "prefill_ts": list(PREFILL_TS),
         }
         for aname, (fn, specs, innames, outnames) in arts.items():
             if only and aname not in only:

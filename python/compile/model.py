@@ -471,6 +471,109 @@ def decode_step_batched(params, cfg: Config, token, pos, cache_k, cache_v,
 
 
 # ---------------------------------------------------------------------------
+# Batched multi-token prefill (serving TTFT path)
+# ---------------------------------------------------------------------------
+
+
+def prefill_batched(params, cfg: Config, tokens, pos0, n_valid, cache_k, cache_v,
+                    qcfg=None, had=False):
+    """Consume a chunk of `T` prompt tokens per slot in one call.
+
+    The continuous-batching scheduler admits a request by prefilling its
+    whole prompt in ceil(len/T) chunks through this graph before the
+    request enters the per-token decode batch — time-to-first-token then
+    scales with ceil(len/T) engine calls instead of len (rust/src/serve).
+
+    Semantically this is exactly `T` sequential `decode_step_batched`
+    calls: all `T` KV entries are written at once (scatter at
+    `pos0[b] + t`), each chunk position attends causally to the existing
+    cache *and* to earlier positions of its own chunk via the per-slot
+    `idx <= pos` mask, and RoPE angles are per (slot, position).
+
+    tokens:  (B, T) int32 — prompt chunk per slot (rows past n_valid are
+             padding and are neither written to the cache nor attended).
+    pos0:    (B,)   int32 — cache position of tokens[:, 0] per slot.
+    n_valid: (B,)   int32 — valid tokens per slot; 0 marks an inactive
+             slot (nothing written, returned logits are garbage there).
+    cache_k/v: (L, B, max_seq, H, dh) — already quantize-dequantized.
+    Returns (logits (B, V) at each slot's last valid position,
+             new_cache_k, new_cache_v).
+    """
+    B, T = tokens.shape
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params["emb"][tokens]  # (B, T, D)
+    half = dh // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos_bt = pos0[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]  # (B, T)
+    ang = pos_bt.astype(jnp.float32)[..., None] * freqs[None, None, :]  # (B, T, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    valid = jnp.arange(T, dtype=jnp.int32)[None, :] < n_valid[:, None]  # (B, T)
+    # Scatter target per chunk row; invalid rows are pushed out of range and
+    # dropped, so padding can never corrupt a future occupant's cache.
+    write_pos = jnp.where(valid, pos_bt, cfg.max_seq)
+    idx = jnp.arange(cfg.max_seq)
+    attend = (idx[None, None, :] <= pos_bt[:, :, None]).astype(jnp.float32)  # (B, T, max_seq)
+    neg = jnp.asarray(-1e9, jnp.float32)
+    lanes = jnp.arange(B)
+
+    def ropeT(t):
+        """Per-(slot, position) RoPE; t: (B, T, h, dh)."""
+        tr = t.reshape(B, T, h, dh // 2, 2)
+        t0, t1 = tr[..., 0], tr[..., 1]
+        c = cos[:, :, None, :]
+        sn = sin[:, :, None, :]
+        y0 = t0 * c - t1 * sn
+        y1 = t0 * sn + t1 * c
+        return jnp.stack([y0, y1], axis=-1).reshape(B, T, h, dh)
+
+    def aq(t):
+        return _aq(t, qcfg) if qcfg is not None else t
+
+    def kvq(t):
+        return _kvq(t, qcfg) if qcfg is not None else t
+
+    def wq(t):
+        return _wq(t, qcfg) if qcfg is not None else t
+
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        hsrc = rmsnorm(x, params[p + "attn_norm"])
+        hq = aq(hsrc)
+        q = (hq @ wq(params[p + "wq"])).reshape(B, T, h, dh)
+        k = (hq @ wq(params[p + "wk"])).reshape(B, T, h, dh)
+        v = (hq @ wq(params[p + "wv"])).reshape(B, T, h, dh)
+        q = ropeT(q)
+        k = ropeT(k)
+        if had:
+            q = fwht_diff(q)
+            k = fwht_diff(k)
+        k = kvq(k)
+        v = kvq(v)
+        cache_k = cache_k.at[i, lanes[:, None], write_pos].set(k, mode="drop")
+        cache_v = cache_v.at[i, lanes[:, None], write_pos].set(v, mode="drop")
+        ck = cache_k[i]  # (B, max_seq, h, dh)
+        cv = cache_v[i]
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, ck) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        att = jnp.where(attend[:, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, cv).reshape(B, T, h * dh)
+        x = x + aq(o) @ wq(params[p + "wo"])
+
+        h2 = rmsnorm(x, params[p + "ffn_norm"])
+        h2q = aq(h2)
+        m = jax.nn.silu(h2q @ wq(params[p + "wgate"])) * (h2q @ wq(params[p + "wup"]))
+        if had:
+            m = fwht_diff(m)
+        x = x + aq(m) @ wq(params[p + "wdown"])
+
+    hf = rmsnorm(x, params["final_norm"])
+    logits_all = aq(hf) @ wq(params["head"])  # (B, T, V)
+    last = jnp.clip(n_valid - 1, 0, T - 1)
+    logits = jnp.take_along_axis(logits_all, last[:, None, None], axis=1)[:, 0, :]
+    return logits, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
 # Initialization (with planted outlier basis — DESIGN.md §3)
 # ---------------------------------------------------------------------------
 

@@ -74,6 +74,13 @@ def test_aot_builds_all_artifact_specs():
     # Continuous-batching decode artifacts (rust/src/serve), per batch size.
     for b in aot.DECODE_BATCHES:
         expected |= {f"decode_fp_b{b}", f"decode_nohad_b{b}", f"decode_had_b{b}"}
+        # Batched multi-token prefill artifacts, per chunk size.
+        for t in aot.PREFILL_TS:
+            expected |= {
+                f"prefill_fp_b{b}_t{t}",
+                f"prefill_nohad_b{b}_t{t}",
+                f"prefill_had_b{b}_t{t}",
+            }
     assert set(arts) == expected
     # Input ABI: params first (in order), extras after.
     names = model_mod.param_order(cfg)
@@ -92,6 +99,23 @@ def test_aot_builds_all_artifact_specs():
             cfg.n_layers, b, cfg.max_seq, cfg.n_heads, cfg.d_head
         )
         assert outnames == ["logits", "cache_k", "cache_v"]
+    # Prefill ABI: a (B, T) token block plus per-slot pos/n_valid vectors;
+    # same cache shape and outputs as decode so the rust engine can hand
+    # the cache literals back and forth between the two bindings.
+    for b in aot.DECODE_BATCHES:
+        for t in aot.PREFILL_TS:
+            _, specs, innames, outnames = arts[f"prefill_had_b{b}_t{t}"]
+            byname = dict(zip(innames, specs))
+            assert byname["tokens"].shape == (b, t)
+            assert byname["pos"].shape == (b,)
+            assert byname["n_valid"].shape == (b,)
+            assert byname["cache_k"].shape == (
+                cfg.n_layers, b, cfg.max_seq, cfg.n_heads, cfg.d_head
+            )
+            assert innames[-1] == "qcfg"
+            assert outnames == ["logits", "cache_k", "cache_v"]
+            _, _, innames_fp, _ = arts[f"prefill_fp_b{b}_t{t}"]
+            assert "qcfg" not in innames_fp
 
 
 def test_aot_lowering_produces_hlo_text():

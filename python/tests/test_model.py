@@ -295,3 +295,127 @@ def test_param_order_matches_shapes():
     shapes = model_mod.param_shapes(CFG)
     assert set(names) == set(shapes.keys())
     assert names[0] == "emb" and names[-1] == "head"
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-token prefill (serving TTFT path)
+# ---------------------------------------------------------------------------
+
+
+def _zero_caches(b):
+    shape = (CFG.n_layers, b, CFG.max_seq, CFG.n_heads, CFG.d_head)
+    return jnp.zeros(shape), jnp.zeros(shape)
+
+
+def test_prefill_equals_sequential_decode_bitexact_fp():
+    # prefill_batched(T) IS T decode_step_batched calls: on the fp path the
+    # logits at the last position and every written KV entry must match
+    # bit-for-bit (same batch width => same XLA reduction shapes).
+    params = make_params()
+    B, T = 4, 8
+    t = tokens(11, b=B, s=T)
+    ck0, cv0 = _zero_caches(B)
+    lg, ck_r, cv_r = None, ck0, cv0
+    for step in range(T):
+        lg, ck_r, cv_r = model_mod.decode_step_batched(
+            params, CFG, t[:, step], jnp.full((B,), step, jnp.int32), ck_r, cv_r
+        )
+    lgp, ckp, cvp = model_mod.prefill_batched(
+        params, CFG, t, jnp.zeros((B,), jnp.int32), jnp.full((B,), T, jnp.int32),
+        ck0, cv0,
+    )
+    assert np.array_equal(np.asarray(lgp), np.asarray(lg))
+    assert np.array_equal(np.asarray(ckp), np.asarray(ck_r))
+    assert np.array_equal(np.asarray(cvp), np.asarray(cv_r))
+
+
+@pytest.mark.parametrize("had", [False, True])
+def test_prefill_equals_sequential_decode_quant(had):
+    # Quantized paths (nohad/had): same equivalence within tolerance (the
+    # fake-quant thresholds can flip a grid cell under float reordering).
+    params = make_params()
+    qcfg = model_mod.qcfg_vector(a_bits=8, kv_bits=8)
+    B, T = 4, 6
+    t = tokens(13, b=B, s=T)
+    ck0, cv0 = _zero_caches(B)
+    lg, ck_r, cv_r = None, ck0, cv0
+    for step in range(T):
+        lg, ck_r, cv_r = model_mod.decode_step_batched(
+            params, CFG, t[:, step], jnp.full((B,), step, jnp.int32), ck_r, cv_r,
+            qcfg=qcfg, had=had,
+        )
+    lgp, ckp, cvp = model_mod.prefill_batched(
+        params, CFG, t, jnp.zeros((B,), jnp.int32), jnp.full((B,), T, jnp.int32),
+        ck0, cv0, qcfg=qcfg, had=had,
+    )
+    np.testing.assert_allclose(np.asarray(lgp), np.asarray(lg), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(ckp), np.asarray(ck_r), rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(cvp), np.asarray(cv_r), rtol=2e-3, atol=2e-3)
+
+
+def test_prefill_staggered_positions_and_partial_chunks():
+    # Slots at independent cache depths (mid-flight join) with ragged
+    # n_valid: each slot must match its own sequential decode, and rows
+    # past n_valid must leave the cache untouched.
+    params = make_params()
+    B, T = 4, 8
+    npre = 3  # every slot already holds `npre` cache entries
+    pre = tokens(17, b=B, s=npre)
+    t = tokens(19, b=B, s=T)
+    n_valid = jnp.asarray([T, 5, 1, 3], jnp.int32)
+    ck, cv = _zero_caches(B)
+    for step in range(npre):
+        _, ck, cv = model_mod.decode_step_batched(
+            params, CFG, pre[:, step], jnp.full((B,), step, jnp.int32), ck, cv
+        )
+    # Sequential reference: keep feeding slots their chunk tokens while
+    # valid; slots that ran out re-write their last entry at a frozen pos
+    # (decode_step_batched has no lane mask), which matches what their
+    # cache already held, so lanes stay independent.
+    lg, ck_r, cv_r = None, ck, cv
+    last = {b: None for b in range(B)}
+    for step in range(T):
+        tok = jnp.asarray(
+            [t[b, min(step, int(n_valid[b]) - 1)] for b in range(B)], jnp.int32
+        )
+        pos = jnp.asarray(
+            [npre + min(step, int(n_valid[b]) - 1) for b in range(B)], jnp.int32
+        )
+        lg, ck_r, cv_r = model_mod.decode_step_batched(
+            params, CFG, tok, pos, ck_r, cv_r
+        )
+        for b in range(B):
+            if step == int(n_valid[b]) - 1:
+                last[b] = np.asarray(lg[b])
+    lgp, ckp, cvp = model_mod.prefill_batched(
+        params, CFG, t, jnp.full((B,), npre, jnp.int32), n_valid, ck, cv
+    )
+    for b in range(B):
+        np.testing.assert_allclose(
+            np.asarray(lgp[b]), last[b], rtol=2e-3, atol=2e-3,
+            err_msg=f"slot {b}",
+        )
+    # Positions beyond npre + n_valid[b] were never written.
+    ckp_np, cvp_np = np.asarray(ckp), np.asarray(cvp)
+    for b in range(B):
+        end = npre + int(n_valid[b])
+        assert np.all(ckp_np[:, b, end:] == 0.0), f"slot {b} cache_k leaked"
+        assert np.all(cvp_np[:, b, end:] == 0.0), f"slot {b} cache_v leaked"
+
+
+def test_prefill_inactive_slot_untouched():
+    # n_valid = 0 marks an inactive slot: its cache must come back
+    # bit-identical (padding rows are scatter-dropped, never written).
+    params = make_params()
+    B, T = 2, 4
+    t = tokens(23, b=B, s=T)
+    rs = np.random.RandomState(7)
+    shape = (CFG.n_layers, B, CFG.max_seq, CFG.n_heads, CFG.d_head)
+    ck = jnp.asarray(rs.randn(*shape).astype(np.float32))
+    cv = jnp.asarray(rs.randn(*shape).astype(np.float32))
+    n_valid = jnp.asarray([T, 0], jnp.int32)
+    _, ckp, cvp = model_mod.prefill_batched(
+        params, CFG, t, jnp.zeros((B,), jnp.int32), n_valid, ck, cv
+    )
+    assert np.array_equal(np.asarray(ckp[:, 1]), np.asarray(ck[:, 1]))
+    assert np.array_equal(np.asarray(cvp[:, 1]), np.asarray(cv[:, 1]))

@@ -3,12 +3,18 @@
 //! Drives the `serve` scheduler over a fixed synthetic workload and reports
 //! tokens/sec + latency percentiles per batch size, leaving a
 //! machine-readable trajectory in `BENCH_serving.json` so later PRs can be
-//! compared against this one.
+//! compared against this one. A second sweep compares time-to-first-token
+//! on 64-token prompts between the batched prefill path (T = 16, so 4
+//! engine calls to first token) and the legacy token-by-token loop (64
+//! calls) — the `ttft` object in the JSON.
 //!
 //! Engine selection: the PJRT engine is used when `make artifacts` has run
-//! (batch 1 via `decode_nohad`, batch N via `decode_nohad_b{N}`); otherwise
-//! the deterministic mock engine benches the scheduler itself, so this
-//! target always produces numbers.
+//! (batch 1 via `decode_nohad`, batch N via `decode_nohad_b{N}`, prefill
+//! via `prefill_nohad_b{N}_t16`); otherwise the deterministic mock engine
+//! benches the scheduler itself, so this target always produces numbers.
+//! TTFT rows come in engine-coherent pairs: if either leg of a
+//! prefill-vs-loop comparison can't run on PJRT (batch 1 has no prefill
+//! artifact; aot emits b{4,8} only), both legs run on the mock.
 //!
 //! Run: cargo bench --bench serving
 
@@ -25,6 +31,11 @@ const BATCHES: [usize; 3] = [1, 4, 8];
 const MODEL: &str = "sq-2m";
 const N_REQUESTS: usize = 32;
 const MAX_NEW: usize = 24;
+// TTFT sweep: long prompts where prompt ingestion dominates latency.
+const TTFT_PROMPT_LEN: usize = 64;
+const TTFT_CHUNK: usize = 16;
+const TTFT_REQUESTS: usize = 16;
+const TTFT_MAX_NEW: usize = 8;
 
 /// The fixed workload: byte prompts of varying length, seeded top-k
 /// sampling so every engine sees the same request stream.
@@ -56,6 +67,81 @@ fn run_pjrt(manifest: &Manifest, rt: &Runtime, batch: usize) -> anyhow::Result<S
     let mut sched = Scheduler::new(engine, N_REQUESTS)?;
     sched.serve_all(workload())?;
     Ok(sched.metrics)
+}
+
+// -- TTFT: batched prefill vs the token-by-token loop -----------------------
+
+/// Long-prompt workload: TTFT is dominated by prompt ingestion here.
+fn ttft_workload() -> Vec<GenRequest> {
+    (0..TTFT_REQUESTS)
+        .map(|i| {
+            let prompt: Vec<u8> = (0..TTFT_PROMPT_LEN)
+                .map(|j| (32 + ((i * 13 + j * 7) % 90)) as u8)
+                .collect();
+            GenRequest::sampled(&prompt, TTFT_MAX_NEW, Sampler::top_k(8, 0.8), 2000 + i as u64)
+        })
+        .collect()
+}
+
+/// `chunk > 1`: the batched prefill path; `chunk == 1`: the token loop.
+fn run_mock_ttft(batch: usize, chunk: usize) -> anyhow::Result<ServingMetrics> {
+    let engine = MockEngine::new(batch, 128, 256).with_prefill_chunk(chunk);
+    let mut sched = Scheduler::new(engine, TTFT_REQUESTS)?;
+    sched.serve_all(ttft_workload())?;
+    Ok(sched.metrics)
+}
+
+fn run_pjrt_ttft(
+    manifest: &Manifest,
+    rt: &Runtime,
+    batch: usize,
+    chunk: usize,
+) -> anyhow::Result<ServingMetrics> {
+    let weights = Weights::load(&manifest.weights_path(MODEL))?;
+    let qcfg = QcfgVec::fp().with_a_bits(8.0).with_kv_bits(8.0);
+    let exe = rt.load(manifest, MODEL, &DecodeVariant::QuantNoHad.artifact_batched(batch))?;
+    let mut engine = PjrtEngine::new(exe, &weights, Some(qcfg))?;
+    if chunk > 1 {
+        // No artifact (e.g. batch 1) => error; the caller falls back to the
+        // mock so the prefill-vs-loop row always exists.
+        let pre = rt.load(
+            manifest,
+            MODEL,
+            &DecodeVariant::QuantNoHad.artifact_prefill(batch, chunk),
+        )?;
+        engine = engine.with_prefill(pre, &weights, Some(qcfg))?;
+    }
+    let mut sched = Scheduler::new(engine, TTFT_REQUESTS)?;
+    sched.serve_all(ttft_workload())?;
+    Ok(sched.metrics)
+}
+
+/// The TTFT rows come as an engine-coherent `(prefill, token_loop)` pair:
+/// the prefill-vs-loop delta is only meaningful when both rows ran on the
+/// same engine, so if either PJRT leg is unavailable (no artifacts, no
+/// prefill graph for this batch, or batch 1 which has none) the whole pair
+/// runs on the mock.
+fn ttft_pair(
+    pjrt_ctx: &Option<(Manifest, Runtime)>,
+    batch: usize,
+) -> (&'static str, ServingMetrics, ServingMetrics) {
+    if batch > 1 {
+        if let Some((manifest, rt)) = pjrt_ctx {
+            match run_pjrt_ttft(manifest, rt, batch, TTFT_CHUNK)
+                .and_then(|pre| run_pjrt_ttft(manifest, rt, batch, 1).map(|lp| (pre, lp)))
+            {
+                Ok((pre, lp)) => return ("pjrt", pre, lp),
+                Err(e) => eprintln!(
+                    "ttft batch {batch}: PJRT pair unavailable ({e:#}); using mock for both"
+                ),
+            }
+        }
+    }
+    (
+        "mock",
+        run_mock_ttft(batch, TTFT_CHUNK).expect("mock engine"),
+        run_mock_ttft(batch, 1).expect("mock engine"),
+    )
 }
 
 fn main() {
@@ -103,6 +189,44 @@ fn main() {
         rows.push((labels[i].as_str(), row));
     }
 
+    // TTFT: prefill path vs token loop on 64-token prompts.
+    println!();
+    println!(
+        "{:<10} {:>10} {:>8} {:>14} {:>14} {:>14}",
+        "batch", "path", "engine", "ttft p50 ms", "ttft p95 ms", "prefill calls"
+    );
+    let mut ttft_rows: Vec<(String, Json)> = Vec::new();
+    for &batch in BATCHES.iter() {
+        let mut entry: Vec<(&str, Json)> = Vec::new();
+        let (label, m_pre, m_loop) = ttft_pair(&pjrt_ctx, batch);
+        for (path, chunk, m) in
+            [("prefill", TTFT_CHUNK, &m_pre), ("token_loop", 1, &m_loop)]
+        {
+            println!(
+                "{:<10} {:>10} {:>8} {:>14.3} {:>14.3} {:>14}",
+                batch,
+                path,
+                label,
+                m.ttft_ms_p50(),
+                m.ttft_ms_p95(),
+                m.prefill_us.len()
+            );
+            entry.push((
+                path,
+                json::obj(vec![
+                    ("engine", json::s(label)),
+                    ("chunk", json::num(chunk as f64)),
+                    ("ttft_ms_p50", json::num(m.ttft_ms_p50())),
+                    ("ttft_ms_p95", json::num(m.ttft_ms_p95())),
+                    ("prefill_calls", json::num(m.prefill_us.len() as f64)),
+                    ("tokens_prefilled", json::num(m.tokens_prefilled as f64)),
+                    ("tokens_per_sec", json::num(m.tokens_per_sec())),
+                ]),
+            ));
+        }
+        ttft_rows.push((format!("batch_{batch}"), json::obj(entry)));
+    }
+
     // Top-level engine label is only non-"mixed" when every batch size ran
     // on the same engine; per-batch rows always carry their own label.
     let engine_label = match engines_used.first() {
@@ -117,6 +241,22 @@ fn main() {
         ("requests", json::num(N_REQUESTS as f64)),
         ("max_new_tokens", json::num(MAX_NEW as f64)),
         ("batches", json::obj(rows.iter().map(|(k, v)| (*k, v.clone())).collect())),
+        (
+            "ttft",
+            json::obj(
+                std::iter::once((
+                    "config",
+                    json::obj(vec![
+                        ("prompt_len", json::num(TTFT_PROMPT_LEN as f64)),
+                        ("chunk", json::num(TTFT_CHUNK as f64)),
+                        ("requests", json::num(TTFT_REQUESTS as f64)),
+                        ("max_new_tokens", json::num(TTFT_MAX_NEW as f64)),
+                    ]),
+                ))
+                .chain(ttft_rows.iter().map(|(k, v)| (k.as_str(), v.clone())))
+                .collect(),
+            ),
+        ),
     ]);
     let path = std::path::Path::new("BENCH_serving.json");
     match report::write_json(path, &out) {

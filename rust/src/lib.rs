@@ -14,10 +14,12 @@
 //!   QuaRot, LLM-QAT), a PJRT runtime that loads the AOT artifacts, a
 //!   batched evaluation engine (perplexity + zero-shot tasks), a
 //!   continuous-batching serving engine (`serve`: slot-based KV-cache
-//!   manager, admission scheduler with mid-flight join, seeded
+//!   manager, admission scheduler with batched multi-token prompt prefill
+//!   (`ceil(len/T)` calls to first token) and mid-flight join, seeded
 //!   greedy/temperature/top-k/top-p samplers, and serving metrics —
-//!   TTFT, latency percentiles, tokens/sec), and the benchmark harnesses
-//!   that regenerate every table and figure of the paper.
+//!   TTFT from enqueue, latency percentiles, tokens/sec), the seeded
+//!   scheduler-simulation oracle (`testing::sim`), and the benchmark
+//!   harnesses that regenerate every table and figure of the paper.
 //!
 //! Python never runs on the request path: `make artifacts` runs once, then
 //! the `spinquant` binary is self-contained.

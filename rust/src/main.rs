@@ -9,8 +9,10 @@
 //!                `--sampler greedy|temperature|top-k|top-p` with
 //!                `--temperature/--top-k/--top-p/--seed`, per-request
 //!                `--max-new-tokens`, `--prompt "a|b|c"` (one request per
-//!                `|`-separated prompt); prints completions + TTFT /
-//!                latency-percentile / tokens-per-sec metrics
+//!                `|`-separated prompt), `--prefill-chunk T` (batched
+//!                multi-token prefill: ceil(len/T) engine calls to first
+//!                token; 1 = token-by-token loop); prints completions +
+//!                TTFT / latency-percentile / tokens-per-sec metrics
 //!   bench-table  regenerate one paper table/figure (see --id list)
 //!   selftest     end-to-end smoke: artifacts load + tiny eval
 //!   info         list models/artifacts found in artifacts/
@@ -44,6 +46,7 @@ fn usage() -> ! {
          common flags: --model sq-2m --method spinquant-had --bits 4-4-4 --config run.toml\n\
          serve:        --batch 1|4|8 --sampler greedy|temperature|top-k|top-p --temperature 0.8\n\
                        --top-k 40 --top-p 0.95 --seed 0 --max-new-tokens 48 --prompt \"a|b|c\"\n\
+                       --prefill-chunk 16|64 (batched prompt prefill; 1 = per-token loop)\n\
          bench-table:  --id table1|table2|table3|table4|table5|table6|table10|table11|table12|table13|fig2|fig3|fig4|fig7|fig8 [--models a,b] [--out EXPERIMENTS.md]"
     );
     std::process::exit(2);
@@ -279,15 +282,57 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
         Err(e) => return Err(e),
     };
     let qcfg = if variant == serve::DecodeVariant::Fp { None } else { Some(qm.qcfg) };
-    let engine = PjrtEngine::new(exe, &qm.weights, qcfg)?;
+    let mut engine = PjrtEngine::new(exe, &qm.weights, qcfg)?;
+
+    // Batched multi-token prefill: a prompt costs ceil(len/chunk) engine
+    // calls to first token instead of len. `--prefill-chunk 1` (or a
+    // missing artifact) falls back to the token-by-token decode loop.
+    let prefill_chunk: usize = get_extra(extra, "prefill-chunk")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(16);
+    if prefill_chunk == 0 {
+        anyhow::bail!("--prefill-chunk must be >= 1 (1 = per-token decode loop)");
+    }
+    if prefill_chunk > 1 {
+        if batch > 1 {
+            let pname = variant.artifact_prefill(batch, prefill_chunk);
+            match rt.load(&manifest, &cfg.model, &pname) {
+                Ok(pexe) => engine = engine.with_prefill(pexe, &qm.weights, qcfg)?,
+                Err(e) => {
+                    // The manifest is the source of truth for which chunk
+                    // sizes this build emitted — list them instead of
+                    // guessing why the load failed.
+                    let avail: Vec<String> = manifest
+                        .artifact_names(&cfg.model)
+                        .into_iter()
+                        .filter(|n| n.starts_with("prefill_"))
+                        .collect();
+                    eprintln!(
+                        "note: cannot use {pname} ({e:#}); prompts prefill through \
+                         the decode loop (prefill artifacts in this build: {avail:?})"
+                    );
+                }
+            }
+        } else {
+            eprintln!(
+                "note: batched prefill needs --batch > 1 (no b1 prefill artifact); \
+                 prompts prefill through the decode loop"
+            );
+        }
+    }
+    use spinquant::serve::DecodeEngine as _;
+    let chunk_in_use = engine.prefill_chunk();
     let mut sched = Scheduler::new(engine, 1024)?;
 
     println!(
-        "serving {} request(s) on {} slot(s), sampler {}, max {} new tokens",
+        "serving {} request(s) on {} slot(s), sampler {}, max {} new tokens, \
+         prefill chunk {}",
         prompts.len(),
         batch,
         sampler.name(),
-        n_new
+        n_new,
+        chunk_in_use
     );
     let reqs = prompts
         .iter()

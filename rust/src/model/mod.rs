@@ -221,6 +221,19 @@ impl Manifest {
         Ok(ArtifactSpec { file, inputs, outputs })
     }
 
+    /// Names of every artifact recorded for `model` (empty for an unknown
+    /// model) — lets callers discover what the build emitted (e.g. which
+    /// `prefill_*_t{T}` chunk sizes exist) without hard-coding the zoo.
+    pub fn artifact_names(&self, model: &str) -> Vec<String> {
+        self.json
+            .get("models")
+            .and_then(|m| m.get(model))
+            .and_then(|m| m.get("artifacts"))
+            .and_then(|a| a.as_obj())
+            .map(|a| a.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+
     pub fn weights_path(&self, model: &str) -> std::path::PathBuf {
         self.root.join("weights").join(format!("{model}.sqt"))
     }

@@ -46,6 +46,17 @@ impl DecodeVariant {
             format!("{}_b{batch}", self.artifact())
         }
     }
+
+    /// The batched multi-token prefill artifact for `batch` slots consuming
+    /// `chunk` prompt tokens per call (`prefill_*_b{N}_t{T}`).
+    pub fn artifact_prefill(&self, batch: usize, chunk: usize) -> String {
+        let core = match self {
+            DecodeVariant::Fp => "prefill_fp",
+            DecodeVariant::QuantNoHad => "prefill_nohad",
+            DecodeVariant::QuantHad => "prefill_had",
+        };
+        format!("{core}_b{batch}_t{chunk}")
+    }
 }
 
 /// One decode iteration over a fixed set of KV-cache slots.
@@ -56,6 +67,12 @@ impl DecodeVariant {
 /// graphs mask attention to `idx <= pos`, whatever such a step writes into
 /// a free slot's cache is invisible to any future occupant (which starts at
 /// `pos = 0` and overwrites from there).
+///
+/// `prefill` is the multi-token prompt path: up to [`prefill_chunk`] prompt
+/// tokens per slot are consumed in a single call, so time-to-first-token
+/// costs `ceil(len/T)` engine calls instead of `len`. Engines without a
+/// prefill graph keep the default implementation, which falls back to a
+/// loop of single decode steps (same semantics, `len` calls).
 pub trait DecodeEngine {
     /// Number of KV-cache slots (the batch dimension B).
     fn slots(&self) -> usize;
@@ -67,8 +84,67 @@ pub trait DecodeEngine {
     /// inactive slots is allowed but not required).
     fn step(&mut self, tokens: &[i32], pos: &[i32], active: &[bool]) -> Result<Vec<Vec<f32>>>;
 
+    /// Max prompt tokens consumed per `prefill` call. 1 means the engine
+    /// has no batched prefill; the scheduler then feeds prompts through the
+    /// per-token decode path exactly as before.
+    fn prefill_chunk(&self) -> usize {
+        1
+    }
+
+    /// Feed `tokens[b]` (up to `prefill_chunk()` tokens) into every slot
+    /// with `active[b]` set, starting at cache position `pos0[b]`; all fed
+    /// KV entries are written and the logits at each slot's last fed
+    /// position are returned (empty vec for inactive slots).
+    ///
+    /// Default: the chunked fallback — a loop of single decode steps, used
+    /// when no prefill artifact is available.
+    fn prefill(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<Vec<f32>>> {
+        prefill_by_steps(self, tokens, pos0, active)
+    }
+
     /// Forget per-slot state when a slot is reused for a new request.
     fn reset_slot(&mut self, slot: usize);
+}
+
+/// The chunked prefill fallback: feed the chunk through single decode
+/// steps. Shared by the trait default and by [`PjrtEngine`] when no prefill
+/// artifact was loaded.
+pub(crate) fn prefill_by_steps<E: DecodeEngine + ?Sized>(
+    engine: &mut E,
+    tokens: &[Vec<i32>],
+    pos0: &[i32],
+    active: &[bool],
+) -> Result<Vec<Vec<f32>>> {
+    let n = engine.slots();
+    if tokens.len() != n || pos0.len() != n || active.len() != n {
+        bail!("prefill arity mismatch ({n} slots)");
+    }
+    let longest = (0..n).filter(|&b| active[b]).map(|b| tokens[b].len()).max().unwrap_or(0);
+    let mut out = vec![Vec::new(); n];
+    for j in 0..longest {
+        let mut toks = vec![0i32; n];
+        let mut pos = vec![0i32; n];
+        let mut act = vec![false; n];
+        for b in 0..n {
+            if active[b] && j < tokens[b].len() {
+                act[b] = true;
+                toks[b] = tokens[b][j];
+                pos[b] = pos0[b] + j as i32;
+            }
+        }
+        let mut logits = engine.step(&toks, &pos, &act)?;
+        for b in 0..n {
+            if act[b] && j + 1 == tokens[b].len() {
+                out[b] = std::mem::take(&mut logits[b]);
+            }
+        }
+    }
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -185,15 +261,189 @@ impl DecodeBinding {
 }
 
 // ---------------------------------------------------------------------------
+// Shared PJRT prefill-artifact binding (prefill_*_b{N}_t{T})
+// ---------------------------------------------------------------------------
+
+/// Prepared input literals + index map for one batched prefill artifact.
+/// The live KV cache stays owned by the [`DecodeBinding`]; each prefill
+/// call borrows it in (as input literals) and hands the updated cache back,
+/// so decode and prefill always see one coherent cache.
+struct PrefillBinding {
+    literals: Vec<xla::Literal>,
+    tokens_idx: usize,
+    pos_idx: usize,
+    n_valid_idx: usize,
+    cache_k_idx: usize,
+    cache_v_idx: usize,
+    n_slots: usize,
+    t_chunk: usize,
+    max_seq: usize,
+}
+
+/// Cheap stand-in literal used while a cache literal is moved between the
+/// decode and prefill bindings (never executed).
+fn placeholder_literal() -> xla::Literal {
+    xla::Literal::scalar(0i32)
+}
+
+/// Quant-variant token of a standard artifact label:
+/// `"sq-2m/decode_nohad_b4"` -> `Some("nohad")`,
+/// `"sq-2m/prefill_fp_b4_t16"` -> `Some("fp")`; `None` for custom labels.
+fn label_variant(label: &str) -> Option<&str> {
+    let name = label.rsplit('/').next().unwrap_or(label);
+    let rest = name.strip_prefix("decode_").or_else(|| name.strip_prefix("prefill_"))?;
+    rest.split('_').next()
+}
+
+impl PrefillBinding {
+    fn new(exe: &Executable, weights: &Weights, qcfg: Option<QcfgVec>) -> Result<Self> {
+        let mut values = Vec::with_capacity(exe.spec.inputs.len());
+        let (mut tok, mut pos, mut nv, mut ck, mut cv) = (None, None, None, None, None);
+        let (mut n_slots, mut t_chunk, mut max_seq) = (0usize, 0usize, 0usize);
+        for (i, (name, shape, _)) in exe.spec.inputs.iter().enumerate() {
+            let v = match name.as_str() {
+                "tokens" => {
+                    tok = Some(i);
+                    n_slots = shape.first().copied().unwrap_or(1);
+                    t_chunk = shape.get(1).copied().unwrap_or(1);
+                    Value::I32(vec![0; shape.iter().product()], shape.clone())
+                }
+                "pos" => {
+                    pos = Some(i);
+                    Value::I32(vec![0; shape.iter().product()], shape.clone())
+                }
+                "n_valid" => {
+                    nv = Some(i);
+                    Value::I32(vec![0; shape.iter().product()], shape.clone())
+                }
+                "cache_k" => {
+                    ck = Some(i);
+                    max_seq = shape[2];
+                    Value::F32(crate::tensor::Tensor::zeros(shape))
+                }
+                "cache_v" => {
+                    cv = Some(i);
+                    Value::F32(crate::tensor::Tensor::zeros(shape))
+                }
+                "qcfg" => Value::F32(
+                    qcfg.ok_or_else(|| anyhow!("{}: needs qcfg", exe.label))?.tensor(),
+                ),
+                _ => Value::F32(weights.get(name)?.clone()),
+            };
+            values.push(v);
+        }
+        let mut literals = exe.prepare(&values)?;
+        let cache_k_idx = ck.ok_or_else(|| anyhow!("{}: no cache_k input", exe.label))?;
+        let cache_v_idx = cv.ok_or_else(|| anyhow!("{}: no cache_v input", exe.label))?;
+        // The zero caches above only exist to satisfy prepare()'s shape
+        // validation; the live cache is borrowed in from the decode binding
+        // per call, so free them now instead of pinning a second cache.
+        literals[cache_k_idx] = placeholder_literal();
+        literals[cache_v_idx] = placeholder_literal();
+        Ok(Self {
+            literals,
+            tokens_idx: tok.ok_or_else(|| anyhow!("{}: no tokens input", exe.label))?,
+            pos_idx: pos.ok_or_else(|| anyhow!("{}: no pos input", exe.label))?,
+            n_valid_idx: nv.ok_or_else(|| anyhow!("{}: no n_valid input", exe.label))?,
+            cache_k_idx,
+            cache_v_idx,
+            n_slots,
+            t_chunk,
+            max_seq,
+        })
+    }
+
+    /// Run one prefill call: borrow the live caches from `decode`, feed
+    /// `tokens[b]` starting at `pos0[b]` for active slots, return the flat
+    /// last-valid-position logits (n_slots * V) and hand the updated caches
+    /// back to `decode`. (If execution fails the caches are lost — the
+    /// engine is unusable after an error, which the scheduler treats as
+    /// fatal anyway.)
+    fn step(
+        &mut self,
+        exe: &Executable,
+        decode: &mut DecodeBinding,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<f32>> {
+        if tokens.len() != self.n_slots || pos0.len() != self.n_slots {
+            bail!(
+                "{}: prefill arity {} / {}, artifact has {} slots",
+                exe.label,
+                tokens.len(),
+                pos0.len(),
+                self.n_slots
+            );
+        }
+        let mut flat_tokens = vec![0i32; self.n_slots * self.t_chunk];
+        let mut pos_vec = vec![0i32; self.n_slots];
+        let mut n_valid = vec![0i32; self.n_slots];
+        for b in 0..self.n_slots {
+            if !active[b] || tokens[b].is_empty() {
+                continue;
+            }
+            if tokens[b].len() > self.t_chunk {
+                bail!(
+                    "{}: slot {b} fed {} tokens, chunk is {}",
+                    exe.label,
+                    tokens[b].len(),
+                    self.t_chunk
+                );
+            }
+            let end = pos0[b] as usize + tokens[b].len();
+            if end > self.max_seq {
+                bail!("slot {b}: prefill past KV capacity ({} positions)", self.max_seq);
+            }
+            flat_tokens[b * self.t_chunk..b * self.t_chunk + tokens[b].len()]
+                .copy_from_slice(&tokens[b]);
+            pos_vec[b] = pos0[b];
+            n_valid[b] = tokens[b].len() as i32;
+        }
+        self.literals[self.tokens_idx] = xla::Literal::vec1(&flat_tokens)
+            .reshape(&[self.n_slots as i64, self.t_chunk as i64])?;
+        self.literals[self.pos_idx] =
+            xla::Literal::vec1(&pos_vec).reshape(&[self.n_slots as i64])?;
+        self.literals[self.n_valid_idx] =
+            xla::Literal::vec1(&n_valid).reshape(&[self.n_slots as i64])?;
+        // Move the live caches in from the decode binding for this call.
+        self.literals[self.cache_k_idx] =
+            std::mem::replace(&mut decode.literals[decode.cache_k_idx], placeholder_literal());
+        self.literals[self.cache_v_idx] =
+            std::mem::replace(&mut decode.literals[decode.cache_v_idx], placeholder_literal());
+        let bufs = exe.run_literals_raw(&self.literals)?;
+        // Drop the consumed pre-call cache copies immediately — otherwise
+        // this binding would pin a second cache-sized literal pair for the
+        // engine's whole lifetime.
+        self.literals[self.cache_k_idx] = placeholder_literal();
+        self.literals[self.cache_v_idx] = placeholder_literal();
+        let result = bufs[0][0].to_literal_sync()?;
+        let mut parts = result.to_tuple()?;
+        let cache_v = parts.pop().ok_or_else(|| anyhow!("missing cache_v"))?;
+        let cache_k = parts.pop().ok_or_else(|| anyhow!("missing cache_k"))?;
+        let logits_lit = parts.pop().ok_or_else(|| anyhow!("missing logits"))?;
+        decode.literals[decode.cache_k_idx] = cache_k;
+        decode.literals[decode.cache_v_idx] = cache_v;
+        Ok(logits_lit.to_vec::<f32>()?)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // PJRT-backed engine
 // ---------------------------------------------------------------------------
 
 /// The production engine: one compiled decode artifact, weight + cache
-/// literals prepared once, token/pos literals rebuilt per step.
+/// literals prepared once, token/pos literals rebuilt per step. Optionally
+/// carries a batched prefill artifact ([`PjrtEngine::with_prefill`]) that
+/// consumes `T` prompt tokens per call; without one, `prefill` falls back
+/// to the chunked decode loop.
 pub struct PjrtEngine {
     exe: Executable,
     bind: DecodeBinding,
+    prefill_exe: Option<Executable>,
+    prefill_bind: Option<PrefillBinding>,
     pub step_times: Samples,
+    pub prefill_times: Samples,
 }
 
 impl PjrtEngine {
@@ -201,7 +451,54 @@ impl PjrtEngine {
     /// can move the engine into schedulers/threads without self-reference).
     pub fn new(exe: Executable, weights: &Weights, qcfg: Option<QcfgVec>) -> Result<Self> {
         let bind = DecodeBinding::new(&exe, weights, qcfg)?;
-        Ok(Self { exe, bind, step_times: Samples::new() })
+        Ok(Self {
+            exe,
+            bind,
+            prefill_exe: None,
+            prefill_bind: None,
+            step_times: Samples::new(),
+            prefill_times: Samples::new(),
+        })
+    }
+
+    /// Attach a compiled `prefill_*_b{N}_t{T}` artifact. Its slot count and
+    /// cache capacity must match the decode artifact's.
+    pub fn with_prefill(
+        mut self,
+        exe: Executable,
+        weights: &Weights,
+        qcfg: Option<QcfgVec>,
+    ) -> Result<Self> {
+        let bind = PrefillBinding::new(&exe, weights, qcfg)?;
+        if bind.n_slots != self.bind.n_slots || bind.max_seq != self.bind.max_seq {
+            bail!(
+                "{}: prefill artifact is {} slots x {} positions, decode is {} x {}",
+                exe.label,
+                bind.n_slots,
+                bind.max_seq,
+                self.bind.n_slots,
+                self.bind.max_seq
+            );
+        }
+        if bind.t_chunk < 2 {
+            bail!("{}: prefill chunk {} gains nothing over decode", exe.label, bind.t_chunk);
+        }
+        // A prefill graph of a different quant variant would silently write
+        // differently-quantized KV entries into the shared cache.
+        if let (Some(dv), Some(pv)) =
+            (label_variant(&self.exe.label), label_variant(&exe.label))
+        {
+            if dv != pv {
+                bail!(
+                    "{}: prefill variant {pv:?} does not match decode variant {dv:?} ({})",
+                    exe.label,
+                    self.exe.label
+                );
+            }
+        }
+        self.prefill_exe = Some(exe);
+        self.prefill_bind = Some(bind);
+        Ok(self)
     }
 
     pub fn label(&self) -> &str {
@@ -230,6 +527,39 @@ impl DecodeEngine for PjrtEngine {
         Ok(flat.chunks(vocab).map(|c| c.to_vec()).collect())
     }
 
+    fn prefill_chunk(&self) -> usize {
+        self.prefill_bind.as_ref().map(|p| p.t_chunk).unwrap_or(1)
+    }
+
+    fn prefill(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<Vec<f32>>> {
+        if self.prefill_bind.is_none() {
+            return prefill_by_steps(self, tokens, pos0, active);
+        }
+        if active.len() != self.bind.n_slots {
+            bail!("prefill arity mismatch ({} slots)", self.bind.n_slots);
+        }
+        let t0 = Instant::now();
+        let pb = self.prefill_bind.as_mut().expect("checked above");
+        let pexe = self.prefill_exe.as_ref().expect("set with binding");
+        let flat = pb.step(pexe, &mut self.bind, tokens, pos0, active)?;
+        self.prefill_times.push(t0.elapsed().as_secs_f64() * 1e6);
+        let vocab = flat.len() / pb.n_slots.max(1);
+        let mut out = Vec::with_capacity(pb.n_slots);
+        for (b, lane) in flat.chunks(vocab).enumerate() {
+            if active[b] && !tokens[b].is_empty() {
+                out.push(lane.to_vec());
+            } else {
+                out.push(Vec::new());
+            }
+        }
+        Ok(out)
+    }
+
     fn reset_slot(&mut self, _slot: usize) {
         // Nothing to do: attention masking (`idx <= pos`) makes a previous
         // occupant's stale cache entries unreachable once the slot restarts
@@ -254,13 +584,32 @@ pub struct MockEngine {
     max_seq: usize,
     vocab: usize,
     history: Vec<Vec<i32>>,
-    /// Total engine steps executed (for batching-efficiency assertions).
+    chunk: usize,
+    /// Total decode steps executed (for batching-efficiency assertions).
     pub steps: usize,
+    /// Total batched prefill calls executed (a prompt of `len` tokens must
+    /// cost exactly `ceil(len/chunk)` of these — the TTFT acceptance check).
+    pub prefill_calls: usize,
 }
 
 impl MockEngine {
     pub fn new(slots: usize, max_seq: usize, vocab: usize) -> Self {
-        Self { n_slots: slots, max_seq, vocab, history: vec![Vec::new(); slots], steps: 0 }
+        Self {
+            n_slots: slots,
+            max_seq,
+            vocab,
+            history: vec![Vec::new(); slots],
+            chunk: 1,
+            steps: 0,
+            prefill_calls: 0,
+        }
+    }
+
+    /// Pretend to be an engine with a `T`-token prefill graph (chunk 1 =
+    /// no batched prefill, the default).
+    pub fn with_prefill_chunk(mut self, chunk: usize) -> Self {
+        self.chunk = chunk.max(1);
+        self
     }
 
     /// Deterministic logits from a token history: a pseudo-random base
@@ -313,6 +662,51 @@ impl DecodeEngine for MockEngine {
                 bail!("mock engine: slot {b} cache full ({} positions)", self.max_seq);
             }
             self.history[b].push(tokens[b]);
+            out.push(Self::logits_for(&self.history[b], self.vocab));
+        }
+        Ok(out)
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        self.chunk
+    }
+
+    fn prefill(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<Vec<f32>>> {
+        if tokens.len() != self.n_slots || pos0.len() != self.n_slots || active.len() != self.n_slots
+        {
+            bail!("mock engine: prefill arity mismatch ({} slots)", self.n_slots);
+        }
+        self.prefill_calls += 1;
+        let mut out = Vec::with_capacity(self.n_slots);
+        for b in 0..self.n_slots {
+            if !active[b] || tokens[b].is_empty() {
+                out.push(Vec::new());
+                continue;
+            }
+            if tokens[b].len() > self.chunk {
+                bail!(
+                    "mock engine: slot {b} fed {} prefill tokens, chunk is {}",
+                    tokens[b].len(),
+                    self.chunk
+                );
+            }
+            if pos0[b] as usize != self.history[b].len() {
+                bail!(
+                    "mock engine: slot {b} prefilled at pos {} but holds {} tokens \
+                     (scheduler position tracking broken, or slot reused without reset)",
+                    pos0[b],
+                    self.history[b].len()
+                );
+            }
+            if self.history[b].len() + tokens[b].len() > self.max_seq {
+                bail!("mock engine: slot {b} prefill past cache ({} positions)", self.max_seq);
+            }
+            self.history[b].extend_from_slice(&tokens[b]);
             out.push(Self::logits_for(&self.history[b], self.vocab));
         }
         Ok(out)
@@ -440,5 +834,76 @@ mod tests {
         assert_eq!(out[1].len(), 0);
         assert_eq!(e.history[1].len(), 0);
         assert_eq!(e.history[0].len(), 1);
+    }
+
+    #[test]
+    fn prefill_artifact_names() {
+        assert_eq!(DecodeVariant::Fp.artifact_prefill(4, 16), "prefill_fp_b4_t16");
+        assert_eq!(DecodeVariant::QuantHad.artifact_prefill(8, 64), "prefill_had_b8_t64");
+    }
+
+    #[test]
+    fn label_variant_extraction() {
+        assert_eq!(label_variant("sq-2m/decode_nohad_b4"), Some("nohad"));
+        assert_eq!(label_variant("sq-2m/prefill_fp_b4_t16"), Some("fp"));
+        assert_eq!(label_variant("decode_had"), Some("had"));
+        assert_eq!(label_variant("sq-2m/fwd_eval_nohad"), None);
+    }
+
+    #[test]
+    fn mock_prefill_equals_step_loop() {
+        // One prefill call == the same tokens fed one step at a time: same
+        // final logits, same history (mock logits are a pure function of
+        // history, mirroring the L2 graph equivalence proven in pytest).
+        let prompt = [5i32, 9, 2, 7, 1];
+        let mut a = MockEngine::new(2, 32, 64).with_prefill_chunk(8);
+        let la = a
+            .prefill(&[prompt.to_vec(), Vec::new()], &[0, 0], &[true, false])
+            .unwrap();
+        let mut b = MockEngine::new(2, 32, 64);
+        let mut lb = Vec::new();
+        for (j, &t) in prompt.iter().enumerate() {
+            lb = b.step(&[t, 0], &[j as i32, 0], &[true, false]).unwrap();
+        }
+        assert_eq!(la[0], lb[0]);
+        assert_eq!(la[1].len(), 0);
+        assert_eq!(a.history[0], b.history[0]);
+        assert_eq!(a.prefill_calls, 1);
+        assert_eq!(a.steps, 0);
+    }
+
+    #[test]
+    fn default_prefill_falls_back_to_decode_steps() {
+        // An engine without a prefill graph (chunk 1) uses the trait's
+        // step-loop fallback — and must produce the identical result.
+        let prompt = [3i32, 11, 4];
+        let mut a = MockEngine::new(1, 16, 32);
+        assert_eq!(a.prefill_chunk(), 1);
+        // Route through the fallback explicitly (MockEngine's own override
+        // would short-circuit it).
+        let la = super::prefill_by_steps(&mut a, &[prompt.to_vec()], &[0], &[true]).unwrap();
+        let mut b = MockEngine::new(1, 16, 32).with_prefill_chunk(4);
+        let lb = b.prefill(&[prompt.to_vec()], &[0], &[true]).unwrap();
+        assert_eq!(la[0], lb[0]);
+        assert_eq!(a.steps, 3);
+        assert_eq!(b.prefill_calls, 1);
+    }
+
+    #[test]
+    fn mock_prefill_rejects_oversized_chunk_and_position_drift() {
+        let mut e = MockEngine::new(1, 16, 32).with_prefill_chunk(2);
+        assert!(e.prefill(&[vec![1, 2, 3]], &[0], &[true]).is_err());
+        e.prefill(&[vec![1, 2]], &[0], &[true]).unwrap();
+        // pos0 must equal the tokens already held.
+        assert!(e.prefill(&[vec![3]], &[0], &[true]).is_err());
+        e.reset_slot(0);
+        e.prefill(&[vec![3]], &[0], &[true]).unwrap();
+    }
+
+    #[test]
+    fn mock_prefill_enforces_capacity() {
+        let mut e = MockEngine::new(1, 3, 8).with_prefill_chunk(4);
+        assert!(e.prefill(&[vec![1, 2, 3, 4]], &[0], &[true]).is_err());
+        e.prefill(&[vec![1, 2, 3]], &[0], &[true]).unwrap();
     }
 }

@@ -13,10 +13,15 @@ use crate::util::timer::Samples;
 pub struct ServingMetrics {
     /// Engine step latency (us), one sample per decode step.
     pub step_us: Samples,
+    /// Batched prefill call latency (us), one sample per prefill call —
+    /// kept separate from `step_us`/`token_us` so prompt ingestion cost
+    /// (which sets TTFT) never pollutes per-token decode latency.
+    pub prefill_us: Samples,
     /// User-perceived per-token latency (us): the duration of the step that
     /// produced the token, one sample per *generated* token.
     pub token_us: Samples,
-    /// Time to first generated token (us), one sample per request.
+    /// Time to first generated token (us), measured from request *enqueue*
+    /// (not admission, not step start), one sample per request.
     pub ttft_us: Samples,
     /// Total request latency (us), submit -> completion.
     pub request_us: Samples,
@@ -25,6 +30,8 @@ pub struct ServingMetrics {
     /// Occupied slots, sampled once per step.
     pub in_flight: Samples,
     pub tokens_generated: usize,
+    /// Prompt tokens consumed through batched prefill calls.
+    pub tokens_prefilled: usize,
     pub requests_completed: usize,
 }
 
@@ -45,6 +52,28 @@ impl ServingMetrics {
         self.queue_depth.push(queue as f64);
     }
 
+    /// Record one batched prefill call: its latency, how many prompt tokens
+    /// it consumed, how many first tokens it yielded (a chunk that finishes
+    /// a prompt samples the request's first token), and the scheduler state
+    /// around it.
+    pub fn record_prefill(
+        &mut self,
+        prefill_us: f64,
+        prompt_tokens: usize,
+        new_tokens: usize,
+        in_flight: usize,
+        queue: usize,
+    ) {
+        self.prefill_us.push(prefill_us);
+        self.tokens_prefilled += prompt_tokens;
+        for _ in 0..new_tokens {
+            self.token_us.push(prefill_us);
+        }
+        self.tokens_generated += new_tokens;
+        self.in_flight.push(in_flight as f64);
+        self.queue_depth.push(queue as f64);
+    }
+
     /// Record a completed request (latencies in microseconds).
     pub fn record_completion(&mut self, request_us: f64, ttft_us: Option<f64>) {
         self.requests_completed += 1;
@@ -54,10 +83,13 @@ impl ServingMetrics {
         }
     }
 
-    /// Decode busy time: the sum of step latencies, in seconds. In the
-    /// single-threaded scheduler this is the serving wall clock.
+    /// Engine busy time: the sum of decode-step and prefill-call latencies,
+    /// in seconds. In the single-threaded scheduler this is the serving
+    /// wall clock.
     pub fn busy_secs(&self) -> f64 {
-        self.step_us.mean_us() * self.step_us.len() as f64 / 1e6
+        (self.step_us.mean_us() * self.step_us.len() as f64
+            + self.prefill_us.mean_us() * self.prefill_us.len() as f64)
+            / 1e6
     }
 
     /// Aggregate generation throughput over the whole run.
@@ -89,6 +121,10 @@ impl ServingMetrics {
         self.ttft_us.percentile_us(95.0) / 1e3
     }
 
+    pub fn prefill_ms_p50(&self) -> f64 {
+        self.prefill_us.percentile_us(50.0) / 1e3
+    }
+
     pub fn mean_queue_depth(&self) -> f64 {
         self.queue_depth.mean_us()
     }
@@ -109,6 +145,9 @@ impl ServingMetrics {
             ("token_ms_p99", json::num(self.token_ms_p99())),
             ("ttft_ms_p50", json::num(self.ttft_ms_p50())),
             ("ttft_ms_p95", json::num(self.ttft_ms_p95())),
+            ("prefill_calls", json::num(self.prefill_us.len() as f64)),
+            ("prefill_ms_p50", json::num(self.prefill_ms_p50())),
+            ("tokens_prefilled", json::num(self.tokens_prefilled as f64)),
             ("request_ms_mean", json::num(self.request_us.mean_us() / 1e3)),
             ("mean_queue_depth", json::num(self.mean_queue_depth())),
             ("mean_in_flight", json::num(self.mean_in_flight())),
@@ -152,6 +191,30 @@ mod tests {
         assert!((m.token_ms_p50() - 1.0).abs() < 1e-9);
         assert!((m.token_ms_p99() - 1.0).abs() < 1e-9);
         assert!((m.mean_queue_depth() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefill_is_tracked_separately_from_decode() {
+        let mut m = ServingMetrics::new();
+        // 2 prefill calls (16 prompt tokens each; the second finishes a
+        // prompt and samples a first token) + 2 decode steps of 1 token.
+        m.record_prefill(4000.0, 16, 0, 1, 0);
+        m.record_prefill(4000.0, 16, 1, 1, 0);
+        m.record_step(1000.0, 1, 1, 0);
+        m.record_step(1000.0, 1, 1, 0);
+        assert_eq!(m.tokens_prefilled, 32);
+        assert_eq!(m.tokens_generated, 3);
+        assert_eq!(m.prefill_us.len(), 2);
+        assert_eq!(m.step_us.len(), 2);
+        // Busy time sums both kinds of engine call.
+        assert!((m.busy_secs() - 0.010).abs() < 1e-9);
+        // Per-token latency has one 4ms sample (the prefill-produced first
+        // token) and two 1ms decode samples; prefill never pollutes p50.
+        assert!((m.token_ms_p50() - 1.0).abs() < 1e-9);
+        let j = m.to_json();
+        assert_eq!(j.req("prefill_calls").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.req("tokens_prefilled").unwrap().as_f64(), Some(32.0));
+        assert!((j.req("prefill_ms_p50").unwrap().as_f64().unwrap() - 4.0).abs() < 1e-9);
     }
 
     #[test]

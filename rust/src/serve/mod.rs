@@ -6,27 +6,38 @@
 //! single-request `coordinator::serve` loop into five pieces:
 //!
 //! * [`engine`] — the [`DecodeEngine`] trait: step a whole *batch* of slots
-//!   through one decode iteration. Implementations: [`PjrtEngine`] (the
-//!   real thing, over the `decode_*` / `decode_*_b{N}` AOT artifacts, KV
-//!   cache kept as PJRT literals between steps) and [`MockEngine`] (a
-//!   deterministic in-process model for scheduler/sampler tests and for
-//!   benching the scheduler itself without artifacts).
+//!   through one decode iteration, and *prefill* a multi-token prompt chunk
+//!   per slot in one call (`prefill_chunk()` tokens; the chunked fallback
+//!   runs the decode step in a loop when no prefill graph exists).
+//!   Implementations: [`PjrtEngine`] (the real thing, over the `decode_*` /
+//!   `decode_*_b{N}` / `prefill_*_b{N}_t{T}` AOT artifacts, KV cache kept
+//!   as PJRT literals and shared between the decode and prefill bindings)
+//!   and [`MockEngine`] (a deterministic in-process model for
+//!   scheduler/sampler tests and for benching the scheduler itself without
+//!   artifacts; counts decode steps and prefill calls).
 //! * [`slots`] — [`SlotMap`], the slot-based KV-cache bookkeeping:
-//!   allocate/free/advance with per-slot position tracking and strict
-//!   capacity accounting. Slot reuse needs no cache zeroing: the decode
-//!   graphs mask attention to `idx <= pos`, so a freshly admitted request
-//!   starting at `pos = 0` can never observe a previous occupant's stale
-//!   keys/values.
+//!   allocate/free/advance (by one token or a whole prefill chunk) with
+//!   per-slot position tracking and strict capacity accounting. Slot reuse
+//!   needs no cache zeroing: the decode graphs mask attention to
+//!   `idx <= pos`, so a freshly admitted request starting at `pos = 0` can
+//!   never observe a previous occupant's stale keys/values.
 //! * [`scheduler`] — [`Scheduler`], the continuous-batching loop: an
-//!   admission queue with backpressure, mid-flight join (a request enters
-//!   the batch on the step after a slot frees, without draining in-flight
-//!   requests) and evict ([`Scheduler::cancel`] frees a slot immediately),
-//!   per-request token budgets, and completion accounting. The legacy
-//!   threaded FIFO front ([`Server`]) also lives here.
+//!   admission queue with backpressure, batched prompt prefill (a newly
+//!   admitted request reaches its first token in `ceil(len/T)` engine
+//!   calls, then joins the per-token decode batch; `T == 1` keeps the old
+//!   interleaved path), mid-flight join (a request enters the batch on the
+//!   step after a slot frees, without draining in-flight requests) and
+//!   evict ([`Scheduler::cancel`] frees a slot immediately), per-request
+//!   token budgets, and completion accounting. The legacy threaded FIFO
+//!   front ([`Server`]) also lives here. The scheduler's bookkeeping is
+//!   held to a pure reference simulator by randomized trace tests — see
+//!   [`crate::testing::sim`].
 //! * [`sampling`] — greedy / temperature / top-k / top-p samplers, seeded
 //!   via [`crate::util::prng`] so generations are exactly reproducible.
-//! * [`metrics`] — time-to-first-token, per-token latency percentiles,
-//!   tokens/sec, queue depth; exportable as JSON through [`crate::report`].
+//! * [`metrics`] — time-to-first-token (measured from enqueue, so queue
+//!   wait is visible), prefill-call latency (kept separate from per-token
+//!   decode latency), per-token latency percentiles, tokens/sec, queue
+//!   depth; exportable as JSON through [`crate::report`].
 
 pub mod engine;
 pub mod metrics;

@@ -230,6 +230,118 @@ mod tests {
         }
     }
 
+    // -- randomized statistical properties (crate::testing::prop) ---------
+
+    #[test]
+    fn prop_top_k_never_samples_outside_the_k_set() {
+        use crate::testing::prop::forall;
+        forall(0x70c1, 300, |g| {
+            let n = g.int(2, 64);
+            let logits: Vec<f32> = (0..n).map(|_| g.rng.normal() * 3.0).collect();
+            let k = g.int(1, n);
+            let s = Sampler::top_k(k, g.f32(0.05, 3.0));
+            let mut rng = Prng::new(g.rng.next_u64());
+            let tok = s.sample(&logits, &mut rng);
+            // Independent k-set: the k largest logits under the same
+            // total_cmp order the sampler sorts with.
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+            idx.truncate(k);
+            if idx.contains(&tok) {
+                Ok(())
+            } else {
+                Err(format!("token {tok} outside top-{k} set {idx:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_top_p_never_samples_outside_the_nucleus() {
+        use crate::testing::prop::forall;
+        forall(0x70f2, 300, |g| {
+            let n = g.int(2, 64);
+            let logits: Vec<f32> = (0..n).map(|_| g.rng.normal() * 3.0).collect();
+            let p = g.f32(0.05, 1.0);
+            let temp = g.f32(0.2, 2.0);
+            let s = Sampler::top_p(p, temp);
+            let mut rng = Prng::new(g.rng.next_u64());
+            let tok = s.sample(&logits, &mut rng);
+            // Independent nucleus: smallest prefix of the sorted softmax
+            // whose cumulative mass reaches p (same arithmetic order as
+            // the sampler so the boundary token agrees bit-for-bit).
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+            let m = logits[idx[0]];
+            let ws: Vec<f32> = idx.iter().map(|&i| ((logits[i] - m) / temp).exp()).collect();
+            let total: f32 = ws.iter().sum();
+            let target = p * total;
+            let mut cum = 0.0f32;
+            let mut cut = ws.len();
+            for (j, &w) in ws.iter().enumerate() {
+                cum += w;
+                if cum >= target {
+                    cut = j + 1;
+                    break;
+                }
+            }
+            let nucleus = &idx[..cut];
+            if nucleus.contains(&tok) {
+                Ok(())
+            } else {
+                Err(format!("token {tok} outside p={p} nucleus {nucleus:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_temperature_to_zero_converges_to_argmax() {
+        use crate::testing::prop::forall;
+        // With a unique max (gap >= 1), t = 0.01 makes any non-argmax draw
+        // ~e^{-100} likely; over a seeded PRNG this is exact in practice.
+        forall(0x7e20, 200, |g| {
+            let n = g.int(2, 32);
+            let mut logits: Vec<f32> = (0..n).map(|_| g.rng.normal()).collect();
+            let best = g.int(0, n - 1);
+            let top = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            logits[best] = top + 1.0;
+            let mut rng = Prng::new(g.rng.next_u64());
+            for kind in [
+                Sampler::temperature(0.01),
+                Sampler::top_k(n, 0.01),
+                Sampler::top_p(1.0, 0.01),
+            ] {
+                let tok = kind.sample(&logits, &mut rng);
+                if tok != best {
+                    return Err(format!("{}: drew {tok}, argmax {best}", kind.name()));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn argmax_rate_increases_as_temperature_falls() {
+        // The convergence is monotone in practice: colder sampling hits the
+        // argmax at least as often, reaching 100% well before t = 0.02.
+        let logits = [1.0f32, 3.0, 2.5, 0.0];
+        let best = argmax(&logits);
+        let mut prev_hits = 0usize;
+        for (i, t) in [2.0f32, 0.5, 0.02].into_iter().enumerate() {
+            let s = Sampler::temperature(t);
+            let mut rng = Prng::new(99);
+            let hits =
+                (0..400).filter(|_| s.sample(&logits, &mut rng) == best).count();
+            assert!(
+                hits >= prev_hits,
+                "cooling {t} lowered the argmax rate: {hits} < {prev_hits}"
+            );
+            if i == 2 {
+                assert_eq!(hits, 400, "t=0.02 should be argmax-only, got {hits}/400");
+            }
+            prev_hits = hits;
+        }
+    }
+
     #[test]
     fn parse_specs() {
         assert_eq!(Sampler::parse("greedy", 0.7, 5, 0.9).unwrap(), Sampler::greedy());

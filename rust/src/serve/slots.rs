@@ -85,13 +85,28 @@ impl SlotMap {
     /// Advance an occupied slot's position by one written token; returns the
     /// new position. Fails if the slot is free or its cache is already full.
     pub fn advance(&mut self, slot: usize) -> Result<usize> {
+        self.advance_by(slot, 1)
+    }
+
+    /// Advance an occupied slot's position by `n` written tokens (one
+    /// batched prefill chunk); returns the new position. Fails if the slot
+    /// is free or the advance would pass `max_seq` — positions stay honest
+    /// even for multi-token writes.
+    pub fn advance_by(&mut self, slot: usize, n: usize) -> Result<usize> {
         let max_seq = self.max_seq;
         match self.state.get_mut(slot) {
             Some(Some(info)) => {
-                if info.pos >= max_seq {
-                    bail!("slot {slot}: KV cache full ({max_seq} positions)");
+                if n == 0 {
+                    bail!("slot {slot} advanced by zero tokens");
                 }
-                info.pos += 1;
+                if info.pos + n > max_seq {
+                    bail!(
+                        "slot {slot}: advance by {n} passes KV capacity \
+                         ({} + {n} > {max_seq})",
+                        info.pos
+                    );
+                }
+                info.pos += n;
                 Ok(info.pos)
             }
             Some(None) => bail!("slot {slot} advanced while free"),
@@ -163,5 +178,115 @@ mod tests {
                 m.release(s).unwrap();
             }
         }
+    }
+
+    #[test]
+    fn advance_by_respects_capacity_and_rejects_zero() {
+        let mut m = SlotMap::new(1, 8);
+        let s = m.allocate(1).unwrap();
+        assert_eq!(m.advance_by(s, 5).unwrap(), 5);
+        assert!(m.advance_by(s, 0).is_err());
+        assert!(m.advance_by(s, 4).is_err(), "5 + 4 > 8 must fail");
+        assert_eq!(m.pos(s), Some(5), "failed advance must not move the position");
+        assert_eq!(m.advance_by(s, 3).unwrap(), 8);
+        assert!(m.advance(s).is_err());
+        m.release(s).unwrap();
+        assert!(m.advance_by(s, 1).is_err());
+    }
+
+    /// Property: under random allocate/free/advance/advance_by
+    /// interleavings, the map never double-allocates an occupied slot,
+    /// never leaks capacity (`active + free == capacity`, always), and a
+    /// slot's position is monotone within one occupancy — it only moves by
+    /// the granted advance, resets to zero on reallocation, and never
+    /// passes `max_seq`. Checked against an independent mirror model.
+    #[test]
+    fn prop_random_interleavings_keep_accounting_honest() {
+        use crate::testing::prop::forall;
+        forall(0x510f, 300, |g| run_interleaving_case(g));
+    }
+
+    fn run_interleaving_case(g: &mut crate::testing::prop::Gen) -> Result<(), String> {
+        let cap = g.int(1, 6);
+        let max_seq = g.int(1, 12);
+        let mut m = SlotMap::new(cap, max_seq);
+        // Mirror model: slot -> (id, pos).
+        let mut model: Vec<Option<(u64, usize)>> = vec![None; cap];
+        let mut next_id = 0u64;
+        let ops = g.int(5, 80);
+        for op in 0..ops {
+            match g.int(0, 3) {
+                0 => {
+                    // allocate: must pick the lowest free slot, at pos 0,
+                    // and never land on an occupied one.
+                    let expect = model.iter().position(|s| s.is_none());
+                    let got = m.allocate(next_id);
+                    if got != expect {
+                        return Err(format!("op {op}: allocate {got:?}, expected {expect:?}"));
+                    }
+                    if let Some(s) = got {
+                        if model[s].is_some() {
+                            return Err(format!("op {op}: slot {s} double-allocated"));
+                        }
+                        if m.pos(s) != Some(0) {
+                            return Err(format!("op {op}: fresh slot {s} not at pos 0"));
+                        }
+                        model[s] = Some((next_id, 0));
+                        next_id += 1;
+                    }
+                }
+                1 => {
+                    // release an arbitrary slot (occupied or not).
+                    let s = g.int(0, cap - 1);
+                    match (m.release(s), model[s]) {
+                        (Ok(id), Some((mid, _))) if id == mid => model[s] = None,
+                        (Err(_), None) => {}
+                        (r, state) => {
+                            return Err(format!("op {op}: release({s}) = {r:?} vs {state:?}"))
+                        }
+                    }
+                }
+                _ => {
+                    // advance by 1 or by a random chunk.
+                    let s = g.int(0, cap - 1);
+                    let n = if g.bool() { 1 } else { g.int(1, 6) };
+                    match (m.advance_by(s, n), model[s]) {
+                        (Ok(p), Some((id, pos))) => {
+                            if pos + n > max_seq || p != pos + n {
+                                return Err(format!(
+                                    "op {op}: advance_by({s}, {n}) = {p} from pos {pos} \
+                                     (max_seq {max_seq})"
+                                ));
+                            }
+                            model[s] = Some((id, p));
+                        }
+                        (Err(_), Some((_, pos))) if pos + n > max_seq => {}
+                        (Err(_), None) => {}
+                        (r, state) => {
+                            return Err(format!(
+                                "op {op}: advance_by({s}, {n}) = {r:?} vs {state:?}"
+                            ))
+                        }
+                    }
+                }
+            }
+            // Capacity can never leak, whatever the interleaving.
+            let occupied = model.iter().filter(|s| s.is_some()).count();
+            if m.active_count() != occupied || m.free_count() != cap - occupied {
+                return Err(format!(
+                    "op {op}: accounting {} active / {} free, model says {occupied}/{}",
+                    m.active_count(),
+                    m.free_count(),
+                    cap - occupied
+                ));
+            }
+            // Positions agree with the mirror everywhere.
+            for s in 0..cap {
+                if m.pos(s) != model[s].map(|(_, p)| p) {
+                    return Err(format!("op {op}: slot {s} pos {:?} drifted", m.pos(s)));
+                }
+            }
+        }
+        Ok(())
     }
 }

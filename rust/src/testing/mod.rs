@@ -1,4 +1,7 @@
-//! In-repo mini property-testing framework (proptest is not in the offline
-//! vendor set). See [`prop`].
+//! In-repo test harnesses: a mini property-testing framework ([`prop`] —
+//! proptest is not in the offline vendor set) and a seeded reference
+//! simulator for the serving scheduler ([`sim`]), whose randomized trace
+//! tests hold the real `serve::Scheduler` to a pure bookkeeping oracle.
 
 pub mod prop;
+pub mod sim;

@@ -249,6 +249,70 @@ fn batched_decode_engine_matches_single_slot_generation() {
 }
 
 #[test]
+fn pjrt_prefill_matches_decode_loop_and_serves_long_prompts() {
+    // The batched multi-token prefill artifact against the decode loop:
+    //  (a) one prefill call over staggered chunk lengths must reproduce
+    //      the logits of feeding the same tokens through the decode
+    //      artifact one at a time (the rust twin of the L2 pytest);
+    //  (b) a scheduler over the prefill-capable engine must serve a long
+    //      prompt in ceil(len/T) prefill calls and keep decoding from the
+    //      prefill-written cache (byte-identical greedy completion).
+    use spinquant::serve::DecodeEngine as _;
+
+    let Some((manifest, rt)) = setup() else { return };
+    let batched = serve::DecodeVariant::Fp.artifact_batched(4);
+    let prefill = serve::DecodeVariant::Fp.artifact_prefill(4, 16);
+    let (Ok(exe_dec), Ok(exe_pre)) =
+        (rt.load(&manifest, MODEL, &batched), rt.load(&manifest, MODEL, &prefill))
+    else {
+        eprintln!("skipping: no {batched}/{prefill} artifacts (re-run `make artifacts`)");
+        return;
+    };
+    let w = spinquant::model::Weights::load(&manifest.weights_path(MODEL)).unwrap();
+    let mut eng_pre = serve::PjrtEngine::new(exe_dec, &w, None)
+        .unwrap()
+        .with_prefill(exe_pre, &w, None)
+        .unwrap();
+    assert_eq!(eng_pre.prefill_chunk(), 16);
+    let mut eng_loop =
+        serve::PjrtEngine::new(rt.load(&manifest, MODEL, &batched).unwrap(), &w, None).unwrap();
+
+    // (a) Staggered chunk lengths in one call (slot 2 inactive).
+    let chunks: [&[u8]; 4] = [b"Alpha beta gamma", b"Some words", b"", b"Q: x"];
+    let tokens: Vec<Vec<i32>> =
+        chunks.iter().map(|c| c.iter().map(|&b| b as i32).collect()).collect();
+    let active = [true, true, false, true];
+    let la = eng_pre.prefill(&tokens, &[0; 4], &active).unwrap();
+    let lb = eng_loop.prefill(&tokens, &[0; 4], &active).unwrap(); // default: decode loop
+    for b in [0usize, 1, 3] {
+        let scale = lb[b].iter().fold(1.0f32, |a, &v| a.max(v.abs()));
+        let mut err = 0.0f32;
+        for (x, y) in la[b].iter().zip(&lb[b]) {
+            err = err.max((x - y).abs());
+        }
+        assert!(err < 2e-3 * scale, "slot {b}: prefill drifted {err} from decode loop");
+    }
+
+    // (b) Long prompt through the scheduler: 64 tokens at T=16 => 4
+    // prefill calls, then ordinary decode; the loop engine must agree.
+    let prompt: Vec<u8> = (0..64u8).map(|i| b' ' + (i % 90)).collect();
+    let mut sched_pre = serve::Scheduler::new(eng_pre, 8).unwrap();
+    sched_pre.submit(serve::GenRequest::greedy(&prompt, 10)).unwrap();
+    let done_pre = sched_pre.run().unwrap();
+    assert_eq!(sched_pre.metrics.prefill_us.len(), 4, "expected ceil(64/16) prefill calls");
+    assert_eq!(sched_pre.metrics.tokens_prefilled, 64);
+
+    let mut sched_loop = serve::Scheduler::new(eng_loop, 8).unwrap();
+    sched_loop.submit(serve::GenRequest::greedy(&prompt, 10)).unwrap();
+    let done_loop = sched_loop.run().unwrap();
+    assert_eq!(done_pre[0].completion.len(), 10);
+    assert_eq!(
+        done_pre[0].completion, done_loop[0].completion,
+        "prefill path changed the greedy completion"
+    );
+}
+
+#[test]
 fn full_rtn_pipeline_beats_nothing_and_spinquant_beats_rtn_on_ppl() {
     // Small-scale end-to-end ordering check (the Table 1 shape):
     // FP <= SpinQuant_no_had <= RTN on perplexity at W4A4.
