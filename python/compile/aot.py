@@ -18,6 +18,10 @@ single lowered module covers all W-A-KV rows of paper Table 1:
   prefill_*_b{4,8}_t{16,64}  (B slots, T tokens/slot, per-slot pos +
                          n_valid) -> last-valid logits    batched prompt
                          prefill: ceil(len/T) calls to first token
+  decode_*_paged_b{4,8}  (block-pool cache (L, n_blocks, bs, H, dh) +
+                         per-slot block table) -> logits  paged KV serving:
+                         memory scales with tokens in flight, not slots
+  prefill_*_paged_b{4,8}_t16  paged twin of the prefill graphs
 
 The manifest records the exact input ABI (names, shapes, dtypes, order) for
 each artifact; rust/src/runtime asserts against it at load time.
@@ -47,6 +51,15 @@ DECODE_BATCHES = (4, 8)
 # Chunk sizes for the batched multi-token prefill artifacts: a prompt is
 # consumed in ceil(len/T) prefill calls instead of len decode calls.
 PREFILL_TS = (16, 64)
+# Paged KV cache: page granularity (tokens per physical block) and the
+# physical pool size per batched artifact. n_blocks = batch * max_seq / bs
+# makes the identity block table exactly memory-equivalent to the dense
+# cache (the rust scheduler can still admit against a smaller token budget
+# via `serve --kv-blocks`).
+KV_BLOCK_SIZE = 16
+# Chunk sizes lowered for the *paged* prefill artifacts (t16 only: the
+# paged serving path chunks at the page size).
+PREFILL_PAGED_TS = (16,)
 
 
 def to_hlo_text(lowered) -> str:
@@ -231,6 +244,79 @@ def build_artifacts(cfg: model_mod.Config):
             arts[f"prefill_nohad_b{batch}_t{t_chunk}"] = prefill_factory(True, False, batch, t_chunk)
             arts[f"prefill_had_b{batch}_t{t_chunk}"] = prefill_factory(True, True, batch, t_chunk)
 
+    # -- paged KV cache (block-pool) twins ---------------------------------
+    assert cfg.max_seq % KV_BLOCK_SIZE == 0
+    n_logical = cfg.max_seq // KV_BLOCK_SIZE
+
+    def decode_paged_factory(quant, had, batch):
+        n_blocks = batch * n_logical
+        cache_shape_p = (cfg.n_layers, n_blocks, KV_BLOCK_SIZE, cfg.n_heads, cfg.d_head)
+
+        def fn(*args):
+            params, rest = unpack(args)
+            if quant:
+                token, pos, table, ck, cv, qcfg = rest
+            else:
+                token, pos, table, ck, cv = rest
+                qcfg = None
+            return model_mod.decode_paged(
+                params, cfg, token, pos, table, ck, cv, qcfg=qcfg, had=had
+            )
+
+        specs = pspecs + [
+            _spec((batch,), jnp.int32),
+            _spec((batch,), jnp.int32),
+            _spec((batch, n_logical), jnp.int32),
+            _spec(cache_shape_p),
+            _spec(cache_shape_p),
+        ]
+        innames = names + ["token", "pos", "block_table", "cache_k", "cache_v"]
+        if quant:
+            specs.append(_spec((model_mod.QCFG_LEN,)))
+            innames.append("qcfg")
+        return fn, specs, innames, ["logits", "cache_k", "cache_v"]
+
+    def prefill_paged_factory(quant, had, batch, t_chunk):
+        n_blocks = batch * n_logical
+        cache_shape_p = (cfg.n_layers, n_blocks, KV_BLOCK_SIZE, cfg.n_heads, cfg.d_head)
+
+        def fn(*args):
+            params, rest = unpack(args)
+            if quant:
+                tokens, pos, n_valid, table, ck, cv, qcfg = rest
+            else:
+                tokens, pos, n_valid, table, ck, cv = rest
+                qcfg = None
+            return model_mod.prefill_paged(
+                params, cfg, tokens, pos, n_valid, table, ck, cv, qcfg=qcfg, had=had
+            )
+
+        specs = pspecs + [
+            _spec((batch, t_chunk), jnp.int32),
+            _spec((batch,), jnp.int32),
+            _spec((batch,), jnp.int32),
+            _spec((batch, n_logical), jnp.int32),
+            _spec(cache_shape_p),
+            _spec(cache_shape_p),
+        ]
+        innames = names + ["tokens", "pos", "n_valid", "block_table", "cache_k", "cache_v"]
+        if quant:
+            specs.append(_spec((model_mod.QCFG_LEN,)))
+            innames.append("qcfg")
+        return fn, specs, innames, ["logits", "cache_k", "cache_v"]
+
+    for batch in DECODE_BATCHES:
+        arts[f"decode_fp_paged_b{batch}"] = decode_paged_factory(False, False, batch)
+        arts[f"decode_nohad_paged_b{batch}"] = decode_paged_factory(True, False, batch)
+        arts[f"decode_had_paged_b{batch}"] = decode_paged_factory(True, True, batch)
+        for t_chunk in PREFILL_PAGED_TS:
+            arts[f"prefill_fp_paged_b{batch}_t{t_chunk}"] = prefill_paged_factory(
+                False, False, batch, t_chunk)
+            arts[f"prefill_nohad_paged_b{batch}_t{t_chunk}"] = prefill_paged_factory(
+                True, False, batch, t_chunk)
+            arts[f"prefill_had_paged_b{batch}_t{t_chunk}"] = prefill_paged_factory(
+                True, True, batch, t_chunk)
+
     return arts
 
 
@@ -268,6 +354,12 @@ def main():
             "cayley": [CAYLEY_B, CAYLEY_S], "decode_batch": DECODE_B,
             "decode_batches": list(DECODE_BATCHES),
             "prefill_ts": list(PREFILL_TS),
+            # Paged KV cache: page size in tokens and physical pool size per
+            # batched paged artifact (n_blocks = batch * max_seq / bs).
+            "kv_block_size": KV_BLOCK_SIZE,
+            "kv_blocks": {str(b): b * (cfg.max_seq // KV_BLOCK_SIZE)
+                          for b in DECODE_BATCHES},
+            "prefill_paged_ts": list(PREFILL_PAGED_TS),
         }
         for aname, (fn, specs, innames, outnames) in arts.items():
             if only and aname not in only:

@@ -574,6 +574,223 @@ def prefill_batched(params, cfg: Config, tokens, pos0, n_valid, cache_k, cache_v
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (block-pool serving path)
+# ---------------------------------------------------------------------------
+#
+# The dense decode/prefill graphs above address the cache as
+# (L, B, max_seq, H, dh): every slot owns a full max_seq region, so resident
+# KV memory scales with slots x max_seq no matter how short the requests
+# are. The paged twins below address a *block pool* instead:
+#
+#   cache_k/v: (L, n_blocks, block_size, H, dh)   physical pages
+#   block_table: (B, max_seq // block_size) int32  logical -> physical
+#
+# Each slot's logical cache is the concatenation of its table's physical
+# blocks; position p lives at (block_table[b, p // bs], p % bs). The rust
+# scheduler (rust/src/serve/blocks.rs) allocates pages lazily and admits by
+# free-page token budget, so memory scales with tokens in flight. Table
+# entries >= n_blocks mark unallocated/inactive pages: scatter writes there
+# are dropped (mode="drop") and gathers are clipped — garbage read through a
+# clipped entry is unreachable anyway because attention is masked to
+# `idx <= pos`, which never passes the allocated prefix.
+#
+# With the identity table (block_table[b, j] = b * (max_seq // bs) + j and
+# n_blocks = B * max_seq // bs) the gathered logical view *is* the dense
+# cache, element for element, so logits and (reshaped) caches are bit-equal
+# to the dense graphs — tested in test_model.py.
+
+
+def _paged_gather(cache_layer, block_table, n_blocks):
+    """Logical per-slot view of one layer's physical pages.
+
+    cache_layer: (n_blocks, bs, H, dh); block_table: (B, n_logical) ->
+    (B, n_logical * bs, H, dh). Out-of-range entries are clipped (the mask
+    keeps whatever they alias unreachable)."""
+    safe = jnp.clip(block_table, 0, n_blocks - 1)
+    g = cache_layer[safe]  # (B, n_logical, bs, H, dh)
+    b, nl, bs = g.shape[0], g.shape[1], g.shape[2]
+    return g.reshape(b, nl * bs, *g.shape[3:])
+
+
+def decode_paged(params, cfg: Config, token, pos, block_table, cache_k, cache_v,
+                 qcfg=None, had=False):
+    """One decode step over B slots with a paged (block-pool) KV cache.
+
+    Semantically identical to `decode_step_batched` — same per-slot RoPE,
+    same `idx <= pos` mask, same quant insertion points — but K/V are
+    scattered to / gathered from physical pages through `block_table`.
+
+    token: (B,) int32; pos: (B,) int32.
+    block_table: (B, max_seq // block_size) int32; entries >= n_blocks mark
+        unallocated pages (writes dropped, reads clipped).
+    cache_k/v: (L, n_blocks, block_size, H, dh).
+    Returns (logits (B, V), new_cache_k, new_cache_v).
+    """
+    B = token.shape[0]
+    n_blocks, block_size = cache_k.shape[1], cache_k.shape[2]
+    n_logical = block_table.shape[1]
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params["emb"][token]  # (B, D)
+    half = dh // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    idx = jnp.arange(n_logical * block_size)
+    attend = (idx[None, :] <= pos[:, None]).astype(jnp.float32)  # (B, max_seq)
+    neg = jnp.asarray(-1e9, jnp.float32)
+    # Physical write target of position `pos` per slot.
+    blk = jnp.take_along_axis(
+        block_table, jnp.clip(pos // block_size, 0, n_logical - 1)[:, None], axis=1
+    )[:, 0]
+    off = pos % block_size
+
+    def rope1(t):
+        tr = t.reshape(B, h, dh // 2, 2)
+        t0, t1 = tr[..., 0], tr[..., 1]
+        c = cos[:, None, :]
+        sn = sin[:, None, :]
+        y0 = t0 * c - t1 * sn
+        y1 = t0 * sn + t1 * c
+        return jnp.stack([y0, y1], axis=-1).reshape(B, h, dh)
+
+    def aq(t):
+        return _aq(t, qcfg) if qcfg is not None else t
+
+    def kvq(t):
+        return _kvq(t, qcfg) if qcfg is not None else t
+
+    def wq(t):
+        return _wq(t, qcfg) if qcfg is not None else t
+
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        hsrc = rmsnorm(x, params[p + "attn_norm"])
+        hq = aq(hsrc)
+        q = (hq @ wq(params[p + "wq"])).reshape(B, h, dh)
+        k = (hq @ wq(params[p + "wk"])).reshape(B, h, dh)
+        v = (hq @ wq(params[p + "wv"])).reshape(B, h, dh)
+        q = rope1(q)
+        k = rope1(k)
+        if had:
+            q = fwht_diff(q)
+            k = fwht_diff(k)
+        k = kvq(k)
+        v = kvq(v)
+        cache_k = cache_k.at[i, blk, off].set(k, mode="drop")
+        cache_v = cache_v.at[i, blk, off].set(v, mode="drop")
+        ck = _paged_gather(cache_k[i], block_table, n_blocks)  # (B, max_seq, h, dh)
+        cv = _paged_gather(cache_v[i], block_table, n_blocks)
+        att = jnp.einsum("bhd,bkhd->bhk", q, ck) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        att = jnp.where(attend[:, None, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhk,bkhd->bhd", att, cv).reshape(B, h * dh)
+        x = x + aq(o) @ wq(params[p + "wo"])
+
+        h2 = rmsnorm(x, params[p + "ffn_norm"])
+        h2q = aq(h2)
+        m = jax.nn.silu(h2q @ wq(params[p + "wgate"])) * (h2q @ wq(params[p + "wup"]))
+        if had:
+            m = fwht_diff(m)
+        x = x + aq(m) @ wq(params[p + "wdown"])
+
+    hf = rmsnorm(x, params["final_norm"])
+    logits = aq(hf) @ wq(params["head"])
+    return logits, cache_k, cache_v
+
+
+def prefill_paged(params, cfg: Config, tokens, pos0, n_valid, block_table,
+                  cache_k, cache_v, qcfg=None, had=False):
+    """Batched multi-token prefill over a paged (block-pool) KV cache.
+
+    Semantically identical to `prefill_batched` (same intra-chunk causal
+    mask, padding rows never written) with K/V scattered to physical pages
+    through `block_table`; a chunk may span several pages.
+
+    tokens: (B, T) int32; pos0/n_valid: (B,) int32.
+    block_table: (B, max_seq // block_size) int32 (>= n_blocks = hole).
+    cache_k/v: (L, n_blocks, block_size, H, dh).
+    Returns (logits (B, V) at each slot's last valid position,
+             new_cache_k, new_cache_v).
+    """
+    B, T = tokens.shape
+    n_blocks, block_size = cache_k.shape[1], cache_k.shape[2]
+    n_logical = block_table.shape[1]
+    h, dh = cfg.n_heads, cfg.d_head
+    x = params["emb"][tokens]  # (B, T, D)
+    half = dh // 2
+    freqs = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos_bt = pos0[:, None] + jnp.arange(T, dtype=jnp.int32)[None, :]  # (B, T)
+    ang = pos_bt.astype(jnp.float32)[..., None] * freqs[None, None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    valid = jnp.arange(T, dtype=jnp.int32)[None, :] < n_valid[:, None]  # (B, T)
+    # Physical write target per chunk row; invalid rows are forced out of
+    # range and dropped, exactly like the dense prefill's write_pos.
+    blk = jnp.take_along_axis(
+        block_table, jnp.clip(pos_bt // block_size, 0, n_logical - 1), axis=1
+    )  # (B, T)
+    blk = jnp.where(valid, blk, n_blocks)
+    off = pos_bt % block_size
+    idx = jnp.arange(n_logical * block_size)
+    attend = (idx[None, None, :] <= pos_bt[:, :, None]).astype(jnp.float32)
+    neg = jnp.asarray(-1e9, jnp.float32)
+
+    def ropeT(t):
+        tr = t.reshape(B, T, h, dh // 2, 2)
+        t0, t1 = tr[..., 0], tr[..., 1]
+        c = cos[:, :, None, :]
+        sn = sin[:, :, None, :]
+        y0 = t0 * c - t1 * sn
+        y1 = t0 * sn + t1 * c
+        return jnp.stack([y0, y1], axis=-1).reshape(B, T, h, dh)
+
+    def aq(t):
+        return _aq(t, qcfg) if qcfg is not None else t
+
+    def kvq(t):
+        return _kvq(t, qcfg) if qcfg is not None else t
+
+    def wq(t):
+        return _wq(t, qcfg) if qcfg is not None else t
+
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        hsrc = rmsnorm(x, params[p + "attn_norm"])
+        hq = aq(hsrc)
+        q = (hq @ wq(params[p + "wq"])).reshape(B, T, h, dh)
+        k = (hq @ wq(params[p + "wk"])).reshape(B, T, h, dh)
+        v = (hq @ wq(params[p + "wv"])).reshape(B, T, h, dh)
+        q = ropeT(q)
+        k = ropeT(k)
+        if had:
+            q = fwht_diff(q)
+            k = fwht_diff(k)
+        k = kvq(k)
+        v = kvq(v)
+        cache_k = cache_k.at[i, blk, off].set(k, mode="drop")
+        cache_v = cache_v.at[i, blk, off].set(v, mode="drop")
+        ck = _paged_gather(cache_k[i], block_table, n_blocks)  # (B, max_seq, h, dh)
+        cv = _paged_gather(cache_v[i], block_table, n_blocks)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, ck) / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        att = jnp.where(attend[:, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, cv).reshape(B, T, h * dh)
+        x = x + aq(o) @ wq(params[p + "wo"])
+
+        h2 = rmsnorm(x, params[p + "ffn_norm"])
+        h2q = aq(h2)
+        m = jax.nn.silu(h2q @ wq(params[p + "wgate"])) * (h2q @ wq(params[p + "wup"]))
+        if had:
+            m = fwht_diff(m)
+        x = x + aq(m) @ wq(params[p + "wdown"])
+
+    hf = rmsnorm(x, params["final_norm"])
+    logits_all = aq(hf) @ wq(params["head"])  # (B, T, V)
+    last = jnp.clip(n_valid - 1, 0, T - 1)
+    logits = jnp.take_along_axis(logits_all, last[:, None, None], axis=1)[:, 0, :]
+    return logits, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
 # Initialization (with planted outlier basis — DESIGN.md §3)
 # ---------------------------------------------------------------------------
 

@@ -81,6 +81,17 @@ def test_aot_builds_all_artifact_specs():
                 f"prefill_nohad_b{b}_t{t}",
                 f"prefill_had_b{b}_t{t}",
             }
+        # Paged (block-pool) twins.
+        expected |= {
+            f"decode_fp_paged_b{b}", f"decode_nohad_paged_b{b}",
+            f"decode_had_paged_b{b}",
+        }
+        for t in aot.PREFILL_PAGED_TS:
+            expected |= {
+                f"prefill_fp_paged_b{b}_t{t}",
+                f"prefill_nohad_paged_b{b}_t{t}",
+                f"prefill_had_paged_b{b}_t{t}",
+            }
     assert set(arts) == expected
     # Input ABI: params first (in order), extras after.
     names = model_mod.param_order(cfg)
@@ -116,6 +127,30 @@ def test_aot_builds_all_artifact_specs():
             assert outnames == ["logits", "cache_k", "cache_v"]
             _, _, innames_fp, _ = arts[f"prefill_fp_b{b}_t{t}"]
             assert "qcfg" not in innames_fp
+    # Paged ABI: block-pool cache (L, n_blocks, bs, H, dh) with a per-slot
+    # block table; n_blocks = b * max_seq / bs so the identity table is
+    # exactly memory-equivalent to the dense cache.
+    n_logical = cfg.max_seq // aot.KV_BLOCK_SIZE
+    for b in aot.DECODE_BATCHES:
+        _, specs, innames, outnames = arts[f"decode_nohad_paged_b{b}"]
+        byname = dict(zip(innames, specs))
+        assert byname["token"].shape == (b,)
+        assert byname["pos"].shape == (b,)
+        assert byname["block_table"].shape == (b, n_logical)
+        assert byname["cache_k"].shape == (
+            cfg.n_layers, b * n_logical, aot.KV_BLOCK_SIZE, cfg.n_heads, cfg.d_head
+        )
+        assert outnames == ["logits", "cache_k", "cache_v"]
+        for t in aot.PREFILL_PAGED_TS:
+            _, specs, innames, _ = arts[f"prefill_had_paged_b{b}_t{t}"]
+            byname = dict(zip(innames, specs))
+            assert byname["tokens"].shape == (b, t)
+            assert byname["n_valid"].shape == (b,)
+            assert byname["block_table"].shape == (b, n_logical)
+            assert byname["cache_k"].shape == (
+                cfg.n_layers, b * n_logical, aot.KV_BLOCK_SIZE, cfg.n_heads,
+                cfg.d_head
+            )
 
 
 def test_aot_lowering_produces_hlo_text():

@@ -403,6 +403,212 @@ def test_prefill_staggered_positions_and_partial_chunks():
         assert np.all(cvp_np[:, b, end:] == 0.0), f"slot {b} cache_v leaked"
 
 
+# ---------------------------------------------------------------------------
+# Paged KV cache (block-pool serving path)
+# ---------------------------------------------------------------------------
+
+BS = 8  # block size for paged tests; CFG.max_seq = 32 -> 4 logical blocks
+
+
+def _paged_caches(n_blocks, seed=None):
+    shape = (CFG.n_layers, n_blocks, BS, CFG.n_heads, CFG.d_head)
+    if seed is None:
+        return jnp.zeros(shape), jnp.zeros(shape)
+    rs = np.random.RandomState(seed)
+    return (jnp.asarray(rs.randn(*shape).astype(np.float32)),
+            jnp.asarray(rs.randn(*shape).astype(np.float32)))
+
+
+def _identity_table(b):
+    nl = CFG.max_seq // BS
+    return jnp.asarray(
+        [[s * nl + j for j in range(nl)] for s in range(b)], jnp.int32
+    )
+
+
+def _dense_view(paged_cache, b):
+    """Reshape a (L, B*nl, BS, H, dh) pool under the identity table into the
+    dense (L, B, max_seq, H, dh) layout."""
+    a = np.asarray(paged_cache)
+    L = a.shape[0]
+    return a.reshape(L, b, CFG.max_seq, CFG.n_heads, CFG.d_head)
+
+
+def test_decode_paged_identity_table_bitexact_fp():
+    # With the identity table the paged graph IS the dense graph: logits and
+    # caches (reshaped) must match bit for bit, step after step.
+    params = make_params()
+    B, S = 3, 8
+    t = tokens(31, b=B, s=S)
+    ck_d, cv_d = _zero_caches(B)
+    ck_p, cv_p = _paged_caches(B * (CFG.max_seq // BS))
+    table = _identity_table(B)
+    for pos in range(S):
+        pv = jnp.full((B,), pos, jnp.int32)
+        lg_d, ck_d, cv_d = model_mod.decode_step_batched(
+            params, CFG, t[:, pos], pv, ck_d, cv_d
+        )
+        lg_p, ck_p, cv_p = model_mod.decode_paged(
+            params, CFG, t[:, pos], pv, table, ck_p, cv_p
+        )
+        assert np.array_equal(np.asarray(lg_p), np.asarray(lg_d)), f"pos {pos}"
+        assert np.array_equal(_dense_view(ck_p, B), np.asarray(ck_d))
+        assert np.array_equal(_dense_view(cv_p, B), np.asarray(cv_d))
+
+
+@pytest.mark.parametrize("had", [False, True])
+def test_decode_paged_identity_table_quant(had):
+    params = make_params()
+    qcfg = model_mod.qcfg_vector(a_bits=8, kv_bits=8)
+    B, S = 2, 6
+    t = tokens(37, b=B, s=S)
+    ck_d, cv_d = _zero_caches(B)
+    ck_p, cv_p = _paged_caches(B * (CFG.max_seq // BS))
+    table = _identity_table(B)
+    for pos in range(S):
+        pv = jnp.full((B,), pos, jnp.int32)
+        lg_d, ck_d, cv_d = model_mod.decode_step_batched(
+            params, CFG, t[:, pos], pv, ck_d, cv_d, qcfg=qcfg, had=had
+        )
+        lg_p, ck_p, cv_p = model_mod.decode_paged(
+            params, CFG, t[:, pos], pv, table, ck_p, cv_p, qcfg=qcfg, had=had
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg_p), np.asarray(lg_d), rtol=2e-3, atol=2e-3
+        )
+
+
+def test_decode_paged_scattered_table_matches_dense():
+    # A scrambled physical layout must not change the math: gathering the
+    # logical view restores the same operands, so logits stay bit-equal to
+    # the dense path even though every page lives somewhere else.
+    params = make_params()
+    B, S = 2, 8
+    nl = CFG.max_seq // BS
+    n_blocks = B * nl + 3  # spare pages, never referenced
+    t = tokens(41, b=B, s=S)
+    ck_d, cv_d = _zero_caches(B)
+    # Poison the pool: untouched garbage everywhere, tables pick scattered
+    # pages out of it.
+    ck_p, cv_p = _paged_caches(n_blocks, seed=3)
+    perm = np.random.RandomState(9).permutation(B * nl)
+    table = jnp.asarray(perm.reshape(B, nl), jnp.int32)
+    for pos in range(S):
+        pv = jnp.full((B,), pos, jnp.int32)
+        lg_d, ck_d, cv_d = model_mod.decode_step_batched(
+            params, CFG, t[:, pos], pv, ck_d, cv_d
+        )
+        lg_p, ck_p, cv_p = model_mod.decode_paged(
+            params, CFG, t[:, pos], pv, table, ck_p, cv_p
+        )
+        assert np.array_equal(np.asarray(lg_p), np.asarray(lg_d)), f"pos {pos}"
+    # Written pages hold exactly the dense cache rows, page by page.
+    ck_p_np, ck_d_np = np.asarray(ck_p), np.asarray(ck_d)
+    for b in range(B):
+        for j in range((S + BS - 1) // BS):
+            phys = int(table[b, j])
+            n = min(BS, S - j * BS)
+            assert np.array_equal(
+                ck_p_np[:, phys, :n], ck_d_np[:, b, j * BS:j * BS + n]
+            ), f"slot {b} page {j}"
+
+
+def test_decode_paged_staggered_positions_and_hole_safety():
+    # Slots at independent positions (mid-flight join) with unallocated
+    # table entries marked by the out-of-range sentinel: writes through a
+    # hole are dropped, and the sentinel pages never leak into the logits.
+    params = make_params()
+    B, S = 2, 6
+    nl = CFG.max_seq // BS
+    n_blocks = B * nl
+    t = tokens(43, b=B, s=S)
+    sentinel = n_blocks  # >= n_blocks marks a hole
+    # Slot 0 owns pages [0..nl); slot 1 only its first page — the rest holes.
+    table = np.full((B, nl), sentinel, np.int32)
+    table[0, :] = np.arange(nl)
+    table[1, 0] = nl  # one allocated page (S=6 <= BS=8 fits in it)
+    table = jnp.asarray(table)
+    ck_p, cv_p = _paged_caches(n_blocks, seed=11)
+    ck1, cv1 = _zero_caches(1)
+    lag = 2
+    paged_logits1 = []
+    ref_logits1 = []
+    for step in range(S + lag):
+        pos0 = min(step, S - 1)
+        pos1 = step - lag
+        tok = jnp.asarray([t[0, pos0], t[1, max(pos1, 0)]], jnp.int32)
+        pos = jnp.asarray([pos0, max(pos1, 0)], jnp.int32)
+        lg, ck_p, cv_p = model_mod.decode_paged(
+            params, CFG, tok, pos, table, ck_p, cv_p
+        )
+        if pos1 >= 0:
+            paged_logits1.append(lg[1])
+    for pos in range(S):
+        lg, ck1, cv1 = model_mod.decode_step(
+            params, CFG, t[1:2, pos], jnp.asarray(pos, jnp.int32), ck1, cv1
+        )
+        ref_logits1.append(lg[0])
+    np.testing.assert_allclose(
+        jnp.stack(paged_logits1), jnp.stack(ref_logits1), rtol=2e-3, atol=2e-3
+    )
+
+
+def test_prefill_paged_identity_table_bitexact_fp():
+    params = make_params()
+    B, T = 4, 8
+    t = tokens(47, b=B, s=T)
+    ck_d, cv_d = _zero_caches(B)
+    ck_p, cv_p = _paged_caches(B * (CFG.max_seq // BS))
+    table = _identity_table(B)
+    zeros, full = jnp.zeros((B,), jnp.int32), jnp.full((B,), T, jnp.int32)
+    lg_d, ck_d, cv_d = model_mod.prefill_batched(
+        params, CFG, t, zeros, full, ck_d, cv_d
+    )
+    lg_p, ck_p, cv_p = model_mod.prefill_paged(
+        params, CFG, t, zeros, full, table, ck_p, cv_p
+    )
+    assert np.array_equal(np.asarray(lg_p), np.asarray(lg_d))
+    assert np.array_equal(_dense_view(ck_p, B), np.asarray(ck_d))
+    assert np.array_equal(_dense_view(cv_p, B), np.asarray(cv_d))
+
+
+def test_prefill_paged_ragged_chunks_cross_page_boundaries():
+    # Ragged n_valid with pos0 > 0 so chunks straddle page boundaries; each
+    # slot must match the dense prefill, and pages of inactive slots (or
+    # past the written prefix) must come back untouched.
+    params = make_params()
+    B, T = 4, 8
+    npre = 3
+    pre = tokens(53, b=B, s=npre)
+    t = tokens(59, b=B, s=T)
+    n_valid = jnp.asarray([T, 5, 0, 3], jnp.int32)
+    ck_d, cv_d = _zero_caches(B)
+    for step in range(npre):
+        _, ck_d, cv_d = model_mod.decode_step_batched(
+            params, CFG, pre[:, step], jnp.full((B,), step, jnp.int32), ck_d, cv_d
+        )
+    n_blocks = B * (CFG.max_seq // BS)
+    table = _identity_table(B)
+    ck_p, cv_p = (
+        jnp.asarray(_dense_view(c, B).reshape(
+            CFG.n_layers, n_blocks, BS, CFG.n_heads, CFG.d_head
+        )) for c in (ck_d, cv_d)
+    )
+    pos0 = jnp.full((B,), npre, jnp.int32)
+    lg_d, ck_d, cv_d = model_mod.prefill_batched(
+        params, CFG, t, pos0, n_valid, ck_d, cv_d
+    )
+    lg_p, ck_p, cv_p = model_mod.prefill_paged(
+        params, CFG, t, pos0, n_valid, table, ck_p, cv_p
+    )
+    for b in range(B):
+        if int(n_valid[b]) == 0:
+            continue  # inactive slot: dense returns garbage logits there too
+        assert np.array_equal(np.asarray(lg_p[b]), np.asarray(lg_d[b])), f"slot {b}"
+    assert np.array_equal(_dense_view(ck_p, B), np.asarray(ck_d))
+    assert np.array_equal(_dense_view(cv_p, B), np.asarray(cv_d))
+
+
 def test_prefill_inactive_slot_untouched():
     # n_valid = 0 marks an inactive slot: its cache must come back
     # bit-identical (padding rows are scatter-dropped, never written).

@@ -48,6 +48,22 @@ fn main() {
         println!("{}  ({:.1} Melem/s)", r.report(), r.per_second((rows * d) as f64) / 1e6);
     }
 
+    // Fake-quant (per-output-channel weight grids): the two-pass row-major
+    // column path — no strided gather/scatter copies.
+    for (rows, d) in [(512usize, 128usize), (512, 512)] {
+        let x = randn(&[rows, d], 3);
+        let spec = QuantSpec {
+            bits: 4.0,
+            symmetric: true,
+            clip_ratio: 1.0,
+            granularity: Granularity::PerColumn,
+        };
+        let r = bench(&format!("fake_quant percol {rows}x{d} 4b"), 3, 100, || {
+            fake_quant(&x, &spec)
+        });
+        println!("{}  ({:.1} Melem/s)", r.report(), r.per_second((rows * d) as f64) / 1e6);
+    }
+
     // Matmul at rotation-merge sizes.
     for n in [128usize, 256] {
         let a = randn(&[n, n], 4);

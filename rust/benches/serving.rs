@@ -8,24 +8,44 @@
 //! engine calls to first token) and the legacy token-by-token loop (64
 //! calls) — the `ttft` object in the JSON.
 //!
+//! Two more sections:
+//!
+//! * `paged` — paged (block-pool) vs dense KV cache at an *equal memory
+//!   budget* on a mixed-length trace. Resident KV bytes for a pool are
+//!   `blocks x block_size x 2 (K,V) x n_layers x n_heads x d_head x
+//!   kv_bits/8` (`serve::blocks::kv_memory_bytes`); the dense comparator
+//!   gets the same token budget as `budget_tokens / max_seq` full slots.
+//!   Token-budget admission sustains several times the concurrent requests
+//!   (the `concurrency_x` field; the acceptance bar is >= 2x) with
+//!   bit-identical generations — checked request by request, enforced by
+//!   the sim harness in CI.
+//! * `sampler` — per-draw top-k / top-p cost before (full vocabulary sort,
+//!   the pre-PR implementation, inlined here as the baseline) and after
+//!   (partial selection via `select_nth_unstable_by`).
+//!
 //! Engine selection: the PJRT engine is used when `make artifacts` has run
 //! (batch 1 via `decode_nohad`, batch N via `decode_nohad_b{N}`, prefill
 //! via `prefill_nohad_b{N}_t16`); otherwise the deterministic mock engine
 //! benches the scheduler itself, so this target always produces numbers.
 //! TTFT rows come in engine-coherent pairs: if either leg of a
 //! prefill-vs-loop comparison can't run on PJRT (batch 1 has no prefill
-//! artifact; aot emits b{4,8} only), both legs run on the mock.
+//! artifact; aot emits b{4,8} only), both legs run on the mock. The paged
+//! and sampler sections always run on the mock/CPU so CI can track them
+//! (`SPINQUANT_BENCH_QUICK=1` shrinks every section for the CI quick pass).
 //!
 //! Run: cargo bench --bench serving
 
+use spinquant::bench::bench;
 use spinquant::eval::QcfgVec;
 use spinquant::model::{Manifest, Weights};
 use spinquant::report;
 use spinquant::runtime::Runtime;
 use spinquant::serve::{
-    DecodeVariant, GenRequest, MockEngine, PjrtEngine, Sampler, Scheduler, ServingMetrics,
+    blocks, DecodeVariant, GenRequest, MockEngine, PjrtEngine, Sampler, Scheduler,
+    ServingMetrics,
 };
 use spinquant::util::json::{self, Json};
+use spinquant::util::prng::Prng;
 
 const BATCHES: [usize; 3] = [1, 4, 8];
 const MODEL: &str = "sq-2m";
@@ -36,11 +56,30 @@ const TTFT_PROMPT_LEN: usize = 64;
 const TTFT_CHUNK: usize = 16;
 const TTFT_REQUESTS: usize = 16;
 const TTFT_MAX_NEW: usize = 8;
+// Paged sweep: sq-2m-shaped cache, a 2-dense-slot memory budget, 8 lanes.
+const PAGED_MAX_SEQ: usize = 128;
+const PAGED_BLOCK_SIZE: usize = 16;
+const PAGED_BUDGET_SLOTS: usize = 2; // dense slots the budget equals
+const PAGED_LANES: usize = 8;
+const PAGED_REQUESTS: usize = 48;
+
+/// CI quick mode: reduced request counts / iterations, same JSON shape.
+fn quick() -> bool {
+    std::env::var("SPINQUANT_BENCH_QUICK").map_or(false, |v| !v.is_empty() && v != "0")
+}
+
+fn scaled(n: usize) -> usize {
+    if quick() {
+        (n / 4).max(4)
+    } else {
+        n
+    }
+}
 
 /// The fixed workload: byte prompts of varying length, seeded top-k
 /// sampling so every engine sees the same request stream.
 fn workload() -> Vec<GenRequest> {
-    (0..N_REQUESTS)
+    (0..scaled(N_REQUESTS))
         .map(|i| {
             let len = 4 + (i % 6);
             let prompt: Vec<u8> = (0..len).map(|j| (32 + ((i * 17 + j * 5) % 90)) as u8).collect();
@@ -73,7 +112,7 @@ fn run_pjrt(manifest: &Manifest, rt: &Runtime, batch: usize) -> anyhow::Result<S
 
 /// Long-prompt workload: TTFT is dominated by prompt ingestion here.
 fn ttft_workload() -> Vec<GenRequest> {
-    (0..TTFT_REQUESTS)
+    (0..scaled(TTFT_REQUESTS))
         .map(|i| {
             let prompt: Vec<u8> = (0..TTFT_PROMPT_LEN)
                 .map(|j| (32 + ((i * 13 + j * 7) % 90)) as u8)
@@ -142,6 +181,218 @@ fn ttft_pair(
         run_mock_ttft(batch, TTFT_CHUNK).expect("mock engine"),
         run_mock_ttft(batch, 1).expect("mock engine"),
     )
+}
+
+// -- paged vs dense at an equal KV-memory budget -----------------------------
+
+/// Mixed-length trace: short chats to medium completions, 1..=4 pages per
+/// request, seeded samplers so the paged and dense runs are comparable
+/// request by request.
+fn paged_workload() -> Vec<GenRequest> {
+    (0..scaled(PAGED_REQUESTS))
+        .map(|i| {
+            let len = 4 + (i * 5) % 25; // 4..=28 prompt tokens
+            let prompt: Vec<u8> = (0..len).map(|j| (32 + ((i * 11 + j * 3) % 90)) as u8).collect();
+            let max_new = 6 + (i * 7) % 17; // 6..=22 generated tokens
+            GenRequest::sampled(&prompt, max_new, Sampler::top_k(8, 0.8), 3000 + i as u64)
+        })
+        .collect()
+}
+
+struct PagedLeg {
+    label: &'static str,
+    slots: usize,
+    metrics: ServingMetrics,
+    completions: Vec<(u64, Vec<u8>)>,
+}
+
+fn run_paged_leg(label: &'static str, paged: bool) -> PagedLeg {
+    let budget_blocks = PAGED_BUDGET_SLOTS * PAGED_MAX_SEQ / PAGED_BLOCK_SIZE;
+    let vocab = 256;
+    let (slots, engine) = if paged {
+        (
+            PAGED_LANES,
+            MockEngine::new(PAGED_LANES, PAGED_MAX_SEQ, vocab)
+                .with_block_pool(budget_blocks, PAGED_BLOCK_SIZE),
+        )
+    } else {
+        // Same memory: budget_tokens / max_seq full dense slots.
+        (PAGED_BUDGET_SLOTS, MockEngine::new(PAGED_BUDGET_SLOTS, PAGED_MAX_SEQ, vocab))
+    };
+    let mut sched = Scheduler::new(engine, scaled(PAGED_REQUESTS)).expect("scheduler");
+    let done = sched.serve_all(paged_workload()).expect("serve");
+    let mut completions: Vec<(u64, Vec<u8>)> =
+        done.into_iter().map(|c| (c.id, c.completion)).collect();
+    completions.sort();
+    PagedLeg { label, slots, metrics: sched.metrics, completions }
+}
+
+fn paged_sweep() -> Json {
+    let budget_blocks = PAGED_BUDGET_SLOTS * PAGED_MAX_SEQ / PAGED_BLOCK_SIZE;
+    let budget_tokens = budget_blocks * PAGED_BLOCK_SIZE;
+    let dense = run_paged_leg("dense", false);
+    let paged = run_paged_leg("paged", true);
+    let bit_identical = dense.completions == paged.completions;
+    let ratio = paged.metrics.mean_in_flight() / dense.metrics.mean_in_flight().max(1e-9);
+    println!();
+    println!(
+        "paged vs dense at {} KV tokens ({} pages x {}): sq-2m int4 KV = {} bytes resident",
+        budget_tokens,
+        budget_blocks,
+        PAGED_BLOCK_SIZE,
+        blocks::kv_memory_bytes(budget_blocks, PAGED_BLOCK_SIZE, 4, 4, 32, 4.0)
+    );
+    println!(
+        "{:<8} {:>6} {:>10} {:>14} {:>10} {:>10} {:>10}",
+        "path", "slots", "requests", "mean in-flight", "steps", "tok/s", "evicted"
+    );
+    for leg in [&dense, &paged] {
+        println!(
+            "{:<8} {:>6} {:>10} {:>14.2} {:>10} {:>10.1} {:>10}",
+            leg.label,
+            leg.slots,
+            leg.metrics.requests_completed,
+            leg.metrics.mean_in_flight(),
+            leg.metrics.step_us.len(),
+            leg.metrics.tokens_per_sec(),
+            leg.metrics.requests_evicted,
+        );
+    }
+    println!(
+        "concurrency {ratio:.2}x at equal memory; completions bit-identical: {bit_identical}"
+    );
+    let leg_json = |leg: &PagedLeg| {
+        json::obj(vec![
+            ("slots", json::num(leg.slots as f64)),
+            ("requests", json::num(leg.metrics.requests_completed as f64)),
+            ("mean_in_flight", json::num(leg.metrics.mean_in_flight())),
+            ("steps", json::num(leg.metrics.step_us.len() as f64)),
+            ("tokens_per_sec", json::num(leg.metrics.tokens_per_sec())),
+            ("evictions", json::num(leg.metrics.requests_evicted as f64)),
+            ("token_ms_p50", json::num(leg.metrics.token_ms_p50())),
+        ])
+    };
+    json::obj(vec![
+        (
+            "config",
+            json::obj(vec![
+                ("max_seq", json::num(PAGED_MAX_SEQ as f64)),
+                ("block_size", json::num(PAGED_BLOCK_SIZE as f64)),
+                ("budget_blocks", json::num(budget_blocks as f64)),
+                ("budget_tokens", json::num(budget_tokens as f64)),
+                ("requests", json::num(scaled(PAGED_REQUESTS) as f64)),
+                // Resident KV bytes at this budget for the sq-2m shape
+                // (L=4, H=4, dh=32): blocks x bs x 2 x L x H x dh x bits/8.
+                (
+                    "kv_bytes_int4",
+                    json::num(blocks::kv_memory_bytes(
+                        budget_blocks,
+                        PAGED_BLOCK_SIZE,
+                        4,
+                        4,
+                        32,
+                        4.0,
+                    ) as f64),
+                ),
+                (
+                    "kv_bytes_fp32",
+                    json::num(blocks::kv_memory_bytes(
+                        budget_blocks,
+                        PAGED_BLOCK_SIZE,
+                        4,
+                        4,
+                        32,
+                        32.0,
+                    ) as f64),
+                ),
+            ]),
+        ),
+        ("dense", leg_json(&dense)),
+        ("paged", leg_json(&paged)),
+        ("concurrency_x", json::num(ratio)),
+        ("bit_identical", Json::Bool(bit_identical)),
+    ])
+}
+
+// -- sampler cost: full-sort baseline vs partial selection -------------------
+
+/// The pre-PR sampler: full descending sort of the vocabulary every draw.
+/// Kept here as the "before" leg of the satellite perf fix.
+fn full_sort_sample(kind: &Sampler, logits: &[f32], rng: &mut Prng) -> usize {
+    use spinquant::serve::SamplerKind;
+    let mut idx: Vec<usize> = (0..logits.len()).filter(|&i| !logits[i].is_nan()).collect();
+    idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+    let m = logits[idx[0]];
+    let mut ws: Vec<f32> =
+        idx.iter().map(|&i| ((logits[i] - m) / kind.temperature).exp()).collect();
+    match kind.kind {
+        SamplerKind::TopK(k) => {
+            let k = k.clamp(1, idx.len());
+            idx.truncate(k);
+            ws.truncate(k);
+        }
+        SamplerKind::TopP(p) => {
+            let total: f32 = ws.iter().sum();
+            let target = p.clamp(0.0, 1.0) * total;
+            let mut cum = 0.0f32;
+            let mut cut = ws.len();
+            for (j, &w) in ws.iter().enumerate() {
+                cum += w;
+                if cum >= target {
+                    cut = j + 1;
+                    break;
+                }
+            }
+            idx.truncate(cut);
+            ws.truncate(cut);
+        }
+        _ => {}
+    }
+    let sum: f32 = ws.iter().sum();
+    if sum <= 0.0 || !sum.is_finite() {
+        return idx[0];
+    }
+    let mut r = rng.uniform() * sum;
+    for (j, &w) in ws.iter().enumerate() {
+        if r < w {
+            return idx[j];
+        }
+        r -= w;
+    }
+    *idx.last().unwrap()
+}
+
+fn sampler_cost() -> Json {
+    let iters = if quick() { 400 } else { 4000 };
+    println!();
+    println!("per-draw sampler cost (before = full vocab sort, after = partial selection):");
+    let mut rows: Vec<(String, Json)> = Vec::new();
+    for vocab in [256usize, 4096] {
+        let mut p = Prng::new(0x5a);
+        let logits: Vec<f32> = (0..vocab).map(|_| p.normal() * 3.0).collect();
+        for (name, s) in [("top_k8", Sampler::top_k(8, 0.8)), ("top_p95", Sampler::top_p(0.95, 0.8))]
+        {
+            let mut rng = Prng::new(1);
+            let before = bench(&format!("{name} v{vocab} full_sort"), 20, iters, || {
+                full_sort_sample(&s, &logits, &mut rng)
+            });
+            let mut rng = Prng::new(1);
+            let after = bench(&format!("{name} v{vocab} partial"), 20, iters, || {
+                s.sample(&logits, &mut rng)
+            });
+            println!("{}", before.report());
+            println!("{}", after.report());
+            rows.push((
+                format!("{name}_v{vocab}"),
+                json::obj(vec![
+                    ("full_sort_us", json::num(before.mean_us)),
+                    ("partial_us", json::num(after.mean_us)),
+                    ("speedup_x", json::num(before.mean_us / after.mean_us.max(1e-9))),
+                ]),
+            ));
+        }
+    }
+    json::obj(rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
 }
 
 fn main() {
@@ -234,13 +485,19 @@ fn main() {
         Some(_) => "mixed",
         None => "none",
     };
+    let paged = paged_sweep();
+    let sampler = sampler_cost();
+
     let out = json::obj(vec![
         ("bench", json::s("serving")),
         ("model", json::s(MODEL)),
         ("engine", json::s(engine_label)),
-        ("requests", json::num(N_REQUESTS as f64)),
+        ("quick", Json::Bool(quick())),
+        ("requests", json::num(scaled(N_REQUESTS) as f64)),
         ("max_new_tokens", json::num(MAX_NEW as f64)),
         ("batches", json::obj(rows.iter().map(|(k, v)| (*k, v.clone())).collect())),
+        ("paged", paged),
+        ("sampler", sampler),
         (
             "ttft",
             json::obj(
@@ -249,7 +506,7 @@ fn main() {
                     json::obj(vec![
                         ("prompt_len", json::num(TTFT_PROMPT_LEN as f64)),
                         ("chunk", json::num(TTFT_CHUNK as f64)),
-                        ("requests", json::num(TTFT_REQUESTS as f64)),
+                        ("requests", json::num(scaled(TTFT_REQUESTS) as f64)),
                         ("max_new_tokens", json::num(TTFT_MAX_NEW as f64)),
                     ]),
                 ))

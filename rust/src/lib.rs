@@ -14,12 +14,17 @@
 //!   QuaRot, LLM-QAT), a PJRT runtime that loads the AOT artifacts, a
 //!   batched evaluation engine (perplexity + zero-shot tasks), a
 //!   continuous-batching serving engine (`serve`: slot-based KV-cache
-//!   manager, admission scheduler with batched multi-token prompt prefill
+//!   manager, a paged KV-cache block pool (`serve::blocks`) with
+//!   token-budget admission and evict-to-queue so resident cache memory
+//!   scales with tokens in flight rather than `slots x max_seq`,
+//!   admission scheduler with batched multi-token prompt prefill
 //!   (`ceil(len/T)` calls to first token) and mid-flight join, seeded
-//!   greedy/temperature/top-k/top-p samplers, and serving metrics —
-//!   TTFT from enqueue, latency percentiles, tokens/sec), the seeded
-//!   scheduler-simulation oracle (`testing::sim`), and the benchmark
-//!   harnesses that regenerate every table and figure of the paper.
+//!   greedy/temperature/top-k/top-p samplers with partial candidate
+//!   selection (no full-vocabulary sorts on the hot path), and serving
+//!   metrics — TTFT from enqueue, latency percentiles, tokens/sec,
+//!   evictions), the seeded scheduler-simulation oracle (`testing::sim`,
+//!   dense and paged), and the benchmark harnesses that regenerate every
+//!   table and figure of the paper.
 //!
 //! Python never runs on the request path: `make artifacts` runs once, then
 //! the `spinquant` binary is self-contained.

@@ -11,7 +11,11 @@
 //!                `--max-new-tokens`, `--prompt "a|b|c"` (one request per
 //!                `|`-separated prompt), `--prefill-chunk T` (batched
 //!                multi-token prefill: ceil(len/T) engine calls to first
-//!                token; 1 = token-by-token loop); prints completions +
+//!                token; 1 = token-by-token loop), `--block-size N`
+//!                (paged KV cache via the `decode_*_paged_b{B}` artifacts:
+//!                memory scales with tokens in flight, admission by
+//!                free-page token budget) + `--kv-blocks M` (restrict the
+//!                page budget to M pages); prints completions +
 //!                TTFT / latency-percentile / tokens-per-sec metrics
 //!   bench-table  regenerate one paper table/figure (see --id list)
 //!   selftest     end-to-end smoke: artifacts load + tiny eval
@@ -47,6 +51,7 @@ fn usage() -> ! {
          serve:        --batch 1|4|8 --sampler greedy|temperature|top-k|top-p --temperature 0.8\n\
                        --top-k 40 --top-p 0.95 --seed 0 --max-new-tokens 48 --prompt \"a|b|c\"\n\
                        --prefill-chunk 16|64 (batched prompt prefill; 1 = per-token loop)\n\
+                       --block-size 16 (paged KV cache) --kv-blocks M (page budget)\n\
          bench-table:  --id table1|table2|table3|table4|table5|table6|table10|table11|table12|table13|fig2|fig3|fig4|fig7|fig8 [--models a,b] [--out EXPERIMENTS.md]"
     );
     std::process::exit(2);
@@ -266,23 +271,68 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
         .map(|p| p.as_bytes().to_vec())
         .collect();
 
-    // Load the batched artifact when batch > 1; fall back to batch 1 when
-    // the artifact set predates continuous batching.
-    let exe = match rt.load(&manifest, &cfg.model, &variant.artifact_batched(batch)) {
-        Ok(e) => e,
-        Err(e) if batch > 1 => {
-            eprintln!(
-                "note: no {} artifact ({e:#}); falling back to batch 1 \
-                 (re-run `make artifacts` for batched decode)",
-                variant.artifact_batched(batch)
-            );
-            batch = 1;
-            rt.load(&manifest, &cfg.model, variant.artifact())?
+    // Paged (block-pool) KV cache: `--block-size N` switches to the
+    // `decode_*_paged_b{B}` artifacts (page granularity is baked into the
+    // artifact; N must match), and `--kv-blocks M` restricts the admission
+    // budget to M pages of KV memory (default: the artifact's whole pool).
+    let block_size: usize =
+        get_extra(extra, "block-size").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let kv_blocks: usize =
+        get_extra(extra, "kv-blocks").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    // A page budget only makes sense on the paged path, so --kv-blocks
+    // implies it (page granularity then comes from the artifact).
+    let mut paged = block_size > 0 || kv_blocks > 0;
+    if paged && batch <= 1 {
+        eprintln!("note: paged serving needs --batch > 1 (no b1 paged artifact); serving dense");
+        paged = false;
+    }
+
+    // Load the decode artifact: paged when requested (dense fallback), and
+    // batch-1 fallback when the artifact set predates continuous batching.
+    let mut paged_exe = None;
+    if paged {
+        match rt.load(&manifest, &cfg.model, &variant.artifact_paged(batch)) {
+            Ok(e) => paged_exe = Some(e),
+            Err(e) => {
+                eprintln!(
+                    "note: cannot use {} ({e:#}); serving the dense KV cache \
+                     (re-run `make artifacts` for paged decode)",
+                    variant.artifact_paged(batch)
+                );
+                paged = false;
+            }
         }
-        Err(e) => return Err(e),
+    }
+    let exe = match paged_exe {
+        Some(e) => e,
+        None => match rt.load(&manifest, &cfg.model, &variant.artifact_batched(batch)) {
+            Ok(e) => e,
+            Err(e) if batch > 1 => {
+                eprintln!(
+                    "note: no {} artifact ({e:#}); falling back to batch 1 \
+                     (re-run `make artifacts` for batched decode)",
+                    variant.artifact_batched(batch)
+                );
+                batch = 1;
+                rt.load(&manifest, &cfg.model, variant.artifact())?
+            }
+            Err(e) => return Err(e),
+        },
     };
     let qcfg = if variant == serve::DecodeVariant::Fp { None } else { Some(qm.qcfg) };
     let mut engine = PjrtEngine::new(exe, &qm.weights, qcfg)?;
+    {
+        use spinquant::serve::DecodeEngine as _;
+        if paged && block_size > 0 {
+            let actual = engine.kv_block_size().unwrap_or(0);
+            if actual != block_size {
+                eprintln!(
+                    "note: artifact pages are {actual} tokens (--block-size {block_size} \
+                     is informational; the artifact's granularity wins)"
+                );
+            }
+        }
+    }
 
     // Batched multi-token prefill: a prompt costs ceil(len/chunk) engine
     // calls to first token instead of len. `--prefill-chunk 1` (or a
@@ -296,7 +346,11 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
     }
     if prefill_chunk > 1 {
         if batch > 1 {
-            let pname = variant.artifact_prefill(batch, prefill_chunk);
+            let pname = if paged {
+                variant.artifact_prefill_paged(batch, prefill_chunk)
+            } else {
+                variant.artifact_prefill(batch, prefill_chunk)
+            };
             match rt.load(&manifest, &cfg.model, &pname) {
                 Ok(pexe) => engine = engine.with_prefill(pexe, &qm.weights, qcfg)?,
                 Err(e) => {
@@ -323,16 +377,35 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
     }
     use spinquant::serve::DecodeEngine as _;
     let chunk_in_use = engine.prefill_chunk();
+    let pool_desc = match engine.kv_block_size() {
+        Some(bs) => {
+            let budget = if kv_blocks > 0 { kv_blocks } else { engine.kv_blocks() };
+            format!(", paged KV: {budget} pages x {bs} tokens")
+        }
+        None => String::new(),
+    };
     let mut sched = Scheduler::new(engine, 1024)?;
+    if kv_blocks > 0 {
+        if paged {
+            sched = sched.with_kv_block_budget(kv_blocks)?;
+        } else {
+            // Never drop a requested memory cap silently.
+            eprintln!(
+                "note: --kv-blocks {kv_blocks} NOT enforced — serving fell back to the \
+                 dense KV cache (see notes above)"
+            );
+        }
+    }
 
     println!(
         "serving {} request(s) on {} slot(s), sampler {}, max {} new tokens, \
-         prefill chunk {}",
+         prefill chunk {}{}",
         prompts.len(),
         batch,
         sampler.name(),
         n_new,
-        chunk_in_use
+        chunk_in_use,
+        pool_desc
     );
     let reqs = prompts
         .iter()

@@ -85,6 +85,68 @@ fn fake_quant_group(xs: &mut [f32], bits: f32, symmetric: bool, clip: f32) {
     }
 }
 
+/// Quantize-dequantize every column of a row-major `rows x cols` buffer in
+/// place, one grid per column — without the old per-column strided
+/// gather/scatter copy. Two row-major passes instead: per-column ranges
+/// first, then per-column grids applied element-wise. Same arithmetic per
+/// element as [`fake_quant_group`] on the gathered column (tested against
+/// the transposed per-row path), but cache-friendly and allocation-lean.
+fn fake_quant_columns(
+    data: &mut [f32],
+    rows: usize,
+    cols: usize,
+    bits: f32,
+    symmetric: bool,
+    clip: f32,
+) {
+    if rows == 0 || cols == 0 {
+        return;
+    }
+    // Pass 1 (row-major): per-column min/max.
+    let mut mn = vec![f32::INFINITY; cols];
+    let mut mx = vec![f32::NEG_INFINITY; cols];
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        for (c, &x) in row.iter().enumerate() {
+            mn[c] = mn[c].min(x);
+            mx[c] = mx[c].max(x);
+        }
+    }
+    // Per-column grid parameters, exactly as fake_quant_group derives them.
+    if symmetric {
+        let n_sym = (bits - 1.0).exp2() - 1.0;
+        let scale: Vec<f32> = (0..cols)
+            .map(|c| {
+                let absmax = (mn[c] * clip).abs().max((mx[c] * clip).abs());
+                (absmax / n_sym).max(EPS)
+            })
+            .collect();
+        // Pass 2 (row-major): snap to the column's grid.
+        for r in 0..rows {
+            let row = &mut data[r * cols..(r + 1) * cols];
+            for (c, x) in row.iter_mut().enumerate() {
+                let q = (*x / scale[c]).round_ties_even().clamp(-n_sym - 1.0, n_sym);
+                *x = q * scale[c];
+            }
+        }
+    } else {
+        let n_asym = bits.exp2() - 1.0;
+        let (zero, scale): (Vec<f32>, Vec<f32>) = (0..cols)
+            .map(|c| {
+                let (lo, hi) = (mn[c] * clip, mx[c] * clip);
+                (lo, ((hi - lo) / n_asym).max(EPS))
+            })
+            .unzip();
+        for r in 0..rows {
+            let row = &mut data[r * cols..(r + 1) * cols];
+            for (c, x) in row.iter_mut().enumerate() {
+                let q = ((*x - zero[c]) / scale[c]).round_ties_even().clamp(0.0, n_asym);
+                *x = q * scale[c] + zero[c];
+            }
+        }
+    }
+}
+
 /// Quantize-dequantize a tensor according to `spec`.
 pub fn fake_quant(t: &Tensor, spec: &QuantSpec) -> Tensor {
     if spec.is_noop() {
@@ -110,16 +172,14 @@ pub fn fake_quant(t: &Tensor, spec: &QuantSpec) -> Tensor {
         Granularity::PerColumn => {
             assert_eq!(t.ndim(), 2, "per-column quantization expects 2D weights");
             let (rows, cols) = (t.shape[0], t.shape[1]);
-            let mut col = vec![0.0f32; rows];
-            for c in 0..cols {
-                for r in 0..rows {
-                    col[r] = out.data[r * cols + c];
-                }
-                fake_quant_group(&mut col, spec.bits, spec.symmetric, spec.clip_ratio);
-                for r in 0..rows {
-                    out.data[r * cols + c] = col[r];
-                }
-            }
+            fake_quant_columns(
+                &mut out.data,
+                rows,
+                cols,
+                spec.bits,
+                spec.symmetric,
+                spec.clip_ratio,
+            );
         }
     }
     out
@@ -298,6 +358,38 @@ mod tests {
         let t = Tensor::new(vec![1, 4], vec![0.0, 1.0, -2.0, 3.0]);
         let q = fake_quant(&t, &spec(4.0, true, Granularity::PerRow));
         assert_eq!(q.data[0], 0.0);
+    }
+
+    #[test]
+    fn prop_per_column_matches_strided_reference_bitexact() {
+        // The two-pass row-major implementation must reproduce the old
+        // per-column gather/scatter loop bit for bit — it is a pure memory
+        // access-pattern change, not a numerics change.
+        forall(15, 60, |g: &mut Gen| {
+            let rows = g.int(1, 24);
+            let cols = g.int(1, 24);
+            let scale = g.f32(0.1, 6.0);
+            let t = g.tensor(&[rows, cols], scale);
+            let sym = g.bool();
+            let sp = spec(*g.pick(&[2.0, 4.0, 8.0]), sym, Granularity::PerColumn);
+            let fast = fake_quant(&t, &sp);
+            // Reference: the old strided gather/scatter column loop.
+            let mut reference = t.clone();
+            let mut col = vec![0.0f32; rows];
+            for c in 0..cols {
+                for r in 0..rows {
+                    col[r] = reference.data[r * cols + c];
+                }
+                fake_quant_group(&mut col, sp.bits, sp.symmetric, sp.clip_ratio);
+                for r in 0..rows {
+                    reference.data[r * cols + c] = col[r];
+                }
+            }
+            if fast.data != reference.data {
+                return Err(format!("{rows}x{cols} {sp:?}: diverged from strided reference"));
+            }
+            Ok(())
+        });
     }
 
     #[test]

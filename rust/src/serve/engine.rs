@@ -57,6 +57,22 @@ impl DecodeVariant {
         };
         format!("{core}_b{batch}_t{chunk}")
     }
+
+    /// The paged (block-pool KV cache) decode artifact for `batch` slots
+    /// (`decode_*_paged_b{N}`).
+    pub fn artifact_paged(&self, batch: usize) -> String {
+        format!("{}_paged_b{batch}", self.artifact())
+    }
+
+    /// The paged batched prefill artifact (`prefill_*_paged_b{N}_t{T}`).
+    pub fn artifact_prefill_paged(&self, batch: usize, chunk: usize) -> String {
+        let core = match self {
+            DecodeVariant::Fp => "prefill_fp",
+            DecodeVariant::QuantNoHad => "prefill_nohad",
+            DecodeVariant::QuantHad => "prefill_had",
+        };
+        format!("{core}_paged_b{batch}_t{chunk}")
+    }
 }
 
 /// One decode iteration over a fixed set of KV-cache slots.
@@ -109,6 +125,50 @@ pub trait DecodeEngine {
 
     /// Forget per-slot state when a slot is reused for a new request.
     fn reset_slot(&mut self, slot: usize);
+
+    // -- paged KV cache (block-pool) path ---------------------------------
+
+    /// `Some(block_size)` when the engine's KV cache is a pool of
+    /// `block_size`-token physical pages addressed through per-slot block
+    /// tables (`step_paged` / `prefill_paged`); `None` for dense engines.
+    fn kv_block_size(&self) -> Option<usize> {
+        None
+    }
+
+    /// Physical pages in the engine's pool (0 for dense engines). Table
+    /// entries `>= kv_blocks()` are the "unallocated page" sentinel: writes
+    /// through them are dropped by the graph and reads are clipped (but
+    /// masked off by `idx <= pos` anyway).
+    fn kv_blocks(&self) -> usize {
+        0
+    }
+
+    /// One decode step over a paged cache: like `step`, plus `tables[b]` —
+    /// slot `b`'s block table, padded to the logical page count with the
+    /// `kv_blocks()` sentinel (inactive slots: all-sentinel rows, so they
+    /// can never scribble on someone else's pages).
+    fn step_paged(
+        &mut self,
+        _tokens: &[i32],
+        _pos: &[i32],
+        _active: &[bool],
+        _tables: &[Vec<i32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        bail!("engine has no paged KV path")
+    }
+
+    /// Paged twin of `prefill`. Default: the chunked fallback — a loop of
+    /// single `step_paged` calls, used when no paged prefill artifact is
+    /// available.
+    fn prefill_paged(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+        tables: &[Vec<i32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        prefill_paged_by_steps(self, tokens, pos0, active, tables)
+    }
 }
 
 /// The chunked prefill fallback: feed the chunk through single decode
@@ -147,6 +207,43 @@ pub(crate) fn prefill_by_steps<E: DecodeEngine + ?Sized>(
     Ok(out)
 }
 
+/// The paged chunked-prefill fallback: feed the chunk through single
+/// `step_paged` calls. Shared by the trait default and by [`PjrtEngine`]
+/// when no paged prefill artifact was loaded.
+pub(crate) fn prefill_paged_by_steps<E: DecodeEngine + ?Sized>(
+    engine: &mut E,
+    tokens: &[Vec<i32>],
+    pos0: &[i32],
+    active: &[bool],
+    tables: &[Vec<i32>],
+) -> Result<Vec<Vec<f32>>> {
+    let n = engine.slots();
+    if tokens.len() != n || pos0.len() != n || active.len() != n || tables.len() != n {
+        bail!("paged prefill arity mismatch ({n} slots)");
+    }
+    let longest = (0..n).filter(|&b| active[b]).map(|b| tokens[b].len()).max().unwrap_or(0);
+    let mut out = vec![Vec::new(); n];
+    for j in 0..longest {
+        let mut toks = vec![0i32; n];
+        let mut pos = vec![0i32; n];
+        let mut act = vec![false; n];
+        for b in 0..n {
+            if active[b] && j < tokens[b].len() {
+                act[b] = true;
+                toks[b] = tokens[b][j];
+                pos[b] = pos0[b] + j as i32;
+            }
+        }
+        let mut logits = engine.step_paged(&toks, &pos, &act, tables)?;
+        for b in 0..n {
+            if act[b] && j + 1 == tokens[b].len() {
+                out[b] = std::mem::take(&mut logits[b]);
+            }
+        }
+    }
+    Ok(out)
+}
+
 // ---------------------------------------------------------------------------
 // Shared PJRT decode-artifact binding (used by PjrtEngine and the legacy
 // GenerationSession so the input-ABI parsing and literal recycling exist
@@ -160,20 +257,29 @@ struct DecodeBinding {
     pos_idx: usize,
     /// Legacy B=1 artifacts take `pos` as a scalar; batched ones as (B,).
     pos_scalar: bool,
+    /// Paged (`decode_*_paged_b{N}`) artifacts take a per-slot block table.
+    table_idx: Option<usize>,
     cache_k_idx: usize,
     cache_v_idx: usize,
     n_slots: usize,
     max_seq: usize,
+    /// Paged layout: physical pages in the pool / tokens per page / table
+    /// columns. Zero for dense artifacts.
+    n_blocks: usize,
+    block_size: usize,
+    n_logical: usize,
 }
 
 impl DecodeBinding {
     /// Bind weights/qcfg/zeroed caches to the artifact's input ABI.
     fn new(exe: &Executable, weights: &Weights, qcfg: Option<QcfgVec>) -> Result<Self> {
         let mut values = Vec::with_capacity(exe.spec.inputs.len());
-        let (mut token_idx, mut pos_idx, mut ck, mut cv) = (None, None, None, None);
+        let (mut token_idx, mut pos_idx, mut table_idx, mut ck, mut cv) =
+            (None, None, None, None, None);
         let mut pos_scalar = false;
         let mut n_slots = 0usize;
-        let mut max_seq = 0usize;
+        let mut cache_dims: Vec<usize> = Vec::new();
+        let mut n_logical = 0usize;
         for (i, (name, shape, _)) in exe.spec.inputs.iter().enumerate() {
             let v = match name.as_str() {
                 "token" => {
@@ -190,9 +296,14 @@ impl DecodeBinding {
                         Value::I32(vec![0; shape.iter().product()], shape.clone())
                     }
                 }
+                "block_table" => {
+                    table_idx = Some(i);
+                    n_logical = shape.get(1).copied().unwrap_or(0);
+                    Value::I32(vec![0; shape.iter().product()], shape.clone())
+                }
                 "cache_k" => {
                     ck = Some(i);
-                    max_seq = shape[2];
+                    cache_dims = shape.clone();
                     Value::F32(crate::tensor::Tensor::zeros(shape))
                 }
                 "cache_v" => {
@@ -210,22 +321,45 @@ impl DecodeBinding {
         if pos_scalar && n_slots != 1 {
             bail!("{}: scalar pos input but {} token slots", exe.label, n_slots);
         }
+        if cache_dims.len() < 3 {
+            bail!("{}: no (or malformed) cache_k input", exe.label);
+        }
+        // Dense cache: (L, B, max_seq, H, dh). Paged pool:
+        // (L, n_blocks, block_size, H, dh) + (B, n_logical) table, logical
+        // capacity n_logical * block_size.
+        let (max_seq, n_blocks, block_size) = if table_idx.is_some() {
+            let n_blocks = cache_dims[1];
+            let block_size = cache_dims[2];
+            (n_logical * block_size, n_blocks, block_size)
+        } else {
+            (cache_dims[2], 0, 0)
+        };
         Ok(Self {
             literals,
             token_idx: token_idx.ok_or_else(|| anyhow!("no token input"))?,
             pos_idx: pos_idx.ok_or_else(|| anyhow!("no pos input"))?,
             pos_scalar,
+            table_idx,
             cache_k_idx: ck.ok_or_else(|| anyhow!("no cache_k input"))?,
             cache_v_idx: cv.ok_or_else(|| anyhow!("no cache_v input"))?,
             n_slots,
             max_seq,
+            n_blocks,
+            block_size,
+            n_logical,
         })
     }
 
-    /// Run one decode step: rebuild the token/pos literals, execute, keep
-    /// the returned caches as literals (zero host round-trips), return the
-    /// flat logits (n_slots * V).
-    fn step(&mut self, exe: &Executable, tokens: &[i32], pos: &[i32]) -> Result<Vec<f32>> {
+    /// Run one decode step: rebuild the token/pos (and block-table, when
+    /// paged) literals, execute, keep the returned caches as literals (zero
+    /// host round-trips), return the flat logits (n_slots * V).
+    fn step(
+        &mut self,
+        exe: &Executable,
+        tokens: &[i32],
+        pos: &[i32],
+        tables: Option<&[Vec<i32>]>,
+    ) -> Result<Vec<f32>> {
         if tokens.len() != self.n_slots || pos.len() != self.n_slots {
             bail!(
                 "{}: step arity {} / {}, artifact has {} slots",
@@ -239,6 +373,15 @@ impl DecodeBinding {
             if (p as usize) >= self.max_seq {
                 bail!("slot {b}: KV cache full ({} positions)", self.max_seq);
             }
+        }
+        match (self.table_idx, tables) {
+            (Some(ti), Some(tables)) => {
+                self.literals[ti] =
+                    block_table_literal(tables, self.n_slots, self.n_logical, &exe.label)?;
+            }
+            (Some(_), None) => bail!("{}: paged artifact needs block tables", exe.label),
+            (None, Some(_)) => bail!("{}: dense artifact got block tables", exe.label),
+            (None, None) => {}
         }
         self.literals[self.token_idx] =
             xla::Literal::vec1(tokens).reshape(&[self.n_slots as i64])?;
@@ -273,17 +416,47 @@ struct PrefillBinding {
     tokens_idx: usize,
     pos_idx: usize,
     n_valid_idx: usize,
+    /// Paged (`prefill_*_paged_b{N}_t{T}`) artifacts take a block table.
+    table_idx: Option<usize>,
     cache_k_idx: usize,
     cache_v_idx: usize,
     n_slots: usize,
     t_chunk: usize,
     max_seq: usize,
+    n_blocks: usize,
+    block_size: usize,
+    n_logical: usize,
 }
 
 /// Cheap stand-in literal used while a cache literal is moved between the
 /// decode and prefill bindings (never executed).
 fn placeholder_literal() -> xla::Literal {
     xla::Literal::scalar(0i32)
+}
+
+/// Flatten per-slot block tables into a `(n_slots, n_logical)` i32 literal
+/// — shared by the decode and prefill bindings so their validation and
+/// layout can never diverge.
+fn block_table_literal(
+    tables: &[Vec<i32>],
+    n_slots: usize,
+    n_logical: usize,
+    label: &str,
+) -> Result<xla::Literal> {
+    if tables.len() != n_slots {
+        bail!("{label}: {} block tables for {n_slots} slots", tables.len());
+    }
+    let mut flat = Vec::with_capacity(n_slots * n_logical);
+    for (b, t) in tables.iter().enumerate() {
+        if t.len() != n_logical {
+            bail!(
+                "{label}: slot {b} table has {} entries, artifact wants {n_logical}",
+                t.len()
+            );
+        }
+        flat.extend_from_slice(t);
+    }
+    Ok(xla::Literal::vec1(&flat).reshape(&[n_slots as i64, n_logical as i64])?)
 }
 
 /// Quant-variant token of a standard artifact label:
@@ -298,8 +471,10 @@ fn label_variant(label: &str) -> Option<&str> {
 impl PrefillBinding {
     fn new(exe: &Executable, weights: &Weights, qcfg: Option<QcfgVec>) -> Result<Self> {
         let mut values = Vec::with_capacity(exe.spec.inputs.len());
-        let (mut tok, mut pos, mut nv, mut ck, mut cv) = (None, None, None, None, None);
-        let (mut n_slots, mut t_chunk, mut max_seq) = (0usize, 0usize, 0usize);
+        let (mut tok, mut pos, mut nv, mut table_idx, mut ck, mut cv) =
+            (None, None, None, None, None, None);
+        let (mut n_slots, mut t_chunk, mut n_logical) = (0usize, 0usize, 0usize);
+        let mut cache_dims: Vec<usize> = Vec::new();
         for (i, (name, shape, _)) in exe.spec.inputs.iter().enumerate() {
             let v = match name.as_str() {
                 "tokens" => {
@@ -316,9 +491,14 @@ impl PrefillBinding {
                     nv = Some(i);
                     Value::I32(vec![0; shape.iter().product()], shape.clone())
                 }
+                "block_table" => {
+                    table_idx = Some(i);
+                    n_logical = shape.get(1).copied().unwrap_or(0);
+                    Value::I32(vec![0; shape.iter().product()], shape.clone())
+                }
                 "cache_k" => {
                     ck = Some(i);
-                    max_seq = shape[2];
+                    cache_dims = shape.clone();
                     Value::F32(crate::tensor::Tensor::zeros(shape))
                 }
                 "cache_v" => {
@@ -340,16 +520,28 @@ impl PrefillBinding {
         // per call, so free them now instead of pinning a second cache.
         literals[cache_k_idx] = placeholder_literal();
         literals[cache_v_idx] = placeholder_literal();
+        if cache_dims.len() < 3 {
+            bail!("{}: malformed cache_k input", exe.label);
+        }
+        let (max_seq, n_blocks, block_size) = if table_idx.is_some() {
+            (n_logical * cache_dims[2], cache_dims[1], cache_dims[2])
+        } else {
+            (cache_dims[2], 0, 0)
+        };
         Ok(Self {
             literals,
             tokens_idx: tok.ok_or_else(|| anyhow!("{}: no tokens input", exe.label))?,
             pos_idx: pos.ok_or_else(|| anyhow!("{}: no pos input", exe.label))?,
             n_valid_idx: nv.ok_or_else(|| anyhow!("{}: no n_valid input", exe.label))?,
+            table_idx,
             cache_k_idx,
             cache_v_idx,
             n_slots,
             t_chunk,
             max_seq,
+            n_blocks,
+            block_size,
+            n_logical,
         })
     }
 
@@ -366,6 +558,7 @@ impl PrefillBinding {
         tokens: &[Vec<i32>],
         pos0: &[i32],
         active: &[bool],
+        tables: Option<&[Vec<i32>]>,
     ) -> Result<Vec<f32>> {
         if tokens.len() != self.n_slots || pos0.len() != self.n_slots {
             bail!(
@@ -375,6 +568,15 @@ impl PrefillBinding {
                 pos0.len(),
                 self.n_slots
             );
+        }
+        match (self.table_idx, tables) {
+            (Some(ti), Some(tables)) => {
+                self.literals[ti] =
+                    block_table_literal(tables, self.n_slots, self.n_logical, &exe.label)?;
+            }
+            (Some(_), None) => bail!("{}: paged artifact needs block tables", exe.label),
+            (None, Some(_)) => bail!("{}: dense artifact got block tables", exe.label),
+            (None, None) => {}
         }
         let mut flat_tokens = vec![0i32; self.n_slots * self.t_chunk];
         let mut pos_vec = vec![0i32; self.n_slots];
@@ -480,6 +682,21 @@ impl PjrtEngine {
                 self.bind.max_seq
             );
         }
+        // Paged-ness and page layout must agree, or the two bindings would
+        // interpret the shared cache literals differently.
+        if bind.table_idx.is_some() != self.bind.table_idx.is_some()
+            || bind.n_blocks != self.bind.n_blocks
+            || bind.block_size != self.bind.block_size
+        {
+            bail!(
+                "{}: prefill KV layout ({} pages x {}) does not match decode ({} x {})",
+                exe.label,
+                bind.n_blocks,
+                bind.block_size,
+                self.bind.n_blocks,
+                self.bind.block_size
+            );
+        }
         if bind.t_chunk < 2 {
             bail!("{}: prefill chunk {} gains nothing over decode", exe.label, bind.t_chunk);
         }
@@ -521,7 +738,7 @@ impl DecodeEngine for PjrtEngine {
 
     fn step(&mut self, tokens: &[i32], pos: &[i32], _active: &[bool]) -> Result<Vec<Vec<f32>>> {
         let t0 = Instant::now();
-        let flat = self.bind.step(&self.exe, tokens, pos)?;
+        let flat = self.bind.step(&self.exe, tokens, pos, None)?;
         self.step_times.push(t0.elapsed().as_secs_f64() * 1e6);
         let vocab = flat.len() / self.bind.n_slots.max(1);
         Ok(flat.chunks(vocab).map(|c| c.to_vec()).collect())
@@ -546,7 +763,7 @@ impl DecodeEngine for PjrtEngine {
         let t0 = Instant::now();
         let pb = self.prefill_bind.as_mut().expect("checked above");
         let pexe = self.prefill_exe.as_ref().expect("set with binding");
-        let flat = pb.step(pexe, &mut self.bind, tokens, pos0, active)?;
+        let flat = pb.step(pexe, &mut self.bind, tokens, pos0, active, None)?;
         self.prefill_times.push(t0.elapsed().as_secs_f64() * 1e6);
         let vocab = flat.len() / pb.n_slots.max(1);
         let mut out = Vec::with_capacity(pb.n_slots);
@@ -565,6 +782,58 @@ impl DecodeEngine for PjrtEngine {
         // occupant's stale cache entries unreachable once the slot restarts
         // at pos = 0.
     }
+
+    fn kv_block_size(&self) -> Option<usize> {
+        self.bind.table_idx.map(|_| self.bind.block_size)
+    }
+
+    fn kv_blocks(&self) -> usize {
+        self.bind.n_blocks
+    }
+
+    fn step_paged(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        _active: &[bool],
+        tables: &[Vec<i32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        let t0 = Instant::now();
+        let flat = self.bind.step(&self.exe, tokens, pos, Some(tables))?;
+        self.step_times.push(t0.elapsed().as_secs_f64() * 1e6);
+        let vocab = flat.len() / self.bind.n_slots.max(1);
+        Ok(flat.chunks(vocab).map(|c| c.to_vec()).collect())
+    }
+
+    fn prefill_paged(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+        tables: &[Vec<i32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        if self.prefill_bind.is_none() {
+            return prefill_paged_by_steps(self, tokens, pos0, active, tables);
+        }
+        if active.len() != self.bind.n_slots {
+            bail!("prefill arity mismatch ({} slots)", self.bind.n_slots);
+        }
+        let t0 = Instant::now();
+        let pb = self.prefill_bind.as_mut().expect("checked above");
+        let pexe = self.prefill_exe.as_ref().expect("set with binding");
+        let flat = pb.step(pexe, &mut self.bind, tokens, pos0, active, Some(tables))?;
+        self.prefill_times.push(t0.elapsed().as_secs_f64() * 1e6);
+        let vocab = flat.len() / pb.n_slots.max(1);
+        let mut out = Vec::with_capacity(pb.n_slots);
+        for (b, lane) in flat.chunks(vocab).enumerate() {
+            if active[b] && !tokens[b].is_empty() {
+                out.push(lane.to_vec());
+            } else {
+                out.push(Vec::new());
+            }
+        }
+        Ok(out)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -579,17 +848,44 @@ impl DecodeEngine for PjrtEngine {
 /// It also asserts the scheduler's contract: a step's `pos[b]` must equal
 /// the number of tokens already fed into slot `b`, and reused slots must be
 /// reset. Violations are reported as errors instead of silent corruption.
+///
+/// The history hash that seeds the logits is maintained *incrementally*
+/// (one fold per appended token) instead of rehashing the whole history per
+/// step — the old path made every decode step O(len), O(len^2) per request.
+/// [`MockEngine::logits_for`] keeps the from-scratch computation as the
+/// regression reference.
+///
+/// In paged mode ([`MockEngine::with_block_pool`]) tokens are additionally
+/// stored in *physical* `block_size`-token pages addressed through the
+/// step's block tables, and every step asserts the table-reconstructed
+/// history matches the true one — so table corruption (aliased pages, holes,
+/// stale mappings) surfaces as a loud error, not a simulation artifact.
 pub struct MockEngine {
     n_slots: usize,
     max_seq: usize,
     vocab: usize,
     history: Vec<Vec<i32>>,
+    /// Incremental history hash per slot (`HASH_BASIS` folded once per
+    /// appended token).
+    hash: Vec<u64>,
     chunk: usize,
+    /// Paged mode: tokens per physical page (None = dense).
+    block_size: Option<usize>,
+    /// Paged mode: physical page storage.
+    blocks: Vec<Vec<i32>>,
     /// Total decode steps executed (for batching-efficiency assertions).
     pub steps: usize,
     /// Total batched prefill calls executed (a prompt of `len` tokens must
     /// cost exactly `ceil(len/chunk)` of these — the TTFT acceptance check).
     pub prefill_calls: usize,
+}
+
+/// FNV-1a offset basis / prime: the history hash the mock's logits seed on.
+const HASH_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+const HASH_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn hash_fold(h: u64, token: i32) -> u64 {
+    (h ^ token as u64).wrapping_mul(HASH_PRIME)
 }
 
 impl MockEngine {
@@ -599,7 +895,10 @@ impl MockEngine {
             max_seq,
             vocab,
             history: vec![Vec::new(); slots],
+            hash: vec![HASH_BASIS; slots],
             chunk: 1,
+            block_size: None,
+            blocks: Vec::new(),
             steps: 0,
             prefill_calls: 0,
         }
@@ -612,20 +911,130 @@ impl MockEngine {
         self
     }
 
-    /// Deterministic logits from a token history: a pseudo-random base
-    /// (hash-seeded, so temperature sampling has texture) plus a strong
-    /// peak on the "predicted" next token.
-    fn logits_for(history: &[i32], vocab: usize) -> Vec<f32> {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for &t in history {
-            h = (h ^ t as u64).wrapping_mul(0x0000_0100_0000_01b3);
-        }
-        let mut rng = Prng::new(h);
+    /// Paged mode: a pool of `n_blocks` physical pages of `block_size`
+    /// tokens, driven through `step_paged` / `prefill_paged`.
+    pub fn with_block_pool(mut self, n_blocks: usize, block_size: usize) -> Self {
+        assert!(block_size > 0, "block_size must be positive");
+        self.block_size = Some(block_size);
+        self.blocks = vec![Vec::new(); n_blocks];
+        self
+    }
+
+    /// Deterministic logits from the incrementally maintained state: a
+    /// pseudo-random base (hash-seeded, so temperature sampling has
+    /// texture) plus a strong peak on the "predicted" next token.
+    fn logits_from(hash: u64, len: usize, last: i32, vocab: usize) -> Vec<f32> {
+        let mut rng = Prng::new(hash);
         let mut logits: Vec<f32> = (0..vocab).map(|_| rng.uniform() * 4.0).collect();
-        let last = *history.last().unwrap_or(&0) as usize;
-        let peak = (last * 31 + history.len() * 7 + 13) % vocab;
+        let last = if len == 0 { 0 } else { last as usize };
+        let peak = (last * 31 + len * 7 + 13) % vocab;
         logits[peak] += 8.0;
         logits
+    }
+
+    /// From-scratch reference of the logits computation (rehashes the whole
+    /// history). Tests assert `logits_from` over the incremental hash is
+    /// bit-identical to this.
+    pub fn logits_for(history: &[i32], vocab: usize) -> Vec<f32> {
+        let h = history.iter().fold(HASH_BASIS, |h, &t| hash_fold(h, t));
+        Self::logits_from(h, history.len(), *history.last().unwrap_or(&0), vocab)
+    }
+
+    /// Append one token to slot `b`'s true history + incremental hash.
+    fn push_token(&mut self, b: usize, token: i32) {
+        self.history[b].push(token);
+        self.hash[b] = hash_fold(self.hash[b], token);
+    }
+
+    /// Write one token into the physical page the table maps `pos` to,
+    /// asserting sequential in-page order (a page acquired fresh is written
+    /// from offset 0, which resets whatever a previous owner left there).
+    fn paged_write(&mut self, b: usize, pos: usize, token: i32, table: &[i32]) -> Result<()> {
+        let bs = self.block_size.expect("paged mode");
+        let j = pos / bs;
+        let off = pos % bs;
+        let phys = table.get(j).copied().unwrap_or(-1);
+        if phys < 0 || phys as usize >= self.blocks.len() {
+            bail!(
+                "mock engine: slot {b} write at pos {pos} through unmapped page \
+                 (table[{j}] = {phys}, pool has {} pages)",
+                self.blocks.len()
+            );
+        }
+        let page = &mut self.blocks[phys as usize];
+        if off == 0 {
+            page.clear();
+        }
+        if page.len() != off {
+            bail!(
+                "mock engine: slot {b} writes page {phys} at offset {off} but the page \
+                 holds {} tokens (page aliased or positions out of order)",
+                page.len()
+            );
+        }
+        page.push(token);
+        Ok(())
+    }
+
+    /// Rebuild slot `b`'s history through its block table and require it to
+    /// match the true history — the paged-path integrity check.
+    fn check_paged_view(&self, b: usize, table: &[i32]) -> Result<()> {
+        let bs = self.block_size.expect("paged mode");
+        let hist = &self.history[b];
+        let mut consumed = 0usize;
+        let mut j = 0usize;
+        while consumed < hist.len() {
+            let take = bs.min(hist.len() - consumed);
+            let phys = table.get(j).copied().unwrap_or(-1);
+            let page = (phys >= 0)
+                .then(|| self.blocks.get(phys as usize))
+                .flatten()
+                .ok_or_else(|| {
+                    anyhow!("mock engine: slot {b} history spans unmapped page table[{j}]")
+                })?;
+            if page.len() != take || page[..] != hist[consumed..consumed + take] {
+                bail!(
+                    "mock engine: slot {b} page {phys} diverges from history at logical \
+                     page {j} (paged KV corruption)"
+                );
+            }
+            consumed += take;
+            j += 1;
+        }
+        Ok(())
+    }
+
+    /// No two active slots may map the same physical page over their
+    /// written prefix.
+    fn check_no_aliasing(
+        &self,
+        pos: &[i32],
+        active: &[bool],
+        tables: &[Vec<i32>],
+        extra: usize,
+    ) -> Result<()> {
+        let bs = self.block_size.expect("paged mode");
+        let mut used: Vec<i32> = Vec::new();
+        for b in 0..self.n_slots {
+            if !active[b] {
+                continue;
+            }
+            let end = pos[b] as usize + extra;
+            for j in 0..=(end.saturating_sub(1)) / bs {
+                if let Some(&e) = tables[b].get(j) {
+                    if e >= 0 && (e as usize) < self.blocks.len() {
+                        used.push(e);
+                    }
+                }
+            }
+        }
+        let n = used.len();
+        used.sort_unstable();
+        used.dedup();
+        if used.len() != n {
+            bail!("mock engine: physical page mapped by two active slots (table aliasing)");
+        }
+        Ok(())
     }
 }
 
@@ -642,6 +1051,9 @@ impl DecodeEngine for MockEngine {
         if tokens.len() != self.n_slots || pos.len() != self.n_slots || active.len() != self.n_slots
         {
             bail!("mock engine: step arity mismatch ({} slots)", self.n_slots);
+        }
+        if self.block_size.is_some() {
+            bail!("mock engine: paged engine stepped without block tables (use step_paged)");
         }
         self.steps += 1;
         let mut out = Vec::with_capacity(self.n_slots);
@@ -661,8 +1073,9 @@ impl DecodeEngine for MockEngine {
             if self.history[b].len() >= self.max_seq {
                 bail!("mock engine: slot {b} cache full ({} positions)", self.max_seq);
             }
-            self.history[b].push(tokens[b]);
-            out.push(Self::logits_for(&self.history[b], self.vocab));
+            self.push_token(b, tokens[b]);
+            let h = &self.history[b];
+            out.push(Self::logits_from(self.hash[b], h.len(), tokens[b], self.vocab));
         }
         Ok(out)
     }
@@ -680,6 +1093,9 @@ impl DecodeEngine for MockEngine {
         if tokens.len() != self.n_slots || pos0.len() != self.n_slots || active.len() != self.n_slots
         {
             bail!("mock engine: prefill arity mismatch ({} slots)", self.n_slots);
+        }
+        if self.block_size.is_some() {
+            bail!("mock engine: paged engine prefilled without block tables");
         }
         self.prefill_calls += 1;
         let mut out = Vec::with_capacity(self.n_slots);
@@ -706,14 +1122,136 @@ impl DecodeEngine for MockEngine {
             if self.history[b].len() + tokens[b].len() > self.max_seq {
                 bail!("mock engine: slot {b} prefill past cache ({} positions)", self.max_seq);
             }
-            self.history[b].extend_from_slice(&tokens[b]);
-            out.push(Self::logits_for(&self.history[b], self.vocab));
+            for t in tokens[b].clone() {
+                self.push_token(b, t);
+            }
+            let last = *self.history[b].last().expect("non-empty");
+            out.push(Self::logits_from(self.hash[b], self.history[b].len(), last, self.vocab));
         }
         Ok(out)
     }
 
     fn reset_slot(&mut self, slot: usize) {
         self.history[slot].clear();
+        self.hash[slot] = HASH_BASIS;
+    }
+
+    fn kv_block_size(&self) -> Option<usize> {
+        self.block_size
+    }
+
+    fn kv_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    fn step_paged(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        tables: &[Vec<i32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        if tokens.len() != self.n_slots
+            || pos.len() != self.n_slots
+            || active.len() != self.n_slots
+            || tables.len() != self.n_slots
+        {
+            bail!("mock engine: paged step arity mismatch ({} slots)", self.n_slots);
+        }
+        if self.block_size.is_none() {
+            bail!("mock engine: dense engine got block tables (build with with_block_pool)");
+        }
+        self.steps += 1;
+        self.check_no_aliasing(pos, active, tables, 1)?;
+        let mut out = Vec::with_capacity(self.n_slots);
+        for b in 0..self.n_slots {
+            if !active[b] {
+                out.push(Vec::new());
+                continue;
+            }
+            if pos[b] as usize != self.history[b].len() {
+                bail!(
+                    "mock engine: slot {b} stepped at pos {} but holds {} tokens \
+                     (scheduler position tracking broken, or slot reused without reset)",
+                    pos[b],
+                    self.history[b].len()
+                );
+            }
+            if self.history[b].len() >= self.max_seq {
+                bail!("mock engine: slot {b} cache full ({} positions)", self.max_seq);
+            }
+            self.paged_write(b, pos[b] as usize, tokens[b], &tables[b])?;
+            self.push_token(b, tokens[b]);
+            self.check_paged_view(b, &tables[b])?;
+            out.push(Self::logits_from(
+                self.hash[b],
+                self.history[b].len(),
+                tokens[b],
+                self.vocab,
+            ));
+        }
+        Ok(out)
+    }
+
+    fn prefill_paged(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+        tables: &[Vec<i32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        if tokens.len() != self.n_slots
+            || pos0.len() != self.n_slots
+            || active.len() != self.n_slots
+            || tables.len() != self.n_slots
+        {
+            bail!("mock engine: paged prefill arity mismatch ({} slots)", self.n_slots);
+        }
+        if self.block_size.is_none() {
+            bail!("mock engine: dense engine got block tables (build with with_block_pool)");
+        }
+        self.prefill_calls += 1;
+        let lens: Vec<usize> = tokens.iter().map(Vec::len).collect();
+        self.check_no_aliasing(
+            pos0,
+            &(0..self.n_slots).map(|b| active[b] && lens[b] > 0).collect::<Vec<_>>(),
+            tables,
+            lens.iter().copied().max().unwrap_or(0),
+        )?;
+        let mut out = Vec::with_capacity(self.n_slots);
+        for b in 0..self.n_slots {
+            if !active[b] || tokens[b].is_empty() {
+                out.push(Vec::new());
+                continue;
+            }
+            if tokens[b].len() > self.chunk {
+                bail!(
+                    "mock engine: slot {b} fed {} prefill tokens, chunk is {}",
+                    tokens[b].len(),
+                    self.chunk
+                );
+            }
+            if pos0[b] as usize != self.history[b].len() {
+                bail!(
+                    "mock engine: slot {b} prefilled at pos {} but holds {} tokens \
+                     (scheduler position tracking broken, or slot reused without reset)",
+                    pos0[b],
+                    self.history[b].len()
+                );
+            }
+            if self.history[b].len() + tokens[b].len() > self.max_seq {
+                bail!("mock engine: slot {b} prefill past cache ({} positions)", self.max_seq);
+            }
+            for t in 0..tokens[b].len() {
+                let tok = tokens[b][t];
+                self.paged_write(b, pos0[b] as usize + t, tok, &tables[b])?;
+                self.push_token(b, tok);
+            }
+            self.check_paged_view(b, &tables[b])?;
+            let last = *self.history[b].last().expect("non-empty");
+            out.push(Self::logits_from(self.hash[b], self.history[b].len(), last, self.vocab));
+        }
+        Ok(out)
     }
 }
 
@@ -755,7 +1293,7 @@ impl<'e> GenerationSession<'e> {
             bail!("KV cache full ({} positions)", self.max_seq);
         }
         let t0 = Instant::now();
-        let logits = self.bind.step(self.exe, &[token as i32], &[self.pos as i32])?;
+        let logits = self.bind.step(self.exe, &[token as i32], &[self.pos as i32], None)?;
         self.pos += 1;
         self.step_times.push(t0.elapsed().as_secs_f64() * 1e6);
         Ok(logits)
@@ -905,5 +1443,121 @@ mod tests {
         let mut e = MockEngine::new(1, 3, 8).with_prefill_chunk(4);
         assert!(e.prefill(&[vec![1, 2, 3, 4]], &[0], &[true]).is_err());
         e.prefill(&[vec![1, 2, 3]], &[0], &[true]).unwrap();
+    }
+
+    #[test]
+    fn incremental_hash_matches_recomputed_logits() {
+        // Satellite regression: the per-step incremental hash must produce
+        // logits bit-identical to rehashing the history from scratch, for
+        // every prefix, across resets, on both the step and prefill paths.
+        let mut e = MockEngine::new(2, 64, 48).with_prefill_chunk(4);
+        let mut p = Prng::new(17);
+        let mut hist: Vec<i32> = Vec::new();
+        for step in 0..40 {
+            let t = p.below(48) as i32;
+            let out = e
+                .prefill(&[vec![t], Vec::new()], &[step, 0], &[true, false])
+                .unwrap();
+            hist.push(t);
+            assert_eq!(out[0], MockEngine::logits_for(&hist, 48), "step {step}");
+        }
+        e.reset_slot(0);
+        let chunk: Vec<i32> = (0..4).map(|_| p.below(48) as i32).collect();
+        let out = e.prefill(&[chunk.clone(), Vec::new()], &[0, 0], &[true, false]).unwrap();
+        assert_eq!(out[0], MockEngine::logits_for(&chunk, 48));
+        let out = e.step(&[9, 0], &[4, 0], &[true, false]).unwrap();
+        let mut full = chunk;
+        full.push(9);
+        assert_eq!(out[0], MockEngine::logits_for(&full, 48));
+    }
+
+    // -- paged (block-pool) mock -----------------------------------------
+
+    fn identity_tables(slots: usize, n_logical: usize) -> Vec<Vec<i32>> {
+        (0..slots)
+            .map(|b| (0..n_logical).map(|j| (b * n_logical + j) as i32).collect())
+            .collect()
+    }
+
+    #[test]
+    fn paged_mock_matches_dense_logits() {
+        // Same token stream through the dense and the paged mock (identity
+        // tables): logits must be bit-identical — the mock analogue of the
+        // L2 paged-vs-dense bit-equality proven in pytest.
+        let bs = 4;
+        let mut dense = MockEngine::new(2, 16, 32);
+        let mut paged = MockEngine::new(2, 16, 32).with_block_pool(8, bs);
+        assert_eq!(paged.kv_block_size(), Some(bs));
+        assert_eq!(paged.kv_blocks(), 8);
+        let tables = identity_tables(2, 4);
+        for pos in 0..10 {
+            let toks = [pos as i32 * 3 % 32, (pos as i32 * 7 + 1) % 32];
+            let a = dense.step(&toks, &[pos, pos], &[true, true]).unwrap();
+            let b = paged.step_paged(&toks, &[pos, pos], &[true, true], &tables).unwrap();
+            assert_eq!(a, b, "pos {pos}");
+        }
+    }
+
+    #[test]
+    fn paged_mock_prefill_matches_step_loop_across_page_boundary() {
+        let bs = 4;
+        let prompt = [5i32, 9, 2, 7, 1, 3]; // 6 tokens: crosses a page edge
+        let tables = identity_tables(1, 4);
+        let mut a = MockEngine::new(1, 16, 64).with_block_pool(4, bs).with_prefill_chunk(8);
+        let la = a.prefill_paged(&[prompt.to_vec()], &[0], &[true], &tables).unwrap();
+        let mut b = MockEngine::new(1, 16, 64).with_block_pool(4, bs);
+        let mut lb = Vec::new();
+        for (j, &t) in prompt.iter().enumerate() {
+            lb = b.step_paged(&[t], &[j as i32], &[true], &tables).unwrap();
+        }
+        assert_eq!(la[0], lb[0]);
+        assert_eq!(a.prefill_calls, 1);
+        assert_eq!(b.steps, 6);
+    }
+
+    #[test]
+    fn paged_mock_scattered_tables_work_and_pages_are_reusable() {
+        let bs = 2;
+        let mut e = MockEngine::new(1, 8, 16).with_block_pool(4, bs);
+        // Scrambled mapping: logical pages 0..3 -> physical 3,1,0,2.
+        let t = vec![vec![3, 1, 0, 2]];
+        for pos in 0..5 {
+            e.step_paged(&[pos + 1], &[pos], &[true], &t).unwrap();
+        }
+        // New occupant with a different mapping reuses the pages; writes at
+        // offset 0 reset them.
+        e.reset_slot(0);
+        let t2 = vec![vec![0, 2, 1, 3]];
+        let out = e.step_paged(&[11], &[0], &[true], &t2).unwrap();
+        assert_eq!(out[0], MockEngine::logits_for(&[11], 16));
+    }
+
+    #[test]
+    fn paged_mock_rejects_unmapped_writes_aliasing_and_dense_mixups() {
+        let bs = 2;
+        // Hole: table entry >= n_blocks is the unallocated sentinel.
+        let mut e = MockEngine::new(2, 8, 16).with_block_pool(4, bs);
+        let holes = vec![vec![4, 4, 4, 4], vec![4, 4, 4, 4]];
+        assert!(e.step_paged(&[1, 0], &[0, 0], &[true, false], &holes).is_err());
+        // Aliasing: two active slots mapping the same physical page.
+        let mut e = MockEngine::new(2, 8, 16).with_block_pool(4, bs);
+        let aliased = vec![vec![0, 1, 2, 3], vec![0, 1, 2, 3]];
+        assert!(e.step_paged(&[1, 2], &[0, 0], &[true, true], &aliased).is_err());
+        // Paged engine without tables / dense engine with tables.
+        let mut e = MockEngine::new(1, 8, 16).with_block_pool(4, bs);
+        assert!(e.step(&[1], &[0], &[true]).is_err());
+        let mut d = MockEngine::new(1, 8, 16);
+        assert!(d.step_paged(&[1], &[0], &[true], &identity_tables(1, 4)).is_err());
+    }
+
+    #[test]
+    fn paged_artifact_names() {
+        assert_eq!(DecodeVariant::QuantNoHad.artifact_paged(4), "decode_nohad_paged_b4");
+        assert_eq!(
+            DecodeVariant::QuantHad.artifact_prefill_paged(8, 16),
+            "prefill_had_paged_b8_t16"
+        );
+        assert_eq!(label_variant("sq-2m/decode_nohad_paged_b4"), Some("nohad"));
+        assert_eq!(label_variant("prefill_fp_paged_b4_t16"), Some("fp"));
     }
 }

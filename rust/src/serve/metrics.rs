@@ -33,6 +33,10 @@ pub struct ServingMetrics {
     /// Prompt tokens consumed through batched prefill calls.
     pub tokens_prefilled: usize,
     pub requests_completed: usize,
+    /// Paged serving: requests evicted back to the queue (pool exhaustion);
+    /// each restarts from scratch later, so high counts mean the admission
+    /// watermark is too optimistic for the workload.
+    pub requests_evicted: usize,
 }
 
 impl ServingMetrics {
@@ -72,6 +76,11 @@ impl ServingMetrics {
         self.tokens_generated += new_tokens;
         self.in_flight.push(in_flight as f64);
         self.queue_depth.push(queue as f64);
+    }
+
+    /// Record a pool-exhaustion eviction (paged serving only).
+    pub fn record_eviction(&mut self) {
+        self.requests_evicted += 1;
     }
 
     /// Record a completed request (latencies in microseconds).
@@ -151,6 +160,7 @@ impl ServingMetrics {
             ("request_ms_mean", json::num(self.request_us.mean_us() / 1e3)),
             ("mean_queue_depth", json::num(self.mean_queue_depth())),
             ("mean_in_flight", json::num(self.mean_in_flight())),
+            ("requests_evicted", json::num(self.requests_evicted as f64)),
         ])
     }
 

@@ -3,24 +3,35 @@
 //! The paper's headline systems claim (Table 6 / Fig. 7) is that 4-bit
 //! W/A/KV SpinQuant models are cheap enough to *serve*; this module is the
 //! runtime that actually serves them. It promotes and absorbs the old
-//! single-request `coordinator::serve` loop into five pieces:
+//! single-request `coordinator::serve` loop into six pieces:
 //!
 //! * [`engine`] — the [`DecodeEngine`] trait: step a whole *batch* of slots
 //!   through one decode iteration, and *prefill* a multi-token prompt chunk
 //!   per slot in one call (`prefill_chunk()` tokens; the chunked fallback
-//!   runs the decode step in a loop when no prefill graph exists).
+//!   runs the decode step in a loop when no prefill graph exists). Engines
+//!   that expose a paged KV layout (`kv_block_size()`) additionally take a
+//!   per-slot *block table* through `step_paged` / `prefill_paged`.
 //!   Implementations: [`PjrtEngine`] (the real thing, over the `decode_*` /
-//!   `decode_*_b{N}` / `prefill_*_b{N}_t{T}` AOT artifacts, KV cache kept
-//!   as PJRT literals and shared between the decode and prefill bindings)
-//!   and [`MockEngine`] (a deterministic in-process model for
-//!   scheduler/sampler tests and for benching the scheduler itself without
-//!   artifacts; counts decode steps and prefill calls).
+//!   `decode_*_b{N}` / `prefill_*_b{N}_t{T}` and `*_paged_*` AOT artifacts,
+//!   KV cache kept as PJRT literals and shared between the decode and
+//!   prefill bindings) and [`MockEngine`] (a deterministic in-process model
+//!   for scheduler/sampler tests and for benching the scheduler itself
+//!   without artifacts; counts decode steps and prefill calls, and in paged
+//!   mode stores tokens in real physical pages so table corruption is
+//!   caught, not simulated away).
+//! * [`blocks`] — [`BlockPool`], the paged KV-cache page allocator:
+//!   `block_size`-token physical pages with strict `free + used == total`
+//!   accounting, plus the [`blocks::kv_memory_bytes`] formula the serving
+//!   bench audits its memory budgets with.
 //! * [`slots`] — [`SlotMap`], the slot-based KV-cache bookkeeping:
 //!   allocate/free/advance (by one token or a whole prefill chunk) with
-//!   per-slot position tracking and strict capacity accounting. Slot reuse
-//!   needs no cache zeroing: the decode graphs mask attention to
-//!   `idx <= pos`, so a freshly admitted request starting at `pos = 0` can
-//!   never observe a previous occupant's stale keys/values.
+//!   per-slot position tracking and strict capacity accounting. In paged
+//!   mode ([`SlotMap::paged`]) each slot carries a block table over the
+//!   shared [`BlockPool`] instead of assuming a dense `[0, max_seq)` range;
+//!   tables grow lazily at page boundaries and positions can never outrun
+//!   their pages. Slot reuse needs no cache zeroing: the decode graphs mask
+//!   attention to `idx <= pos`, so a freshly admitted request starting at
+//!   `pos = 0` can never observe a previous occupant's stale keys/values.
 //! * [`scheduler`] — [`Scheduler`], the continuous-batching loop: an
 //!   admission queue with backpressure, batched prompt prefill (a newly
 //!   admitted request reaches its first token in `ceil(len/T)` engine
@@ -28,23 +39,32 @@
 //!   interleaved path), mid-flight join (a request enters the batch on the
 //!   step after a slot frees, without draining in-flight requests) and
 //!   evict ([`Scheduler::cancel`] frees a slot immediately), per-request
-//!   token budgets, and completion accounting. The legacy threaded FIFO
+//!   token budgets, and completion accounting. Over a paged engine it
+//!   admits by free-page *token budget* (`ceil((len + max_new)/bs)` pages
+//!   reservable) instead of slot count, grows tables lazily during decode,
+//!   and evicts the youngest request back to the queue front when the pool
+//!   runs dry — so concurrency is bounded by tokens in flight, not by
+//!   `slots x max_seq` worst-case reservations. The legacy threaded FIFO
 //!   front ([`Server`]) also lives here. The scheduler's bookkeeping is
 //!   held to a pure reference simulator by randomized trace tests — see
 //!   [`crate::testing::sim`].
 //! * [`sampling`] — greedy / temperature / top-k / top-p samplers, seeded
-//!   via [`crate::util::prng`] so generations are exactly reproducible.
+//!   via [`crate::util::prng`] so generations are exactly reproducible;
+//!   candidate selection is partial (`select_nth_unstable_by`), never a
+//!   full-vocabulary sort per step.
 //! * [`metrics`] — time-to-first-token (measured from enqueue, so queue
 //!   wait is visible), prefill-call latency (kept separate from per-token
 //!   decode latency), per-token latency percentiles, tokens/sec, queue
-//!   depth; exportable as JSON through [`crate::report`].
+//!   depth, eviction counts; exportable as JSON through [`crate::report`].
 
+pub mod blocks;
 pub mod engine;
 pub mod metrics;
 pub mod sampling;
 pub mod scheduler;
 pub mod slots;
 
+pub use blocks::BlockPool;
 pub use engine::{DecodeEngine, DecodeVariant, GenerationSession, MockEngine, PjrtEngine};
 pub use metrics::ServingMetrics;
 pub use sampling::{argmax, Sampler, SamplerKind};

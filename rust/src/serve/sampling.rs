@@ -87,6 +87,13 @@ impl Sampler {
 
     /// Draw one token index from `logits`. Deterministic given (`self`,
     /// `logits`, the PRNG state).
+    ///
+    /// Candidate selection is *partial*: top-k and top-p pull their k /
+    /// nucleus prefix out with `select_nth_unstable_by` and only sort that
+    /// prefix, and the temperature path never orders the vocabulary at all
+    /// — the old implementation's full `V log V` sort per generated token
+    /// was the dominant scheduler-side cost at real vocab sizes (see the
+    /// `sampler` section of `benches/serving.rs` for before/after numbers).
     pub fn sample(&self, logits: &[f32], rng: &mut Prng) -> usize {
         if logits.is_empty() {
             return 0;
@@ -94,38 +101,88 @@ impl Sampler {
         if matches!(self.kind, SamplerKind::Greedy) || self.temperature <= 0.0 {
             return argmax(logits);
         }
-        // Candidates sorted by descending logit, NaNs dropped.
+        // Candidate indices, NaNs dropped (unordered).
         let mut idx: Vec<usize> = (0..logits.len()).filter(|&i| !logits[i].is_nan()).collect();
         if idx.is_empty() {
             return 0;
         }
-        idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
-        let m = logits[idx[0]];
-        let mut ws: Vec<f32> =
-            idx.iter().map(|&i| ((logits[i] - m) / self.temperature).exp()).collect();
-        match self.kind {
+        let desc = |&a: &usize, &b: &usize| logits[b].total_cmp(&logits[a]);
+        let (idx, ws) = match self.kind {
             SamplerKind::TopK(k) => {
+                // Partition the k largest to the front, then order just
+                // that prefix (the draw below walks weights in descending
+                // order, matching the old full-sort behaviour for distinct
+                // logits; exactly tied logits at the boundary may resolve
+                // to a different — equally probable — tied index, since
+                // the selection is unstable).
                 let k = k.clamp(1, idx.len());
-                idx.truncate(k);
-                ws.truncate(k);
+                if k < idx.len() {
+                    idx.select_nth_unstable_by(k - 1, desc);
+                    idx.truncate(k);
+                }
+                idx.sort_unstable_by(desc);
+                let m = logits[idx[0]];
+                let ws: Vec<f32> =
+                    idx.iter().map(|&i| ((logits[i] - m) / self.temperature).exp()).collect();
+                (idx, ws)
             }
             SamplerKind::TopP(p) => {
-                let total: f32 = ws.iter().sum();
+                // The nucleus needs the total softmax mass (over *all*
+                // candidates) and the sorted order only up to the cutoff:
+                // grow a sorted prefix geometrically until it holds the
+                // target mass, instead of sorting the whole vocabulary.
+                let m = idx.iter().map(|&i| logits[i]).fold(f32::NEG_INFINITY, f32::max);
+                let weight = |i: usize| ((logits[i] - m) / self.temperature).exp();
+                let total: f32 = idx.iter().map(|&i| weight(i)).sum();
                 let target = p.clamp(0.0, 1.0) * total;
-                let mut cum = 0.0f32;
-                let mut cut = ws.len();
-                for (j, &w) in ws.iter().enumerate() {
-                    cum += w;
-                    if cum >= target {
-                        cut = j + 1;
-                        break;
+                let n = idx.len();
+                let mut prefix = 16.min(n);
+                let cut = loop {
+                    if prefix < n {
+                        idx.select_nth_unstable_by(prefix - 1, desc);
+                        idx[..prefix].sort_unstable_by(desc);
+                    } else {
+                        idx.sort_unstable_by(desc);
+                    }
+                    // Cumulative mass in descending order, exactly as the
+                    // full-sort implementation summed it.
+                    let mut cum = 0.0f32;
+                    let mut cut = None;
+                    for (j, &i) in idx[..prefix].iter().enumerate() {
+                        cum += weight(i);
+                        if cum >= target {
+                            cut = Some(j + 1);
+                            break;
+                        }
+                    }
+                    match cut {
+                        Some(c) => break c,
+                        None if prefix == n => break n,
+                        // Nucleus bigger than the prefix: widen and retry.
+                        None => prefix = (prefix * 4).min(n),
+                    }
+                };
+                idx.truncate(cut);
+                let ws: Vec<f32> = idx.iter().map(|&i| weight(i)).collect();
+                (idx, ws)
+            }
+            _ => {
+                // Temperature over the full support needs no order at all;
+                // the argmax is swapped to the front so the cold-temperature
+                // limit still degrades to greedy exactly.
+                let mut best = 0usize;
+                for (j, &i) in idx.iter().enumerate() {
+                    if logits[i] > logits[idx[best]] {
+                        best = j;
                     }
                 }
-                idx.truncate(cut);
-                ws.truncate(cut);
+                idx.swap(0, best);
+                let m = logits[idx[0]];
+                let ws: Vec<f32> =
+                    idx.iter().map(|&i| ((logits[i] - m) / self.temperature).exp()).collect();
+                (idx, ws)
             }
-            _ => {}
-        }
+        };
         let sum: f32 = ws.iter().sum();
         if sum <= 0.0 || !sum.is_finite() {
             return idx[0];
@@ -340,6 +397,56 @@ mod tests {
             }
             prev_hits = hits;
         }
+    }
+
+    /// The old implementation, kept verbatim as a reference: full
+    /// descending sort of the vocabulary, then truncate to k.
+    fn full_sort_top_k_reference(logits: &[f32], k: usize, temp: f32, rng: &mut Prng) -> usize {
+        let mut idx: Vec<usize> = (0..logits.len()).filter(|&i| !logits[i].is_nan()).collect();
+        idx.sort_by(|&a, &b| logits[b].total_cmp(&logits[a]));
+        let m = logits[idx[0]];
+        let mut ws: Vec<f32> = idx.iter().map(|&i| ((logits[i] - m) / temp).exp()).collect();
+        let k = k.clamp(1, idx.len());
+        idx.truncate(k);
+        ws.truncate(k);
+        let sum: f32 = ws.iter().sum();
+        if sum <= 0.0 || !sum.is_finite() {
+            return idx[0];
+        }
+        let mut r = rng.uniform() * sum;
+        for (j, &w) in ws.iter().enumerate() {
+            if r < w {
+                return idx[j];
+            }
+            r -= w;
+        }
+        *idx.last().unwrap()
+    }
+
+    #[test]
+    fn prop_partial_top_k_is_bit_identical_to_full_sort() {
+        // The select_nth-based top-k is a pure perf change: same k-set,
+        // same descending weight walk, same PRNG consumption — so every
+        // draw must match the old full-sort implementation exactly.
+        // (Caveat: bit-identity holds for distinct logits, as drawn here;
+        // exact ties at the k boundary are order-ambiguous under unstable
+        // selection and may legitimately pick a different tied index.)
+        use crate::testing::prop::forall;
+        forall(0x70c3, 300, |g| {
+            let n = g.int(2, 128);
+            let logits: Vec<f32> = (0..n).map(|_| g.rng.normal() * 3.0).collect();
+            let k = g.int(1, n + 2); // occasionally k > n: clamp path
+            let temp = g.f32(0.05, 3.0);
+            let seed = g.rng.next_u64();
+            let s = Sampler::top_k(k, temp);
+            let got = s.sample(&logits, &mut Prng::new(seed));
+            let want = full_sort_top_k_reference(&logits, k, temp, &mut Prng::new(seed));
+            if got == want {
+                Ok(())
+            } else {
+                Err(format!("partial drew {got}, full sort drew {want} (k={k}, n={n})"))
+            }
+        });
     }
 
     #[test]

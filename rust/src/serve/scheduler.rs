@@ -23,6 +23,18 @@
 //! TTFT is always measured from *enqueue* (submit), never from admission
 //! or step start, so queue wait is visible in the latency metrics.
 //!
+//! Over a *paged* engine (`kv_block_size()` is `Some`) the KV cache is a
+//! pool of `block_size`-token pages and admission is by **token budget**,
+//! not slot count: a prompt is admitted only when
+//! `ceil(min(len + max_new, max_seq) / block_size)` pages are free, its
+//! block table then grows lazily as decode crosses page boundaries, and if
+//! the pool runs dry mid-flight (admission is a watermark, not a
+//! reservation) the *youngest* in-flight request is evicted back to the
+//! queue front — it restarts from scratch later, and the seeded sampler
+//! makes the restarted generation identical. The eviction rule is
+//! deterministic (largest request id first), which is what lets the pure
+//! oracle in [`crate::testing::sim`] replay paged traces exactly.
+//!
 //! PJRT handles are not `Send`, so the scheduler is single-threaded by
 //! design; the batching parallelism lives *inside* the engine step. The
 //! old one-request-at-a-time [`Server`] (worker thread + channels) is kept
@@ -83,6 +95,9 @@ struct Active {
     generated: Vec<u8>,
     max_new: usize,
     sampler: Sampler,
+    /// Original request seed, kept so an evicted request restarts with an
+    /// identical sampler stream.
+    seed: u64,
     rng: Prng,
     last_token: i32,
     submitted: Instant,
@@ -97,6 +112,12 @@ pub struct Scheduler<E: DecodeEngine> {
     pending: VecDeque<(u64, GenRequest, Instant)>,
     max_queue: usize,
     next_id: u64,
+    /// Paged mode: per-slot block tables padded to the logical page count
+    /// with the out-of-range sentinel (`kv_blocks()`), in the exact layout
+    /// the paged engine calls take. Maintained incrementally (rows refresh
+    /// on admission / growth / release) so the hot path never reallocates
+    /// them per step. Empty in dense mode.
+    tables: Vec<Vec<i32>>,
     pub metrics: ServingMetrics,
 }
 
@@ -110,15 +131,59 @@ impl<E: DecodeEngine> Scheduler<E> {
         }
         let n = engine.slots();
         let max_seq = engine.max_seq();
+        // A paged engine gets a paged SlotMap over its physical pool; the
+        // budget can be restricted further with `with_kv_block_budget`.
+        let (slots, tables) = match engine.kv_block_size() {
+            Some(bs) => {
+                let n_logical = max_seq.div_ceil(bs);
+                let sentinel = engine.kv_blocks() as i32;
+                (
+                    SlotMap::paged(n, max_seq, engine.kv_blocks(), bs),
+                    vec![vec![sentinel; n_logical]; n],
+                )
+            }
+            None => (SlotMap::new(n, max_seq), Vec::new()),
+        };
         Ok(Self {
             engine,
-            slots: SlotMap::new(n, max_seq),
+            slots,
             active: (0..n).map(|_| None).collect(),
             pending: VecDeque::new(),
             max_queue: max_queue.max(1),
             next_id: 0,
+            tables,
             metrics: ServingMetrics::new(),
         })
+    }
+
+    /// Restrict the paged admission budget to `blocks` pages (must not
+    /// exceed the engine's physical pool). Call before submitting work —
+    /// the page allocator is rebuilt. This is how a fixed KV-memory budget
+    /// is imposed on an over-provisioned paged artifact (`serve
+    /// --kv-blocks`, and the paged-vs-dense sweep in `benches/serving.rs`).
+    pub fn with_kv_block_budget(mut self, blocks: usize) -> Result<Self> {
+        let Some(bs) = self.engine.kv_block_size() else {
+            bail!("--kv-blocks needs a paged engine");
+        };
+        if blocks == 0 || blocks > self.engine.kv_blocks() {
+            bail!(
+                "kv block budget {blocks} outside (0, {}] (engine pool size)",
+                self.engine.kv_blocks()
+            );
+        }
+        if self.slots.active_count() > 0 || !self.pending.is_empty() {
+            bail!("kv block budget must be set before submitting work");
+        }
+        self.slots = SlotMap::paged(self.engine.slots(), self.engine.max_seq(), blocks, bs);
+        Ok(self)
+    }
+
+    /// Pages a request needs end to end: its prompt plus its generation
+    /// budget, capped at the cache's logical capacity (generation truncates
+    /// there anyway).
+    fn blocks_needed(&self, prompt_len: usize, max_new: usize) -> usize {
+        let pool = self.slots.pool().expect("paged mode");
+        pool.blocks_for((prompt_len + max_new).min(self.engine.max_seq()))
     }
 
     pub fn engine(&self) -> &E {
@@ -162,6 +227,16 @@ impl<E: DecodeEngine> Scheduler<E> {
                 self.engine.max_seq()
             );
         }
+        if let Some(pool) = self.slots.pool() {
+            let needed = self.blocks_needed(req.prompt.len(), req.max_new_tokens);
+            if needed > pool.total_blocks() {
+                bail!(
+                    "request needs {needed} KV pages, the whole pool has {} \
+                     (raise --kv-blocks or lower --max-new-tokens)",
+                    pool.total_blocks()
+                );
+            }
+        }
         if self.pending.len() >= self.max_queue {
             bail!(
                 "admission queue full ({} pending, limit {}): backpressure",
@@ -188,6 +263,7 @@ impl<E: DecodeEngine> Scheduler<E> {
             if self.active[b].as_ref().map(|a| a.id) == Some(id) {
                 self.active[b] = None;
                 self.slots.release(b)?;
+                self.refresh_table_row(b);
                 self.engine.reset_slot(b);
                 return Ok(true);
             }
@@ -196,10 +272,32 @@ impl<E: DecodeEngine> Scheduler<E> {
     }
 
     /// Move pending requests into free slots (at most one per free slot).
+    /// Paged mode additionally gates on the free-page token budget: the
+    /// head request is admitted only if `ceil((len + max_new)/bs)` pages
+    /// are free right now (a watermark, not a reservation — its first page
+    /// is claimed here, the rest lazily), and admission stays FIFO: a
+    /// too-big head blocks the queue rather than being jumped.
     fn admit(&mut self) {
         while !self.pending.is_empty() && self.slots.free_count() > 0 {
+            if self.slots.is_paged() {
+                let (_, req, _) = self.pending.front().expect("non-empty");
+                let needed = self.blocks_needed(req.prompt.len(), req.max_new_tokens);
+                if self.slots.pool().expect("paged").free_blocks() < needed {
+                    break;
+                }
+            }
             let (id, req, submitted) = self.pending.pop_front().expect("non-empty");
             let slot = self.slots.allocate(id).expect("free slot");
+            if self.slots.is_paged() {
+                // First page now (so every in-flight request holds >= 1
+                // page, which is what makes eviction always free memory).
+                let ok = self
+                    .slots
+                    .ensure_capacity(slot, 1)
+                    .expect("fresh slot can grow");
+                debug_assert!(ok, "admission checked free pages");
+                self.refresh_table_row(slot);
+            }
             self.engine.reset_slot(slot);
             self.active[slot] = Some(Active {
                 id,
@@ -208,11 +306,103 @@ impl<E: DecodeEngine> Scheduler<E> {
                 generated: Vec::new(),
                 max_new: req.max_new_tokens,
                 sampler: req.sampler,
+                seed: req.seed,
                 rng: Prng::new(req.seed),
                 last_token: 0,
                 submitted,
                 ttft_us: None,
             });
+        }
+    }
+
+    /// Evict the youngest (largest-id) in-flight request back to the queue
+    /// *front*: its pages and slot free immediately, its generated tokens
+    /// are discarded, and on re-admission it restarts from scratch — with
+    /// the same id, the same enqueue timestamp (so TTFT keeps the full
+    /// wait) and the same seed (so the completion is identical).
+    fn evict_youngest(&mut self) -> Result<usize> {
+        let victim = (0..self.active.len())
+            .filter(|&b| self.active[b].is_some())
+            .max_by_key(|&b| self.active[b].as_ref().expect("occupied").id)
+            .ok_or_else(|| anyhow!("pool exhausted with no in-flight request to evict"))?;
+        let a = self.active[victim].take().expect("occupied");
+        self.slots.release(victim)?;
+        self.refresh_table_row(victim);
+        self.engine.reset_slot(victim);
+        self.metrics.record_eviction();
+        // Queue-front requeue keeps FIFO fairness (it was admitted before
+        // anything still queued); this may transiently exceed `max_queue`,
+        // which beats dropping the request on the floor.
+        self.pending.push_front((
+            a.id,
+            GenRequest {
+                prompt: a.prompt.iter().map(|&t| t as u8).collect(),
+                max_new_tokens: a.max_new,
+                sampler: a.sampler,
+                seed: a.seed,
+            },
+            a.submitted,
+        ));
+        Ok(victim)
+    }
+
+    /// Grow slot `b`'s block table to cover `[0, target)`, evicting the
+    /// youngest request (possibly `b` itself) while the pool is dry.
+    /// Returns `false` when `b` was evicted in the process.
+    fn grow_or_evict(&mut self, b: usize, target: usize) -> Result<bool> {
+        loop {
+            if self.active[b].is_none() {
+                return Ok(false);
+            }
+            if self.slots.ensure_capacity(b, target)? {
+                self.refresh_table_row(b);
+                return Ok(true);
+            }
+            // Every in-flight request holds >= 1 page, so each eviction
+            // makes progress; if `b` is the youngest it evicts itself.
+            self.evict_youngest()?;
+        }
+    }
+
+    /// Pre-step page growth for every occupied slot about to advance one
+    /// token (the chunk-1 interleaved path included).
+    fn grow_for_decode(&mut self) -> Result<()> {
+        for b in 0..self.active.len() {
+            if self.active[b].is_some() {
+                let target = self.slots.pos(b).expect("occupied") + 1;
+                self.grow_or_evict(b, target)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Pre-call page growth for every slot about to prefill a chunk.
+    fn grow_for_prefill(&mut self, chunk: usize) -> Result<()> {
+        for b in 0..self.active.len() {
+            let take = match &self.active[b] {
+                Some(a) if a.fed < a.prompt.len() => chunk.min(a.prompt.len() - a.fed),
+                _ => continue,
+            };
+            let target = self.slots.pos(b).expect("occupied") + take;
+            self.grow_or_evict(b, target)?;
+        }
+        Ok(())
+    }
+
+    /// Rewrite slot `b`'s cached padded table row from the SlotMap's truth:
+    /// allocated pages first, then the out-of-range sentinel — writes
+    /// through unallocated or inactive entries are dropped by the graph, so
+    /// a lane can never scribble on someone else's pages. Called whenever
+    /// the slot's table changes (admission, growth, release); the decode /
+    /// prefill hot path just hands `self.tables` to the engine.
+    fn refresh_table_row(&mut self, b: usize) {
+        if !self.slots.is_paged() {
+            return;
+        }
+        let sentinel = self.engine.kv_blocks() as i32;
+        let table = self.slots.table(b);
+        for (j, e) in self.tables[b].iter_mut().enumerate() {
+            *e = table.get(j).map(|&x| x as i32).unwrap_or(sentinel);
         }
     }
 
@@ -257,6 +447,7 @@ impl<E: DecodeEngine> Scheduler<E> {
     fn retire(&mut self, b: usize) -> Result<Completion> {
         let a = self.active[b].take().expect("retiring an occupied slot");
         self.slots.release(b)?;
+        self.refresh_table_row(b);
         let request_us = a.submitted.elapsed().as_secs_f64() * 1e6;
         self.metrics.record_completion(request_us, a.ttft_us);
         Ok(Completion {
@@ -276,13 +467,22 @@ impl<E: DecodeEngine> Scheduler<E> {
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         self.admit();
         let chunk = self.engine.prefill_chunk().max(1);
-        if chunk > 1
-            && self
-                .active
-                .iter()
-                .any(|s| s.as_ref().map_or(false, |a| a.fed < a.prompt.len()))
-        {
+        let owes_prompt =
+            |s: &Option<Active>| s.as_ref().map_or(false, |a| a.fed < a.prompt.len());
+        if chunk > 1 && self.active.iter().any(owes_prompt) {
+            if self.slots.is_paged() {
+                self.grow_for_prefill(chunk)?;
+                // Growth can evict every prefilling slot (they are the
+                // youngest by construction); skip the engine call — the
+                // next iteration re-admits and carries on.
+                if !self.active.iter().any(owes_prompt) {
+                    return Ok(Vec::new());
+                }
+            }
             return self.prefill_pass(chunk);
+        }
+        if self.slots.is_paged() {
+            self.grow_for_decode()?;
         }
         self.decode_pass()
     }
@@ -310,7 +510,11 @@ impl<E: DecodeEngine> Scheduler<E> {
         }
 
         let t0 = Instant::now();
-        let logits = self.engine.prefill(&tokens, &pos0, &active)?;
+        let logits = if self.slots.is_paged() {
+            self.engine.prefill_paged(&tokens, &pos0, &active, &self.tables)?
+        } else {
+            self.engine.prefill(&tokens, &pos0, &active)?
+        };
         let step_us = t0.elapsed().as_secs_f64() * 1e6;
 
         let mut prompt_tokens = 0usize;
@@ -364,7 +568,11 @@ impl<E: DecodeEngine> Scheduler<E> {
         }
 
         let t0 = Instant::now();
-        let logits = self.engine.step(&tokens, &pos, &active)?;
+        let logits = if self.slots.is_paged() {
+            self.engine.step_paged(&tokens, &pos, &active, &self.tables)?
+        } else {
+            self.engine.step(&tokens, &pos, &active)?
+        };
         let step_us = t0.elapsed().as_secs_f64() * 1e6;
 
         let mut new_tokens = 0usize;
@@ -868,6 +1076,165 @@ mod tests {
         assert!(ttft >= 15.0, "prefill TTFT {ttft}ms lost the queue wait");
         // ...and the aggregate metric carries the same number.
         assert!(s.metrics.ttft_ms_p50() >= 15.0);
+    }
+
+    // -- paged KV cache (block pool) --------------------------------------
+
+    fn sched_paged(
+        slots: usize,
+        max_seq: usize,
+        max_queue: usize,
+        n_blocks: usize,
+        bs: usize,
+    ) -> Scheduler<MockEngine> {
+        Scheduler::new(
+            MockEngine::new(slots, max_seq, 64).with_block_pool(n_blocks, bs),
+            max_queue,
+        )
+        .unwrap()
+    }
+
+    fn mixed_workload(n: usize) -> Vec<GenRequest> {
+        (0..n)
+            .map(|i| {
+                let prompt = vec![b'a' + (i % 23) as u8; 2 + (i % 7)];
+                GenRequest::sampled(
+                    &prompt,
+                    3 + (i % 9),
+                    Sampler::top_k(8, 0.9),
+                    500 + i as u64,
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn paged_with_full_pool_is_bit_identical_to_dense() {
+        // With a full-size pool (slots x max_seq worth of pages) the token
+        // budget never binds: admission, step counts, completion order and
+        // every generated byte must match the dense scheduler exactly.
+        let (slots, max_seq, bs) = (4, 64, 8);
+        let mut dense = sched(slots, max_seq, 8);
+        let d = dense.serve_all(mixed_workload(16)).unwrap();
+        let mut paged = sched_paged(slots, max_seq, 8, slots * max_seq / bs, bs);
+        let p = paged.serve_all(mixed_workload(16)).unwrap();
+        assert_eq!(d.len(), p.len());
+        for (a, b) in d.iter().zip(&p) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.completion, b.completion, "request {}", a.id);
+        }
+        assert_eq!(dense.engine().steps, paged.engine().steps);
+        assert_eq!(paged.metrics.requests_evicted, 0);
+    }
+
+    #[test]
+    fn paged_admits_by_token_budget_not_slot_reservation() {
+        // 8 slots but only ~2 dense slots worth of memory: short requests
+        // still fill every lane because admission counts pages, not
+        // max_seq-sized reservations.
+        let (slots, max_seq, bs) = (8, 64, 8);
+        let mut s = sched_paged(slots, max_seq, 16, 2 * max_seq / bs, bs);
+        for i in 0..8 {
+            // prompt 4 + budget 3 => 1 page each.
+            s.submit(GenRequest::sampled(b"abcd", 3, Sampler::top_k(4, 0.7), i)).unwrap();
+        }
+        s.step().unwrap();
+        assert_eq!(s.in_flight(), 8, "token budget should admit all 8");
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 8);
+        assert_eq!(s.metrics.requests_evicted, 0);
+        // A dense scheduler at the same memory budget caps at 2 concurrent.
+        let mut d = sched(2, max_seq, 16);
+        for i in 0..8 {
+            d.submit(GenRequest::sampled(b"abcd", 3, Sampler::top_k(4, 0.7), i)).unwrap();
+        }
+        d.step().unwrap();
+        assert_eq!(d.in_flight(), 2);
+    }
+
+    #[test]
+    fn paged_pool_exhaustion_evicts_youngest_and_restarts_identically() {
+        // Two requests that each need 3 pages over a 4-page pool: the
+        // watermark admits both, growth exhausts the pool, the younger is
+        // evicted to the queue front, and both still complete with exactly
+        // the bytes a solo (dense) run produces — the seeded restart is
+        // invisible in the output.
+        let req = |seed| GenRequest::sampled(b"abcd", 8, Sampler::top_k(8, 0.9), seed);
+        let mut s = sched_paged(2, 32, 8, 4, 4);
+        let a = s.submit(req(1)).unwrap();
+        let b = s.submit(req(2)).unwrap();
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 2);
+        assert!(s.metrics.requests_evicted >= 1, "pool of 4 pages must evict");
+        // Eviction hits the youngest: `a` (older) finishes first.
+        assert_eq!(done[0].id, a);
+        assert_eq!(done[1].id, b);
+        for (seed, id) in [(1, a), (2, b)] {
+            let mut solo = sched(1, 32, 4);
+            solo.submit(req(seed)).unwrap();
+            let want = solo.run().unwrap();
+            let got = done.iter().find(|c| c.id == id).expect("completed");
+            assert_eq!(got.completion, want[0].completion, "request {id}");
+        }
+        // Everything was returned to the pool.
+        assert_eq!(s.slots.pool().unwrap().used_blocks(), 0);
+    }
+
+    #[test]
+    fn paged_rejects_requests_larger_than_the_whole_pool() {
+        let mut s = sched_paged(2, 64, 8, 4, 4); // 16-token pool
+        let err = s.submit(GenRequest::greedy(&[b'x'; 20], 30)).unwrap_err();
+        assert!(err.to_string().contains("KV pages"), "{err:#}");
+        // max_seq caps the demand: a huge budget on a short prompt is fine
+        // when the pool covers max_seq... but not here (64 > 16).
+        assert!(s.submit(GenRequest::greedy(b"ab", 1000)).is_err());
+        // With a pool covering max_seq the same request is accepted.
+        let mut s = sched_paged(2, 16, 8, 4, 4);
+        s.submit(GenRequest::greedy(b"ab", 1000)).unwrap();
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 1, "truncated at max_seq but completed");
+    }
+
+    #[test]
+    fn paged_prefill_grows_tables_across_chunk_boundaries() {
+        // T=8 prefill over 4-token pages: each prefill call needs 2 fresh
+        // pages; a 30-token prompt costs ceil(30/8) = 4 calls and
+        // ceil(30/4) = 8 pages at its peak.
+        let mut s = Scheduler::new(
+            MockEngine::new(2, 64, 64).with_block_pool(16, 4).with_prefill_chunk(8),
+            8,
+        )
+        .unwrap();
+        s.submit(GenRequest::greedy(&[b'p'; 30], 4)).unwrap();
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].completion.len(), 4);
+        assert_eq!(s.engine().prefill_calls, 4);
+        assert_eq!(s.metrics.requests_evicted, 0);
+        assert_eq!(s.slots.pool().unwrap().used_blocks(), 0);
+    }
+
+    #[test]
+    fn paged_cancel_returns_pages() {
+        let mut s = sched_paged(2, 32, 8, 8, 4);
+        let a = s.submit(GenRequest::greedy(&[b'a'; 10], 10)).unwrap();
+        for _ in 0..12 {
+            s.step().unwrap();
+        }
+        assert!(s.slots.pool().unwrap().used_blocks() >= 3);
+        assert!(s.cancel(a).unwrap());
+        assert_eq!(s.slots.pool().unwrap().used_blocks(), 0);
+    }
+
+    #[test]
+    fn paged_budget_restriction_is_enforced() {
+        let e = MockEngine::new(4, 64, 64).with_block_pool(32, 8);
+        let s = Scheduler::new(e, 8).unwrap().with_kv_block_budget(8).unwrap();
+        assert_eq!(s.slots.pool().unwrap().total_blocks(), 8);
+        let e = MockEngine::new(4, 64, 64).with_block_pool(32, 8);
+        assert!(Scheduler::new(e, 8).unwrap().with_kv_block_budget(64).is_err());
+        let dense = MockEngine::new(4, 64, 64);
+        assert!(Scheduler::new(dense, 8).unwrap().with_kv_block_budget(8).is_err());
     }
 
     // -- legacy threaded Server ------------------------------------------

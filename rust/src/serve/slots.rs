@@ -7,8 +7,17 @@
 //! slot reuse comes from the graphs' `idx <= pos` attention mask, so
 //! [`SlotMap`] never needs to zero anything — it only has to keep positions
 //! honest, which [`crate::serve::MockEngine`] cross-checks in tests.
+//!
+//! A [`SlotMap`] built with [`SlotMap::paged`] additionally carries one
+//! block table per slot over a [`BlockPool`]: instead of assuming a dense
+//! `[0, max_seq)` cache range, a slot's positions live in lazily allocated
+//! `block_size`-token physical pages ([`SlotMap::ensure_capacity`] grows
+//! the table at page boundaries, [`SlotMap::release`] returns the pages to
+//! the pool). Positions may never advance past what the table covers.
 
 use anyhow::{bail, Result};
+
+use crate::serve::blocks::BlockPool;
 
 /// Occupancy record for one slot.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -26,11 +35,67 @@ pub struct SlotInfo {
 pub struct SlotMap {
     max_seq: usize,
     state: Vec<Option<SlotInfo>>,
+    /// Paged mode: the physical page allocator shared by every slot.
+    pool: Option<BlockPool>,
+    /// Paged mode: per-slot block table (logical page j -> physical page).
+    /// Always empty for free slots and in dense mode.
+    tables: Vec<Vec<u32>>,
 }
 
 impl SlotMap {
     pub fn new(capacity: usize, max_seq: usize) -> Self {
-        Self { max_seq, state: vec![None; capacity] }
+        Self { max_seq, state: vec![None; capacity], pool: None, tables: vec![Vec::new(); capacity] }
+    }
+
+    /// Paged variant: slots share `total_blocks` physical pages of
+    /// `block_size` tokens, allocated lazily through
+    /// [`SlotMap::ensure_capacity`].
+    pub fn paged(capacity: usize, max_seq: usize, total_blocks: usize, block_size: usize) -> Self {
+        Self {
+            max_seq,
+            state: vec![None; capacity],
+            pool: Some(BlockPool::new(total_blocks, block_size)),
+            tables: vec![Vec::new(); capacity],
+        }
+    }
+
+    /// The page allocator, when this map is paged.
+    pub fn pool(&self) -> Option<&BlockPool> {
+        self.pool.as_ref()
+    }
+
+    pub fn is_paged(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// A slot's block table (empty when free or dense).
+    pub fn table(&self, slot: usize) -> &[u32] {
+        &self.tables[slot]
+    }
+
+    /// Grow `slot`'s block table until it covers cache positions
+    /// `[0, target_pos)`, allocating pages from the pool. Returns `false`
+    /// (keeping any pages already granted) when the pool runs dry — the
+    /// scheduler then evicts a request and retries. Errors on free slots,
+    /// dense maps, or a target past `max_seq`.
+    pub fn ensure_capacity(&mut self, slot: usize, target_pos: usize) -> Result<bool> {
+        let Some(pool) = self.pool.as_mut() else {
+            bail!("ensure_capacity on a dense SlotMap");
+        };
+        if self.state.get(slot).copied().flatten().is_none() {
+            bail!("slot {slot} grown while free");
+        }
+        if target_pos > self.max_seq {
+            bail!("slot {slot}: target {target_pos} past max_seq {}", self.max_seq);
+        }
+        let needed = pool.blocks_for(target_pos);
+        while self.tables[slot].len() < needed {
+            match pool.allocate() {
+                Some(b) => self.tables[slot].push(b),
+                None => return Ok(false),
+            }
+        }
+        Ok(true)
     }
 
     pub fn capacity(&self) -> usize {
@@ -71,13 +136,20 @@ impl SlotMap {
         Some(slot)
     }
 
-    /// Release an occupied slot; returns the request id it held.
+    /// Release an occupied slot (returning its pages to the pool in paged
+    /// mode); returns the request id it held.
     pub fn release(&mut self, slot: usize) -> Result<u64> {
         if slot >= self.state.len() {
             bail!("slot {slot} out of range (capacity {})", self.capacity());
         }
         match self.state[slot].take() {
-            Some(info) => Ok(info.id),
+            Some(info) => {
+                if let Some(pool) = self.pool.as_mut() {
+                    let blocks = std::mem::take(&mut self.tables[slot]);
+                    pool.release(&blocks)?;
+                }
+                Ok(info.id)
+            }
             None => bail!("slot {slot} released twice"),
         }
     }
@@ -94,6 +166,13 @@ impl SlotMap {
     /// even for multi-token writes.
     pub fn advance_by(&mut self, slot: usize, n: usize) -> Result<usize> {
         let max_seq = self.max_seq;
+        // Paged: the advance must stay inside the pages the table covers —
+        // a position without a page would scatter into the out-of-range
+        // sentinel and silently drop the KV write.
+        let covered = match (&self.pool, self.tables.get(slot)) {
+            (Some(pool), Some(table)) => Some(table.len() * pool.block_size()),
+            _ => None,
+        };
         match self.state.get_mut(slot) {
             Some(Some(info)) => {
                 if n == 0 {
@@ -105,6 +184,15 @@ impl SlotMap {
                          ({} + {n} > {max_seq})",
                         info.pos
                     );
+                }
+                if let Some(covered) = covered {
+                    if info.pos + n > covered {
+                        bail!(
+                            "slot {slot}: advance by {n} passes its block table \
+                             ({} + {n} > {covered} covered; ensure_capacity first)",
+                            info.pos
+                        );
+                    }
                 }
                 info.pos += n;
                 Ok(info.pos)
@@ -192,6 +280,152 @@ mod tests {
         assert!(m.advance(s).is_err());
         m.release(s).unwrap();
         assert!(m.advance_by(s, 1).is_err());
+    }
+
+    #[test]
+    fn paged_grow_advance_release_roundtrip() {
+        // 2 slots, 16-position logical range, 4 pages of 4 tokens shared.
+        let mut m = SlotMap::paged(2, 16, 4, 4);
+        assert!(m.is_paged());
+        let a = m.allocate(1).unwrap();
+        let b = m.allocate(2).unwrap();
+        // No pages yet: advancing must fail until capacity is ensured.
+        assert!(m.advance(a).is_err());
+        assert!(m.ensure_capacity(a, 1).unwrap());
+        assert_eq!(m.table(a).len(), 1);
+        // The same target again is a no-op.
+        assert!(m.ensure_capacity(a, 4).unwrap());
+        assert_eq!(m.table(a).len(), 1);
+        for _ in 0..4 {
+            m.advance(a).unwrap();
+        }
+        // Position 4 needs a second page.
+        assert!(m.advance(a).is_err());
+        assert!(m.ensure_capacity(a, 5).unwrap());
+        m.advance(a).unwrap();
+        // Slot b grabs the remaining 2 pages; the pool is then dry.
+        assert!(m.ensure_capacity(b, 8).unwrap());
+        assert_eq!(m.pool().unwrap().free_blocks(), 0);
+        assert!(!m.ensure_capacity(a, 9).unwrap(), "pool dry: growth must report false");
+        // Tables never alias.
+        let mut all: Vec<u32> = m.table(a).iter().chain(m.table(b)).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 4);
+        // Releasing a slot returns its pages.
+        m.release(b).unwrap();
+        assert!(m.table(b).is_empty());
+        assert_eq!(m.pool().unwrap().free_blocks(), 2);
+        assert!(m.ensure_capacity(a, 9).unwrap());
+        m.release(a).unwrap();
+        assert_eq!(m.pool().unwrap().free_blocks(), 4);
+        assert_eq!(m.pool().unwrap().used_blocks(), 0);
+    }
+
+    #[test]
+    fn paged_rejects_growth_past_max_seq_and_dense_rejects_growth() {
+        let mut m = SlotMap::paged(1, 8, 8, 4);
+        let s = m.allocate(1).unwrap();
+        assert!(m.ensure_capacity(s, 9).is_err());
+        assert!(m.ensure_capacity(99, 1).is_err());
+        m.release(s).unwrap();
+        assert!(m.ensure_capacity(s, 1).is_err(), "free slot cannot grow");
+        let mut d = SlotMap::new(1, 8);
+        let s = d.allocate(1).unwrap();
+        assert!(d.ensure_capacity(s, 1).is_err(), "dense map has no pages");
+    }
+
+    /// Property: under random paged allocate/grow/advance/release
+    /// interleavings, pool accounting never leaks
+    /// (`free + used == total`, used == sum of table lengths), tables cover
+    /// exactly `ceil(covered_target/bs)` pages, no physical page is ever
+    /// shared by two slots, and positions never pass the covered range.
+    #[test]
+    fn prop_paged_interleavings_keep_pool_honest() {
+        use crate::testing::prop::forall;
+        forall(0xb10c, 300, |g| {
+            let cap = g.int(1, 4);
+            let bs = g.int(1, 5);
+            let max_blocks = g.int(1, 8);
+            let max_seq = (max_blocks * bs).min(g.int(1, 24));
+            let mut m = SlotMap::paged(cap, max_seq, max_blocks, bs);
+            let mut held: Vec<usize> = Vec::new();
+            let ops = g.int(5, 60);
+            for op in 0..ops {
+                match g.int(0, 3) {
+                    0 => {
+                        if let Some(s) = m.allocate(op as u64) {
+                            if !m.table(s).is_empty() {
+                                return Err(format!("op {op}: fresh slot {s} has pages"));
+                            }
+                            held.push(s);
+                        }
+                    }
+                    1 => {
+                        if !held.is_empty() {
+                            let s = held.swap_remove(g.int(0, held.len() - 1));
+                            m.release(s).unwrap();
+                        }
+                    }
+                    2 => {
+                        if !held.is_empty() {
+                            let s = *g.pick(&held);
+                            let target = g.int(0, max_seq);
+                            let ok = m.ensure_capacity(s, target).map_err(|e| e.to_string())?;
+                            let covered = m.table(s).len() * bs;
+                            if ok && covered < target {
+                                return Err(format!(
+                                    "op {op}: grow to {target} granted only {covered}"
+                                ));
+                            }
+                            if !ok && m.pool().unwrap().free_blocks() != 0 {
+                                return Err(format!(
+                                    "op {op}: growth failed with free pages left"
+                                ));
+                            }
+                        }
+                    }
+                    _ => {
+                        if !held.is_empty() {
+                            let s = *g.pick(&held);
+                            let pos = m.pos(s).expect("held slot");
+                            let covered = m.table(s).len() * bs;
+                            let r = m.advance(s);
+                            if pos + 1 > covered.min(max_seq) {
+                                if r.is_ok() {
+                                    return Err(format!(
+                                        "op {op}: advanced past coverage ({pos} + 1 > {covered})"
+                                    ));
+                                }
+                            } else if r.is_err() {
+                                return Err(format!("op {op}: covered advance failed"));
+                            }
+                        }
+                    }
+                }
+                // Pool accounting vs the tables, every step.
+                let pool = m.pool().unwrap();
+                if pool.free_blocks() + pool.used_blocks() != pool.total_blocks() {
+                    return Err(format!("op {op}: pool accounting leaked"));
+                }
+                let table_total: usize = (0..cap).map(|s| m.table(s).len()).sum();
+                if table_total != pool.used_blocks() {
+                    return Err(format!(
+                        "op {op}: tables hold {table_total} pages, pool says {}",
+                        pool.used_blocks()
+                    ));
+                }
+                let mut all: Vec<u32> =
+                    (0..cap).flat_map(|s| m.table(s).iter().copied()).collect();
+                all.sort_unstable();
+                let n = all.len();
+                all.dedup();
+                if all.len() != n {
+                    return Err(format!("op {op}: physical page shared between slots"));
+                }
+            }
+            Ok(())
+        });
     }
 
     /// Property: under random allocate/free/advance/advance_by

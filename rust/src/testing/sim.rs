@@ -6,9 +6,13 @@
 //! lowest free slot, bounded queue with backpressure, batched multi-token
 //! prefill (`ceil(len/chunk)` calls) or the chunk-1 interleaved path,
 //! per-request generation budgets, cache-capacity truncation, and
-//! mid-flight eviction. No engine, no logits, no clocks — just the
-//! admission/join/evict/budget arithmetic the real
-//! [`crate::serve::Scheduler`] must implement.
+//! mid-flight eviction. With `kv_blocks > 0` it also models the *paged*
+//! KV path: free-page token-budget admission (a watermark, head-of-queue
+//! only), one page claimed at admission, lazy growth at page boundaries in
+//! slot order, and youngest-first evict-to-queue-front on pool exhaustion
+//! — page *counts* only, since the oracle needs no physical identities. No
+//! engine, no logits, no clocks — just the admission/join/evict/budget
+//! arithmetic the real [`crate::serve::Scheduler`] must implement.
 //!
 //! The randomized trace tests at the bottom generate hundreds of seeded
 //! traces, run each against both the oracle and the real scheduler over
@@ -37,6 +41,17 @@ pub struct SimConfig {
     pub max_queue: usize,
     /// Engine prefill chunk; 1 = the interleaved token-by-token path.
     pub prefill_chunk: usize,
+    /// Paged KV pool size in pages; 0 = the dense path.
+    pub kv_blocks: usize,
+    /// Tokens per page (ignored when `kv_blocks == 0`).
+    pub block_size: usize,
+}
+
+impl SimConfig {
+    /// Dense configuration (no paging).
+    pub fn dense(slots: usize, max_seq: usize, max_queue: usize, prefill_chunk: usize) -> Self {
+        Self { slots, max_seq, max_queue, prefill_chunk, kv_blocks: 0, block_size: 1 }
+    }
 }
 
 /// Trace events, mirroring the public scheduler API.
@@ -64,6 +79,8 @@ pub struct SimResult {
     pub occupancy: Vec<(usize, usize)>,
     pub decode_steps: usize,
     pub prefill_calls: usize,
+    /// Paged only: pool-exhaustion evictions back to the queue.
+    pub evictions: usize,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -74,6 +91,9 @@ struct SimSlot {
     fed: usize,
     gen: usize,
     pos: usize,
+    /// Paged: pages this slot holds (counts only — the oracle does not
+    /// track physical identities).
+    pages: usize,
 }
 
 struct SimState {
@@ -81,6 +101,8 @@ struct SimState {
     slots: Vec<Option<SimSlot>>,
     pending: VecDeque<(u64, SimRequest)>,
     next_id: u64,
+    /// Paged: free pages in the pool.
+    free_pages: usize,
 }
 
 impl SimState {
@@ -92,8 +114,21 @@ impl SimState {
         self.pending.is_empty() && self.occupied() == 0
     }
 
+    fn paged(&self) -> bool {
+        self.cfg.kv_blocks > 0
+    }
+
+    /// Pages a request needs end to end (prompt + budget, capped at the
+    /// logical capacity) — the admission watermark.
+    fn pages_needed(&self, r: &SimRequest) -> usize {
+        (r.prompt_len + r.max_new).min(self.cfg.max_seq).div_ceil(self.cfg.block_size)
+    }
+
     fn submit(&mut self, r: SimRequest) -> Option<u64> {
         if r.prompt_len == 0 || r.prompt_len >= self.cfg.max_seq {
+            return None;
+        }
+        if self.paged() && self.pages_needed(&r) > self.cfg.kv_blocks {
             return None;
         }
         if self.pending.len() >= self.cfg.max_queue {
@@ -112,6 +147,7 @@ impl SimState {
         }
         for s in self.slots.iter_mut() {
             if s.map(|s| s.id) == Some(id) {
+                self.free_pages += s.map(|s| s.pages).unwrap_or(0);
                 *s = None;
                 return true;
             }
@@ -122,7 +158,21 @@ impl SimState {
     fn admit(&mut self) {
         while !self.pending.is_empty() {
             let Some(b) = self.slots.iter().position(|s| s.is_none()) else { break };
+            if self.paged() {
+                // Head-of-queue watermark: enough free pages for the whole
+                // request, one page claimed now.
+                let (_, r) = self.pending.front().expect("non-empty");
+                if self.free_pages < self.pages_needed(r) {
+                    break;
+                }
+            }
             let (id, r) = self.pending.pop_front().expect("non-empty");
+            let pages = if self.paged() {
+                self.free_pages -= 1;
+                1
+            } else {
+                0
+            };
             self.slots[b] = Some(SimSlot {
                 id,
                 prompt_len: r.prompt_len,
@@ -130,24 +180,76 @@ impl SimState {
                 fed: 0,
                 gen: 0,
                 pos: 0,
+                pages,
             });
         }
     }
 
     fn retire(&mut self, b: usize, res: &mut SimResult) {
         let s = self.slots[b].take().expect("retiring an occupied slot");
+        self.free_pages += s.pages;
         res.completion_order.push(s.id);
         res.generated.insert(s.id, s.gen);
     }
 
-    /// Mirror of `Scheduler::step`: admit, then one prefill call or one
-    /// decode step; retire finished slots in slot order.
+    /// Mirror of `Scheduler::evict_youngest`: free the largest-id slot's
+    /// pages and requeue it (reset) at the queue front.
+    fn evict_youngest(&mut self, res: &mut SimResult) {
+        let victim = (0..self.cfg.slots)
+            .filter(|&b| self.slots[b].is_some())
+            .max_by_key(|&b| self.slots[b].expect("occupied").id)
+            .expect("pool exhausted with nothing in flight");
+        let s = self.slots[victim].take().expect("occupied");
+        self.free_pages += s.pages;
+        res.evictions += 1;
+        self.pending.push_front((
+            s.id,
+            SimRequest { prompt_len: s.prompt_len, max_new: s.max_new },
+        ));
+    }
+
+    /// Mirror of `Scheduler::grow_or_evict`: grow slot `b` to cover
+    /// `[0, target)`, evicting youngest-first while the pool is dry.
+    fn grow_or_evict(&mut self, b: usize, target: usize, res: &mut SimResult) {
+        loop {
+            let Some(s) = self.slots[b] else { return };
+            let needed = target.div_ceil(self.cfg.block_size);
+            if s.pages >= needed {
+                return;
+            }
+            if self.free_pages > 0 {
+                self.free_pages -= 1;
+                self.slots[b].as_mut().expect("occupied").pages += 1;
+            } else {
+                self.evict_youngest(res);
+            }
+        }
+    }
+
+    /// Mirror of `Scheduler::step`: admit, grow (paged), then one prefill
+    /// call or one decode step; retire finished slots in slot order.
     fn step(&mut self, res: &mut SimResult) {
         self.admit();
         let chunk = self.cfg.prefill_chunk.max(1);
-        let prefilling = chunk > 1
-            && self.slots.iter().any(|s| s.map_or(false, |s| s.fed < s.prompt_len));
+        let owes = |s: &Option<SimSlot>| s.map_or(false, |s| s.fed < s.prompt_len);
+        let prefilling = chunk > 1 && self.slots.iter().any(owes);
         if prefilling {
+            if self.paged() {
+                for b in 0..self.cfg.slots {
+                    let take = match self.slots[b] {
+                        Some(s) if s.fed < s.prompt_len => chunk.min(s.prompt_len - s.fed),
+                        _ => continue,
+                    };
+                    let target = self.slots[b].expect("occupied").pos + take;
+                    self.grow_or_evict(b, target, res);
+                }
+                if !self.slots.iter().any(owes) {
+                    // Every prefiller was evicted: the real scheduler skips
+                    // the engine call this iteration.
+                    res.occupancy.push((self.occupied(), self.pending.len()));
+                    return;
+                }
+            }
             res.prefill_calls += 1;
             for b in 0..self.cfg.slots {
                 let finished = match self.slots[b].as_mut() {
@@ -173,6 +275,13 @@ impl SimState {
                 }
             }
         } else {
+            if self.paged() {
+                for b in 0..self.cfg.slots {
+                    if let Some(s) = self.slots[b] {
+                        self.grow_or_evict(b, s.pos + 1, res);
+                    }
+                }
+            }
             if self.occupied() == 0 {
                 // The real scheduler returns without an engine call (and
                 // without recording occupancy) when nothing is in flight.
@@ -215,6 +324,7 @@ pub fn simulate(cfg: &SimConfig, events: &[SimEvent]) -> SimResult {
         slots: (0..cfg.slots).map(|_| None).collect(),
         pending: VecDeque::new(),
         next_id: 0,
+        free_pages: cfg.kv_blocks,
     };
     let mut res = SimResult::default();
     for ev in events {
@@ -245,8 +355,11 @@ mod tests {
     /// Drive the REAL scheduler (over MockEngine) through the same trace
     /// the oracle saw, collecting the same observables.
     fn run_real(cfg: &SimConfig, events: &[SimEvent]) -> SimResult {
-        let engine = MockEngine::new(cfg.slots, cfg.max_seq, 64)
+        let mut engine = MockEngine::new(cfg.slots, cfg.max_seq, 64)
             .with_prefill_chunk(cfg.prefill_chunk);
+        if cfg.kv_blocks > 0 {
+            engine = engine.with_block_pool(cfg.kv_blocks, cfg.block_size);
+        }
         let mut s = Scheduler::new(engine, cfg.max_queue).expect("scheduler");
         let mut res = SimResult::default();
         let record = |s: &mut Scheduler<MockEngine>, res: &mut SimResult| {
@@ -279,16 +392,11 @@ mod tests {
         }
         res.decode_steps = s.engine().steps;
         res.prefill_calls = s.engine().prefill_calls;
+        res.evictions = s.metrics.requests_evicted;
         res
     }
 
-    fn random_trace(g: &mut Gen) -> (SimConfig, Vec<SimEvent>) {
-        let cfg = SimConfig {
-            slots: g.int(1, 4),
-            max_seq: g.int(4, 48),
-            max_queue: g.int(1, 6),
-            prefill_chunk: *g.pick(&[1usize, 1, 2, 3, 4, 8, 16]),
-        };
+    fn random_events(g: &mut Gen, cfg: &SimConfig) -> Vec<SimEvent> {
         let n_events = g.int(4, 40);
         let mut events = Vec::with_capacity(n_events);
         for _ in 0..n_events {
@@ -310,13 +418,54 @@ mod tests {
                 _ => events.push(SimEvent::Cancel(g.int(0, 12) as u64)),
             }
         }
+        events
+    }
+
+    fn random_trace(g: &mut Gen) -> (SimConfig, Vec<SimEvent>) {
+        let cfg = SimConfig::dense(
+            g.int(1, 4),
+            g.int(4, 48),
+            g.int(1, 6),
+            *g.pick(&[1usize, 1, 2, 3, 4, 8, 16]),
+        );
+        let events = random_events(g, &cfg);
+        (cfg, events)
+    }
+
+    /// Paged trace: a pool small enough that the budget gate, lazy growth
+    /// and eviction paths all fire regularly.
+    fn random_paged_trace(g: &mut Gen) -> (SimConfig, Vec<SimEvent>) {
+        let slots = g.int(1, 4);
+        let max_seq = g.int(4, 48);
+        let block_size = *g.pick(&[1usize, 2, 3, 4, 8]);
+        let full = slots * max_seq.div_ceil(block_size);
+        let cfg = SimConfig {
+            slots,
+            max_seq,
+            max_queue: g.int(1, 6),
+            prefill_chunk: *g.pick(&[1usize, 1, 2, 4, 8]),
+            // From starved (submit-time rejections, constant eviction) to
+            // over-provisioned (budget never binds).
+            kv_blocks: g.int(1, full.max(2)),
+            block_size,
+        };
+        let events = random_events(g, &cfg);
         (cfg, events)
     }
 
     fn check_equivalence(g: &mut Gen) -> Result<(), String> {
         let (cfg, events) = random_trace(g);
-        let oracle = simulate(&cfg, &events);
-        let real = run_real(&cfg, &events);
+        check_trace(&cfg, &events)
+    }
+
+    fn check_equivalence_paged(g: &mut Gen) -> Result<(), String> {
+        let (cfg, events) = random_paged_trace(g);
+        check_trace(&cfg, &events)
+    }
+
+    fn check_trace(cfg: &SimConfig, events: &[SimEvent]) -> Result<(), String> {
+        let oracle = simulate(cfg, events);
+        let real = run_real(cfg, events);
         if real.submits != oracle.submits {
             return Err(format!(
                 "{cfg:?}: submit outcomes {:?} vs oracle {:?}",
@@ -355,6 +504,44 @@ mod tests {
                 real.decode_steps, real.prefill_calls, oracle.decode_steps, oracle.prefill_calls
             ));
         }
+        if real.evictions != oracle.evictions {
+            return Err(format!(
+                "{cfg:?}: {} evictions vs oracle {}",
+                real.evictions, oracle.evictions
+            ));
+        }
+        Ok(())
+    }
+
+    /// Paged scheduler with a *full-size* pool vs the dense scheduler on
+    /// the same trace: the token budget never binds, so every observable —
+    /// submits, completion order, token counts, occupancy, step counts —
+    /// must match the dense path exactly (and no eviction may fire).
+    fn check_paged_vs_dense_full_pool(g: &mut Gen) -> Result<(), String> {
+        let (dense_cfg, events) = random_trace(g);
+        let block_size = *g.pick(&[1usize, 2, 4, 8]);
+        let paged_cfg = SimConfig {
+            kv_blocks: dense_cfg.slots * dense_cfg.max_seq.div_ceil(block_size),
+            block_size,
+            ..dense_cfg
+        };
+        let dense = run_real(&dense_cfg, &events);
+        let paged = run_real(&paged_cfg, &events);
+        if paged.evictions != 0 {
+            return Err(format!("{paged_cfg:?}: full pool evicted {}", paged.evictions));
+        }
+        if paged.submits != dense.submits
+            || paged.completion_order != dense.completion_order
+            || paged.generated != dense.generated
+            || paged.occupancy != dense.occupancy
+            || paged.decode_steps != dense.decode_steps
+            || paged.prefill_calls != dense.prefill_calls
+        {
+            return Err(format!(
+                "{paged_cfg:?}: paged(full pool) diverged from dense\n\
+                 paged: {paged:?}\ndense: {dense:?}"
+            ));
+        }
         Ok(())
     }
 
@@ -376,20 +563,46 @@ mod tests {
         forall(303, 120, check_equivalence);
     }
 
+    // Paged traces: three more pinned seeds x 120 = 360 randomized cases
+    // over the block-budget admission / lazy-growth / eviction bookkeeping.
+
+    #[test]
+    fn sim_trace_equivalence_paged_seed_a() {
+        forall(404, 120, check_equivalence_paged);
+    }
+
+    #[test]
+    fn sim_trace_equivalence_paged_seed_b() {
+        forall(505, 120, check_equivalence_paged);
+    }
+
+    #[test]
+    fn sim_trace_equivalence_paged_seed_c() {
+        forall(606, 120, check_equivalence_paged);
+    }
+
+    /// Paged-with-full-pool must be observationally identical to dense.
+    #[test]
+    fn sim_trace_equivalence_paged_vs_dense() {
+        forall(707, 120, check_paged_vs_dense_full_pool);
+    }
+
     /// Extra exploration knob: SPINQUANT_SIM_SEED=1234 cargo test — runs
-    /// another 120 traces from an arbitrary seed without a rebuild.
+    /// another 120 dense + 120 paged traces from an arbitrary seed without
+    /// a rebuild.
     #[test]
     fn sim_trace_equivalence_env_seed() {
         if let Ok(seed) = std::env::var("SPINQUANT_SIM_SEED") {
             let seed: u64 = seed.parse().expect("SPINQUANT_SIM_SEED must be u64");
             forall(seed, 120, check_equivalence);
+            forall(seed ^ 0x9a9a, 120, check_equivalence_paged);
         }
     }
 
     #[test]
     fn oracle_smoke_single_request() {
         // Hand-checkable trace: one request, prompt 5, budget 2, chunk 4.
-        let cfg = SimConfig { slots: 1, max_seq: 32, max_queue: 4, prefill_chunk: 4 };
+        let cfg = SimConfig::dense(1, 32, 4, 4);
         let events =
             [SimEvent::Submit(SimRequest { prompt_len: 5, max_new: 2 }), SimEvent::Step];
         let res = simulate(&cfg, &events);
@@ -400,5 +613,60 @@ mod tests {
         assert_eq!(res.completion_order, vec![0]);
         assert_eq!(res.generated.get(&0), Some(&2));
         assert_eq!(res.occupancy, vec![(1, 0), (1, 0), (0, 0)]);
+    }
+
+    #[test]
+    fn oracle_smoke_paged_eviction() {
+        // Hand-checkable paged trace: 2 slots, 4 pages of 4 tokens.
+        // Two (prompt 4, budget 8) requests each need 3 pages end to end;
+        // the watermark admits both, growth exhausts the pool at pos 8,
+        // request 1 is evicted, request 0 completes, request 1 restarts
+        // and completes — both with their full 8 tokens.
+        let cfg = SimConfig {
+            slots: 2,
+            max_seq: 32,
+            max_queue: 4,
+            prefill_chunk: 1,
+            kv_blocks: 4,
+            block_size: 4,
+        };
+        let events = [
+            SimEvent::Submit(SimRequest { prompt_len: 4, max_new: 8 }),
+            SimEvent::Submit(SimRequest { prompt_len: 4, max_new: 8 }),
+        ];
+        let res = simulate(&cfg, &events);
+        assert_eq!(res.submits, vec![Some(0), Some(1)]);
+        assert_eq!(res.evictions, 1);
+        assert_eq!(res.completion_order, vec![0, 1]);
+        assert_eq!(res.generated.get(&0), Some(&8));
+        assert_eq!(res.generated.get(&1), Some(&8));
+        // The real scheduler agrees on the whole trace.
+        check_trace(&cfg, &events).unwrap();
+    }
+
+    #[test]
+    fn oracle_smoke_paged_budget_gate() {
+        // 1 slot free but only 2 free pages: a request needing 3 pages
+        // waits in the queue even though a slot is open.
+        let cfg = SimConfig {
+            slots: 2,
+            max_seq: 32,
+            max_queue: 4,
+            prefill_chunk: 1,
+            kv_blocks: 3,
+            block_size: 4,
+        };
+        let events = [
+            SimEvent::Submit(SimRequest { prompt_len: 2, max_new: 1 }), // 1 page
+            SimEvent::Submit(SimRequest { prompt_len: 8, max_new: 4 }), // 3 pages
+            SimEvent::Step,
+        ];
+        let res = simulate(&cfg, &events);
+        assert_eq!(res.submits, vec![Some(0), Some(1)]);
+        // After the first step: request 0 in flight, request 1 still queued
+        // (2 free pages < 3 needed).
+        assert_eq!(res.occupancy.first(), Some(&(1, 1)));
+        assert_eq!(res.completion_order, vec![0, 1]);
+        check_trace(&cfg, &events).unwrap();
     }
 }
