@@ -19,6 +19,13 @@
 //!   (the `concurrency_x` field; the acceptance bar is >= 2x) with
 //!   bit-identical generations — checked request by request, enforced by
 //!   the sim harness in CI.
+//! * `prefix_cache` — the shared-system-prompt sweep: N users whose
+//!   prompts repeat one system prefix, served over the same paged pool
+//!   with the refcounted copy-on-write prefix cache on vs off. Records
+//!   reused prompt tokens / hit rate / prefill calls, TTFT for cache-warm
+//!   requests, admitted concurrency at the identical page budget, and a
+//!   hard `bit_identical` completions check (the cache must only remove
+//!   recomputation).
 //! * `sampler` — per-draw top-k / top-p cost before (full vocabulary sort,
 //!   the pre-PR implementation, inlined here as the baseline) and after
 //!   (partial selection via `select_nth_unstable_by`).
@@ -314,6 +321,130 @@ fn paged_sweep() -> Json {
     ])
 }
 
+// -- prefix cache: N users x one shared system prompt ------------------------
+
+const PREFIX_MAX_SEQ: usize = 128;
+const PREFIX_BLOCK_SIZE: usize = 16;
+const PREFIX_LANES: usize = 8;
+const PREFIX_POOL: usize = 20; // pages: tight enough that admission staggers
+const PREFIX_REQUESTS: usize = 24;
+const PREFIX_SHARED: usize = 32; // shared system-prompt tokens (2 full pages)
+const PREFIX_SUFFIX: usize = 8; // per-user tail
+const PREFIX_MAX_NEW: usize = 16;
+
+/// N users, one system prompt: identical 32-token prefix, 8 unique tokens.
+fn prefix_workload() -> Vec<GenRequest> {
+    (0..scaled(PREFIX_REQUESTS))
+        .map(|i| {
+            let mut p: Vec<u8> = (0..PREFIX_SHARED).map(|j| (32 + (j * 7) % 90) as u8).collect();
+            p.extend((0..PREFIX_SUFFIX).map(|j| (32 + ((i * 13 + j * 5) % 90)) as u8));
+            GenRequest::sampled(&p, PREFIX_MAX_NEW, Sampler::top_k(8, 0.8), 4000 + i as u64)
+        })
+        .collect()
+}
+
+struct PrefixLeg {
+    metrics: ServingMetrics,
+    completions: Vec<(u64, Vec<u8>)>,
+}
+
+fn run_prefix_leg(cache_on: bool) -> PrefixLeg {
+    let engine = MockEngine::new(PREFIX_LANES, PREFIX_MAX_SEQ, 256)
+        .with_block_pool(PREFIX_POOL, PREFIX_BLOCK_SIZE)
+        .with_prefill_chunk(PREFIX_BLOCK_SIZE);
+    let mut sched = Scheduler::new(engine, scaled(PREFIX_REQUESTS)).expect("scheduler");
+    if cache_on {
+        sched = sched.with_prefix_cache().expect("paged engine");
+    }
+    let done = sched.serve_all(prefix_workload()).expect("serve");
+    let mut completions: Vec<(u64, Vec<u8>)> =
+        done.into_iter().map(|c| (c.id, c.completion)).collect();
+    completions.sort();
+    PrefixLeg { metrics: sched.metrics, completions }
+}
+
+fn prefix_sweep() -> Json {
+    let off = run_prefix_leg(false);
+    let on = run_prefix_leg(true);
+    let bit_identical = off.completions == on.completions;
+    let reuse_x = on.metrics.tokens_reused as f64 / PREFIX_SHARED as f64;
+    let concurrency_x =
+        on.metrics.mean_in_flight() / off.metrics.mean_in_flight().max(1e-9);
+    println!();
+    println!(
+        "prefix cache: {} users x {}-token shared prompt (+{} unique), {} pages x {} tokens",
+        scaled(PREFIX_REQUESTS),
+        PREFIX_SHARED,
+        PREFIX_SUFFIX,
+        PREFIX_POOL,
+        PREFIX_BLOCK_SIZE
+    );
+    println!(
+        "{:<8} {:>12} {:>10} {:>14} {:>14} {:>14} {:>10}",
+        "cache",
+        "reused toks",
+        "hit rate",
+        "prefill calls",
+        "ttft p50 ms",
+        "mean in-flight",
+        "evicted"
+    );
+    for (label, leg) in [("off", &off), ("on", &on)] {
+        println!(
+            "{:<8} {:>12} {:>10.3} {:>14} {:>14.3} {:>14.2} {:>10}",
+            label,
+            leg.metrics.tokens_reused,
+            leg.metrics.prefix_hit_rate(),
+            leg.metrics.prefill_us.len(),
+            leg.metrics.ttft_ms_p50(),
+            leg.metrics.mean_in_flight(),
+            leg.metrics.requests_evicted,
+        );
+    }
+    println!(
+        "shared pages reused {reuse_x:.1}x; concurrency {concurrency_x:.2}x at the same \
+         page budget; completions bit-identical: {bit_identical}"
+    );
+    // Deterministic mock + seeded samplers: byte-divergence here is a real
+    // correctness bug, not noise — fail the bench loudly (after printing
+    // the table above for diagnosis).
+    assert!(bit_identical, "prefix cache changed generated bytes");
+    let leg_json = |leg: &PrefixLeg| {
+        json::obj(vec![
+            ("requests", json::num(leg.metrics.requests_completed as f64)),
+            ("tokens_reused", json::num(leg.metrics.tokens_reused as f64)),
+            ("prefix_hits", json::num(leg.metrics.prefix_hits as f64)),
+            ("prefix_hit_rate", json::num(leg.metrics.prefix_hit_rate())),
+            ("prefill_calls", json::num(leg.metrics.prefill_us.len() as f64)),
+            ("ttft_ms_p50", json::num(leg.metrics.ttft_ms_p50())),
+            ("ttft_ms_p95", json::num(leg.metrics.ttft_ms_p95())),
+            ("mean_in_flight", json::num(leg.metrics.mean_in_flight())),
+            ("evictions", json::num(leg.metrics.requests_evicted as f64)),
+            ("tokens_per_sec", json::num(leg.metrics.tokens_per_sec())),
+        ])
+    };
+    json::obj(vec![
+        (
+            "config",
+            json::obj(vec![
+                ("max_seq", json::num(PREFIX_MAX_SEQ as f64)),
+                ("block_size", json::num(PREFIX_BLOCK_SIZE as f64)),
+                ("lanes", json::num(PREFIX_LANES as f64)),
+                ("pool_blocks", json::num(PREFIX_POOL as f64)),
+                ("requests", json::num(scaled(PREFIX_REQUESTS) as f64)),
+                ("shared_tokens", json::num(PREFIX_SHARED as f64)),
+                ("suffix_tokens", json::num(PREFIX_SUFFIX as f64)),
+                ("max_new_tokens", json::num(PREFIX_MAX_NEW as f64)),
+            ]),
+        ),
+        ("off", leg_json(&off)),
+        ("on", leg_json(&on)),
+        ("reuse_x", json::num(reuse_x)),
+        ("concurrency_x", json::num(concurrency_x)),
+        ("bit_identical", Json::Bool(bit_identical)),
+    ])
+}
+
 // -- sampler cost: full-sort baseline vs partial selection -------------------
 
 /// The pre-PR sampler: full descending sort of the vocabulary every draw.
@@ -486,6 +617,7 @@ fn main() {
         None => "none",
     };
     let paged = paged_sweep();
+    let prefix_cache = prefix_sweep();
     let sampler = sampler_cost();
 
     let out = json::obj(vec![
@@ -497,6 +629,7 @@ fn main() {
         ("max_new_tokens", json::num(MAX_NEW as f64)),
         ("batches", json::obj(rows.iter().map(|(k, v)| (*k, v.clone())).collect())),
         ("paged", paged),
+        ("prefix_cache", prefix_cache),
         ("sampler", sampler),
         (
             "ttft",

@@ -14,9 +14,13 @@
 //!   QuaRot, LLM-QAT), a PJRT runtime that loads the AOT artifacts, a
 //!   batched evaluation engine (perplexity + zero-shot tasks), a
 //!   continuous-batching serving engine (`serve`: slot-based KV-cache
-//!   manager, a paged KV-cache block pool (`serve::blocks`) with
-//!   token-budget admission and evict-to-queue so resident cache memory
-//!   scales with tokens in flight rather than `slots x max_seq`,
+//!   manager, a *refcounted* paged KV-cache block pool (`serve::blocks`)
+//!   with token-budget admission and evict-to-queue so resident cache
+//!   memory scales with tokens in flight rather than `slots x max_seq`,
+//!   copy-on-write prefix sharing over that pool (`serve::prefix`: a
+//!   content-addressed index of full prompt pages, so N requests
+//!   repeating one system prompt store and prefill it once —
+//!   bit-identical output, admission charged only for non-shared pages),
 //!   admission scheduler with batched multi-token prompt prefill
 //!   (`ceil(len/T)` calls to first token) and mid-flight join, seeded
 //!   greedy/temperature/top-k/top-p samplers with partial candidate

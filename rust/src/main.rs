@@ -15,7 +15,11 @@
 //!                (paged KV cache via the `decode_*_paged_b{B}` artifacts:
 //!                memory scales with tokens in flight, admission by
 //!                free-page token budget) + `--kv-blocks M` (restrict the
-//!                page budget to M pages); prints completions +
+//!                page budget to M pages) + `--prefix-cache 1` (refcounted
+//!                copy-on-write prefix sharing: requests repeating a
+//!                system prompt map its cached pages read-only instead of
+//!                recomputing them — bit-identical output, lower TTFT,
+//!                more concurrency per page); prints completions +
 //!                TTFT / latency-percentile / tokens-per-sec metrics
 //!   bench-table  regenerate one paper table/figure (see --id list)
 //!   selftest     end-to-end smoke: artifacts load + tiny eval
@@ -52,6 +56,7 @@ fn usage() -> ! {
                        --top-k 40 --top-p 0.95 --seed 0 --max-new-tokens 48 --prompt \"a|b|c\"\n\
                        --prefill-chunk 16|64 (batched prompt prefill; 1 = per-token loop)\n\
                        --block-size 16 (paged KV cache) --kv-blocks M (page budget)\n\
+                       --prefix-cache 1 (copy-on-write sharing of repeated prompt prefixes)\n\
          bench-table:  --id table1|table2|table3|table4|table5|table6|table10|table11|table12|table13|fig2|fig3|fig4|fig7|fig8 [--models a,b] [--out EXPERIMENTS.md]"
     );
     std::process::exit(2);
@@ -384,6 +389,18 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
         }
         None => String::new(),
     };
+    // Refcounted copy-on-write prefix sharing: `--prefix-cache 1` makes
+    // requests repeating a system prompt map its pages instead of
+    // recomputing them (paged path only; completions are bit-identical
+    // either way).
+    let prefix_cache: bool = match get_extra(extra, "prefix-cache") {
+        None => false,
+        Some("1" | "true" | "on" | "yes") => true,
+        Some("0" | "false" | "off" | "no") => false,
+        Some(other) => anyhow::bail!(
+            "--prefix-cache {other:?}: expected 1/0, true/false, or on/off"
+        ),
+    };
     let mut sched = Scheduler::new(engine, 1024)?;
     if kv_blocks > 0 {
         if paged {
@@ -396,16 +413,27 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
             );
         }
     }
+    if prefix_cache {
+        if paged {
+            sched = sched.with_prefix_cache()?;
+        } else {
+            eprintln!(
+                "note: --prefix-cache NOT enforced — it shares pages over the paged KV \
+                 cache, and serving fell back to the dense path (see notes above)"
+            );
+        }
+    }
 
     println!(
         "serving {} request(s) on {} slot(s), sampler {}, max {} new tokens, \
-         prefill chunk {}{}",
+         prefill chunk {}{}{}",
         prompts.len(),
         batch,
         sampler.name(),
         n_new,
         chunk_in_use,
-        pool_desc
+        pool_desc,
+        if prefix_cache && paged { ", prefix cache on" } else { "" }
     );
     let reqs = prompts
         .iter()

@@ -1,4 +1,5 @@
-//! Paged KV-cache block pool: physical pages + per-request block tables.
+//! Paged KV-cache block pool: refcounted physical pages + per-request
+//! block tables.
 //!
 //! The dense serving path reserves a full `max_seq`-sized KV region per
 //! slot, so resident cache memory scales with `slots x max_seq` no matter
@@ -9,10 +10,24 @@
 //! position crosses page boundaries, and the scheduler admits by *free-page
 //! token budget* — so memory scales with tokens actually in flight.
 //!
+//! Ownership is **refcounted**, not exclusive: a physical page can be
+//! mapped read-only by several block tables at once (shared prompt-prefix
+//! pages, see [`crate::serve::prefix`]) and by the prefix index itself.
+//! [`BlockPool::allocate`] hands out a page at refcount 1,
+//! [`BlockPool::retain`] adds a reference (a slot mapping a cached page, or
+//! the prefix index keeping a full page resident), and
+//! [`BlockPool::release`] drops references — a page returns to the free
+//! list only when its last reference is gone, so eviction can never
+//! reclaim a page another holder still references.
+//!
 //! Accounting is strict: `free_blocks() + used_blocks() == total_blocks()`
-//! is an invariant, double-frees and unknown frees are errors, and the
-//! randomized [`SlotMap`](crate::serve::SlotMap) property tests cross-check
-//! the pool against a mirror model.
+//! is an invariant where `used_blocks()` counts pages with `refcount > 0`;
+//! releasing a free page (double-free) and retaining a free page are
+//! errors, releases are *batch-atomic* (the whole batch is validated
+//! before any page is freed, so a bad id mid-list can no longer corrupt
+//! the accounting half-way), and the randomized
+//! [`SlotMap`](crate::serve::SlotMap) property tests cross-check the pool
+//! against a mirror model under retain/release/COW/donate interleavings.
 //!
 //! KV memory per pool, at `kv_bits` per cache element:
 //!
@@ -23,11 +38,14 @@
 //!
 //! (see [`kv_memory_bytes`]); the serving bench prints this next to its
 //! paged-vs-dense sweep so the "same memory, more requests" claim is
-//! auditable.
+//! auditable. Note the formula counts *physical* pages: with prefix
+//! sharing the same bytes can back many logical tables, which is exactly
+//! where the extra concurrency in the `prefix_cache` bench section comes
+//! from.
 
 use anyhow::{bail, Result};
 
-/// Fixed-size pool of physical KV pages with strict accounting.
+/// Fixed-size pool of refcounted physical KV pages with strict accounting.
 ///
 /// Block ids are `u32` indices into the engine's physical cache
 /// (`cache_k/v` dimension 1). Freed blocks are recycled LIFO so recently
@@ -37,9 +55,9 @@ pub struct BlockPool {
     block_size: usize,
     /// Free physical block ids (LIFO).
     free: Vec<u32>,
-    /// Per-block in-use flag — makes double-free a loud error instead of
-    /// silent pool corruption.
-    used: Vec<bool>,
+    /// Per-block reference count; 0 = free. Makes double-free and
+    /// use-after-free loud errors instead of silent pool corruption.
+    refcount: Vec<u32>,
 }
 
 impl BlockPool {
@@ -48,7 +66,7 @@ impl BlockPool {
         // LIFO pop order: block 0 first, matching the identity layout in
         // the single-request case.
         let free: Vec<u32> = (0..total_blocks as u32).rev().collect();
-        Self { block_size, free, used: vec![false; total_blocks] }
+        Self { block_size, free, refcount: vec![0; total_blocks] }
     }
 
     pub fn block_size(&self) -> usize {
@@ -56,15 +74,21 @@ impl BlockPool {
     }
 
     pub fn total_blocks(&self) -> usize {
-        self.used.len()
+        self.refcount.len()
     }
 
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
+    /// Pages with at least one live reference.
     pub fn used_blocks(&self) -> usize {
         self.total_blocks() - self.free_blocks()
+    }
+
+    /// Live references on one page (0 = free). Out-of-range ids read as 0.
+    pub fn refcount(&self, block: u32) -> u32 {
+        self.refcount.get(block as usize).copied().unwrap_or(0)
     }
 
     /// Pages needed to hold `tokens` cache positions.
@@ -72,24 +96,61 @@ impl BlockPool {
         tokens.div_ceil(self.block_size)
     }
 
-    /// Claim one free page. `None` when the pool is exhausted.
+    /// Claim one free page at refcount 1. `None` when the pool is
+    /// exhausted.
     pub fn allocate(&mut self) -> Option<u32> {
         let b = self.free.pop()?;
-        debug_assert!(!self.used[b as usize]);
-        self.used[b as usize] = true;
+        debug_assert_eq!(self.refcount[b as usize], 0);
+        self.refcount[b as usize] = 1;
         Some(b)
     }
 
-    /// Return pages to the pool. Double-frees and out-of-range ids fail.
+    /// Add a reference to an already-live page (a slot mapping a shared
+    /// prefix page, or the prefix index pinning a donated page). Retaining
+    /// a free page is an error — references can only be added to pages
+    /// some holder already owns.
+    pub fn retain(&mut self, block: u32) -> Result<()> {
+        match self.refcount.get_mut(block as usize) {
+            Some(rc) if *rc > 0 => {
+                *rc += 1;
+                Ok(())
+            }
+            Some(_) => bail!("block {block} retained while free"),
+            None => bail!("block {block} out of range ({} blocks)", self.total_blocks()),
+        }
+    }
+
+    /// Drop one reference per listed page; pages whose last reference goes
+    /// return to the free list. The batch is validated as a whole before
+    /// anything is freed — out-of-range ids or more drops than a page has
+    /// references fail with the pool untouched, so callers' bookkeeping
+    /// can never end up disagreeing with a half-applied release.
     pub fn release(&mut self, blocks: &[u32]) -> Result<()> {
+        // Validate without allocating: batches are per-request page lists
+        // (a handful of entries), so the quadratic duplicate count is
+        // cheaper than building a map on the serving hot path.
+        for (i, &b) in blocks.iter().enumerate() {
+            let Some(&rc) = self.refcount.get(b as usize) else {
+                bail!("block {b} out of range ({} blocks)", self.total_blocks());
+            };
+            if rc == 0 {
+                bail!("block {b} freed twice");
+            }
+            if blocks[..i].contains(&b) {
+                continue; // counted at its first occurrence
+            }
+            let drops = blocks[i..].iter().filter(|&&x| x == b).count() as u32;
+            if rc < drops {
+                bail!("block {b}: {drops} refs dropped but only {rc} held");
+            }
+        }
+        // Validated: apply. Free-list push order follows the batch order so
+        // the LIFO recycling stays deterministic.
         for &b in blocks {
-            match self.used.get_mut(b as usize) {
-                Some(u) if *u => {
-                    *u = false;
-                    self.free.push(b);
-                }
-                Some(_) => bail!("block {b} freed twice"),
-                None => bail!("block {b} out of range ({} blocks)", self.total_blocks()),
+            let rc = &mut self.refcount[b as usize];
+            *rc -= 1;
+            if *rc == 0 {
+                self.free.push(b);
             }
         }
         Ok(())
@@ -99,7 +160,10 @@ impl BlockPool {
 /// Resident KV-cache bytes for a pool of `blocks` pages of `block_size`
 /// tokens at `kv_bits` per element: the formula behind the paged-vs-dense
 /// memory budgets in `benches/serving.rs` (K and V both cached, hence the
-/// factor 2).
+/// factor 2). Physical pages only: shared (refcount > 1) pages are counted
+/// once, which is the whole point of prefix sharing — the pool invariant
+/// `free + Σ(refcount > 0) == total` means resident bytes never exceed
+/// this figure no matter how many tables alias a page.
 pub fn kv_memory_bytes(
     blocks: usize,
     block_size: usize,
@@ -141,6 +205,54 @@ mod tests {
     }
 
     #[test]
+    fn retain_shares_and_release_frees_only_at_zero() {
+        let mut p = BlockPool::new(2, 8);
+        let a = p.allocate().unwrap();
+        p.retain(a).unwrap();
+        p.retain(a).unwrap();
+        assert_eq!(p.refcount(a), 3);
+        assert_eq!(p.used_blocks(), 1, "shared page is resident once");
+        p.release(&[a]).unwrap();
+        p.release(&[a]).unwrap();
+        assert_eq!(p.refcount(a), 1);
+        assert_eq!(p.free_blocks(), 1, "page still held");
+        p.release(&[a]).unwrap();
+        assert_eq!(p.refcount(a), 0);
+        assert_eq!(p.free_blocks(), 2, "last release frees");
+        // Retaining a free page must fail: references are only added to
+        // pages some holder already owns.
+        assert!(p.retain(a).is_err());
+        assert!(p.retain(99).is_err());
+    }
+
+    #[test]
+    fn release_batch_is_atomic_on_bad_id() {
+        // Regression (satellite): a bad id mid-batch used to free the
+        // earlier pages before bailing, leaving the pool and the caller's
+        // bookkeeping disagreeing. The whole batch must now be validated
+        // first, so a failed release leaves the pool byte-identical.
+        let mut p = BlockPool::new(4, 8);
+        let a = p.allocate().unwrap();
+        let b = p.allocate().unwrap();
+        let before_free = p.free_blocks();
+        let before_rc: Vec<u32> = (0..4).map(|i| p.refcount(i)).collect();
+        assert!(p.release(&[a, 99, b]).is_err(), "out-of-range mid-batch");
+        assert_eq!(p.free_blocks(), before_free, "no page freed by a failed batch");
+        assert_eq!((0..4).map(|i| p.refcount(i)).collect::<Vec<_>>(), before_rc);
+        // Same for a double-free mid-batch...
+        let c = p.allocate().unwrap();
+        assert!(p.release(&[a, c, c]).is_err(), "c held once but dropped twice");
+        assert_eq!(p.refcount(a), 1);
+        assert_eq!(p.refcount(c), 1);
+        // ...while a batch that drops a multiply-held page twice is fine.
+        p.retain(c).unwrap();
+        p.release(&[a, c, c]).unwrap();
+        assert_eq!(p.refcount(a), 0);
+        assert_eq!(p.refcount(c), 0);
+        assert_eq!(p.free_blocks() + p.used_blocks(), p.total_blocks());
+    }
+
+    #[test]
     fn blocks_for_rounds_up() {
         let p = BlockPool::new(8, 16);
         assert_eq!(p.blocks_for(0), 0);
@@ -167,6 +279,58 @@ mod tests {
             assert_eq!(p.free_blocks() + p.used_blocks(), p.total_blocks());
             assert_eq!(p.used_blocks(), held.len());
         }
+    }
+
+    /// Property: under random allocate/retain/release interleavings the
+    /// refcounts track a mirror model exactly and the resident-page
+    /// invariant `free + Σ(refcount > 0) == total` never breaks.
+    #[test]
+    fn prop_refcount_interleavings_keep_invariant() {
+        use crate::testing::prop::forall;
+        forall(0x5efc, 300, |g| {
+            let total = g.int(1, 6);
+            let mut p = BlockPool::new(total, 4);
+            // Mirror: refs held per page, as a flat list of (page) handles.
+            let mut handles: Vec<u32> = Vec::new();
+            for op in 0..g.int(5, 80) {
+                match g.int(0, 2) {
+                    0 => {
+                        if let Some(b) = p.allocate() {
+                            handles.push(b);
+                        } else if p.free_blocks() > 0 {
+                            return Err(format!("op {op}: allocation failed with free pages"));
+                        }
+                    }
+                    1 => {
+                        if !handles.is_empty() {
+                            let b = *g.pick(&handles);
+                            p.retain(b).map_err(|e| format!("op {op}: {e}"))?;
+                            handles.push(b);
+                        }
+                    }
+                    _ => {
+                        if !handles.is_empty() {
+                            let i = g.int(0, handles.len() - 1);
+                            let b = handles.swap_remove(i);
+                            p.release(&[b]).map_err(|e| format!("op {op}: {e}"))?;
+                        }
+                    }
+                }
+                if p.free_blocks() + p.used_blocks() != p.total_blocks() {
+                    return Err(format!("op {op}: resident invariant broke"));
+                }
+                for page in 0..total as u32 {
+                    let want = handles.iter().filter(|&&h| h == page).count() as u32;
+                    if p.refcount(page) != want {
+                        return Err(format!(
+                            "op {op}: page {page} refcount {} vs mirror {want}",
+                            p.refcount(page)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 
     #[test]

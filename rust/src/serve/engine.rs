@@ -169,6 +169,22 @@ pub trait DecodeEngine {
     ) -> Result<Vec<Vec<f32>>> {
         prefill_paged_by_steps(self, tokens, pos0, active, tables)
     }
+
+    /// A freshly admitted request was handed `cached` tokens of
+    /// already-resident shared prefix pages (prefix cache hit): `table` is
+    /// its padded block-table row, whose leading pages hold the cached KV
+    /// entries, and the scheduler will start feeding at position `cached`.
+    /// Called after `reset_slot`.
+    ///
+    /// Default: no-op — the paged PJRT graphs gather KV by block table, so
+    /// aliased tables read shared physical pages with no engine-side state
+    /// to fix up (the pytest scattered-table cases cover exactly this).
+    /// [`MockEngine`] overrides it to rebuild the slot's token history from
+    /// the physical pages, so its per-step content assertions keep working
+    /// across shared admissions.
+    fn adopt_prefix(&mut self, _slot: usize, _table: &[i32], _cached: usize) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// The chunked prefill fallback: feed the chunk through single decode
@@ -857,9 +873,16 @@ impl DecodeEngine for PjrtEngine {
 ///
 /// In paged mode ([`MockEngine::with_block_pool`]) tokens are additionally
 /// stored in *physical* `block_size`-token pages addressed through the
-/// step's block tables, and every step asserts the table-reconstructed
-/// history matches the true one — so table corruption (aliased pages, holes,
-/// stale mappings) surfaces as a loud error, not a simulation artifact.
+/// step's block tables, and every call asserts the copy-on-write sharing
+/// contract: each slot's table-reconstructed history must match its true
+/// history (so any physical page shared by several slots necessarily holds
+/// identical token content for all of them), writes are exclusive — no two
+/// slots may write one page in a call, and no write may land in a page
+/// another slot maps inside its readable prefix. Table corruption (holes,
+/// stale mappings, clobbered shared pages) surfaces as a loud error, not a
+/// simulation artifact. [`MockEngine::adopt_prefix`] seeds a slot's
+/// history from the shared pages its table maps, mirroring what the real
+/// graphs see by gathering KV through an aliased table.
 pub struct MockEngine {
     n_slots: usize,
     max_seq: usize,
@@ -1004,35 +1027,62 @@ impl MockEngine {
         Ok(())
     }
 
-    /// No two active slots may map the same physical page over their
-    /// written prefix.
-    fn check_no_aliasing(
-        &self,
-        pos: &[i32],
-        active: &[bool],
-        tables: &[Vec<i32>],
-        extra: usize,
-    ) -> Result<()> {
+    /// Shared physical pages are strictly read-only: no page written in
+    /// this call may be written by two slots at once (write-write), and no
+    /// written page may be mapped inside another slot's already-written
+    /// readable prefix (write-read — clobbering a prefix another request
+    /// is still attending over). `writes[b]` is slot `b`'s write range
+    /// `(start_pos, n_tokens)` for this call (`n == 0`: no write).
+    fn check_exclusive_writes(&self, writes: &[(usize, usize)], tables: &[Vec<i32>]) -> Result<()> {
         let bs = self.block_size.expect("paged mode");
-        let mut used: Vec<i32> = Vec::new();
+        let mut written: Vec<(i32, usize)> = Vec::new();
         for b in 0..self.n_slots {
-            if !active[b] {
+            let (start, n) = writes[b];
+            if n == 0 {
                 continue;
             }
-            let end = pos[b] as usize + extra;
-            for j in 0..=(end.saturating_sub(1)) / bs {
-                if let Some(&e) = tables[b].get(j) {
-                    if e >= 0 && (e as usize) < self.blocks.len() {
-                        used.push(e);
-                    }
+            for j in (start / bs)..=((start + n - 1) / bs) {
+                let e = tables.get(b).and_then(|t| t.get(j)).copied().unwrap_or(-1);
+                // Unmapped / sentinel entries are paged_write's problem.
+                if e >= 0 && (e as usize) < self.blocks.len() {
+                    written.push((e, b));
                 }
             }
         }
-        let n = used.len();
-        used.sort_unstable();
-        used.dedup();
-        if used.len() != n {
-            bail!("mock engine: physical page mapped by two active slots (table aliasing)");
+        for (i, &(p, b)) in written.iter().enumerate() {
+            for &(p2, b2) in &written[i + 1..] {
+                if p == p2 && b != b2 {
+                    bail!(
+                        "mock engine: slots {b} and {b2} both write physical page {p} \
+                         (copy-on-write violated)"
+                    );
+                }
+            }
+            for c in 0..self.n_slots {
+                if c == b {
+                    continue;
+                }
+                let read_pages = self.history[c].len().div_ceil(bs);
+                if tables[c].iter().take(read_pages).any(|&e| e == p) {
+                    bail!(
+                        "mock engine: slot {b} writes physical page {p}, which slot {c} \
+                         maps read-only in its prefix (shared page clobbered)"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// After every paged call: each slot holding tokens must be able to
+    /// reconstruct its exact history through its table — so any two slots
+    /// sharing a physical page necessarily agree on its content, which is
+    /// the prefix-sharing correctness condition.
+    fn check_all_views(&self, tables: &[Vec<i32>]) -> Result<()> {
+        for b in 0..self.n_slots {
+            if !self.history[b].is_empty() {
+                self.check_paged_view(b, &tables[b])?;
+            }
         }
         Ok(())
     }
@@ -1162,7 +1212,10 @@ impl DecodeEngine for MockEngine {
             bail!("mock engine: dense engine got block tables (build with with_block_pool)");
         }
         self.steps += 1;
-        self.check_no_aliasing(pos, active, tables, 1)?;
+        let writes: Vec<(usize, usize)> = (0..self.n_slots)
+            .map(|b| if active[b] { (pos[b] as usize, 1) } else { (0, 0) })
+            .collect();
+        self.check_exclusive_writes(&writes, tables)?;
         let mut out = Vec::with_capacity(self.n_slots);
         for b in 0..self.n_slots {
             if !active[b] {
@@ -1182,7 +1235,6 @@ impl DecodeEngine for MockEngine {
             }
             self.paged_write(b, pos[b] as usize, tokens[b], &tables[b])?;
             self.push_token(b, tokens[b]);
-            self.check_paged_view(b, &tables[b])?;
             out.push(Self::logits_from(
                 self.hash[b],
                 self.history[b].len(),
@@ -1190,6 +1242,10 @@ impl DecodeEngine for MockEngine {
                 self.vocab,
             ));
         }
+        // Every slot (the ones idling through this call included) must
+        // still see its exact history through its table: shared pages hold
+        // identical content for all their readers, or this fails loudly.
+        self.check_all_views(tables)?;
         Ok(out)
     }
 
@@ -1211,13 +1267,10 @@ impl DecodeEngine for MockEngine {
             bail!("mock engine: dense engine got block tables (build with with_block_pool)");
         }
         self.prefill_calls += 1;
-        let lens: Vec<usize> = tokens.iter().map(Vec::len).collect();
-        self.check_no_aliasing(
-            pos0,
-            &(0..self.n_slots).map(|b| active[b] && lens[b] > 0).collect::<Vec<_>>(),
-            tables,
-            lens.iter().copied().max().unwrap_or(0),
-        )?;
+        let writes: Vec<(usize, usize)> = (0..self.n_slots)
+            .map(|b| if active[b] { (pos0[b] as usize, tokens[b].len()) } else { (0, 0) })
+            .collect();
+        self.check_exclusive_writes(&writes, tables)?;
         let mut out = Vec::with_capacity(self.n_slots);
         for b in 0..self.n_slots {
             if !active[b] || tokens[b].is_empty() {
@@ -1247,11 +1300,47 @@ impl DecodeEngine for MockEngine {
                 self.paged_write(b, pos0[b] as usize + t, tok, &tables[b])?;
                 self.push_token(b, tok);
             }
-            self.check_paged_view(b, &tables[b])?;
             let last = *self.history[b].last().expect("non-empty");
             out.push(Self::logits_from(self.hash[b], self.history[b].len(), last, self.vocab));
         }
+        self.check_all_views(tables)?;
         Ok(out)
+    }
+
+    fn adopt_prefix(&mut self, slot: usize, table: &[i32], cached: usize) -> Result<()> {
+        let Some(bs) = self.block_size else {
+            bail!("mock engine: adopt_prefix on a dense engine");
+        };
+        // Rebuild the slot's history from the shared physical pages its
+        // table maps — exactly what the real graphs "see" by gathering KV
+        // through the table — so position and content assertions hold from
+        // the first post-admission step.
+        let mut toks = Vec::with_capacity(cached);
+        for pos in 0..cached {
+            let j = pos / bs;
+            let phys = table.get(j).copied().unwrap_or(-1);
+            let page = (phys >= 0)
+                .then(|| self.blocks.get(phys as usize))
+                .flatten()
+                .ok_or_else(|| {
+                    anyhow!("mock engine: slot {slot} adopts unmapped page table[{j}] = {phys}")
+                })?;
+            let tok = page.get(pos % bs).copied().ok_or_else(|| {
+                anyhow!(
+                    "mock engine: slot {slot} adopts page {phys} holding {} tokens at \
+                     in-page offset {} (shared page not full)",
+                    page.len(),
+                    pos % bs
+                )
+            })?;
+            toks.push(tok);
+        }
+        self.history[slot].clear();
+        self.hash[slot] = HASH_BASIS;
+        for t in toks {
+            self.push_token(slot, t);
+        }
+        Ok(())
     }
 }
 
@@ -1548,6 +1637,64 @@ mod tests {
         assert!(e.step(&[1], &[0], &[true]).is_err());
         let mut d = MockEngine::new(1, 8, 16);
         assert!(d.step_paged(&[1], &[0], &[true], &identity_tables(1, 4)).is_err());
+    }
+
+    #[test]
+    fn adopt_prefix_rebuilds_history_from_shared_pages() {
+        let bs = 4;
+        let mut e = MockEngine::new(2, 32, 64).with_block_pool(8, bs);
+        // Slot 0 fills physical pages 0 and 1 with 8 tokens.
+        let tables = vec![vec![0, 1], Vec::new()];
+        for p in 0..8 {
+            e.step_paged(&[p + 10, 0], &[p, 0], &[true, false], &tables).unwrap();
+        }
+        // Slot 1 adopts the first page read-only and writes its own page 2:
+        // logits must equal a from-scratch history over the shared tokens.
+        let t1 = vec![0, 2];
+        e.adopt_prefix(1, &t1, 4).unwrap();
+        let tables = vec![vec![0, 1], t1];
+        let out = e.step_paged(&[0, 14], &[8, 4], &[false, true], &tables).unwrap();
+        assert_eq!(out[1], MockEngine::logits_for(&[10, 11, 12, 13, 14], 64));
+        // Adopting through an unmapped or partial page fails loudly.
+        assert!(e.adopt_prefix(1, &[7], 4).is_err(), "page 7 was never written");
+        assert!(e.adopt_prefix(1, &[2], 4).is_err(), "page 2 holds one token, not 4");
+        let mut d = MockEngine::new(1, 8, 16);
+        assert!(d.adopt_prefix(0, &[0], 0).is_err(), "dense engine has no pages");
+    }
+
+    #[test]
+    fn mock_allows_shared_reads_but_rejects_shared_writes() {
+        let bs = 4;
+        let mut e = MockEngine::new(2, 32, 64).with_block_pool(8, bs);
+        let warm = vec![vec![0, 1], Vec::new()];
+        for p in 0..5 {
+            e.step_paged(&[p + 10, 0], &[p, 0], &[true, false], &warm).unwrap();
+        }
+        // Slot 1 shares page 0 read-only (its writes land in page 2):
+        // legal, and both slots step together.
+        e.adopt_prefix(1, &[0, 2], 4).unwrap();
+        let shared = vec![vec![0, 1], vec![0, 2]];
+        e.step_paged(&[15, 40], &[5, 4], &[true, true], &shared).unwrap();
+        // A table that makes slot 1 WRITE page 0 — which slot 0 still
+        // attends over — is a copy-on-write violation.
+        let mut e = MockEngine::new(2, 32, 64).with_block_pool(8, bs);
+        let warm = vec![vec![0, 1], Vec::new()];
+        for p in 0..5 {
+            e.step_paged(&[p + 10, 0], &[p, 0], &[true, false], &warm).unwrap();
+        }
+        let clobber = vec![vec![0, 1], vec![0]];
+        let err = e
+            .step_paged(&[15, 99], &[5, 0], &[true, true], &clobber)
+            .unwrap_err();
+        assert!(err.to_string().contains("read-only"), "{err:#}");
+        // Same guard on the prefill path.
+        let mut e = MockEngine::new(2, 32, 64).with_block_pool(8, bs).with_prefill_chunk(4);
+        e.prefill_paged(&[vec![1, 2, 3, 4], Vec::new()], &[0, 0], &[true, false], &warm)
+            .unwrap();
+        let err = e
+            .prefill_paged(&[Vec::new(), vec![7, 8]], &[0, 0], &[false, true], &clobber)
+            .unwrap_err();
+        assert!(err.to_string().contains("read-only"), "{err:#}");
     }
 
     #[test]

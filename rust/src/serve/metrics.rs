@@ -37,6 +37,14 @@ pub struct ServingMetrics {
     /// each restarts from scratch later, so high counts mean the admission
     /// watermark is too optimistic for the workload.
     pub requests_evicted: usize,
+    /// Prefix cache: prompt tokens served from already-resident shared
+    /// pages at admission (never recomputed, never re-fed).
+    pub tokens_reused: usize,
+    /// Prompt tokens across all admissions (re-admissions after eviction
+    /// included) — the denominator of [`ServingMetrics::prefix_hit_rate`].
+    pub prompt_tokens_admitted: usize,
+    /// Admissions that mapped at least one cached prefix page.
+    pub prefix_hits: usize,
 }
 
 impl ServingMetrics {
@@ -81,6 +89,26 @@ impl ServingMetrics {
     /// Record a pool-exhaustion eviction (paged serving only).
     pub fn record_eviction(&mut self) {
         self.requests_evicted += 1;
+    }
+
+    /// Record one admission: `reused` of the request's `prompt_len` prompt
+    /// tokens were mapped from already-resident shared prefix pages
+    /// (always 0 with the prefix cache off).
+    pub fn record_admission(&mut self, reused: usize, prompt_len: usize) {
+        self.tokens_reused += reused;
+        self.prompt_tokens_admitted += prompt_len;
+        if reused > 0 {
+            self.prefix_hits += 1;
+        }
+    }
+
+    /// Fraction of admitted prompt tokens served from the prefix cache
+    /// instead of being recomputed; 0 when nothing was admitted.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        if self.prompt_tokens_admitted == 0 {
+            return 0.0;
+        }
+        self.tokens_reused as f64 / self.prompt_tokens_admitted as f64
     }
 
     /// Record a completed request (latencies in microseconds).
@@ -161,6 +189,9 @@ impl ServingMetrics {
             ("mean_queue_depth", json::num(self.mean_queue_depth())),
             ("mean_in_flight", json::num(self.mean_in_flight())),
             ("requests_evicted", json::num(self.requests_evicted as f64)),
+            ("tokens_reused", json::num(self.tokens_reused as f64)),
+            ("prefix_hits", json::num(self.prefix_hits as f64)),
+            ("prefix_hit_rate", json::num(self.prefix_hit_rate())),
         ])
     }
 
@@ -247,6 +278,23 @@ mod tests {
         assert!(j.req("tokens_per_sec").unwrap().as_f64().unwrap() > 0.0);
         // Serializes cleanly.
         assert!(j.to_string().contains("token_ms_p99"));
+    }
+
+    #[test]
+    fn prefix_reuse_feeds_hit_rate() {
+        let mut m = ServingMetrics::new();
+        m.record_admission(0, 40);
+        m.record_admission(32, 40);
+        m.record_admission(32, 40);
+        assert_eq!(m.tokens_reused, 64);
+        assert_eq!(m.prefix_hits, 2);
+        assert_eq!(m.prompt_tokens_admitted, 120);
+        assert!((m.prefix_hit_rate() - 64.0 / 120.0).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.req("tokens_reused").unwrap().as_f64(), Some(64.0));
+        assert_eq!(j.req("prefix_hits").unwrap().as_f64(), Some(2.0));
+        // No admissions: rate is 0, not NaN.
+        assert_eq!(ServingMetrics::new().prefix_hit_rate(), 0.0);
     }
 
     #[test]

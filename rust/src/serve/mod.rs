@@ -19,19 +19,34 @@
 //!   without artifacts; counts decode steps and prefill calls, and in paged
 //!   mode stores tokens in real physical pages so table corruption is
 //!   caught, not simulated away).
-//! * [`blocks`] — [`BlockPool`], the paged KV-cache page allocator:
-//!   `block_size`-token physical pages with strict `free + used == total`
-//!   accounting, plus the [`blocks::kv_memory_bytes`] formula the serving
-//!   bench audits its memory budgets with.
+//! * [`blocks`] — [`BlockPool`], the paged KV-cache page allocator. Page
+//!   ownership is **refcounted**: `allocate` hands a page out at refcount
+//!   1, `retain` lets more block tables (or the prefix index) map it, and
+//!   `release` frees only when the last reference drops, under the strict
+//!   invariant `free + Σ(refcount > 0) == total` (releases are
+//!   batch-atomic; double-frees are loud errors). Plus the
+//!   [`blocks::kv_memory_bytes`] formula the serving bench audits its
+//!   memory budgets with — physical pages, so shared pages count once.
+//! * [`prefix`] — [`prefix::PrefixIndex`], the content-addressed prefix
+//!   cache: full, immutable prompt pages keyed by a `(parent chain, page
+//!   tokens)` hash chain. Donated pages stay resident (the index holds a
+//!   reference) until pool pressure evicts them LRU; pages mapped by live
+//!   slots are structurally unevictable.
 //! * [`slots`] — [`SlotMap`], the slot-based KV-cache bookkeeping:
 //!   allocate/free/advance (by one token or a whole prefill chunk) with
 //!   per-slot position tracking and strict capacity accounting. In paged
 //!   mode ([`SlotMap::paged`]) each slot carries a block table over the
 //!   shared [`BlockPool`] instead of assuming a dense `[0, max_seq)` range;
 //!   tables grow lazily at page boundaries and positions can never outrun
-//!   their pages. Slot reuse needs no cache zeroing: the decode graphs mask
-//!   attention to `idx <= pos`, so a freshly admitted request starting at
-//!   `pos = 0` can never observe a previous occupant's stale keys/values.
+//!   their pages. With [`SlotMap::with_prefix_cache`],
+//!   [`SlotMap::admit_paged`] maps a new request's longest cached prompt
+//!   prefix read-only into its table (copy-on-write: the first written
+//!   page is always a fresh copy, recomputed through prefill — which is
+//!   why the PJRT graphs need no change), and full prompt pages are
+//!   donated to the index the moment they fill. Slot reuse needs no cache
+//!   zeroing: the decode graphs mask attention to `idx <= pos`, so a
+//!   freshly admitted request starting at `pos = 0` can never observe a
+//!   previous occupant's stale keys/values.
 //! * [`scheduler`] — [`Scheduler`], the continuous-batching loop: an
 //!   admission queue with backpressure, batched prompt prefill (a newly
 //!   admitted request reaches its first token in `ceil(len/T)` engine
@@ -44,9 +59,14 @@
 //!   reservable) instead of slot count, grows tables lazily during decode,
 //!   and evicts the youngest request back to the queue front when the pool
 //!   runs dry — so concurrency is bounded by tokens in flight, not by
-//!   `slots x max_seq` worst-case reservations. The legacy threaded FIFO
-//!   front ([`Server`]) also lives here. The scheduler's bookkeeping is
-//!   held to a pure reference simulator by randomized trace tests — see
+//!   `slots x max_seq` worst-case reservations. With
+//!   [`Scheduler::with_prefix_cache`] the watermark charges only a
+//!   request's *non-shared* page demand and prefill starts at the first
+//!   uncached position, so N users repeating one system prompt pay for it
+//!   once — with bit-identical output (sharing removes recomputation,
+//!   never changes content). The legacy threaded FIFO front ([`Server`])
+//!   also lives here. The scheduler's bookkeeping is held to a pure
+//!   reference simulator by randomized trace tests — see
 //!   [`crate::testing::sim`].
 //! * [`sampling`] — greedy / temperature / top-k / top-p samplers, seeded
 //!   via [`crate::util::prng`] so generations are exactly reproducible;
@@ -55,11 +75,13 @@
 //! * [`metrics`] — time-to-first-token (measured from enqueue, so queue
 //!   wait is visible), prefill-call latency (kept separate from per-token
 //!   decode latency), per-token latency percentiles, tokens/sec, queue
-//!   depth, eviction counts; exportable as JSON through [`crate::report`].
+//!   depth, eviction counts, prefix-cache reuse (`tokens_reused`, hit
+//!   rate); exportable as JSON through [`crate::report`].
 
 pub mod blocks;
 pub mod engine;
 pub mod metrics;
+pub mod prefix;
 pub mod sampling;
 pub mod scheduler;
 pub mod slots;

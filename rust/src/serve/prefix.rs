@@ -1,0 +1,326 @@
+//! Content-addressed prefix cache over the paged KV block pool.
+//!
+//! [`PrefixIndex`] maps *full, immutable* KV pages to the exact token
+//! prefix that produced them: page `j` of a prompt is stored with its
+//! whole cumulative prefix `prompt[..(j+1)*bs]`, and a lookup walks the
+//! prompt page by page, stopping at the first miss — the longest cached
+//! prefix comes out as a run of physical page ids a new request can map
+//! read-only into its block table (see
+//! [`SlotMap::admit_paged`](crate::serve::SlotMap::admit_paged)).
+//!
+//! A hash *chain* (`chain_step` folded page by page, [`CHAIN_ROOT`] at the
+//! start) is used purely as the bucket key; matching always compares the
+//! stored exact prefix, so two different prefixes can never alias a page
+//! even under a constructed 64-bit collision — the comparison cost is
+//! O(prefix) per matched page, which is fine at KV-cache page counts.
+//! Callers thread the running chain value through registration
+//! ([`SlotMap`](crate::serve::SlotMap) keeps one per slot), so donating a
+//! page costs O(block_size), not a re-walk of the whole prompt.
+//!
+//! Ownership contract: every indexed page carries **one pool reference
+//! owned by the index** (retained by the caller when
+//! [`PrefixIndex::register`] accepts a page, dropped when
+//! [`PrefixIndex::evict_lru`] hands it back). A page whose only remaining
+//! reference is the index's (`refcount == 1`) is *unreferenced but
+//! resident* — it stays cached until pool pressure evicts it in LRU order.
+//! Pages also referenced by live slots (`refcount > 1`) are never
+//! evictable, which is what makes "eviction can never reclaim a page
+//! another slot still references" a structural guarantee rather than a
+//! scheduler promise.
+//!
+//! Only pages wholly covered by a request's *prompt* are ever registered:
+//! cache behavior is then a pure function of submitted prompts, which is
+//! what lets the seeded oracle in [`crate::testing::sim`] replay
+//! shared-prefix traces exactly (generated tokens would make hits depend
+//! on sampler output), and it matches the workload this exists for —
+//! N concurrent requests repeating one system prompt / few-shot preamble.
+
+use std::collections::HashMap;
+
+/// FNV-1a offset basis / prime — the chain seed and fold for bucket keys.
+const CHAIN_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+const CHAIN_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// The chain value before any page (the parent of a prompt's first page).
+pub const CHAIN_ROOT: u64 = CHAIN_BASIS;
+
+/// Fold one page of tokens into a parent chain value.
+pub fn chain_step(parent: u64, tokens: &[i32]) -> u64 {
+    let mut h = parent ^ CHAIN_BASIS;
+    for &t in tokens {
+        h = (h ^ t as u32 as u64).wrapping_mul(CHAIN_PRIME);
+    }
+    h
+}
+
+/// Chain value after `pages` full pages of `prompt`.
+pub fn chain_of(prompt: &[i32], pages: usize, block_size: usize) -> u64 {
+    (0..pages)
+        .fold(CHAIN_ROOT, |h, j| chain_step(h, &prompt[j * block_size..(j + 1) * block_size]))
+}
+
+/// One cached full page: the exact token prefix through it, its physical
+/// page id, and its LRU stamp.
+#[derive(Clone, Debug)]
+struct Entry {
+    /// The whole prompt prefix this page completes — the identity match
+    /// key (the bucket hash is only a shortcut to it).
+    prefix: Vec<i32>,
+    /// Physical page in the [`BlockPool`](crate::serve::BlockPool); the
+    /// index owns one reference to it.
+    page: u32,
+    /// Logical LRU clock of the last lookup hit or registration.
+    last_use: u64,
+}
+
+/// The content-addressed index of full, immutable prompt pages.
+#[derive(Clone, Debug, Default)]
+pub struct PrefixIndex {
+    /// Chain-key buckets; exact cumulative-prefix comparison inside.
+    map: HashMap<u64, Vec<Entry>>,
+    /// Logical clock: bumped once per touched entry, so LRU order is a
+    /// deterministic function of the operation sequence (no wall clock —
+    /// the sim oracle replays it exactly).
+    clock: u64,
+    /// Cached pages (== total entries across buckets).
+    pages: usize,
+}
+
+impl PrefixIndex {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pages currently cached (each holds one pool reference).
+    pub fn cached_pages(&self) -> usize {
+        self.pages
+    }
+
+    /// The longest run of cached pages matching `prompt`'s leading full
+    /// pages, capped at `max_pages` — physical ids in page order. Every
+    /// hit bumps the entry's LRU stamp (in page order), including on
+    /// admission attempts that later fail their watermark; the oracle
+    /// mirrors exactly this.
+    pub fn lookup(&mut self, prompt: &[i32], block_size: usize, max_pages: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        let mut parent = CHAIN_ROOT;
+        for j in 0..max_pages.min(prompt.len() / block_size) {
+            let end = (j + 1) * block_size;
+            let key = chain_step(parent, &prompt[j * block_size..end]);
+            let Some(bucket) = self.map.get_mut(&key) else { break };
+            let Some(e) = bucket.iter_mut().find(|e| e.prefix[..] == prompt[..end]) else {
+                break;
+            };
+            self.clock += 1;
+            e.last_use = self.clock;
+            out.push(e.page);
+            parent = key;
+        }
+        out
+    }
+
+    /// Offer the page completing `prefix` (a whole number of pages; its
+    /// last `block_size` tokens are the page content), stored in physical
+    /// `page`, to the index. `parent` is the chain value over
+    /// `prefix[..prefix.len() - block_size]` — callers thread it so
+    /// registration never re-walks the prompt. Returns `true` when the
+    /// entry was inserted — the caller must then add the index's pool
+    /// reference (`pool.retain(page)`); `false` when an identical prefix
+    /// is already cached (a concurrent request prefilled the same content
+    /// into its own page — the duplicate stays slot-exclusive and is
+    /// freed with the slot).
+    pub fn register(&mut self, parent: u64, prefix: &[i32], block_size: usize, page: u32) -> bool {
+        debug_assert!(
+            prefix.len() >= block_size && prefix.len() % block_size == 0,
+            "prefix must end on a page boundary"
+        );
+        debug_assert_eq!(
+            parent,
+            chain_of(prefix, prefix.len() / block_size - 1, block_size),
+            "parent chain out of sync with the prefix"
+        );
+        let tokens = &prefix[prefix.len() - block_size..];
+        let key = chain_step(parent, tokens);
+        let bucket = self.map.entry(key).or_default();
+        if bucket.iter().any(|e| e.prefix[..] == *prefix) {
+            return false;
+        }
+        self.clock += 1;
+        bucket.push(Entry { prefix: prefix.to_vec(), page, last_use: self.clock });
+        self.pages += 1;
+        true
+    }
+
+    /// Physical ids of every cached page (order unspecified) — for
+    /// accounting cross-checks and stats, not for lookup.
+    pub fn pages(&self) -> Vec<u32> {
+        self.map.values().flatten().map(|e| e.page).collect()
+    }
+
+    /// Cached pages that `evictable` accepts (callers pass
+    /// `pool.refcount(page) == 1`, i.e. only the index still holds them).
+    pub fn evictable_pages(&self, evictable: impl Fn(u32) -> bool) -> usize {
+        self.map.values().flatten().filter(|e| evictable(e.page)).count()
+    }
+
+    /// Drop the least-recently-used entry among those whose page
+    /// `evictable` accepts, returning the physical page so the caller can
+    /// release the index's pool reference. `None` when nothing is
+    /// evictable. Chain interiors may be evicted before their children
+    /// (the child entry then sits unreachable until its prefix is
+    /// re-donated or its own turn comes) — both sides of the oracle
+    /// equivalence model this identically.
+    pub fn evict_lru(&mut self, evictable: impl Fn(u32) -> bool) -> Option<u32> {
+        let (&key, oldest) = self
+            .map
+            .iter()
+            .filter_map(|(k, bucket)| {
+                bucket
+                    .iter()
+                    .filter(|e| evictable(e.page))
+                    .min_by_key(|e| e.last_use)
+                    .map(|e| (k, e.last_use))
+            })
+            .min_by_key(|&(_, last_use)| last_use)?;
+        let bucket = self.map.get_mut(&key).expect("bucket exists");
+        let i = bucket
+            .iter()
+            .position(|e| e.last_use == oldest && evictable(e.page))
+            .expect("entry exists");
+        let page = bucket.swap_remove(i).page;
+        if bucket.is_empty() {
+            self.map.remove(&key);
+        }
+        self.pages -= 1;
+        Some(page)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(xs: &[i32]) -> Vec<i32> {
+        xs.to_vec()
+    }
+
+    /// Register page `j` of `prompt` the way SlotMap does, computing the
+    /// parent chain from scratch (tests only — the real caller threads it).
+    fn register_page(
+        idx: &mut PrefixIndex,
+        prompt: &[i32],
+        j: usize,
+        bs: usize,
+        page: u32,
+    ) -> bool {
+        idx.register(chain_of(prompt, j, bs), &prompt[..(j + 1) * bs], bs, page)
+    }
+
+    #[test]
+    fn lookup_walks_the_chain_and_stops_at_first_miss() {
+        let mut idx = PrefixIndex::new();
+        let prompt = toks(&[1, 2, 3, 4, 5, 6, 7, 8]);
+        assert!(register_page(&mut idx, &prompt, 0, 2, 10));
+        assert!(register_page(&mut idx, &prompt, 1, 2, 11));
+        assert!(register_page(&mut idx, &prompt, 3, 2, 13)); // page 2 deliberately absent
+        assert_eq!(idx.cached_pages(), 3);
+        // Pages 0 and 1 match; page 2 misses, so page 3 is unreachable
+        // even though it is cached.
+        assert_eq!(idx.lookup(&prompt, 2, 4), vec![10, 11]);
+        // max_pages caps the walk.
+        assert_eq!(idx.lookup(&prompt, 2, 1), vec![10]);
+        // A different prompt with the same first page shares only page 0.
+        let other = toks(&[1, 2, 9, 9]);
+        assert_eq!(idx.lookup(&other, 2, 2), vec![10]);
+        // Partial trailing page never matches (full pages only).
+        assert_eq!(idx.lookup(&toks(&[1, 2, 3]), 2, 2), vec![10]);
+    }
+
+    #[test]
+    fn register_dedups_identical_prefixes() {
+        let mut idx = PrefixIndex::new();
+        let prompt = toks(&[5, 6, 7, 8]);
+        assert!(register_page(&mut idx, &prompt, 0, 2, 3));
+        // A concurrent request prefilled the same content into page 9: the
+        // original entry wins, the duplicate stays slot-owned.
+        assert!(!register_page(&mut idx, &prompt, 0, 2, 9));
+        assert_eq!(idx.cached_pages(), 1);
+        assert_eq!(idx.lookup(&prompt, 2, 2), vec![3]);
+        // Same page tokens behind a different prefix are a different entry.
+        let shifted = toks(&[0, 0, 5, 6]);
+        assert!(register_page(&mut idx, &shifted, 1, 2, 4));
+        assert_eq!(idx.cached_pages(), 2);
+    }
+
+    #[test]
+    fn evict_lru_prefers_least_recent_and_respects_refcounts() {
+        let mut idx = PrefixIndex::new();
+        let a = toks(&[1, 1]);
+        let b = toks(&[2, 2]);
+        let c = toks(&[3, 3]);
+        assert!(register_page(&mut idx, &a, 0, 2, 0));
+        assert!(register_page(&mut idx, &b, 0, 2, 1));
+        assert!(register_page(&mut idx, &c, 0, 2, 2));
+        // Touch `a` so `b` becomes the LRU entry.
+        assert_eq!(idx.lookup(&a, 2, 1), vec![0]);
+        // Page 1 is pinned (refcount > 1 in the caller's pool): the filter
+        // must skip it and take the next-oldest, page 2.
+        assert_eq!(idx.evictable_pages(|p| p != 1), 2);
+        assert_eq!(idx.evict_lru(|p| p != 1), Some(2));
+        assert_eq!(idx.evict_lru(|p| p != 1), Some(0));
+        assert_eq!(idx.evict_lru(|p| p != 1), None, "only the pinned page remains");
+        assert_eq!(idx.cached_pages(), 1);
+        assert_eq!(idx.evict_lru(|_| true), Some(1));
+        assert_eq!(idx.cached_pages(), 0);
+    }
+
+    #[test]
+    fn matching_is_by_exact_prefix_not_by_hash() {
+        // The chain hash is only a bucket key: entries store and compare
+        // their exact cumulative prefix, so even a colliding key can never
+        // hand out a page computed under a different context.
+        let mut idx = PrefixIndex::new();
+        let a = toks(&[7, 7]);
+        assert!(register_page(&mut idx, &a, 0, 2, 0));
+        let b = toks(&[7, 8]);
+        assert!(idx.lookup(&b, 2, 1).is_empty(), "different content must miss");
+        // The same second-page tokens behind different first pages are
+        // distinct entries, each matched only behind its own exact prefix.
+        let long_a = toks(&[7, 7, 9, 9]);
+        let long_b = toks(&[7, 8, 9, 9]);
+        assert!(register_page(&mut idx, &long_a, 1, 2, 1));
+        assert!(register_page(&mut idx, &long_b, 0, 2, 2));
+        assert!(register_page(&mut idx, &long_b, 1, 2, 3));
+        assert_eq!(idx.lookup(&long_a, 2, 2), vec![0, 1]);
+        assert_eq!(idx.lookup(&long_b, 2, 2), vec![2, 3]);
+    }
+
+    #[test]
+    fn evicted_interior_relinks_after_redonation() {
+        // Chain [A, B]: evict A while B survives; B is unreachable until A
+        // is re-donated with the same content, after which the old B entry
+        // is reachable again (content addressing, not identity chaining).
+        let mut idx = PrefixIndex::new();
+        let p = toks(&[1, 2, 3, 4]);
+        assert!(register_page(&mut idx, &p, 0, 2, 0));
+        assert!(register_page(&mut idx, &p, 1, 2, 1));
+        assert_eq!(idx.evict_lru(|pg| pg == 0), Some(0));
+        assert!(idx.lookup(&p, 2, 2).is_empty(), "orphaned child unreachable");
+        assert!(register_page(&mut idx, &p, 0, 2, 5));
+        assert_eq!(idx.lookup(&p, 2, 2), vec![5, 1], "old child reachable again");
+    }
+
+    #[test]
+    fn clock_orders_eviction_deterministically() {
+        let mut idx = PrefixIndex::new();
+        for (i, t) in [[1, 1], [2, 2], [3, 3], [4, 4]].iter().enumerate() {
+            assert!(register_page(&mut idx, &toks(t), 0, 2, i as u32));
+        }
+        // Reverse-touch: eviction order becomes registration order of the
+        // untouched, then touch order.
+        assert_eq!(idx.lookup(&toks(&[2, 2]), 2, 1), vec![1]);
+        assert_eq!(idx.lookup(&toks(&[1, 1]), 2, 1), vec![0]);
+        let order: Vec<u32> = std::iter::from_fn(|| idx.evict_lru(|_| true)).collect();
+        assert_eq!(order, vec![2, 3, 1, 0]);
+    }
+}

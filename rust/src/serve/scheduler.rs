@@ -35,6 +35,16 @@
 //! deterministic (largest request id first), which is what lets the pure
 //! oracle in [`crate::testing::sim`] replay paged traces exactly.
 //!
+//! With [`Scheduler::with_prefix_cache`] page ownership is refcounted
+//! copy-on-write (see [`crate::serve::prefix`]): a new request's longest
+//! cached prompt prefix is mapped read-only into its block table at
+//! admission, the watermark counts only its *non-shared* page demand,
+//! prefill starts at the first uncached position (whole cached pages are
+//! skipped, shrinking TTFT), and full prompt pages are donated to the
+//! index as they fill so the next request with the same system prompt
+//! reuses them. Completions are bit-identical with the cache on or off —
+//! the cache removes recomputation, never changes content.
+//!
 //! PJRT handles are not `Send`, so the scheduler is single-threaded by
 //! design; the batching parallelism lives *inside* the engine step. The
 //! old one-request-at-a-time [`Server`] (worker thread + channels) is kept
@@ -90,7 +100,9 @@ pub struct Completion {
 struct Active {
     id: u64,
     prompt: Vec<i32>,
-    /// Prompt tokens fed so far.
+    /// Prompt tokens fed so far. Starts at the cached-prefix length when
+    /// the prefix cache mapped shared pages at admission — those tokens
+    /// are skipped, never re-fed.
     fed: usize,
     generated: Vec<u8>,
     max_new: usize,
@@ -102,6 +114,24 @@ struct Active {
     last_token: i32,
     submitted: Instant,
     ttft_us: Option<f64>,
+    /// End-to-end page demand, computed once at submit (prompt and
+    /// max_new are immutable); carried through eviction requeues.
+    blocks_needed: usize,
+}
+
+/// One queued request, in admission-ready form: the prompt is already
+/// converted to engine tokens and `blocks_needed` — the paged admission
+/// demand `ceil(min(len + max_new, max_seq) / block_size)` (0 in dense
+/// mode) — is computed once at submit time, so a watermark-blocked head
+/// costs no per-step conversion or re-derivation.
+struct Queued {
+    id: u64,
+    prompt: Vec<i32>,
+    max_new: usize,
+    sampler: Sampler,
+    seed: u64,
+    submitted: Instant,
+    blocks_needed: usize,
 }
 
 /// The continuous-batching loop over one [`DecodeEngine`].
@@ -109,7 +139,7 @@ pub struct Scheduler<E: DecodeEngine> {
     engine: E,
     slots: SlotMap,
     active: Vec<Option<Active>>,
-    pending: VecDeque<(u64, GenRequest, Instant)>,
+    pending: VecDeque<Queued>,
     max_queue: usize,
     next_id: u64,
     /// Paged mode: per-slot block tables padded to the logical page count
@@ -174,7 +204,33 @@ impl<E: DecodeEngine> Scheduler<E> {
         if self.slots.active_count() > 0 || !self.pending.is_empty() {
             bail!("kv block budget must be set before submitting work");
         }
-        self.slots = SlotMap::paged(self.engine.slots(), self.engine.max_seq(), blocks, bs);
+        let mut slots = SlotMap::paged(self.engine.slots(), self.engine.max_seq(), blocks, bs);
+        if self.slots.has_prefix_cache() {
+            slots = slots.with_prefix_cache();
+        }
+        self.slots = slots;
+        Ok(self)
+    }
+
+    /// Enable refcounted copy-on-write prefix sharing (`serve
+    /// --prefix-cache`): full prompt pages are donated to a
+    /// content-addressed index as they fill, later requests map their
+    /// longest cached prefix read-only at admission (admission then counts
+    /// only the non-shared remainder against the page budget), and prefill
+    /// starts at the first uncached position. Generated bytes are
+    /// bit-identical with the cache on or off — sharing only removes
+    /// recomputation. Paged engines only; call before submitting work.
+    pub fn with_prefix_cache(mut self) -> Result<Self> {
+        if !self.slots.is_paged() {
+            bail!("--prefix-cache needs a paged engine");
+        }
+        if self.slots.active_count() > 0 || !self.pending.is_empty() {
+            bail!("prefix cache must be enabled before submitting work");
+        }
+        if !self.slots.has_prefix_cache() {
+            let slots = std::mem::replace(&mut self.slots, SlotMap::new(0, 0));
+            self.slots = slots.with_prefix_cache();
+        }
         Ok(self)
     }
 
@@ -227,8 +283,11 @@ impl<E: DecodeEngine> Scheduler<E> {
                 self.engine.max_seq()
             );
         }
-        if let Some(pool) = self.slots.pool() {
+        // Computed once here, never re-derived per step: prompt and
+        // max_new are immutable for the life of the request.
+        let blocks_needed = if self.slots.is_paged() {
             let needed = self.blocks_needed(req.prompt.len(), req.max_new_tokens);
+            let pool = self.slots.pool().expect("paged");
             if needed > pool.total_blocks() {
                 bail!(
                     "request needs {needed} KV pages, the whole pool has {} \
@@ -236,7 +295,10 @@ impl<E: DecodeEngine> Scheduler<E> {
                     pool.total_blocks()
                 );
             }
-        }
+            needed
+        } else {
+            0
+        };
         if self.pending.len() >= self.max_queue {
             bail!(
                 "admission queue full ({} pending, limit {}): backpressure",
@@ -246,7 +308,15 @@ impl<E: DecodeEngine> Scheduler<E> {
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.pending.push_back((id, req, Instant::now()));
+        self.pending.push_back(Queued {
+            id,
+            prompt: req.prompt.iter().map(|&b| b as i32).collect(),
+            max_new: req.max_new_tokens,
+            sampler: req.sampler,
+            seed: req.seed,
+            submitted: Instant::now(),
+            blocks_needed,
+        });
         Ok(id)
     }
 
@@ -255,7 +325,7 @@ impl<E: DecodeEngine> Scheduler<E> {
     /// request joins the batch on the following step. Returns `false` if
     /// the id is unknown (already completed or never submitted).
     pub fn cancel(&mut self, id: u64) -> Result<bool> {
-        if let Some(i) = self.pending.iter().position(|(pid, _, _)| *pid == id) {
+        if let Some(i) = self.pending.iter().position(|q| q.id == id) {
             self.pending.remove(i);
             return Ok(true);
         }
@@ -273,46 +343,51 @@ impl<E: DecodeEngine> Scheduler<E> {
 
     /// Move pending requests into free slots (at most one per free slot).
     /// Paged mode additionally gates on the free-page token budget: the
-    /// head request is admitted only if `ceil((len + max_new)/bs)` pages
-    /// are free right now (a watermark, not a reservation — its first page
-    /// is claimed here, the rest lazily), and admission stays FIFO: a
-    /// too-big head blocks the queue rather than being jumped.
-    fn admit(&mut self) {
+    /// head request is admitted only if its *non-shared* page demand —
+    /// `ceil((len + max_new)/bs)` minus the cached-prefix pages it maps —
+    /// is claimable right now (a watermark, not a reservation: its first
+    /// writable page is claimed here, the rest lazily), and admission
+    /// stays FIFO: a too-big head blocks the queue rather than being
+    /// jumped. With the prefix cache on, the head's longest cached prefix
+    /// is mapped read-only into its block table and the scheduler will
+    /// feed the prompt from the first uncached position.
+    fn admit(&mut self) -> Result<()> {
         while !self.pending.is_empty() && self.slots.free_count() > 0 {
-            if self.slots.is_paged() {
-                let (_, req, _) = self.pending.front().expect("non-empty");
-                let needed = self.blocks_needed(req.prompt.len(), req.max_new_tokens);
-                if self.slots.pool().expect("paged").free_blocks() < needed {
+            let (slot, cached) = if self.slots.is_paged() {
+                let head = self.pending.front().expect("non-empty");
+                let Some(admitted) =
+                    self.slots.admit_paged(head.id, &head.prompt, head.blocks_needed)?
+                else {
                     break;
-                }
-            }
-            let (id, req, submitted) = self.pending.pop_front().expect("non-empty");
-            let slot = self.slots.allocate(id).expect("free slot");
-            if self.slots.is_paged() {
-                // First page now (so every in-flight request holds >= 1
-                // page, which is what makes eviction always free memory).
-                let ok = self
-                    .slots
-                    .ensure_capacity(slot, 1)
-                    .expect("fresh slot can grow");
-                debug_assert!(ok, "admission checked free pages");
-                self.refresh_table_row(slot);
-            }
+                };
+                admitted
+            } else {
+                let head = self.pending.front().expect("non-empty");
+                (self.slots.allocate(head.id).expect("free slot"), 0)
+            };
+            let q = self.pending.pop_front().expect("non-empty");
+            self.refresh_table_row(slot);
             self.engine.reset_slot(slot);
+            if cached > 0 {
+                self.engine.adopt_prefix(slot, &self.tables[slot], cached)?;
+            }
+            self.metrics.record_admission(cached, q.prompt.len());
             self.active[slot] = Some(Active {
-                id,
-                prompt: req.prompt.iter().map(|&b| b as i32).collect(),
-                fed: 0,
+                id: q.id,
+                prompt: q.prompt,
+                fed: cached,
                 generated: Vec::new(),
-                max_new: req.max_new_tokens,
-                sampler: req.sampler,
-                seed: req.seed,
-                rng: Prng::new(req.seed),
+                max_new: q.max_new,
+                sampler: q.sampler,
+                seed: q.seed,
+                rng: Prng::new(q.seed),
                 last_token: 0,
-                submitted,
+                submitted: q.submitted,
                 ttft_us: None,
+                blocks_needed: q.blocks_needed,
             });
         }
+        Ok(())
     }
 
     /// Evict the youngest (largest-id) in-flight request back to the queue
@@ -332,17 +407,18 @@ impl<E: DecodeEngine> Scheduler<E> {
         self.metrics.record_eviction();
         // Queue-front requeue keeps FIFO fairness (it was admitted before
         // anything still queued); this may transiently exceed `max_queue`,
-        // which beats dropping the request on the floor.
-        self.pending.push_front((
-            a.id,
-            GenRequest {
-                prompt: a.prompt.iter().map(|&t| t as u8).collect(),
-                max_new_tokens: a.max_new,
-                sampler: a.sampler,
-                seed: a.seed,
-            },
-            a.submitted,
-        ));
+        // which beats dropping the request on the floor. With the prefix
+        // cache on, the pages it donated before eviction stay resident, so
+        // the restart usually prefills only the uncached tail.
+        self.pending.push_front(Queued {
+            id: a.id,
+            prompt: a.prompt,
+            max_new: a.max_new,
+            sampler: a.sampler,
+            seed: a.seed,
+            submitted: a.submitted,
+            blocks_needed: a.blocks_needed,
+        });
         Ok(victim)
     }
 
@@ -448,6 +524,7 @@ impl<E: DecodeEngine> Scheduler<E> {
         let a = self.active[b].take().expect("retiring an occupied slot");
         self.slots.release(b)?;
         self.refresh_table_row(b);
+        self.engine.reset_slot(b);
         let request_us = a.submitted.elapsed().as_secs_f64() * 1e6;
         self.metrics.record_completion(request_us, a.ttft_us);
         Ok(Completion {
@@ -465,7 +542,7 @@ impl<E: DecodeEngine> Scheduler<E> {
     /// Returns the completions that finished on this iteration (empty when
     /// idle).
     pub fn step(&mut self) -> Result<Vec<Completion>> {
-        self.admit();
+        self.admit()?;
         let chunk = self.engine.prefill_chunk().max(1);
         let owes_prompt =
             |s: &Option<Active>| s.as_ref().map_or(false, |a| a.fed < a.prompt.len());
@@ -1235,6 +1312,172 @@ mod tests {
         assert!(Scheduler::new(e, 8).unwrap().with_kv_block_budget(64).is_err());
         let dense = MockEngine::new(4, 64, 64);
         assert!(Scheduler::new(dense, 8).unwrap().with_kv_block_budget(8).is_err());
+    }
+
+    // -- prefix cache (refcounted copy-on-write page sharing) --------------
+
+    fn sched_prefix(
+        slots: usize,
+        max_seq: usize,
+        n_blocks: usize,
+        bs: usize,
+        chunk: usize,
+    ) -> Scheduler<MockEngine> {
+        let mut e = MockEngine::new(slots, max_seq, 64).with_block_pool(n_blocks, bs);
+        if chunk > 1 {
+            e = e.with_prefill_chunk(chunk);
+        }
+        Scheduler::new(e, 64).unwrap().with_prefix_cache().unwrap()
+    }
+
+    /// N requests sharing one system prompt: `shared` identical leading
+    /// bytes, then a per-request suffix.
+    fn shared_prefix_workload(n: usize, shared: usize, suffix: usize) -> Vec<GenRequest> {
+        (0..n)
+            .map(|i| {
+                let mut p: Vec<u8> = (0..shared).map(|j| (32 + (j * 7) % 90) as u8).collect();
+                p.extend((0..suffix).map(|j| (32 + ((i * 13 + j * 5) % 90)) as u8));
+                GenRequest::sampled(&p, 4 + i % 5, Sampler::top_k(8, 0.9), 900 + i as u64)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prefix_cache_on_off_bit_identical_completions() {
+        // THE acceptance check: the prefix cache is a pure recomputation
+        // remover — for a shared-prefix workload every generated byte must
+        // match the cache-off paged run, while the cache-on run actually
+        // reuses pages. Both the interleaved (chunk 1) and the batched
+        // prefill path.
+        for chunk in [1usize, 8] {
+            let workload = || shared_prefix_workload(12, 16, 4);
+            let mk = |prefix: bool| {
+                let mut e = MockEngine::new(4, 64, 64).with_block_pool(24, 4);
+                if chunk > 1 {
+                    e = e.with_prefill_chunk(chunk);
+                }
+                let s = Scheduler::new(e, 64).unwrap();
+                if prefix {
+                    s.with_prefix_cache().unwrap()
+                } else {
+                    s
+                }
+            };
+            let mut on = mk(true);
+            let mut d_on = on.serve_all(workload()).unwrap();
+            let mut off = mk(false);
+            let mut d_off = off.serve_all(workload()).unwrap();
+            d_on.sort_by_key(|c| c.id);
+            d_off.sort_by_key(|c| c.id);
+            assert_eq!(d_on.len(), d_off.len());
+            for (a, b) in d_on.iter().zip(&d_off) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(a.completion, b.completion, "chunk {chunk}, request {}", a.id);
+            }
+            assert!(on.metrics.tokens_reused > 0, "chunk {chunk}: cache never hit");
+            assert_eq!(off.metrics.tokens_reused, 0);
+        }
+    }
+
+    #[test]
+    fn warm_request_prefills_only_the_uncached_tail() {
+        // bs 8, 16 shared + 8 unique prompt tokens, prefill chunk 8: the
+        // cold request costs ceil(24/8) = 3 prefill calls; the warm one
+        // maps 2 cached pages and owes only its 8-token tail -> 1 call.
+        let mut s = sched_prefix(2, 128, 32, 8, 8);
+        let w = shared_prefix_workload(2, 16, 8);
+        s.submit(w[0].clone()).unwrap();
+        let d0 = s.run().unwrap();
+        assert_eq!(s.engine().prefill_calls, 3);
+        assert_eq!(s.metrics.tokens_reused, 0);
+        s.submit(w[0].clone()).unwrap();
+        let d1 = s.run().unwrap();
+        assert_eq!(s.engine().prefill_calls, 4, "warm prompt owes one chunk");
+        assert_eq!(s.metrics.tokens_reused, 16);
+        assert_eq!(s.metrics.prefix_hits, 1);
+        assert!((s.metrics.prefix_hit_rate() - 16.0 / 48.0).abs() < 1e-12);
+        // Identical request + seed => identical bytes, cold or warm.
+        assert_eq!(d0[0].completion, d1[0].completion);
+        // A different suffix shares only the 16-token prefix.
+        s.submit(w[1].clone()).unwrap();
+        s.run().unwrap();
+        assert_eq!(s.metrics.tokens_reused, 32);
+    }
+
+    #[test]
+    fn shared_pages_shrink_physical_demand_at_the_same_budget() {
+        // Pool of 4 pages x 4 tokens; each request needs 3 pages end to
+        // end (prompt 9, budget 3) but the first 2 pages are a shared
+        // prefix. Cold (cache off), two concurrent requests demand 6
+        // physical pages and must evict; warm, they demand 2 shared + 2
+        // exclusive = 4 and both run to completion untouched — strictly
+        // more admitted concurrency from the same page budget.
+        let reqs = shared_prefix_workload(3, 8, 1);
+        let mut cold = Scheduler::new(MockEngine::new(2, 32, 64).with_block_pool(4, 4), 8)
+            .unwrap();
+        cold.submit(GenRequest { max_new_tokens: 3, ..reqs[1].clone() }).unwrap();
+        cold.submit(GenRequest { max_new_tokens: 3, ..reqs[2].clone() }).unwrap();
+        cold.run().unwrap();
+        assert!(cold.metrics.requests_evicted >= 1, "6-page demand over 4 pages must evict");
+        // Warm the cache with one full pass, then run the same pair.
+        let mut s = sched_prefix(2, 32, 4, 4, 1);
+        s.submit(GenRequest { max_new_tokens: 3, ..reqs[0].clone() }).unwrap();
+        s.run().unwrap();
+        assert_eq!(s.slots.prefix().unwrap().cached_pages(), 2);
+        s.submit(GenRequest { max_new_tokens: 3, ..reqs[1].clone() }).unwrap();
+        s.submit(GenRequest { max_new_tokens: 3, ..reqs[2].clone() }).unwrap();
+        s.step().unwrap();
+        assert_eq!(s.in_flight(), 2, "non-shared demand (1 page each) fits the watermark");
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(s.metrics.requests_evicted, 0, "shared pages remove the pressure");
+        assert_eq!(s.metrics.tokens_reused, 16, "two warm admissions x 8 shared tokens");
+    }
+
+    #[test]
+    fn evicted_request_replays_byte_identically_with_prefix_cache() {
+        // Satellite: two page-hungry requests over a 6-page pool force an
+        // eviction; the victim re-admits through its own donated pages
+        // (warm restart) and still produces exactly the bytes a solo dense
+        // run yields.
+        let prompt: Vec<u8> = (0..8).map(|j| b'A' + j).collect();
+        let req = |seed| GenRequest::sampled(&prompt, 8, Sampler::top_k(8, 0.9), seed);
+        let mut s = sched_prefix(2, 32, 6, 4, 1);
+        let a = s.submit(req(1)).unwrap();
+        let b = s.submit(req(2)).unwrap();
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 2);
+        assert!(s.metrics.requests_evicted >= 1, "6 pages for 2x4-page demand must evict");
+        assert!(s.metrics.tokens_reused > 0, "victim must restart through cached pages");
+        for (seed, id) in [(1, a), (2, b)] {
+            let mut solo = sched(1, 32, 4);
+            solo.submit(req(seed)).unwrap();
+            let want = solo.run().unwrap();
+            let got = done.iter().find(|c| c.id == id).expect("completed");
+            assert_eq!(got.completion, want[0].completion, "request {id}");
+        }
+        // Every page still resident is held by the index alone.
+        let pool = s.slots.pool().unwrap();
+        assert_eq!(pool.used_blocks(), s.slots.prefix().unwrap().cached_pages());
+    }
+
+    #[test]
+    fn prefix_cache_requires_a_paged_engine_and_an_empty_scheduler() {
+        let dense = Scheduler::new(MockEngine::new(2, 32, 64), 8).unwrap();
+        assert!(dense.with_prefix_cache().is_err());
+        let mut s = sched_prefix(2, 32, 8, 4, 1);
+        s.submit(GenRequest::greedy(b"abc", 2)).unwrap();
+        assert!(s.with_prefix_cache().is_err(), "must be set before submitting");
+        // Budget restriction composes with the prefix cache in either order.
+        let e = MockEngine::new(2, 64, 64).with_block_pool(16, 8);
+        let s = Scheduler::new(e, 8)
+            .unwrap()
+            .with_prefix_cache()
+            .unwrap()
+            .with_kv_block_budget(8)
+            .unwrap();
+        assert!(s.slots.has_prefix_cache());
+        assert_eq!(s.slots.pool().unwrap().total_blocks(), 8);
     }
 
     // -- legacy threaded Server ------------------------------------------

@@ -12,19 +12,40 @@
 //! block table per slot over a [`BlockPool`]: instead of assuming a dense
 //! `[0, max_seq)` cache range, a slot's positions live in lazily allocated
 //! `block_size`-token physical pages ([`SlotMap::ensure_capacity`] grows
-//! the table at page boundaries, [`SlotMap::release`] returns the pages to
-//! the pool). Positions may never advance past what the table covers.
+//! the table at page boundaries, [`SlotMap::release`] drops the slot's page
+//! references). Positions may never advance past what the table covers.
+//!
+//! With [`SlotMap::with_prefix_cache`] the map additionally keeps a
+//! [`PrefixIndex`] over the pool and page ownership becomes
+//! **refcounted copy-on-write**:
+//!
+//! * [`SlotMap::admit_paged`] maps the longest run of cached full pages
+//!   matching a new request's prompt into its block table *read-only*
+//!   (each mapped page is retained, never written — the match is capped
+//!   one token short of the prompt, so the first written page is always a
+//!   freshly allocated copy whose tokens are recomputed through prefill:
+//!   copy-on-write by recompute, which is why the PJRT graphs need no
+//!   change).
+//! * [`SlotMap::advance_by`] donates pages to the index the moment they
+//!   fill entirely inside the prompt (the index takes its own reference),
+//!   so a release later drops only the slot's references and the pages
+//!   stay resident for the next request with the same prefix.
+//! * Pool pressure first evicts LRU index pages nobody else references
+//!   (`refcount == 1`); pages mapped by live slots are structurally
+//!   unevictable.
 
 use anyhow::{bail, Result};
 
 use crate::serve::blocks::BlockPool;
+use crate::serve::prefix::{chain_of, chain_step, PrefixIndex, CHAIN_ROOT};
 
 /// Occupancy record for one slot.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SlotInfo {
     /// Request id occupying the slot.
     pub id: u64,
-    /// Next cache position to be written (== tokens fed so far).
+    /// Next cache position to be written (== tokens fed so far, cached
+    /// prefix tokens included).
     pub pos: usize,
 }
 
@@ -40,11 +61,33 @@ pub struct SlotMap {
     /// Paged mode: per-slot block table (logical page j -> physical page).
     /// Always empty for free slots and in dense mode.
     tables: Vec<Vec<u32>>,
+    /// Prefix-cache mode: the content-addressed index of donated pages.
+    prefix: Option<PrefixIndex>,
+    /// Prefix-cache mode: the prompt each occupied slot was admitted with
+    /// (content key for page donation). Empty otherwise.
+    prompts: Vec<Vec<i32>>,
+    /// Prefix-cache mode: leading table pages mapped read-only from the
+    /// index at admission. The slot's positions start past them and it
+    /// never writes them.
+    shared: Vec<usize>,
+    /// Prefix-cache mode: the running chain value over each slot's
+    /// processed prompt pages (mapped at admission + donated since), so
+    /// registering a page never re-walks the prompt.
+    chains: Vec<u64>,
 }
 
 impl SlotMap {
     pub fn new(capacity: usize, max_seq: usize) -> Self {
-        Self { max_seq, state: vec![None; capacity], pool: None, tables: vec![Vec::new(); capacity] }
+        Self {
+            max_seq,
+            state: vec![None; capacity],
+            pool: None,
+            tables: vec![Vec::new(); capacity],
+            prefix: None,
+            prompts: vec![Vec::new(); capacity],
+            shared: vec![0; capacity],
+            chains: vec![CHAIN_ROOT; capacity],
+        }
     }
 
     /// Paged variant: slots share `total_blocks` physical pages of
@@ -52,11 +95,18 @@ impl SlotMap {
     /// [`SlotMap::ensure_capacity`].
     pub fn paged(capacity: usize, max_seq: usize, total_blocks: usize, block_size: usize) -> Self {
         Self {
-            max_seq,
-            state: vec![None; capacity],
             pool: Some(BlockPool::new(total_blocks, block_size)),
-            tables: vec![Vec::new(); capacity],
+            ..Self::new(capacity, max_seq)
         }
+    }
+
+    /// Enable the content-addressed prefix cache (paged maps only): full
+    /// prompt pages are donated to a [`PrefixIndex`] as they fill and
+    /// mapped read-only into later requests with the same prefix.
+    pub fn with_prefix_cache(mut self) -> Self {
+        assert!(self.pool.is_some(), "prefix cache needs a paged SlotMap");
+        self.prefix = Some(PrefixIndex::new());
+        self
     }
 
     /// The page allocator, when this map is paged.
@@ -64,8 +114,17 @@ impl SlotMap {
         self.pool.as_ref()
     }
 
+    /// The prefix index, when the prefix cache is enabled.
+    pub fn prefix(&self) -> Option<&PrefixIndex> {
+        self.prefix.as_ref()
+    }
+
     pub fn is_paged(&self) -> bool {
         self.pool.is_some()
+    }
+
+    pub fn has_prefix_cache(&self) -> bool {
+        self.prefix.is_some()
     }
 
     /// A slot's block table (empty when free or dense).
@@ -73,29 +132,40 @@ impl SlotMap {
         &self.tables[slot]
     }
 
-    /// Grow `slot`'s block table until it covers cache positions
-    /// `[0, target_pos)`, allocating pages from the pool. Returns `false`
-    /// (keeping any pages already granted) when the pool runs dry — the
-    /// scheduler then evicts a request and retries. Errors on free slots,
-    /// dense maps, or a target past `max_seq`.
-    pub fn ensure_capacity(&mut self, slot: usize, target_pos: usize) -> Result<bool> {
-        let Some(pool) = self.pool.as_mut() else {
-            bail!("ensure_capacity on a dense SlotMap");
-        };
-        if self.state.get(slot).copied().flatten().is_none() {
-            bail!("slot {slot} grown while free");
+    /// Leading pages of a slot's table mapped read-only from the prefix
+    /// index (0 when the cache is off or the prompt missed).
+    pub fn shared_pages(&self, slot: usize) -> usize {
+        self.shared[slot]
+    }
+
+    /// Pages an admission or growth can draw on right now: free pages plus
+    /// cached index pages nobody else references (evictable under
+    /// pressure). This is the paged admission watermark's supply side —
+    /// shared pages a request would map are *not* in here; they are
+    /// subtracted from the demand side instead (see [`SlotMap::admit_paged`]).
+    pub fn available_pages(&self) -> usize {
+        let Some(pool) = self.pool.as_ref() else { return 0 };
+        let evictable = self
+            .prefix
+            .as_ref()
+            .map(|idx| idx.evictable_pages(|p| pool.refcount(p) == 1))
+            .unwrap_or(0);
+        pool.free_blocks() + evictable
+    }
+
+    /// Claim one page: from the free list, else by evicting the LRU index
+    /// page only the index still references. `None` when even eviction
+    /// cannot help (every page is referenced by a live slot or the index's
+    /// survivors).
+    fn allocate_page(&mut self) -> Option<u32> {
+        let pool = self.pool.as_mut()?;
+        if let Some(b) = pool.allocate() {
+            return Some(b);
         }
-        if target_pos > self.max_seq {
-            bail!("slot {slot}: target {target_pos} past max_seq {}", self.max_seq);
-        }
-        let needed = pool.blocks_for(target_pos);
-        while self.tables[slot].len() < needed {
-            match pool.allocate() {
-                Some(b) => self.tables[slot].push(b),
-                None => return Ok(false),
-            }
-        }
-        Ok(true)
+        let prefix = self.prefix.as_mut()?;
+        let page = prefix.evict_lru(|p| pool.refcount(p) == 1)?;
+        pool.release(&[page]).expect("evicted page held exactly the index reference");
+        pool.allocate()
     }
 
     pub fn capacity(&self) -> usize {
@@ -128,30 +198,142 @@ impl SlotMap {
         self.info(slot).map(|s| s.pos)
     }
 
+    /// Grow `slot`'s block table until it covers cache positions
+    /// `[0, target_pos)`, allocating pages from the pool (evicting LRU
+    /// unreferenced index pages under pressure). Returns `false` (keeping
+    /// any pages already granted) when nothing more can be claimed — the
+    /// scheduler then evicts a request and retries. Errors on free slots,
+    /// dense maps, or a target past `max_seq`.
+    pub fn ensure_capacity(&mut self, slot: usize, target_pos: usize) -> Result<bool> {
+        let Some(pool) = self.pool.as_ref() else {
+            bail!("ensure_capacity on a dense SlotMap");
+        };
+        if self.state.get(slot).copied().flatten().is_none() {
+            bail!("slot {slot} grown while free");
+        }
+        if target_pos > self.max_seq {
+            bail!("slot {slot}: target {target_pos} past max_seq {}", self.max_seq);
+        }
+        let needed = pool.blocks_for(target_pos);
+        while self.tables[slot].len() < needed {
+            match self.allocate_page() {
+                Some(b) => self.tables[slot].push(b),
+                None => return Ok(false),
+            }
+        }
+        Ok(true)
+    }
+
     /// Claim the lowest-numbered free slot for request `id`; positions start
-    /// at 0. Returns `None` when every slot is occupied.
+    /// at 0. Returns `None` when every slot is occupied. (Dense admission —
+    /// paged schedulers go through [`SlotMap::admit_paged`].)
     pub fn allocate(&mut self, id: u64) -> Option<usize> {
         let slot = self.state.iter().position(|s| s.is_none())?;
         self.state[slot] = Some(SlotInfo { id, pos: 0 });
         Some(slot)
     }
 
-    /// Release an occupied slot (returning its pages to the pool in paged
-    /// mode); returns the request id it held.
+    /// Paged admission transaction: map the longest cached prefix of
+    /// `prompt` read-only into the lowest free slot's table, check the
+    /// free-page watermark against the *non-shared* remainder of
+    /// `blocks_needed` (the request's end-to-end page demand), and claim
+    /// the first writable page. Returns `Ok(None)` — with every side
+    /// effect rolled back except LRU clock bumps on the matched entries —
+    /// when there is no free slot or the watermark fails; the caller keeps
+    /// the request queued.
+    ///
+    /// On success returns `(slot, cached_tokens)`: the slot's position
+    /// starts at `cached_tokens` (a page-boundary multiple, strictly less
+    /// than `prompt.len()`), so the scheduler feeds the prompt from the
+    /// first uncached position and the request's first write lands in the
+    /// freshly claimed page — never in a shared one.
+    pub fn admit_paged(
+        &mut self,
+        id: u64,
+        prompt: &[i32],
+        blocks_needed: usize,
+    ) -> Result<Option<(usize, usize)>> {
+        let Some(pool) = self.pool.as_ref() else {
+            bail!("admit_paged on a dense SlotMap");
+        };
+        let bs = pool.block_size();
+        let Some(slot) = self.state.iter().position(|s| s.is_none()) else {
+            return Ok(None);
+        };
+        // Longest cached run of full prompt pages, capped one token short
+        // of the prompt: the last prompt token is always recomputed into a
+        // fresh page (the COW copy), because its step must produce logits.
+        let max_pages = if prompt.is_empty() { 0 } else { (prompt.len() - 1) / bs };
+        let matched: Vec<u32> = match self.prefix.as_mut() {
+            Some(idx) => idx.lookup(prompt, bs, max_pages),
+            None => Vec::new(),
+        };
+        let pool = self.pool.as_mut().expect("checked paged");
+        for &p in &matched {
+            pool.retain(p)?;
+        }
+        // The demand must exceed the cached prefix (it always does for a
+        // scheduler-computed demand, since the match is capped one token
+        // short of the prompt) — otherwise the watermark below would be
+        // vacuous and the first-page claim unsound.
+        if blocks_needed <= matched.len() {
+            self.pool.as_mut().expect("paged").release(&matched)?;
+            bail!(
+                "demand of {blocks_needed} pages does not exceed the {} matched \
+                 prefix pages (demand must cover the whole request)",
+                matched.len()
+            );
+        }
+        // Watermark: only the non-shared remainder must be claimable. The
+        // matched pages are retained already, so `available_pages` cannot
+        // double-count them as evictable supply.
+        let needed_fresh = blocks_needed - matched.len();
+        if self.available_pages() < needed_fresh {
+            self.pool.as_mut().expect("paged").release(&matched)?;
+            return Ok(None);
+        }
+        // First writable page now, before the slot is occupied, so every
+        // error path leaves the map untouched — and every in-flight
+        // request holds at least one exclusive page, which is what keeps
+        // scheduler-level eviction able to free (or at least donate)
+        // memory. The watermark just guaranteed needed_fresh >= 1 pages
+        // are claimable.
+        let Some(page) = self.allocate_page() else {
+            self.pool.as_mut().expect("paged").release(&matched)?;
+            bail!("slot {slot}: watermark passed but no page claimable");
+        };
+        let cached = matched.len() * bs;
+        debug_assert!(prompt.is_empty() || cached < prompt.len());
+        self.shared[slot] = matched.len();
+        self.chains[slot] = chain_of(prompt, matched.len(), bs);
+        self.tables[slot] = matched;
+        self.tables[slot].push(page);
+        self.prompts[slot] = if self.prefix.is_some() { prompt.to_vec() } else { Vec::new() };
+        self.state[slot] = Some(SlotInfo { id, pos: cached });
+        Ok(Some((slot, cached)))
+    }
+
+    /// Release an occupied slot, dropping the slot's page references (the
+    /// prefix index keeps donated pages resident through its own); returns
+    /// the request id it held. The pool release is batch-atomic, so a
+    /// failure leaves slot and pool bookkeeping untouched and agreeing.
     pub fn release(&mut self, slot: usize) -> Result<u64> {
         if slot >= self.state.len() {
             bail!("slot {slot} out of range (capacity {})", self.capacity());
         }
-        match self.state[slot].take() {
-            Some(info) => {
-                if let Some(pool) = self.pool.as_mut() {
-                    let blocks = std::mem::take(&mut self.tables[slot]);
-                    pool.release(&blocks)?;
-                }
-                Ok(info.id)
-            }
-            None => bail!("slot {slot} released twice"),
+        if self.state[slot].is_none() {
+            bail!("slot {slot} released twice");
         }
+        if let Some(pool) = self.pool.as_mut() {
+            // Validate-then-free: on error nothing (pool or slot) changes.
+            pool.release(&self.tables[slot])?;
+            self.tables[slot].clear();
+        }
+        let info = self.state[slot].take().expect("checked occupied");
+        self.prompts[slot].clear();
+        self.shared[slot] = 0;
+        self.chains[slot] = CHAIN_ROOT;
+        Ok(info.id)
     }
 
     /// Advance an occupied slot's position by one written token; returns the
@@ -164,6 +346,13 @@ impl SlotMap {
     /// batched prefill chunk); returns the new position. Fails if the slot
     /// is free or the advance would pass `max_seq` — positions stay honest
     /// even for multi-token writes.
+    ///
+    /// Prefix-cache mode: pages that this advance fills *entirely within
+    /// the prompt* become immutable and are donated to the index right
+    /// here (earliest possible sharing — a request admitted next step
+    /// already hits them). The index takes its own pool reference;
+    /// duplicate content keeps the existing entry and the new page stays
+    /// slot-exclusive.
     pub fn advance_by(&mut self, slot: usize, n: usize) -> Result<usize> {
         let max_seq = self.max_seq;
         // Paged: the advance must stay inside the pages the table covers —
@@ -173,7 +362,7 @@ impl SlotMap {
             (Some(pool), Some(table)) => Some(table.len() * pool.block_size()),
             _ => None,
         };
-        match self.state.get_mut(slot) {
+        let (old_pos, new_pos) = match self.state.get_mut(slot) {
             Some(Some(info)) => {
                 if n == 0 {
                     bail!("slot {slot} advanced by zero tokens");
@@ -194,12 +383,40 @@ impl SlotMap {
                         );
                     }
                 }
+                let old = info.pos;
                 info.pos += n;
-                Ok(info.pos)
+                (old, info.pos)
             }
             Some(None) => bail!("slot {slot} advanced while free"),
             None => bail!("slot {slot} out of range (capacity {})", self.capacity()),
+        };
+        if self.prefix.is_some() && !self.prompts[slot].is_empty() {
+            self.donate_filled_pages(slot, old_pos, new_pos)?;
         }
+        Ok(new_pos)
+    }
+
+    /// Donate every page that filled in `(old_pos, new_pos]` and lies
+    /// wholly inside the slot's prompt to the prefix index, advancing the
+    /// slot's running chain value as each page is processed.
+    fn donate_filled_pages(&mut self, slot: usize, old_pos: usize, new_pos: usize) -> Result<()> {
+        let pool = self.pool.as_mut().expect("prefix cache implies paged");
+        let prefix = self.prefix.as_mut().expect("checked");
+        let bs = pool.block_size();
+        let prompt = &self.prompts[slot];
+        for j in (old_pos / bs)..(new_pos / bs) {
+            let end = (j + 1) * bs;
+            if end > prompt.len() || j < self.shared[slot] {
+                continue;
+            }
+            let page = self.tables[slot][j];
+            let parent = self.chains[slot];
+            if prefix.register(parent, &prompt[..end], bs, page) {
+                pool.retain(page)?;
+            }
+            self.chains[slot] = chain_step(parent, &prompt[j * bs..end]);
+        }
+        Ok(())
     }
 }
 
@@ -307,7 +524,7 @@ mod tests {
         assert!(m.ensure_capacity(b, 8).unwrap());
         assert_eq!(m.pool().unwrap().free_blocks(), 0);
         assert!(!m.ensure_capacity(a, 9).unwrap(), "pool dry: growth must report false");
-        // Tables never alias.
+        // Tables never alias (no prefix cache here).
         let mut all: Vec<u32> = m.table(a).iter().chain(m.table(b)).copied().collect();
         all.sort_unstable();
         all.dedup();
@@ -335,8 +552,211 @@ mod tests {
         assert!(d.ensure_capacity(s, 1).is_err(), "dense map has no pages");
     }
 
+    // -- prefix cache (refcounted copy-on-write sharing) -------------------
+
+    /// Feed `prompt[pos..pos+n]` into an admitted slot the way the
+    /// scheduler does: grow, then advance (donation happens inside).
+    fn feed(m: &mut SlotMap, slot: usize, n: usize) {
+        let pos = m.pos(slot).unwrap();
+        assert!(m.ensure_capacity(slot, pos + n).unwrap());
+        m.advance_by(slot, n).unwrap();
+    }
+
+    #[test]
+    fn prefix_admission_maps_shared_pages_and_cow_caps_the_match() {
+        // Pool of 8 pages x 4 tokens, prompt of exactly 2 pages.
+        let mut m = SlotMap::paged(3, 32, 8, 4).with_prefix_cache();
+        let prompt: Vec<i32> = (0..8).collect();
+        // Cold admission: nothing cached, 1 fresh page claimed.
+        let (a, cached) = m.admit_paged(1, &prompt, 3).unwrap().unwrap();
+        assert_eq!(cached, 0);
+        assert_eq!(m.table(a).len(), 1);
+        assert_eq!(m.shared_pages(a), 0);
+        // Feed the whole prompt: pages 0 and 1 fill inside the prompt and
+        // are donated as they fill.
+        feed(&mut m, a, 4);
+        assert_eq!(m.prefix().unwrap().cached_pages(), 1);
+        feed(&mut m, a, 4);
+        assert_eq!(m.prefix().unwrap().cached_pages(), 2);
+        // Donated pages are shared: slot ref + index ref.
+        let p0 = m.table(a)[0];
+        assert_eq!(m.pool().unwrap().refcount(p0), 2);
+        // Warm admission with the same prompt: the match is capped one
+        // token short of the prompt, so only page 0 is mapped (page 1
+        // holds the last prompt token -> recomputed into a fresh page:
+        // copy-on-write by recompute).
+        let (b, cached) = m.admit_paged(2, &prompt, 3).unwrap().unwrap();
+        assert_eq!(cached, 4);
+        assert_eq!(m.shared_pages(b), 1);
+        assert_eq!(m.table(b)[0], p0, "page 0 aliased read-only");
+        assert_ne!(m.table(b)[1], m.table(a)[1], "written page is a fresh copy");
+        assert_eq!(m.pool().unwrap().refcount(p0), 3);
+        assert_eq!(m.pos(b), Some(4), "positions start after the cached prefix");
+        // A longer prompt with the same two leading pages maps both.
+        let mut long = prompt.clone();
+        long.extend([90, 91, 92]);
+        let (c, cached) = m.admit_paged(3, &long, 3).unwrap().unwrap();
+        assert_eq!(cached, 8);
+        assert_eq!(m.shared_pages(c), 2);
+        // Releasing every slot keeps donated pages resident via the index.
+        for s in [a, b, c] {
+            m.release(s).unwrap();
+        }
+        assert_eq!(m.prefix().unwrap().cached_pages(), 2);
+        assert_eq!(m.pool().unwrap().used_blocks(), 2, "index keeps 2 pages resident");
+        assert_eq!(m.available_pages(), 8, "but both are evictable under pressure");
+    }
+
+    #[test]
+    fn prefix_pressure_evicts_lru_unreferenced_pages_only() {
+        // 3 pages of 2 tokens. Request A fills + donates page 0, then
+        // releases; the page stays resident. New allocations prefer free
+        // pages, then evict the LRU donated page.
+        let mut m = SlotMap::paged(2, 8, 3, 2).with_prefix_cache();
+        let pa: Vec<i32> = vec![7, 8, 9];
+        let (a, _) = m.admit_paged(1, &pa, 2).unwrap().unwrap();
+        feed(&mut m, a, 2);
+        m.release(a).unwrap();
+        assert_eq!(m.prefix().unwrap().cached_pages(), 1);
+        assert_eq!(m.available_pages(), 3);
+        // B maps the cached page read-only; it is now referenced, hence
+        // unevictable, and available drops by one.
+        let (b, cached) = m.admit_paged(2, &pa, 2).unwrap().unwrap();
+        assert_eq!(cached, 2);
+        assert_eq!(m.available_pages(), 1);
+        // C needs 2 fresh pages but only 1 is claimable: watermark refuses.
+        let pc: Vec<i32> = vec![50, 51, 52];
+        assert!(m.admit_paged(3, &pc, 2).unwrap().is_none());
+        // A 1-page request passes, draining the last free page.
+        let (c, _) = m.admit_paged(3, &[60], 1).unwrap().unwrap();
+        // Growth for b under a dry pool: no index page has refcount 1
+        // (the only cached page is mapped by b), so growth reports false.
+        assert!(!m.ensure_capacity(b, 5).unwrap());
+        // Releasing c frees its page; growth then succeeds.
+        m.release(c).unwrap();
+        assert!(m.ensure_capacity(b, 5).unwrap());
+        m.release(b).unwrap();
+        // Now the cached page is unreferenced: a fresh 3-page demand
+        // evicts it from the index under pressure.
+        let (d, _) = m.admit_paged(4, &[70, 71, 72, 73, 74], 3).unwrap().unwrap();
+        assert!(m.ensure_capacity(d, 5).unwrap());
+        assert_eq!(m.prefix().unwrap().cached_pages(), 0, "LRU page evicted under pressure");
+        assert_eq!(m.table(d).len(), 3);
+    }
+
+    #[test]
+    fn prefix_pages_with_generated_tokens_are_never_donated() {
+        let mut m = SlotMap::paged(1, 16, 4, 4).with_prefix_cache();
+        // Prompt of 6 tokens: page 0 is prompt-covered, page 1 is not
+        // (positions 4..8 span prompt tail + generated tokens).
+        let prompt: Vec<i32> = (10..16).collect();
+        let (a, _) = m.admit_paged(1, &prompt, 3).unwrap().unwrap();
+        feed(&mut m, a, 6); // prompt
+        feed(&mut m, a, 2); // generated, fills page 1
+        assert_eq!(m.prefix().unwrap().cached_pages(), 1, "only the prompt page");
+        m.release(a).unwrap();
+        assert_eq!(m.pool().unwrap().used_blocks(), 1);
+    }
+
+    /// Property (satellite): random interleavings of paged+prefix
+    /// admit / grow / advance (with donation) / release keep
+    /// `free + Σ(refcount > 0) == total`, every page's refcount equal to
+    /// its table occurrences plus its index membership, shared prefix
+    /// pages read-only (positions never enter them), and donated pages
+    /// resident until evicted.
+    #[test]
+    fn prop_prefix_interleavings_keep_refcounts_honest() {
+        use crate::testing::prop::forall;
+        forall(0xc0de, 250, |g| {
+            let cap = g.int(1, 3);
+            let bs = g.int(1, 4);
+            let max_blocks = g.int(2, 8);
+            let max_seq = (max_blocks * bs).min(g.int(2, 20)).max(2);
+            let mut m = SlotMap::paged(cap, max_seq, max_blocks, bs).with_prefix_cache();
+            let mut held: Vec<usize> = Vec::new();
+            // A tiny alphabet + short prompts makes prefix coincidences
+            // (and the sharing they trigger) common.
+            let mut mk_prompt = |g: &mut crate::testing::prop::Gen| -> Vec<i32> {
+                (0..g.int(1, max_seq - 1)).map(|_| g.int(0, 2) as i32).collect()
+            };
+            for op in 0..g.int(5, 60) {
+                match g.int(0, 3) {
+                    0 => {
+                        let prompt = mk_prompt(g);
+                        // End-to-end demand the way the scheduler computes
+                        // it; like `submit`, demands the pool can never
+                        // hold are rejected up front — admit_paged relies
+                        // on `demand > matched`.
+                        let total = (prompt.len() + g.int(0, 6)).min(max_seq).div_ceil(bs);
+                        if total > max_blocks {
+                            continue;
+                        }
+                        if let Some((s, cached)) =
+                            m.admit_paged(op as u64, &prompt, total).map_err(|e| e.to_string())?
+                        {
+                            if cached >= prompt.len() {
+                                return Err(format!("op {op}: cached {cached} covers prompt"));
+                            }
+                            if cached % bs != 0 || m.pos(s) != Some(cached) {
+                                return Err(format!("op {op}: bad cached start {cached}"));
+                            }
+                            held.push(s);
+                        }
+                    }
+                    1 => {
+                        if !held.is_empty() {
+                            let s = held.swap_remove(g.int(0, held.len() - 1));
+                            m.release(s).map_err(|e| e.to_string())?;
+                        }
+                    }
+                    _ => {
+                        if !held.is_empty() {
+                            let s = *g.pick(&held);
+                            let pos = m.pos(s).expect("held");
+                            let n = g.int(1, 4).min(max_seq - pos);
+                            if n > 0 && m.ensure_capacity(s, pos + n).map_err(|e| e.to_string())? {
+                                m.advance_by(s, n).map_err(|e| e.to_string())?;
+                            }
+                        }
+                    }
+                }
+                let pool = m.pool().unwrap();
+                if pool.free_blocks() + pool.used_blocks() != pool.total_blocks() {
+                    return Err(format!("op {op}: resident invariant broke"));
+                }
+                // Mirror refcounts: table occurrences + index membership.
+                let index_pages = m.prefix().unwrap().pages();
+                for page in 0..pool.total_blocks() as u32 {
+                    let in_tables =
+                        (0..cap).flat_map(|s| m.table(s)).filter(|&&p| p == page).count();
+                    let in_index = index_pages.iter().filter(|&&p| p == page).count();
+                    if in_index > 1 {
+                        return Err(format!("op {op}: page {page} indexed twice"));
+                    }
+                    if pool.refcount(page) as usize != in_tables + in_index {
+                        return Err(format!(
+                            "op {op}: page {page} refcount {} vs {} table refs + {} index",
+                            pool.refcount(page),
+                            in_tables,
+                            in_index
+                        ));
+                    }
+                }
+                // Shared prefix pages are read-only: the occupant's own
+                // writes all land at positions past them.
+                for s in &held {
+                    let shared_end = m.shared_pages(*s) * bs;
+                    if m.pos(*s).expect("held") < shared_end {
+                        return Err(format!("op {op}: slot {s} position inside shared pages"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
     /// Property: under random paged allocate/grow/advance/release
-    /// interleavings, pool accounting never leaks
+    /// interleavings (prefix cache off), pool accounting never leaks
     /// (`free + used == total`, used == sum of table lengths), tables cover
     /// exactly `ceil(covered_target/bs)` pages, no physical page is ever
     /// shared by two slots, and positions never pass the covered range.

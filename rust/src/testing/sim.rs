@@ -9,28 +9,62 @@
 //! mid-flight eviction. With `kv_blocks > 0` it also models the *paged*
 //! KV path: free-page token-budget admission (a watermark, head-of-queue
 //! only), one page claimed at admission, lazy growth at page boundaries in
-//! slot order, and youngest-first evict-to-queue-front on pool exhaustion
-//! — page *counts* only, since the oracle needs no physical identities. No
-//! engine, no logits, no clocks — just the admission/join/evict/budget
-//! arithmetic the real [`crate::serve::Scheduler`] must implement.
+//! slot order, and youngest-first evict-to-queue-front on pool exhaustion.
+//! With `prefix_cache` it additionally models **refcounted copy-on-write
+//! prefix sharing**: a content-addressed index of full prompt pages
+//! (entries keyed by exact token prefixes — deliberately *not* the hash
+//! chain the real [`crate::serve::prefix::PrefixIndex`] uses, so the two
+//! implementations stay independent), LRU-clock touch on lookup, donation
+//! the moment a prompt page fills, per-entry slot reference counts, a
+//! watermark that charges only the non-shared remainder, and pool-pressure
+//! eviction of LRU unreferenced entries. No engine, no logits, no clocks —
+//! just the admission/join/evict/budget/reuse arithmetic the real
+//! [`crate::serve::Scheduler`] must implement.
 //!
 //! The randomized trace tests at the bottom generate hundreds of seeded
 //! traces, run each against both the oracle and the real scheduler over
 //! [`crate::serve::MockEngine`], and require them to agree on accepted
 //! ids, completion order, per-request token counts, per-step slot
 //! occupancy and queue depth, and the exact number of decode steps and
-//! prefill calls. Failures print the seed/case (via [`super::prop::forall`])
-//! so any divergence is reproducible. CI pins three seeds (see
+//! prefill calls. The shared-prefix suites additionally require the real
+//! scheduler's completions to be **byte-identical with the prefix cache on
+//! and off**. Failures print the seed/case (via [`super::prop::forall`])
+//! so any divergence is reproducible. CI pins the seeds (see
 //! `.github/workflows/ci.yml`) so trace-equivalence regressions fail the
 //! build.
 
 use std::collections::{BTreeMap, VecDeque};
 
-/// One generation request, reduced to what the bookkeeping depends on.
+/// One generation request, reduced to what the bookkeeping depends on —
+/// plus just enough *content* structure to express shared prompt prefixes:
+/// the first `shared_len` prompt bytes are a pure function of `group` (the
+/// "system prompt"), the rest a function of `tag`.
 #[derive(Clone, Copy, Debug)]
 pub struct SimRequest {
     pub prompt_len: usize,
     pub max_new: usize,
+    pub shared_len: usize,
+    pub group: u64,
+    pub tag: u64,
+}
+
+impl SimRequest {
+    /// A request whose content doesn't matter (dense / plain paged traces).
+    pub fn plain(prompt_len: usize, max_new: usize) -> Self {
+        Self { prompt_len, max_new, shared_len: 0, group: 0, tag: 0 }
+    }
+
+    /// The deterministic prompt bytes both the oracle and the real run
+    /// derive from this request.
+    pub fn prompt(&self) -> Vec<u8> {
+        (0..self.prompt_len)
+            .map(|i| {
+                let (seed, mul) =
+                    if i < self.shared_len { (self.group, 31) } else { (self.tag, 13) };
+                (32 + ((seed.wrapping_mul(mul).wrapping_add(i as u64 * 7)) % 90)) as u8
+            })
+            .collect()
+    }
 }
 
 /// Scheduler shape under simulation.
@@ -45,12 +79,22 @@ pub struct SimConfig {
     pub kv_blocks: usize,
     /// Tokens per page (ignored when `kv_blocks == 0`).
     pub block_size: usize,
+    /// Model the content-addressed prefix cache (needs `kv_blocks > 0`).
+    pub prefix_cache: bool,
 }
 
 impl SimConfig {
     /// Dense configuration (no paging).
     pub fn dense(slots: usize, max_seq: usize, max_queue: usize, prefill_chunk: usize) -> Self {
-        Self { slots, max_seq, max_queue, prefill_chunk, kv_blocks: 0, block_size: 1 }
+        Self {
+            slots,
+            max_seq,
+            max_queue,
+            prefill_chunk,
+            kv_blocks: 0,
+            block_size: 1,
+            prefix_cache: false,
+        }
     }
 }
 
@@ -64,7 +108,7 @@ pub enum SimEvent {
 
 /// Everything the oracle predicts for one trace (the trailing drain to
 /// idle is included).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct SimResult {
     /// Outcome per `Submit` event: `Some(id)` or `None` (rejected — queue
     /// full or invalid prompt; rejected submits consume no id).
@@ -81,19 +125,34 @@ pub struct SimResult {
     pub prefill_calls: usize,
     /// Paged only: pool-exhaustion evictions back to the queue.
     pub evictions: usize,
+    /// Prefix cache only: prompt tokens mapped from cached pages.
+    pub tokens_reused: usize,
 }
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 struct SimSlot {
     id: u64,
-    prompt_len: usize,
-    max_new: usize,
+    req: SimRequest,
+    /// Prompt bytes (the content keys pages are donated/matched under).
+    prompt: Vec<u8>,
     fed: usize,
     gen: usize,
     pos: usize,
-    /// Paged: pages this slot holds (counts only — the oracle does not
-    /// track physical identities).
-    pages: usize,
+    /// Paged: pages this slot owns exclusively (no index reference).
+    own_pages: usize,
+    /// Prefix: index entries this slot references — mapped at admission or
+    /// donated by this slot (counts toward its table coverage).
+    refs: Vec<u64>,
+}
+
+/// One cached page in the oracle's index: its exact token-prefix key, LRU
+/// clock, and how many live slots reference it (its pool refcount is
+/// `1 + slot_refs`).
+#[derive(Clone, Debug)]
+struct CacheEntry {
+    key: Vec<u8>,
+    clock: u64,
+    slot_refs: usize,
 }
 
 struct SimState {
@@ -101,8 +160,12 @@ struct SimState {
     slots: Vec<Option<SimSlot>>,
     pending: VecDeque<(u64, SimRequest)>,
     next_id: u64,
-    /// Paged: free pages in the pool.
+    /// Paged: free pages in the pool (refcount 0).
     free_pages: usize,
+    /// Prefix: cached pages by entry id (each holds one resident page).
+    index: BTreeMap<u64, CacheEntry>,
+    next_entry: u64,
+    clock: u64,
 }
 
 impl SimState {
@@ -119,9 +182,59 @@ impl SimState {
     }
 
     /// Pages a request needs end to end (prompt + budget, capped at the
-    /// logical capacity) — the admission watermark.
+    /// logical capacity) — the admission demand, computed once per request
+    /// in the real scheduler too.
     fn pages_needed(&self, r: &SimRequest) -> usize {
         (r.prompt_len + r.max_new).min(self.cfg.max_seq).div_ceil(self.cfg.block_size)
+    }
+
+    fn covered_pages(s: &SimSlot) -> usize {
+        s.refs.len() + s.own_pages
+    }
+
+    fn find_entry(&self, key: &[u8]) -> Option<u64> {
+        self.index.iter().find(|(_, e)| e.key == key).map(|(&id, _)| id)
+    }
+
+    /// Entries no live slot references — resident but reclaimable.
+    fn evictable_count(&self) -> usize {
+        self.index.values().filter(|e| e.slot_refs == 0).count()
+    }
+
+    /// Mirror of the real `PrefixIndex::lookup`: walk the prompt's full
+    /// pages (capped one token short of the prompt), touching LRU clocks
+    /// as it matches; touches persist even if the admission then fails its
+    /// watermark.
+    fn lookup_touch(&mut self, prompt: &[u8]) -> Vec<u64> {
+        let bs = self.cfg.block_size;
+        let max_pages = if prompt.is_empty() { 0 } else { (prompt.len() - 1) / bs };
+        let mut out = Vec::new();
+        for j in 0..max_pages {
+            let Some(id) = self.find_entry(&prompt[..(j + 1) * bs]) else { break };
+            self.clock += 1;
+            self.index.get_mut(&id).expect("found").clock = self.clock;
+            out.push(id);
+        }
+        out
+    }
+
+    /// Mirror of `SlotMap::allocate_page`: a free page, else the LRU
+    /// unreferenced index entry is evicted to make one.
+    fn claim_page(&mut self) -> bool {
+        if self.free_pages > 0 {
+            self.free_pages -= 1;
+            return true;
+        }
+        let Some((&id, _)) = self
+            .index
+            .iter()
+            .filter(|(_, e)| e.slot_refs == 0)
+            .min_by_key(|(_, e)| e.clock)
+        else {
+            return false;
+        };
+        self.index.remove(&id);
+        true
     }
 
     fn submit(&mut self, r: SimRequest) -> Option<u64> {
@@ -140,107 +253,159 @@ impl SimState {
         Some(id)
     }
 
+    /// Drop a slot's page references: exclusive pages free, index entries
+    /// lose one slot reference (the pages stay resident).
+    fn release_slot_pages(&mut self, s: &SimSlot) {
+        self.free_pages += s.own_pages;
+        for id in &s.refs {
+            self.index.get_mut(id).expect("referenced entry").slot_refs -= 1;
+        }
+    }
+
     fn cancel(&mut self, id: u64) -> bool {
         if let Some(i) = self.pending.iter().position(|(pid, _)| *pid == id) {
             self.pending.remove(i);
             return true;
         }
-        for s in self.slots.iter_mut() {
-            if s.map(|s| s.id) == Some(id) {
-                self.free_pages += s.map(|s| s.pages).unwrap_or(0);
-                *s = None;
+        for b in 0..self.cfg.slots {
+            if self.slots[b].as_ref().map(|s| s.id) == Some(id) {
+                let s = self.slots[b].take().expect("occupied");
+                self.release_slot_pages(&s);
                 return true;
             }
         }
         false
     }
 
-    fn admit(&mut self) {
+    fn admit(&mut self, res: &mut SimResult) {
         while !self.pending.is_empty() {
             let Some(b) = self.slots.iter().position(|s| s.is_none()) else { break };
+            let (_, r) = *self.pending.front().expect("non-empty");
+            let (matched, cached) = if self.paged() && self.cfg.prefix_cache {
+                let m = self.lookup_touch(&r.prompt());
+                let cached = m.len() * self.cfg.block_size;
+                (m, cached)
+            } else {
+                (Vec::new(), 0)
+            };
             if self.paged() {
-                // Head-of-queue watermark: enough free pages for the whole
-                // request, one page claimed now.
-                let (_, r) = self.pending.front().expect("non-empty");
-                if self.free_pages < self.pages_needed(r) {
+                // Retain the matched entries, then check the watermark over
+                // the non-shared remainder; roll the refs back on failure
+                // (the LRU touches persist — same as the real index).
+                for id in &matched {
+                    self.index.get_mut(id).expect("matched").slot_refs += 1;
+                }
+                let needed_fresh = self.pages_needed(&r).saturating_sub(matched.len());
+                if self.free_pages + self.evictable_count() < needed_fresh {
+                    for id in &matched {
+                        self.index.get_mut(id).expect("matched").slot_refs -= 1;
+                    }
                     break;
                 }
             }
             let (id, r) = self.pending.pop_front().expect("non-empty");
-            let pages = if self.paged() {
-                self.free_pages -= 1;
+            let own_pages = if self.paged() {
+                // First writable page claimed now (watermark guarantees
+                // needed_fresh >= 1 is claimable).
+                assert!(self.claim_page(), "watermark passed but no page claimable");
                 1
             } else {
                 0
             };
+            res.tokens_reused += cached;
             self.slots[b] = Some(SimSlot {
                 id,
-                prompt_len: r.prompt_len,
-                max_new: r.max_new,
-                fed: 0,
+                req: r,
+                prompt: r.prompt(),
+                fed: cached,
                 gen: 0,
-                pos: 0,
-                pages,
+                pos: cached,
+                own_pages,
+                refs: matched,
             });
         }
     }
 
     fn retire(&mut self, b: usize, res: &mut SimResult) {
         let s = self.slots[b].take().expect("retiring an occupied slot");
-        self.free_pages += s.pages;
+        self.release_slot_pages(&s);
         res.completion_order.push(s.id);
         res.generated.insert(s.id, s.gen);
     }
 
-    /// Mirror of `Scheduler::evict_youngest`: free the largest-id slot's
-    /// pages and requeue it (reset) at the queue front.
+    /// Mirror of `Scheduler::evict_youngest`: drop the largest-id slot's
+    /// page references and requeue it (reset) at the queue front.
     fn evict_youngest(&mut self, res: &mut SimResult) {
         let victim = (0..self.cfg.slots)
             .filter(|&b| self.slots[b].is_some())
-            .max_by_key(|&b| self.slots[b].expect("occupied").id)
+            .max_by_key(|&b| self.slots[b].as_ref().expect("occupied").id)
             .expect("pool exhausted with nothing in flight");
         let s = self.slots[victim].take().expect("occupied");
-        self.free_pages += s.pages;
+        self.release_slot_pages(&s);
         res.evictions += 1;
-        self.pending.push_front((
-            s.id,
-            SimRequest { prompt_len: s.prompt_len, max_new: s.max_new },
-        ));
+        self.pending.push_front((s.id, s.req));
     }
 
     /// Mirror of `Scheduler::grow_or_evict`: grow slot `b` to cover
-    /// `[0, target)`, evicting youngest-first while the pool is dry.
+    /// `[0, target)` — free pages first, then LRU index eviction, then
+    /// youngest-first scheduler eviction while the pool stays dry.
     fn grow_or_evict(&mut self, b: usize, target: usize, res: &mut SimResult) {
         loop {
-            let Some(s) = self.slots[b] else { return };
+            let Some(s) = self.slots[b].as_ref() else { return };
             let needed = target.div_ceil(self.cfg.block_size);
-            if s.pages >= needed {
+            if Self::covered_pages(s) >= needed {
                 return;
             }
-            if self.free_pages > 0 {
-                self.free_pages -= 1;
-                self.slots[b].as_mut().expect("occupied").pages += 1;
+            if self.claim_page() {
+                self.slots[b].as_mut().expect("occupied").own_pages += 1;
             } else {
                 self.evict_youngest(res);
             }
         }
     }
 
-    /// Mirror of `Scheduler::step`: admit, grow (paged), then one prefill
-    /// call or one decode step; retire finished slots in slot order.
+    /// Mirror of the donation inside `SlotMap::advance_by`: every page that
+    /// filled in `(old_pos, new_pos]` wholly inside the prompt enters the
+    /// index (duplicates keep the existing entry; the page stays owned).
+    fn donate(&mut self, b: usize, old_pos: usize, new_pos: usize) {
+        if !self.cfg.prefix_cache {
+            return;
+        }
+        let bs = self.cfg.block_size;
+        let prompt = self.slots[b].as_ref().expect("occupied").prompt.clone();
+        for j in (old_pos / bs)..(new_pos / bs) {
+            if (j + 1) * bs > prompt.len() {
+                continue;
+            }
+            if self.find_entry(&prompt[..(j + 1) * bs]).is_some() {
+                continue;
+            }
+            self.clock += 1;
+            let id = self.next_entry;
+            self.next_entry += 1;
+            let key = prompt[..(j + 1) * bs].to_vec();
+            self.index.insert(id, CacheEntry { key, clock: self.clock, slot_refs: 1 });
+            let s = self.slots[b].as_mut().expect("occupied");
+            s.own_pages -= 1;
+            s.refs.push(id);
+        }
+    }
+
+    /// Mirror of `Scheduler::step`: admit, then one prefill call or one
+    /// decode step; retire finished slots in slot order.
     fn step(&mut self, res: &mut SimResult) {
-        self.admit();
+        self.admit(res);
         let chunk = self.cfg.prefill_chunk.max(1);
-        let owes = |s: &Option<SimSlot>| s.map_or(false, |s| s.fed < s.prompt_len);
+        let owes = |s: &Option<SimSlot>| s.as_ref().map_or(false, |s| s.fed < s.req.prompt_len);
         let prefilling = chunk > 1 && self.slots.iter().any(owes);
         if prefilling {
             if self.paged() {
                 for b in 0..self.cfg.slots {
-                    let take = match self.slots[b] {
-                        Some(s) if s.fed < s.prompt_len => chunk.min(s.prompt_len - s.fed),
+                    let take = match self.slots[b].as_ref() {
+                        Some(s) if s.fed < s.req.prompt_len => chunk.min(s.req.prompt_len - s.fed),
                         _ => continue,
                     };
-                    let target = self.slots[b].expect("occupied").pos + take;
+                    let target = self.slots[b].as_ref().expect("occupied").pos + take;
                     self.grow_or_evict(b, target, res);
                 }
                 if !self.slots.iter().any(owes) {
@@ -252,33 +417,37 @@ impl SimState {
             }
             res.prefill_calls += 1;
             for b in 0..self.cfg.slots {
-                let finished = match self.slots[b].as_mut() {
-                    Some(s) if s.fed < s.prompt_len => {
-                        let take = chunk.min(s.prompt_len - s.fed);
+                let advanced = match self.slots[b].as_mut() {
+                    Some(s) if s.fed < s.req.prompt_len => {
+                        let take = chunk.min(s.req.prompt_len - s.fed);
+                        let old_pos = s.pos;
                         s.fed += take;
                         s.pos += take;
                         let mut fin = false;
-                        if s.fed >= s.prompt_len {
-                            if s.gen < s.max_new {
+                        if s.fed >= s.req.prompt_len {
+                            if s.gen < s.req.max_new {
                                 s.gen += 1;
                             }
-                            if s.gen >= s.max_new {
+                            if s.gen >= s.req.max_new {
                                 fin = true;
                             }
                         }
-                        fin || s.pos >= self.cfg.max_seq
+                        Some((old_pos, s.pos, fin || s.pos >= self.cfg.max_seq))
                     }
                     _ => continue,
                 };
-                if finished {
-                    self.retire(b, res);
+                if let Some((old_pos, new_pos, finished)) = advanced {
+                    self.donate(b, old_pos, new_pos);
+                    if finished {
+                        self.retire(b, res);
+                    }
                 }
             }
         } else {
             if self.paged() {
                 for b in 0..self.cfg.slots {
-                    if let Some(s) = self.slots[b] {
-                        self.grow_or_evict(b, s.pos + 1, res);
+                    if let Some(pos) = self.slots[b].as_ref().map(|s| s.pos) {
+                        self.grow_or_evict(b, pos + 1, res);
                     }
                 }
             }
@@ -289,27 +458,31 @@ impl SimState {
             }
             res.decode_steps += 1;
             for b in 0..self.cfg.slots {
-                let finished = match self.slots[b].as_mut() {
+                let advanced = match self.slots[b].as_mut() {
                     Some(s) => {
+                        let old_pos = s.pos;
                         s.pos += 1;
-                        if s.fed < s.prompt_len {
+                        if s.fed < s.req.prompt_len {
                             s.fed += 1;
                         }
                         let mut fin = false;
-                        if s.fed >= s.prompt_len {
-                            if s.gen < s.max_new {
+                        if s.fed >= s.req.prompt_len {
+                            if s.gen < s.req.max_new {
                                 s.gen += 1;
                             }
-                            if s.gen >= s.max_new {
+                            if s.gen >= s.req.max_new {
                                 fin = true;
                             }
                         }
-                        fin || s.pos >= self.cfg.max_seq
+                        Some((old_pos, s.pos, fin || s.pos >= self.cfg.max_seq))
                     }
                     None => continue,
                 };
-                if finished {
-                    self.retire(b, res);
+                if let Some((old_pos, new_pos, finished)) = advanced {
+                    self.donate(b, old_pos, new_pos);
+                    if finished {
+                        self.retire(b, res);
+                    }
                 }
             }
         }
@@ -325,6 +498,9 @@ pub fn simulate(cfg: &SimConfig, events: &[SimEvent]) -> SimResult {
         pending: VecDeque::new(),
         next_id: 0,
         free_pages: cfg.kv_blocks,
+        index: BTreeMap::new(),
+        next_entry: 0,
+        clock: 0,
     };
     let mut res = SimResult::default();
     for ev in events {
@@ -351,16 +527,26 @@ mod tests {
     use super::*;
     use crate::serve::{GenRequest, MockEngine, Scheduler};
     use crate::testing::prop::{forall, Gen};
+    use std::collections::BTreeMap;
 
-    /// Drive the REAL scheduler (over MockEngine) through the same trace
-    /// the oracle saw, collecting the same observables.
-    fn run_real(cfg: &SimConfig, events: &[SimEvent]) -> SimResult {
+    fn build_scheduler(cfg: &SimConfig) -> Scheduler<MockEngine> {
         let mut engine = MockEngine::new(cfg.slots, cfg.max_seq, 64)
             .with_prefill_chunk(cfg.prefill_chunk);
         if cfg.kv_blocks > 0 {
             engine = engine.with_block_pool(cfg.kv_blocks, cfg.block_size);
         }
-        let mut s = Scheduler::new(engine, cfg.max_queue).expect("scheduler");
+        let s = Scheduler::new(engine, cfg.max_queue).expect("scheduler");
+        if cfg.prefix_cache {
+            s.with_prefix_cache().expect("prefix cache over a paged engine")
+        } else {
+            s
+        }
+    }
+
+    /// Drive the REAL scheduler (over MockEngine) through the same trace
+    /// the oracle saw, collecting the same observables.
+    fn run_real(cfg: &SimConfig, events: &[SimEvent]) -> SimResult {
+        let mut s = build_scheduler(cfg);
         let mut res = SimResult::default();
         let record = |s: &mut Scheduler<MockEngine>, res: &mut SimResult| {
             let was_idle = s.is_idle();
@@ -376,10 +562,7 @@ mod tests {
         for ev in events {
             match ev {
                 SimEvent::Submit(r) => {
-                    // Deterministic prompt bytes; content never affects the
-                    // bookkeeping, only the sampled tokens.
-                    let prompt = vec![b'q'; r.prompt_len];
-                    res.submits.push(s.submit(GenRequest::greedy(&prompt, r.max_new)).ok());
+                    res.submits.push(s.submit(GenRequest::greedy(&r.prompt(), r.max_new)).ok());
                 }
                 SimEvent::Cancel(id) => {
                     res.cancels.push(s.cancel(*id).expect("cancel"));
@@ -393,6 +576,7 @@ mod tests {
         res.decode_steps = s.engine().steps;
         res.prefill_calls = s.engine().prefill_calls;
         res.evictions = s.metrics.requests_evicted;
+        res.tokens_reused = s.metrics.tokens_reused;
         res
     }
 
@@ -409,10 +593,7 @@ mod tests {
                     } else {
                         g.int(1, (cfg.max_seq - 1).min(24))
                     };
-                    events.push(SimEvent::Submit(SimRequest {
-                        prompt_len,
-                        max_new: g.int(0, 8),
-                    }));
+                    events.push(SimEvent::Submit(SimRequest::plain(prompt_len, g.int(0, 8))));
                 }
                 4..=8 => events.push(SimEvent::Step),
                 _ => events.push(SimEvent::Cancel(g.int(0, 12) as u64)),
@@ -448,8 +629,51 @@ mod tests {
             // over-provisioned (budget never binds).
             kv_blocks: g.int(1, full.max(2)),
             block_size,
+            prefix_cache: false,
         };
         let events = random_events(g, &cfg);
+        (cfg, events)
+    }
+
+    /// A submit drawn from a small set of prompt "groups" so shared
+    /// prefixes (and therefore cache hits, donations, and LRU churn) are
+    /// common rather than accidental.
+    fn random_shared_submit(g: &mut Gen, cfg: &SimConfig) -> SimEvent {
+        let prompt_len = g.int(1, (cfg.max_seq - 1).min(24));
+        SimEvent::Submit(SimRequest {
+            prompt_len,
+            max_new: g.int(0, 8),
+            shared_len: g.int(0, prompt_len),
+            group: g.int(0, 2) as u64,
+            tag: g.int(0, 40) as u64,
+        })
+    }
+
+    /// Shared-prefix paged trace with the prefix cache on: submits draw
+    /// from a few prompt groups, pools range from starved to roomy.
+    fn random_prefix_trace(g: &mut Gen) -> (SimConfig, Vec<SimEvent>) {
+        let slots = g.int(1, 4);
+        let max_seq = g.int(6, 48);
+        let block_size = *g.pick(&[1usize, 2, 3, 4, 8]);
+        let full = slots * max_seq.div_ceil(block_size);
+        let cfg = SimConfig {
+            slots,
+            max_seq,
+            max_queue: g.int(1, 6),
+            prefill_chunk: *g.pick(&[1usize, 1, 2, 4, 8]),
+            kv_blocks: g.int(1, full.max(2)),
+            block_size,
+            prefix_cache: true,
+        };
+        let n_events = g.int(4, 40);
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            match g.int(0, 9) {
+                0..=3 => events.push(random_shared_submit(g, &cfg)),
+                4..=8 => events.push(SimEvent::Step),
+                _ => events.push(SimEvent::Cancel(g.int(0, 12) as u64)),
+            }
+        }
         (cfg, events)
     }
 
@@ -460,6 +684,11 @@ mod tests {
 
     fn check_equivalence_paged(g: &mut Gen) -> Result<(), String> {
         let (cfg, events) = random_paged_trace(g);
+        check_trace(&cfg, &events)
+    }
+
+    fn check_equivalence_prefix(g: &mut Gen) -> Result<(), String> {
+        let (cfg, events) = random_prefix_trace(g);
         check_trace(&cfg, &events)
     }
 
@@ -510,6 +739,12 @@ mod tests {
                 real.evictions, oracle.evictions
             ));
         }
+        if real.tokens_reused != oracle.tokens_reused {
+            return Err(format!(
+                "{cfg:?}: {} tokens reused vs oracle {}",
+                real.tokens_reused, oracle.tokens_reused
+            ));
+        }
         Ok(())
     }
 
@@ -545,8 +780,94 @@ mod tests {
         Ok(())
     }
 
-    // Three pinned seeds x 120 traces = 360 randomized cases in CI; any
-    // failure prints (seed, case, case_seed) for exact reproduction.
+    /// THE prefix-cache acceptance property (oracle-enforced in CI): on a
+    /// shared-prefix trace with no cancels and no backpressure (so request
+    /// ids line up run to run), every completed request's *bytes* are
+    /// identical with the cache on and off — the cache only removes
+    /// recomputation — while the cache-on run actually reuses tokens on
+    /// traces with real sharing.
+    fn check_prefix_on_off_bit_identical(g: &mut Gen) -> Result<(), String> {
+        let slots = g.int(1, 4);
+        let max_seq = g.int(8, 48);
+        let block_size = *g.pick(&[2usize, 4, 8]);
+        let full = slots * max_seq.div_ceil(block_size);
+        let on_cfg = SimConfig {
+            slots,
+            max_seq,
+            // No backpressure: every submit is accepted (or rejected for
+            // size in both runs identically).
+            max_queue: 64,
+            prefill_chunk: *g.pick(&[1usize, 2, 4, 8]),
+            kv_blocks: g.int(2, full.max(3)),
+            block_size,
+            prefix_cache: true,
+        };
+        let off_cfg = SimConfig { prefix_cache: false, ..on_cfg };
+        let n_events = g.int(4, 30);
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            if g.int(0, 2) == 0 {
+                events.push(random_shared_submit(g, &on_cfg));
+            } else {
+                events.push(SimEvent::Step);
+            }
+        }
+        let on = completions_by_id(&on_cfg, &events);
+        let off = completions_by_id(&off_cfg, &events);
+        if on.len() != off.len() {
+            return Err(format!(
+                "{on_cfg:?}: {} completions with cache on, {} off",
+                on.len(),
+                off.len()
+            ));
+        }
+        for (id, bytes) in &on {
+            if off.get(id) != Some(bytes) {
+                return Err(format!(
+                    "{on_cfg:?}: request {id} diverged\non:  {bytes:?}\noff: {:?}",
+                    off.get(id)
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Run the real scheduler, collecting completion *bytes* per id.
+    fn completions_by_id(cfg: &SimConfig, events: &[SimEvent]) -> BTreeMap<u64, Vec<u8>> {
+        let mut s = build_scheduler(cfg);
+        let mut out = BTreeMap::new();
+        let collect = |done: Vec<crate::serve::Completion>, out: &mut BTreeMap<u64, Vec<u8>>| {
+            for c in done {
+                out.insert(c.id, c.completion);
+            }
+        };
+        for ev in events {
+            match ev {
+                SimEvent::Submit(r) => {
+                    // Seeded sampling keyed off the tag: restarts and
+                    // cross-run comparisons stay deterministic.
+                    let req = GenRequest::sampled(
+                        &r.prompt(),
+                        r.max_new,
+                        crate::serve::Sampler::top_k(8, 0.9),
+                        r.tag,
+                    );
+                    let _ = s.submit(req);
+                }
+                SimEvent::Cancel(id) => {
+                    let _ = s.cancel(*id);
+                }
+                SimEvent::Step => collect(s.step().expect("step"), &mut out),
+            }
+        }
+        while !s.is_idle() {
+            collect(s.step().expect("step"), &mut out);
+        }
+        out
+    }
+
+    // Three pinned seeds x 120 traces per suite in CI; any failure prints
+    // (seed, case, case_seed) for exact reproduction.
 
     #[test]
     fn sim_trace_equivalence_seed_a() {
@@ -587,15 +908,40 @@ mod tests {
         forall(707, 120, check_paged_vs_dense_full_pool);
     }
 
+    // Shared-prefix traces with the prefix cache on: three pinned seeds x
+    // 120 cases over lookup/donation/LRU/refcount bookkeeping, plus the
+    // cache-on-vs-off byte-identity suite.
+
+    #[test]
+    fn sim_trace_equivalence_prefix_seed_a() {
+        forall(808, 120, check_equivalence_prefix);
+    }
+
+    #[test]
+    fn sim_trace_equivalence_prefix_seed_b() {
+        forall(909, 120, check_equivalence_prefix);
+    }
+
+    #[test]
+    fn sim_trace_equivalence_prefix_seed_c() {
+        forall(1010, 120, check_equivalence_prefix);
+    }
+
+    #[test]
+    fn sim_trace_equivalence_prefix_on_off_bit_identical() {
+        forall(1111, 120, check_prefix_on_off_bit_identical);
+    }
+
     /// Extra exploration knob: SPINQUANT_SIM_SEED=1234 cargo test — runs
-    /// another 120 dense + 120 paged traces from an arbitrary seed without
-    /// a rebuild.
+    /// another 120 dense + 120 paged + 120 prefix traces from an arbitrary
+    /// seed without a rebuild.
     #[test]
     fn sim_trace_equivalence_env_seed() {
         if let Ok(seed) = std::env::var("SPINQUANT_SIM_SEED") {
             let seed: u64 = seed.parse().expect("SPINQUANT_SIM_SEED must be u64");
             forall(seed, 120, check_equivalence);
             forall(seed ^ 0x9a9a, 120, check_equivalence_paged);
+            forall(seed ^ 0x7e1f, 120, check_equivalence_prefix);
         }
     }
 
@@ -604,7 +950,7 @@ mod tests {
         // Hand-checkable trace: one request, prompt 5, budget 2, chunk 4.
         let cfg = SimConfig::dense(1, 32, 4, 4);
         let events =
-            [SimEvent::Submit(SimRequest { prompt_len: 5, max_new: 2 }), SimEvent::Step];
+            [SimEvent::Submit(SimRequest::plain(5, 2)), SimEvent::Step];
         let res = simulate(&cfg, &events);
         // Call 1 feeds 4 prompt tokens; drain: call 2 feeds 1 + samples
         // token 1; one decode step samples token 2 and retires.
@@ -629,10 +975,11 @@ mod tests {
             prefill_chunk: 1,
             kv_blocks: 4,
             block_size: 4,
+            prefix_cache: false,
         };
         let events = [
-            SimEvent::Submit(SimRequest { prompt_len: 4, max_new: 8 }),
-            SimEvent::Submit(SimRequest { prompt_len: 4, max_new: 8 }),
+            SimEvent::Submit(SimRequest::plain(4, 8)),
+            SimEvent::Submit(SimRequest::plain(4, 8)),
         ];
         let res = simulate(&cfg, &events);
         assert_eq!(res.submits, vec![Some(0), Some(1)]);
@@ -655,10 +1002,11 @@ mod tests {
             prefill_chunk: 1,
             kv_blocks: 3,
             block_size: 4,
+            prefix_cache: false,
         };
         let events = [
-            SimEvent::Submit(SimRequest { prompt_len: 2, max_new: 1 }), // 1 page
-            SimEvent::Submit(SimRequest { prompt_len: 8, max_new: 4 }), // 3 pages
+            SimEvent::Submit(SimRequest::plain(2, 1)), // 1 page
+            SimEvent::Submit(SimRequest::plain(8, 4)), // 3 pages
             SimEvent::Step,
         ];
         let res = simulate(&cfg, &events);
@@ -667,6 +1015,39 @@ mod tests {
         // (2 free pages < 3 needed).
         assert_eq!(res.occupancy.first(), Some(&(1, 1)));
         assert_eq!(res.completion_order, vec![0, 1]);
+        check_trace(&cfg, &events).unwrap();
+    }
+
+    #[test]
+    fn oracle_smoke_prefix_reuse() {
+        // Hand-checkable prefix trace: pool of 6 pages x 4 tokens. Request
+        // 0 (prompt 9 = 2 full shared pages + 1 token, budget 3) donates
+        // pages 0 and 1 as they fill; request 1 (same group) then maps
+        // both, pays only its third page, and skips 8 prompt tokens.
+        let cfg = SimConfig {
+            slots: 1,
+            max_seq: 32,
+            max_queue: 4,
+            prefill_chunk: 4,
+            kv_blocks: 6,
+            block_size: 4,
+            prefix_cache: true,
+        };
+        let shared = SimRequest { prompt_len: 9, max_new: 3, shared_len: 9, group: 7, tag: 0 };
+        let events = [
+            SimEvent::Submit(shared),
+            SimEvent::Submit(SimRequest { tag: 1, ..shared }),
+        ];
+        let res = simulate(&cfg, &events);
+        assert_eq!(res.submits, vec![Some(0), Some(1)]);
+        assert_eq!(res.completion_order, vec![0, 1]);
+        // Request 0: ceil(9/4) = 3 prefill calls. Request 1: 8 of its 9
+        // prompt tokens are cached, so ceil(1/4) = 1 call.
+        assert_eq!(res.prefill_calls, 4);
+        assert_eq!(res.tokens_reused, 8);
+        assert_eq!(res.generated.get(&1), Some(&3));
+        // The real scheduler agrees on the whole trace — including the
+        // reuse accounting.
         check_trace(&cfg, &events).unwrap();
     }
 }
