@@ -26,6 +26,12 @@
 //!   requests, admitted concurrency at the identical page budget, and a
 //!   hard `bit_identical` completions check (the cache must only remove
 //!   recomputation).
+//! * `decode_stall` — the step-composer sweep: one 512-token prompt joins
+//!   7 active decodes, at `--step-budget` {off, 16, 32, 64}. Records the
+//!   worst decode stall (off: the full ceil(512/64) = 8-call burst; any
+//!   budget: 0 — asserted), the resulting inter-token p99, the newcomer's
+//!   TTFT plus its queue/spread split, and a hard bit-identical check
+//!   (the budget reshapes the schedule, never the bytes).
 //! * `sampler` — per-draw top-k / top-p cost before (full vocabulary sort,
 //!   the pre-PR implementation, inlined here as the baseline) and after
 //!   (partial selection via `select_nth_unstable_by`).
@@ -445,6 +451,152 @@ fn prefix_sweep() -> Json {
     ])
 }
 
+// -- decode stall: one long prompt joining a full decode batch ---------------
+
+const STALL_LANES: usize = 8;
+const STALL_MAX_SEQ: usize = 1024;
+const STALL_CHUNK: usize = 64;
+const STALL_PROMPT: usize = 512; // the newcomer: 8 chunk-64 prefill calls
+const STALL_DECODERS: usize = 7;
+const STALL_DECODER_NEW: usize = 32;
+const STALL_NEWCOMER_NEW: usize = 16;
+const STALL_BUDGETS: [usize; 4] = [0, 16, 32, 64];
+
+struct StallLeg {
+    metrics: ServingMetrics,
+    newcomer_ttft_ms: f64,
+    completions: Vec<(u64, Vec<u8>)>,
+    steps: usize,
+    prefill_calls: usize,
+}
+
+/// 7 active decodes, then one 512-token prompt joins. `budget == 0` is the
+/// drain-prefill-then-decode baseline (the newcomer's whole prompt stalls
+/// every decoder for ceil(512/64) = 8 consecutive calls); `budget > 0`
+/// composes each step, so the decoders never stall — at the price of a
+/// slower (more spread-out) newcomer prefill. Both honest numbers land in
+/// the JSON.
+fn run_stall_leg(budget: usize) -> StallLeg {
+    let engine =
+        MockEngine::new(STALL_LANES, STALL_MAX_SEQ, 256).with_prefill_chunk(STALL_CHUNK);
+    let mut sched = Scheduler::new(engine, 64).expect("scheduler");
+    if budget > 0 {
+        sched = sched.with_step_budget(budget).expect("prefill engine");
+    }
+    for i in 0..STALL_DECODERS {
+        let prompt: Vec<u8> = (0..4).map(|j| (40 + i * 7 + j * 3) as u8).collect();
+        sched
+            .submit(GenRequest::sampled(
+                &prompt,
+                STALL_DECODER_NEW,
+                Sampler::top_k(8, 0.8),
+                5000 + i as u64,
+            ))
+            .expect("submit");
+    }
+    // Warm up until all 7 are decoding (one chunk each covers a 4-token
+    // prompt; the budgeted legs may need a few more steps).
+    for _ in 0..64 {
+        if sched.metrics.tokens_generated >= STALL_DECODERS {
+            break;
+        }
+        sched.step().expect("step");
+    }
+    assert_eq!(sched.in_flight(), STALL_DECODERS, "warmup must leave 7 decoders running");
+    let prompt: Vec<u8> = (0..STALL_PROMPT).map(|j| (32 + (j * 11) % 90) as u8).collect();
+    let newcomer = sched
+        .submit(GenRequest::sampled(
+            &prompt,
+            STALL_NEWCOMER_NEW,
+            Sampler::top_k(8, 0.8),
+            6000,
+        ))
+        .expect("submit");
+    let done = sched.run().expect("run");
+    let newcomer_ttft_ms =
+        done.iter().find(|c| c.id == newcomer).and_then(|c| c.ttft_ms).unwrap_or(f64::NAN);
+    let mut completions: Vec<(u64, Vec<u8>)> =
+        done.into_iter().map(|c| (c.id, c.completion)).collect();
+    completions.sort();
+    StallLeg {
+        newcomer_ttft_ms,
+        completions,
+        steps: sched.engine().steps,
+        prefill_calls: sched.engine().prefill_calls,
+        metrics: sched.metrics,
+    }
+}
+
+fn decode_stall_sweep() -> Json {
+    println!();
+    println!(
+        "decode stall: one {STALL_PROMPT}-token prompt joins {STALL_DECODERS} active decodes \
+         (chunk {STALL_CHUNK}; budget 0 = composer off)"
+    );
+    println!(
+        "{:<10} {:>12} {:>16} {:>14} {:>12} {:>12} {:>12}",
+        "budget", "max stall", "inter-tok p99 ms", "newcomer ttft", "mixed", "steps", "prefill"
+    );
+    let legs: Vec<(usize, StallLeg)> =
+        STALL_BUDGETS.iter().map(|&b| (b, run_stall_leg(b))).collect();
+    for (budget, leg) in &legs {
+        println!(
+            "{:<10} {:>12} {:>16.3} {:>14.3} {:>12} {:>12} {:>12}",
+            if *budget == 0 { "off".to_string() } else { budget.to_string() },
+            leg.metrics.max_decode_stall_steps(),
+            leg.metrics.inter_token_ms_p99(),
+            leg.newcomer_ttft_ms,
+            leg.metrics.mixed_steps,
+            leg.steps,
+            leg.prefill_calls,
+        );
+    }
+    let off = &legs[0].1;
+    // Deterministic acceptance: the composer removes the stall entirely
+    // (the off leg shows the full ceil(512/64) = 8-call burst), and the
+    // schedule change never changes a generated byte.
+    assert_eq!(off.metrics.max_decode_stall_steps(), 8, "off leg must show the full burst");
+    let bit_identical = legs.iter().all(|(_, l)| l.completions == off.completions);
+    assert!(bit_identical, "step budget changed generated bytes");
+    for (budget, leg) in &legs[1..] {
+        assert_eq!(
+            leg.metrics.max_decode_stall_steps(),
+            0,
+            "budget {budget}: decode priority must leave no stall"
+        );
+    }
+    let leg_json = |leg: &StallLeg| {
+        json::obj(vec![
+            ("max_decode_stall_steps", json::num(leg.metrics.max_decode_stall_steps() as f64)),
+            ("inter_token_ms_p99", json::num(leg.metrics.inter_token_ms_p99())),
+            ("newcomer_ttft_ms", json::num(leg.newcomer_ttft_ms)),
+            ("queue_ms_p50", json::num(leg.metrics.queue_ms_p50())),
+            ("prefill_spread_ms_p50", json::num(leg.metrics.prefill_spread_ms_p50())),
+            ("mean_prefill_share", json::num(leg.metrics.mean_prefill_share())),
+            ("mixed_steps", json::num(leg.metrics.mixed_steps as f64)),
+            ("steps", json::num(leg.steps as f64)),
+            ("prefill_calls", json::num(leg.prefill_calls as f64)),
+            ("tokens_per_sec", json::num(leg.metrics.tokens_per_sec())),
+        ])
+    };
+    let mut out: Vec<(String, Json)> = vec![(
+        "config".to_string(),
+        json::obj(vec![
+            ("lanes", json::num(STALL_LANES as f64)),
+            ("prompt_len", json::num(STALL_PROMPT as f64)),
+            ("chunk", json::num(STALL_CHUNK as f64)),
+            ("decoders", json::num(STALL_DECODERS as f64)),
+            ("decoder_max_new", json::num(STALL_DECODER_NEW as f64)),
+            ("newcomer_max_new", json::num(STALL_NEWCOMER_NEW as f64)),
+        ]),
+    )];
+    for (budget, leg) in &legs {
+        out.push((format!("budget_{budget}"), leg_json(leg)));
+    }
+    out.push(("bit_identical".to_string(), Json::Bool(bit_identical)));
+    json::obj(out.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+}
+
 // -- sampler cost: full-sort baseline vs partial selection -------------------
 
 /// The pre-PR sampler: full descending sort of the vocabulary every draw.
@@ -618,6 +770,7 @@ fn main() {
     };
     let paged = paged_sweep();
     let prefix_cache = prefix_sweep();
+    let decode_stall = decode_stall_sweep();
     let sampler = sampler_cost();
 
     let out = json::obj(vec![
@@ -630,6 +783,7 @@ fn main() {
         ("batches", json::obj(rows.iter().map(|(k, v)| (*k, v.clone())).collect())),
         ("paged", paged),
         ("prefix_cache", prefix_cache),
+        ("decode_stall", decode_stall),
         ("sampler", sampler),
         (
             "ttft",

@@ -22,13 +22,21 @@
 //!   repeating one system prompt store and prefill it once —
 //!   bit-identical output, admission charged only for non-shared pages),
 //!   admission scheduler with batched multi-token prompt prefill
-//!   (`ceil(len/T)` calls to first token) and mid-flight join, seeded
+//!   (`ceil(len/T)` calls to first token) and mid-flight join, a
+//!   decode-priority step composer (`serve --step-budget B`: every step
+//!   runs the whole decode batch first, then fills the remaining budget
+//!   with prompt chunks split at arbitrary boundaries over the ragged
+//!   `n_valid` prefill graphs, so one long prompt can no longer stall
+//!   every in-flight decode — worst-case decode stall drops from
+//!   `ceil(len/T)` engine calls to zero, byte-identical output), seeded
 //!   greedy/temperature/top-k/top-p samplers with partial candidate
 //!   selection (no full-vocabulary sorts on the hot path), and serving
-//!   metrics — TTFT from enqueue, latency percentiles, tokens/sec,
-//!   evictions), the seeded scheduler-simulation oracle (`testing::sim`,
-//!   dense and paged), and the benchmark harnesses that regenerate every
-//!   table and figure of the paper.
+//!   metrics — TTFT from enqueue split into queue wait vs prefill
+//!   spread, latency percentiles, decode-stall histogram, inter-token
+//!   p99, tokens/sec, evictions), the seeded scheduler-simulation oracle
+//!   (`testing::sim`, dense / paged / prefix-cached / composed), and the
+//!   benchmark harnesses that regenerate every table and figure of the
+//!   paper.
 //!
 //! Python never runs on the request path: `make artifacts` runs once, then
 //! the `spinquant` binary is self-contained.

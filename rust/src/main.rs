@@ -19,7 +19,13 @@
 //!                copy-on-write prefix sharing: requests repeating a
 //!                system prompt map its cached pages read-only instead of
 //!                recomputing them — bit-identical output, lower TTFT,
-//!                more concurrency per page); prints completions +
+//!                more concurrency per page) + `--step-budget B`
+//!                (decode-priority step composer: every step runs the
+//!                full decode batch first, then at most B-ish prompt
+//!                tokens of prefill, so one long prompt can no longer
+//!                stall every in-flight decode for a whole prefill burst;
+//!                0/off = the classic drain-prefill-then-decode loop;
+//!                needs `--prefill-chunk > 1`); prints completions +
 //!                TTFT / latency-percentile / tokens-per-sec metrics
 //!   bench-table  regenerate one paper table/figure (see --id list)
 //!   selftest     end-to-end smoke: artifacts load + tiny eval
@@ -57,6 +63,8 @@ fn usage() -> ! {
                        --prefill-chunk 16|64 (batched prompt prefill; 1 = per-token loop)\n\
                        --block-size 16 (paged KV cache) --kv-blocks M (page budget)\n\
                        --prefix-cache 1 (copy-on-write sharing of repeated prompt prefixes)\n\
+                       --step-budget B (decode-priority step composer: bound the decode\n\
+                       hiccup a long prompt's prefill causes; 0 = off)\n\
          bench-table:  --id table1|table2|table3|table4|table5|table6|table10|table11|table12|table13|fig2|fig3|fig4|fig7|fig8 [--models a,b] [--out EXPERIMENTS.md]"
     );
     std::process::exit(2);
@@ -423,17 +431,37 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
             );
         }
     }
+    // Decode-priority step composer: `--step-budget B` runs the full
+    // decode batch every step and caps the prefill share, bounding the
+    // hiccup a long prompt causes for in-flight requests (0 = off, the
+    // classic drain-prefill-then-decode loop). Needs a multi-token
+    // prefill path; never silently dropped.
+    let step_budget: usize =
+        get_extra(extra, "step-budget").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let composing = step_budget > 0 && chunk_in_use > 1;
+    if step_budget > 0 {
+        if composing {
+            sched = sched.with_step_budget(step_budget)?;
+        } else {
+            eprintln!(
+                "note: --step-budget {step_budget} NOT enforced — it composes budgeted \
+                 prefill chunks, and prompts are feeding through the per-token decode \
+                 loop (see notes above; pass --prefill-chunk > 1)"
+            );
+        }
+    }
 
     println!(
         "serving {} request(s) on {} slot(s), sampler {}, max {} new tokens, \
-         prefill chunk {}{}{}",
+         prefill chunk {}{}{}{}",
         prompts.len(),
         batch,
         sampler.name(),
         n_new,
         chunk_in_use,
         pool_desc,
-        if prefix_cache && paged { ", prefix cache on" } else { "" }
+        if prefix_cache && paged { ", prefix cache on" } else { "" },
+        if composing { format!(", step budget {step_budget}") } else { String::new() }
     );
     let reqs = prompts
         .iter()

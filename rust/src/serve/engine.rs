@@ -901,6 +901,13 @@ pub struct MockEngine {
     /// Total batched prefill calls executed (a prompt of `len` tokens must
     /// cost exactly `ceil(len/chunk)` of these — the TTFT acceptance check).
     pub prefill_calls: usize,
+    /// Total prompt tokens consumed across all prefill calls.
+    pub prefill_tokens_fed: usize,
+    /// Largest single prefill call, summed over slots — the step
+    /// composer's budget-compliance observable: with `--step-budget B` no
+    /// prefill call may carry more than `max(B - decode_lanes, guard)`
+    /// prompt tokens, and tests assert it against this counter.
+    pub max_prefill_call_tokens: usize,
 }
 
 /// FNV-1a offset basis / prime: the history hash the mock's logits seed on.
@@ -924,7 +931,17 @@ impl MockEngine {
             blocks: Vec::new(),
             steps: 0,
             prefill_calls: 0,
+            prefill_tokens_fed: 0,
+            max_prefill_call_tokens: 0,
         }
+    }
+
+    /// Account one prefill call's total fed tokens (budget observables).
+    fn count_prefill_tokens(&mut self, tokens: &[Vec<i32>], active: &[bool]) {
+        let fed: usize =
+            (0..self.n_slots).filter(|&b| active[b]).map(|b| tokens[b].len()).sum();
+        self.prefill_tokens_fed += fed;
+        self.max_prefill_call_tokens = self.max_prefill_call_tokens.max(fed);
     }
 
     /// Pretend to be an engine with a `T`-token prefill graph (chunk 1 =
@@ -1148,6 +1165,7 @@ impl DecodeEngine for MockEngine {
             bail!("mock engine: paged engine prefilled without block tables");
         }
         self.prefill_calls += 1;
+        self.count_prefill_tokens(tokens, active);
         let mut out = Vec::with_capacity(self.n_slots);
         for b in 0..self.n_slots {
             if !active[b] || tokens[b].is_empty() {
@@ -1267,6 +1285,7 @@ impl DecodeEngine for MockEngine {
             bail!("mock engine: dense engine got block tables (build with with_block_pool)");
         }
         self.prefill_calls += 1;
+        self.count_prefill_tokens(tokens, active);
         let writes: Vec<(usize, usize)> = (0..self.n_slots)
             .map(|b| if active[b] { (pos0[b] as usize, tokens[b].len()) } else { (0, 0) })
             .collect();
@@ -1514,6 +1533,19 @@ mod tests {
         assert_eq!(la[0], lb[0]);
         assert_eq!(a.steps, 3);
         assert_eq!(b.prefill_calls, 1);
+    }
+
+    #[test]
+    fn mock_counts_prefill_tokens_per_call() {
+        // The budget observable: total fed tokens and the largest single
+        // call, summed over slots (inactive lanes don't count).
+        let mut e = MockEngine::new(2, 32, 64).with_prefill_chunk(8);
+        e.prefill(&[vec![1, 2, 3], vec![4, 5]], &[0, 0], &[true, true]).unwrap();
+        assert_eq!(e.prefill_tokens_fed, 5);
+        assert_eq!(e.max_prefill_call_tokens, 5);
+        e.prefill(&[vec![6], vec![9, 9]], &[3, 0], &[true, false]).unwrap();
+        assert_eq!(e.prefill_tokens_fed, 6, "inactive lane must not count");
+        assert_eq!(e.max_prefill_call_tokens, 5);
     }
 
     #[test]

@@ -45,6 +45,36 @@ pub struct ServingMetrics {
     pub prompt_tokens_admitted: usize,
     /// Admissions that mapped at least one cached prefix page.
     pub prefix_hits: usize,
+    /// Decode-stall histogram: one sample per token produced by a slot that
+    /// was already *running* (prompt fully fed) at the start of the
+    /// iteration — the number of earlier engine-call iterations the slot
+    /// sat through without producing anything since its previous token
+    /// (0 = a token every iteration). Budget-off chunked prefill makes this
+    /// spike to `ceil(len/chunk)` while a long prompt drains; the step
+    /// composer (`--step-budget`) exists to pin it at 0.
+    pub decode_stall_steps: Samples,
+    /// Inter-token latency (us): engine-busy time between a running slot's
+    /// consecutive tokens, every stalled iteration's call time included —
+    /// the user-perceived hiccup `decode_stall_steps` counts in steps.
+    pub inter_token_us: Samples,
+    /// Per-iteration share of fed tokens that were prompt (prefill) tokens,
+    /// one sample per iteration that fed anything. Under a step budget this
+    /// gauges how the composer actually split each step.
+    pub prefill_share: Samples,
+    /// Composed iterations that paired a decode call with a prefill call
+    /// (only the step composer produces these).
+    pub mixed_steps: usize,
+    /// Queue wait (us): enqueue -> the first time the request's tokens
+    /// entered an engine call, one sample per completed request that
+    /// generated a token (recorded at retirement, paired 1:1 with
+    /// `ttft_us`). Split out of TTFT so prefill spread (chunk splitting
+    /// across many budgeted steps) cannot masquerade as queue wait, or
+    /// vice versa.
+    pub queue_us: Samples,
+    /// Prefill spread (us): first scheduled -> first generated token, the
+    /// other half of TTFT (`ttft == queue + spread`, same clock, stamped at
+    /// the same instant).
+    pub prefill_spread_us: Samples,
 }
 
 impl ServingMetrics {
@@ -109,6 +139,63 @@ impl ServingMetrics {
             return 0.0;
         }
         self.tokens_reused as f64 / self.prompt_tokens_admitted as f64
+    }
+
+    /// Record one token produced by a *running* slot: how many engine-call
+    /// iterations it stalled since its previous token (0 = none) and the
+    /// engine-busy microseconds that wait amounted to.
+    pub fn record_decode_token_wait(&mut self, stall_steps: usize, wait_us: f64) {
+        self.decode_stall_steps.push(stall_steps as f64);
+        self.inter_token_us.push(wait_us);
+    }
+
+    /// Record one iteration's fed-token mix: `prompt_tokens` prompt tokens
+    /// against `decode_tokens` generated-feedback tokens (no sample when
+    /// the iteration fed nothing).
+    pub fn record_token_mix(&mut self, prompt_tokens: usize, decode_tokens: usize) {
+        let total = prompt_tokens + decode_tokens;
+        if total > 0 {
+            self.prefill_share.push(prompt_tokens as f64 / total as f64);
+        }
+    }
+
+    /// Record one composed iteration that ran both a decode call and a
+    /// prefill call.
+    pub fn record_mixed_step(&mut self) {
+        self.mixed_steps += 1;
+    }
+
+    /// Record a request's TTFT split: `queue_us` (enqueue -> first
+    /// scheduled) and `spread_us` (first scheduled -> first token), the
+    /// two halves of TTFT. Called once per completed request that
+    /// generated a token, so the pair stays 1:1 with the `ttft_us`
+    /// samples even across eviction restarts.
+    pub fn record_first_token(&mut self, queue_us: f64, spread_us: f64) {
+        self.queue_us.push(queue_us);
+        self.prefill_spread_us.push(spread_us);
+    }
+
+    /// Worst stall any running slot experienced (in engine-call
+    /// iterations); 0 when no slot ever waited — the composer's acceptance
+    /// observable.
+    pub fn max_decode_stall_steps(&self) -> usize {
+        self.decode_stall_steps.percentile_us(100.0) as usize
+    }
+
+    pub fn inter_token_ms_p99(&self) -> f64 {
+        self.inter_token_us.percentile_us(99.0) / 1e3
+    }
+
+    pub fn mean_prefill_share(&self) -> f64 {
+        self.prefill_share.mean_us()
+    }
+
+    pub fn queue_ms_p50(&self) -> f64 {
+        self.queue_us.percentile_us(50.0) / 1e3
+    }
+
+    pub fn prefill_spread_ms_p50(&self) -> f64 {
+        self.prefill_spread_us.percentile_us(50.0) / 1e3
     }
 
     /// Record a completed request (latencies in microseconds).
@@ -192,6 +279,12 @@ impl ServingMetrics {
             ("tokens_reused", json::num(self.tokens_reused as f64)),
             ("prefix_hits", json::num(self.prefix_hits as f64)),
             ("prefix_hit_rate", json::num(self.prefix_hit_rate())),
+            ("max_decode_stall_steps", json::num(self.max_decode_stall_steps() as f64)),
+            ("inter_token_ms_p99", json::num(self.inter_token_ms_p99())),
+            ("mean_prefill_share", json::num(self.mean_prefill_share())),
+            ("mixed_steps", json::num(self.mixed_steps as f64)),
+            ("queue_ms_p50", json::num(self.queue_ms_p50())),
+            ("prefill_spread_ms_p50", json::num(self.prefill_spread_ms_p50())),
         ])
     }
 
@@ -295,6 +388,57 @@ mod tests {
         assert_eq!(j.req("prefix_hits").unwrap().as_f64(), Some(2.0));
         // No admissions: rate is 0, not NaN.
         assert_eq!(ServingMetrics::new().prefix_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn decode_stall_and_inter_token_latency() {
+        let mut m = ServingMetrics::new();
+        // A token every iteration for a while, then a 3-iteration stall
+        // (e.g. a long prompt's budget-off prefill burst).
+        for _ in 0..10 {
+            m.record_decode_token_wait(0, 800.0);
+        }
+        m.record_decode_token_wait(3, 3200.0);
+        assert_eq!(m.max_decode_stall_steps(), 3);
+        assert!((m.inter_token_ms_p99() - 3.2).abs() < 1e-9);
+        assert_eq!(m.decode_stall_steps.len(), 11);
+        let j = m.to_json();
+        assert_eq!(j.req("max_decode_stall_steps").unwrap().as_f64(), Some(3.0));
+        // No samples: 0, not NaN.
+        assert_eq!(ServingMetrics::new().max_decode_stall_steps(), 0);
+        assert_eq!(ServingMetrics::new().inter_token_ms_p99(), 0.0);
+    }
+
+    #[test]
+    fn prefill_share_gauge_and_mixed_steps() {
+        let mut m = ServingMetrics::new();
+        m.record_token_mix(8, 0); // pure prefill iteration
+        m.record_token_mix(4, 4); // composed 50/50 iteration
+        m.record_mixed_step();
+        m.record_token_mix(0, 8); // pure decode iteration
+        m.record_token_mix(0, 0); // fed nothing: no sample
+        assert_eq!(m.prefill_share.len(), 3);
+        assert!((m.mean_prefill_share() - 0.5).abs() < 1e-9);
+        assert_eq!(m.mixed_steps, 1);
+        let j = m.to_json();
+        assert_eq!(j.req("mixed_steps").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn ttft_splits_into_queue_wait_and_prefill_spread() {
+        // Regression (satellite): once prompts split across many budgeted
+        // steps, TTFT alone cannot say whether a request waited in the
+        // queue or spent the time prefilling — the two halves are recorded
+        // separately and sum to TTFT.
+        let mut m = ServingMetrics::new();
+        m.record_first_token(5_000.0, 1_000.0);
+        m.record_completion(20_000.0, Some(6_000.0));
+        assert!((m.queue_ms_p50() - 5.0).abs() < 1e-9);
+        assert!((m.prefill_spread_ms_p50() - 1.0).abs() < 1e-9);
+        assert!((m.queue_ms_p50() + m.prefill_spread_ms_p50() - m.ttft_ms_p50()).abs() < 1e-9);
+        let j = m.to_json();
+        assert_eq!(j.req("queue_ms_p50").unwrap().as_f64(), Some(5.0));
+        assert_eq!(j.req("prefill_spread_ms_p50").unwrap().as_f64(), Some(1.0));
     }
 
     #[test]

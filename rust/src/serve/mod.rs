@@ -64,19 +64,30 @@
 //!   request's *non-shared* page demand and prefill starts at the first
 //!   uncached position, so N users repeating one system prompt pay for it
 //!   once — with bit-identical output (sharing removes recomputation,
-//!   never changes content). The legacy threaded FIFO front ([`Server`])
-//!   also lives here. The scheduler's bookkeeping is held to a pure
-//!   reference simulator by randomized trace tests — see
-//!   [`crate::testing::sim`].
+//!   never changes content). With [`Scheduler::with_step_budget`] the
+//!   drain-prefill-then-decode loop becomes a decode-priority **step
+//!   composer**: every iteration runs the full decode batch first, then
+//!   fills what remains of the per-step token budget with prompt chunks
+//!   from warming slots (splitting prompts at arbitrary boundaries over
+//!   the ragged `n_valid` prefill graphs, with a starvation guard so
+//!   prefill always progresses) — so one long prompt can no longer stall
+//!   every in-flight decode for a whole `ceil(len/T)`-call burst. The
+//!   legacy threaded FIFO front ([`Server`]) also lives here. The
+//!   scheduler's bookkeeping is held to a pure reference simulator by
+//!   randomized trace tests — see [`crate::testing::sim`].
 //! * [`sampling`] — greedy / temperature / top-k / top-p samplers, seeded
 //!   via [`crate::util::prng`] so generations are exactly reproducible;
 //!   candidate selection is partial (`select_nth_unstable_by`), never a
 //!   full-vocabulary sort per step.
 //! * [`metrics`] — time-to-first-token (measured from enqueue, so queue
-//!   wait is visible), prefill-call latency (kept separate from per-token
-//!   decode latency), per-token latency percentiles, tokens/sec, queue
-//!   depth, eviction counts, prefix-cache reuse (`tokens_reused`, hit
-//!   rate); exportable as JSON through [`crate::report`].
+//!   wait is visible, and split into queue wait vs prefill spread so a
+//!   prompt scattered across many budgeted steps can't masquerade as
+//!   queue time), prefill-call latency (kept separate from per-token
+//!   decode latency), per-token latency percentiles, the decode-stall
+//!   histogram + inter-token latency + prefill-share gauge the step
+//!   composer is tuned by, tokens/sec, queue depth, eviction counts,
+//!   prefix-cache reuse (`tokens_reused`, hit rate); exportable as JSON
+//!   through [`crate::report`].
 
 pub mod blocks;
 pub mod engine;
@@ -91,4 +102,4 @@ pub use engine::{DecodeEngine, DecodeVariant, GenerationSession, MockEngine, Pjr
 pub use metrics::ServingMetrics;
 pub use sampling::{argmax, Sampler, SamplerKind};
 pub use scheduler::{Completion, GenRequest, Request, Response, Scheduler, Server};
-pub use slots::SlotMap;
+pub use slots::{SlotMap, SlotPhase};

@@ -45,6 +45,44 @@
 //! reuses them. Completions are bit-identical with the cache on or off —
 //! the cache removes recomputation, never changes content.
 //!
+//! # The decode-priority step composer (`--step-budget`)
+//!
+//! The drain-prefill-then-decode loop above has a latency failure mode:
+//! one long prompt monopolises `ceil(len/T)` consecutive engine calls and
+//! every in-flight request's inter-token latency spikes for the whole
+//! burst. [`Scheduler::with_step_budget`] replaces that loop with a
+//! Sarathi-style *step composer*. Each iteration builds a **step plan**
+//! from the slot phases ([`crate::serve::slots::SlotPhase`]):
+//!
+//! 1. **Partition** — `Running` slots (prompt fully fed) form the decode
+//!    set; `Warming` slots (still owing prompt tokens) are prefill
+//!    candidates; queued requests stay `Cold` until admission.
+//! 2. **Budget** — the decode set is admitted first and in full (decode
+//!    priority: a running slot is *never* skipped, so the decode stall is
+//!    structurally 0 steps). The remaining `B - decode_tokens` budget is
+//!    filled with prompt chunks from warming slots in slot order, each
+//!    take capped by the engine's prefill graph width `T`, the slot's
+//!    remaining prompt, and the budget left — a prompt therefore splits
+//!    across steps at arbitrary boundaries, reusing the ragged `n_valid`
+//!    prefill graphs (no new PJRT artifacts). A **starvation guard**
+//!    (`max(1, B/4)` tokens) floors the prefill share so a full decode
+//!    batch can never stall admission-side progress (TTFT stays bounded).
+//! 3. **Grow** (paged) — decode slots' pages first, then the planned
+//!    prefill takes; an eviction mid-growth drops its slot from the plan
+//!    (the freed budget is *not* redistributed, keeping the plan — and
+//!    the oracle's replay of it — deterministic).
+//! 4. **Execute** — one decode call over the surviving decode set, then
+//!    at most one prefill call over the surviving takes: exactly the "one
+//!    prefill call + one decode call per step" shape the PJRT bindings
+//!    already support. Slots that complete their prompt in the prefill
+//!    call sample their first token there and turn `Running` *next* step.
+//!
+//! With the budget off (the default) the original paths run untouched —
+//! byte-for-byte, step-for-step identical to PR 4 — which is what the
+//! sim-oracle regression suites anchor against. Generated bytes are
+//! identical with the composer on or off (logits depend only on each
+//! request's own history); only the schedule changes.
+//!
 //! PJRT handles are not `Send`, so the scheduler is single-threaded by
 //! design; the batching parallelism lives *inside* the engine step. The
 //! old one-request-at-a-time [`Server`] (worker thread + channels) is kept
@@ -59,7 +97,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::serve::engine::DecodeEngine;
 use crate::serve::metrics::ServingMetrics;
 use crate::serve::sampling::Sampler;
-use crate::serve::slots::SlotMap;
+use crate::serve::slots::{SlotMap, SlotPhase};
 use crate::util::prng::Prng;
 
 /// A generation request for the continuous-batching scheduler.
@@ -114,6 +152,15 @@ struct Active {
     last_token: i32,
     submitted: Instant,
     ttft_us: Option<f64>,
+    /// Submit -> first time this request's tokens entered an engine call
+    /// (us). Survives eviction requeues — the first *ever* scheduling is
+    /// what separates queue wait from prefill spread in TTFT.
+    first_sched_us: Option<f64>,
+    /// Engine-call iterations this slot sat through without producing a
+    /// token since its last one (only counted while `Running`).
+    stall_steps: usize,
+    /// Engine-busy microseconds accumulated since this slot's last token.
+    wait_us: f64,
     /// End-to-end page demand, computed once at submit (prompt and
     /// max_new are immutable); carried through eviction requeues.
     blocks_needed: usize,
@@ -132,6 +179,9 @@ struct Queued {
     seed: u64,
     submitted: Instant,
     blocks_needed: usize,
+    /// `Some` only for eviction requeues: the request was scheduled once
+    /// already, and its queue-wait half of TTFT must keep that timestamp.
+    first_sched_us: Option<f64>,
 }
 
 /// The continuous-batching loop over one [`DecodeEngine`].
@@ -148,6 +198,10 @@ pub struct Scheduler<E: DecodeEngine> {
     /// on admission / growth / release) so the hot path never reallocates
     /// them per step. Empty in dense mode.
     tables: Vec<Vec<i32>>,
+    /// `Some(B)`: the decode-priority step composer is on with a per-step
+    /// token budget of `B` (see the module docs); `None`: the original
+    /// drain-prefill-then-decode paths run untouched.
+    step_budget: Option<usize>,
     pub metrics: ServingMetrics,
 }
 
@@ -182,8 +236,41 @@ impl<E: DecodeEngine> Scheduler<E> {
             max_queue: max_queue.max(1),
             next_id: 0,
             tables,
+            step_budget: None,
             metrics: ServingMetrics::new(),
         })
+    }
+
+    /// Enable the decode-priority step composer (`serve --step-budget B`):
+    /// every scheduler iteration runs the full decode batch first, then at
+    /// most one prefill call whose total take is bounded by what remains
+    /// of the `budget` (floored by the starvation guard), so one long
+    /// prompt can no longer stall in-flight decodes for a whole prefill
+    /// burst. Needs an engine with a multi-token prefill graph
+    /// (`prefill_chunk() > 1` — the chunk-1 interleaved path has no burst
+    /// to bound); call before submitting work.
+    pub fn with_step_budget(mut self, budget: usize) -> Result<Self> {
+        if budget == 0 {
+            bail!("--step-budget must be >= 1 (omit the flag to disable the composer)");
+        }
+        if self.engine.prefill_chunk() <= 1 {
+            bail!(
+                "--step-budget needs an engine with a multi-token prefill graph \
+                 (prefill chunk is 1: prompts already interleave per token)"
+            );
+        }
+        if self.slots.active_count() > 0 || !self.pending.is_empty() {
+            bail!("step budget must be set before submitting work");
+        }
+        self.step_budget = Some(budget);
+        Ok(self)
+    }
+
+    /// The starvation guard: prompt tokens a budgeted step always reserves
+    /// for prefill when any warming slot exists, even when the decode
+    /// batch alone fills (or overflows) the budget.
+    fn prefill_guard(budget: usize) -> usize {
+        (budget / 4).max(1)
     }
 
     /// Restrict the paged admission budget to `blocks` pages (must not
@@ -316,8 +403,27 @@ impl<E: DecodeEngine> Scheduler<E> {
             seed: req.seed,
             submitted: Instant::now(),
             blocks_needed,
+            first_sched_us: None,
         });
         Ok(id)
+    }
+
+    /// Phase of slot `b` in the composer's partition: `Cold` when free,
+    /// `Warming` while it still owes prompt tokens, `Running` once it
+    /// decodes one token per step.
+    pub fn slot_phase(&self, b: usize) -> SlotPhase {
+        match self.active.get(b).and_then(|s| s.as_ref()) {
+            None => SlotPhase::Cold,
+            Some(a) if a.fed < a.prompt.len() => SlotPhase::Warming,
+            Some(_) => SlotPhase::Running,
+        }
+    }
+
+    /// Snapshot of which slots are `Running` right now — taken at the top
+    /// of a step, *before* paged growth can evict anyone, so stall
+    /// accounting and the decode plan agree on one consistent view.
+    fn running_flags(&self) -> Vec<bool> {
+        (0..self.active.len()).map(|b| self.slot_phase(b) == SlotPhase::Running).collect()
     }
 
     /// Cancel a request by id: drop it from the admission queue, or evict
@@ -384,6 +490,9 @@ impl<E: DecodeEngine> Scheduler<E> {
                 last_token: 0,
                 submitted: q.submitted,
                 ttft_us: None,
+                first_sched_us: q.first_sched_us,
+                stall_steps: 0,
+                wait_us: 0.0,
                 blocks_needed: q.blocks_needed,
             });
         }
@@ -418,6 +527,7 @@ impl<E: DecodeEngine> Scheduler<E> {
             seed: a.seed,
             submitted: a.submitted,
             blocks_needed: a.blocks_needed,
+            first_sched_us: a.first_sched_us,
         });
         Ok(victim)
     }
@@ -527,6 +637,17 @@ impl<E: DecodeEngine> Scheduler<E> {
         self.engine.reset_slot(b);
         let request_us = a.submitted.elapsed().as_secs_f64() * 1e6;
         self.metrics.record_completion(request_us, a.ttft_us);
+        // TTFT's two halves, recorded exactly once per completed request
+        // (here, not at first-token time: an eviction restart re-stamps
+        // TTFT, and recording eagerly would double-count the pair). The
+        // same clock stamps both, so queue + spread == ttft exactly; for
+        // an evicted request the spread spans its restart — first_sched
+        // keeps the first *ever* scheduling, which is the point of the
+        // split.
+        if let Some(ttft) = a.ttft_us {
+            let queue = a.first_sched_us.unwrap_or(ttft).min(ttft);
+            self.metrics.record_first_token(queue, ttft - queue);
+        }
         Ok(Completion {
             id: a.id,
             prompt: a.prompt.iter().map(|&t| t as u8).collect(),
@@ -536,14 +657,21 @@ impl<E: DecodeEngine> Scheduler<E> {
         })
     }
 
-    /// One scheduler iteration (a single engine call): admit, then either a
-    /// batched prefill call — when the engine has a multi-token prefill
-    /// graph and any slot still owes prompt tokens — or a decode step.
-    /// Returns the completions that finished on this iteration (empty when
-    /// idle).
+    /// One scheduler iteration: admit, then — with a step budget — one
+    /// composed decode-priority step, or — without one — either a batched
+    /// prefill call (when the engine has a multi-token prefill graph and
+    /// any slot still owes prompt tokens) or a decode step, exactly as
+    /// before. Returns the completions that finished on this iteration
+    /// (empty when idle).
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         self.admit()?;
         let chunk = self.engine.prefill_chunk().max(1);
+        // Running-slot snapshot for the plan partition and the stall
+        // accounting, taken before growth can evict anyone.
+        let running = self.running_flags();
+        if let Some(budget) = self.step_budget {
+            return self.composed_step(budget, chunk, &running);
+        }
         let owes_prompt =
             |s: &Option<Active>| s.as_ref().map_or(false, |a| a.fed < a.prompt.len());
         if chunk > 1 && self.active.iter().any(owes_prompt) {
@@ -551,17 +679,212 @@ impl<E: DecodeEngine> Scheduler<E> {
                 self.grow_for_prefill(chunk)?;
                 // Growth can evict every prefilling slot (they are the
                 // youngest by construction); skip the engine call — the
-                // next iteration re-admits and carries on.
+                // next iteration re-admits and carries on. (No engine call
+                // ran, so decode-stall counters don't tick either.)
                 if !self.active.iter().any(owes_prompt) {
                     return Ok(Vec::new());
                 }
             }
-            return self.prefill_pass(chunk);
+            return self.prefill_pass(chunk, &running);
         }
         if self.slots.is_paged() {
             self.grow_for_decode()?;
         }
-        self.decode_pass()
+        self.decode_pass(&running)
+    }
+
+    /// One composed decode-priority iteration (see the module docs): plan
+    /// the decode set and budgeted prefill takes from the phase partition,
+    /// grow pages (decode slots first), then execute the decode call
+    /// followed by at most one prefill call. Running slots therefore
+    /// produce a token *every* iteration they survive — the decode stall
+    /// the budget-off path suffers during a prefill burst is structurally
+    /// zero here.
+    fn composed_step(
+        &mut self,
+        budget: usize,
+        chunk: usize,
+        running: &[bool],
+    ) -> Result<Vec<Completion>> {
+        let n = self.engine.slots();
+        let max_seq = self.engine.max_seq();
+        // -- plan ----------------------------------------------------------
+        let decode_tokens = running.iter().filter(|&&r| r).count();
+        let warming =
+            |s: &Option<Active>| s.as_ref().map_or(false, |a| a.fed < a.prompt.len());
+        let mut prefill_left = if self.active.iter().any(warming) {
+            budget.saturating_sub(decode_tokens).max(Self::prefill_guard(budget))
+        } else {
+            0
+        };
+        let mut takes = vec![0usize; n];
+        for b in 0..n {
+            if prefill_left == 0 {
+                break;
+            }
+            if let Some(a) = &self.active[b] {
+                if a.fed < a.prompt.len() {
+                    let take = chunk.min(a.prompt.len() - a.fed).min(prefill_left);
+                    takes[b] = take;
+                    prefill_left -= take;
+                }
+            }
+        }
+        // -- grow (paged): decode slots first, then the planned takes.
+        // An eviction mid-growth silently drops its slot from the plan;
+        // the freed budget is not redistributed (the plan is fixed once).
+        if self.slots.is_paged() {
+            for b in 0..n {
+                if running[b] && self.active[b].is_some() {
+                    let target = self.slots.pos(b).expect("occupied") + 1;
+                    self.grow_or_evict(b, target)?;
+                }
+            }
+            for b in 0..n {
+                if takes[b] > 0 && self.active[b].is_some() {
+                    let target = self.slots.pos(b).expect("occupied") + takes[b];
+                    self.grow_or_evict(b, target)?;
+                }
+            }
+        }
+        let mut done = Vec::new();
+        let mut decode_fed = 0usize;
+        let mut prompt_fed = 0usize;
+        let mut ran_decode = false;
+        let mut ran_prefill = false;
+        // -- decode call over the surviving decode set ---------------------
+        let mut tokens = vec![0i32; n];
+        let mut pos = vec![0i32; n];
+        let mut active = vec![false; n];
+        let mut any = false;
+        for b in 0..n {
+            let Some(a) = self.active[b].as_mut() else { continue };
+            if running[b] {
+                any = true;
+                active[b] = true;
+                tokens[b] = a.last_token;
+                pos[b] = self.slots.pos(b).expect("occupied slot has a position") as i32;
+                if a.first_sched_us.is_none() {
+                    a.first_sched_us = Some(a.submitted.elapsed().as_secs_f64() * 1e6);
+                }
+            } else {
+                // Warming lane idling through the decode call. The PJRT
+                // decode graphs write a placeholder token at `pos[b]` for
+                // every lane, active or not (only the prefill graphs drop
+                // writes via n_valid) — so aim the placeholder at the
+                // slot's own *next* position: still unwritten, never
+                // attended before the prefill chunk overwrites it, and
+                // (paged) inside the slot's own pages or dropped by the
+                // table sentinel. Leaving pos 0 here would clobber the
+                // warming prompt's first KV entry.
+                pos[b] = self.slots.pos(b).expect("occupied slot has a position") as i32;
+            }
+        }
+        if any {
+            let t0 = Instant::now();
+            let logits = if self.slots.is_paged() {
+                self.engine.step_paged(&tokens, &pos, &active, &self.tables)?
+            } else {
+                self.engine.step(&tokens, &pos, &active)?
+            };
+            let step_us = t0.elapsed().as_secs_f64() * 1e6;
+            ran_decode = true;
+            let mut new_tokens = 0usize;
+            for b in 0..n {
+                if !active[b] || self.active[b].is_none() {
+                    continue;
+                }
+                let new_pos = self.slots.advance(b)?;
+                decode_fed += 1;
+                let finished =
+                    self.sample_and_check(b, &logits[b], new_pos, max_seq, &mut new_tokens);
+                {
+                    // Every surviving running slot sampled: record how long
+                    // it waited for this token, then reset.
+                    let a = self.active[b].as_mut().expect("occupied");
+                    let stall = a.stall_steps;
+                    let wait = a.wait_us + step_us;
+                    a.stall_steps = 0;
+                    a.wait_us = 0.0;
+                    self.metrics.record_decode_token_wait(stall, wait);
+                }
+                if finished {
+                    done.push(self.retire(b)?);
+                }
+            }
+            self.metrics.record_step(
+                step_us,
+                new_tokens,
+                self.slots.active_count(),
+                self.pending.len(),
+            );
+        }
+        // -- prefill call over the surviving planned takes -----------------
+        let mut ptokens: Vec<Vec<i32>> = vec![Vec::new(); n];
+        let mut pos0 = vec![0i32; n];
+        let mut pactive = vec![false; n];
+        let mut any_p = false;
+        for b in 0..n {
+            if takes[b] == 0 {
+                continue;
+            }
+            if let Some(a) = self.active[b].as_mut() {
+                any_p = true;
+                pactive[b] = true;
+                ptokens[b] = a.prompt[a.fed..a.fed + takes[b]].to_vec();
+                pos0[b] = self.slots.pos(b).expect("occupied slot has a position") as i32;
+                if a.first_sched_us.is_none() {
+                    a.first_sched_us = Some(a.submitted.elapsed().as_secs_f64() * 1e6);
+                }
+            }
+        }
+        if any_p {
+            let t0 = Instant::now();
+            let logits = if self.slots.is_paged() {
+                self.engine.prefill_paged(&ptokens, &pos0, &pactive, &self.tables)?
+            } else {
+                self.engine.prefill(&ptokens, &pos0, &pactive)?
+            };
+            let prefill_us = t0.elapsed().as_secs_f64() * 1e6;
+            ran_prefill = true;
+            let mut new_tokens = 0usize;
+            for b in 0..n {
+                if !pactive[b] || self.active[b].is_none() {
+                    continue;
+                }
+                let fed_now = ptokens[b].len();
+                let new_pos = self.slots.advance_by(b, fed_now)?;
+                self.active[b].as_mut().expect("active slot").fed += fed_now;
+                prompt_fed += fed_now;
+                if self.sample_and_check(b, &logits[b], new_pos, max_seq, &mut new_tokens) {
+                    done.push(self.retire(b)?);
+                }
+            }
+            self.metrics.record_prefill(
+                prefill_us,
+                prompt_fed,
+                new_tokens,
+                self.slots.active_count(),
+                self.pending.len(),
+            );
+            // The prefill half of a mixed step counts toward the *next*
+            // token's inter-token wait of every still-running slot (its
+            // token this iteration was stamped before this call ran).
+            for b in 0..n {
+                if running[b] {
+                    if let Some(a) = self.active[b].as_mut() {
+                        a.wait_us += prefill_us;
+                    }
+                }
+            }
+        }
+        if ran_decode || ran_prefill {
+            self.metrics.record_token_mix(prompt_fed, decode_fed);
+        }
+        if ran_decode && ran_prefill {
+            self.metrics.record_mixed_step();
+        }
+        Ok(done)
     }
 
     /// One batched prefill call over every slot that still owes prompt
@@ -569,19 +892,22 @@ impl<E: DecodeEngine> Scheduler<E> {
     /// completes a slot's prompt yields the logits predicting its first
     /// token, which is sampled right here — TTFT is set at the end of the
     /// last prefill chunk, `ceil(len/chunk)` engine calls after admission.
-    fn prefill_pass(&mut self, chunk: usize) -> Result<Vec<Completion>> {
+    fn prefill_pass(&mut self, chunk: usize, running: &[bool]) -> Result<Vec<Completion>> {
         let n = self.engine.slots();
         let max_seq = self.engine.max_seq();
         let mut tokens: Vec<Vec<i32>> = vec![Vec::new(); n];
         let mut pos0 = vec![0i32; n];
         let mut active = vec![false; n];
         for b in 0..n {
-            if let Some(a) = &self.active[b] {
+            if let Some(a) = self.active[b].as_mut() {
                 if a.fed < a.prompt.len() {
                     let take = chunk.min(a.prompt.len() - a.fed);
                     tokens[b] = a.prompt[a.fed..a.fed + take].to_vec();
                     pos0[b] = self.slots.pos(b).expect("occupied slot has a position") as i32;
                     active[b] = true;
+                    if a.first_sched_us.is_none() {
+                        a.first_sched_us = Some(a.submitted.elapsed().as_secs_f64() * 1e6);
+                    }
                 }
             }
         }
@@ -612,6 +938,17 @@ impl<E: DecodeEngine> Scheduler<E> {
                 done.push(self.retire(b)?);
             }
         }
+        // Running slots idled through this call — the decode hiccup this
+        // class of pass causes is exactly what the stall histogram (and
+        // the step composer) is about.
+        for b in 0..n {
+            if running[b] {
+                if let Some(a) = self.active[b].as_mut() {
+                    a.stall_steps += 1;
+                    a.wait_us += step_us;
+                }
+            }
+        }
         self.metrics.record_prefill(
             step_us,
             prompt_tokens,
@@ -619,25 +956,37 @@ impl<E: DecodeEngine> Scheduler<E> {
             self.slots.active_count(),
             self.pending.len(),
         );
+        self.metrics.record_token_mix(prompt_tokens, 0);
         Ok(done)
     }
 
     /// One decode step over every occupied slot. With `prefill_chunk() == 1`
     /// this also feeds prompts one token at a time (prefilling and decoding
     /// slots batched together), preserving the original interleaved path.
-    fn decode_pass(&mut self) -> Result<Vec<Completion>> {
+    fn decode_pass(&mut self, running: &[bool]) -> Result<Vec<Completion>> {
         let n = self.engine.slots();
         let max_seq = self.engine.max_seq();
         let mut tokens = vec![0i32; n];
         let mut pos = vec![0i32; n];
         let mut active = vec![false; n];
         let mut any = false;
+        let mut prompt_fed = 0usize;
+        let mut decode_fed = 0usize;
         for b in 0..n {
-            if let Some(a) = &self.active[b] {
+            if let Some(a) = self.active[b].as_mut() {
                 any = true;
                 active[b] = true;
-                tokens[b] = if a.fed < a.prompt.len() { a.prompt[a.fed] } else { a.last_token };
+                if a.fed < a.prompt.len() {
+                    tokens[b] = a.prompt[a.fed];
+                    prompt_fed += 1;
+                } else {
+                    tokens[b] = a.last_token;
+                    decode_fed += 1;
+                }
                 pos[b] = self.slots.pos(b).expect("occupied slot has a position") as i32;
+                if a.first_sched_us.is_none() {
+                    a.first_sched_us = Some(a.submitted.elapsed().as_secs_f64() * 1e6);
+                }
             }
         }
         if !any {
@@ -665,11 +1014,24 @@ impl<E: DecodeEngine> Scheduler<E> {
                     a.fed += 1;
                 }
             }
-            if self.sample_and_check(b, &logits[b], new_pos, max_seq, &mut new_tokens) {
+            let finished = self.sample_and_check(b, &logits[b], new_pos, max_seq, &mut new_tokens);
+            if running[b] {
+                // A running slot always samples on a decode step: record
+                // how many call iterations (and how much engine time) it
+                // waited since its previous token, then reset.
+                let a = self.active[b].as_mut().expect("checked above");
+                let stall = a.stall_steps;
+                let wait = a.wait_us + step_us;
+                a.stall_steps = 0;
+                a.wait_us = 0.0;
+                self.metrics.record_decode_token_wait(stall, wait);
+            }
+            if finished {
                 done.push(self.retire(b)?);
             }
         }
         self.metrics.record_step(step_us, new_tokens, self.slots.active_count(), self.pending.len());
+        self.metrics.record_token_mix(prompt_fed, decode_fed);
         Ok(done)
     }
 
@@ -1478,6 +1840,224 @@ mod tests {
             .unwrap();
         assert!(s.slots.has_prefix_cache());
         assert_eq!(s.slots.pool().unwrap().total_blocks(), 8);
+    }
+
+    // -- decode-priority step composer (--step-budget) ---------------------
+
+    #[test]
+    fn step_budget_requires_prefill_engine_and_empty_scheduler() {
+        // Chunk-1 engines have no prefill burst to bound.
+        let s = sched(2, 64, 8);
+        assert!(s.with_step_budget(8).is_err());
+        // Budget 0 means "off": reject rather than silently disabling.
+        let s = sched_prefill(2, 64, 8, 16);
+        assert!(s.with_step_budget(0).is_err());
+        // Must be configured before work arrives.
+        let mut s = sched_prefill(2, 64, 8, 16);
+        s.submit(GenRequest::greedy(b"abc", 2)).unwrap();
+        assert!(s.with_step_budget(8).is_err());
+        // Composes with paging and the prefix cache.
+        let e = MockEngine::new(2, 64, 64).with_block_pool(16, 4).with_prefill_chunk(8);
+        let s = Scheduler::new(e, 8)
+            .unwrap()
+            .with_prefix_cache()
+            .unwrap()
+            .with_step_budget(8)
+            .unwrap();
+        assert!(s.step_budget.is_some());
+    }
+
+    #[test]
+    fn composer_decodes_every_iteration_and_bounds_the_prefill_take() {
+        // THE composer acceptance check: a 40-token prompt joining one
+        // in-flight decode. Budget-off, the decoder stalls for the whole
+        // ceil(40/16) = 3-call prefill burst; budget-on, it produces a
+        // token every iteration (stall 0) and no prefill call ever
+        // carries more than max(B - decode_lanes, guard) prompt tokens.
+        let newcomer = || GenRequest::greedy(&[b'p'; 40], 4);
+        // -- budget off: the PR 4 behavior, now measured.
+        let mut off = sched_prefill(2, 256, 8, 16);
+        off.submit(GenRequest::greedy(b"ab", 30)).unwrap();
+        off.step().unwrap(); // prefill "ab" + first token
+        assert_eq!(off.slot_phase(0), SlotPhase::Running);
+        off.submit(newcomer()).unwrap();
+        let done = off.run().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(off.metrics.max_decode_stall_steps(), 3, "3-call burst stalls the decoder");
+        assert_eq!(off.metrics.mixed_steps, 0);
+        // -- budget on: same workload, bounded hiccup.
+        let mut on = sched_prefill(2, 256, 8, 16).with_step_budget(8).unwrap();
+        on.submit(GenRequest::greedy(b"ab", 30)).unwrap();
+        on.step().unwrap();
+        assert_eq!(on.slot_phase(0), SlotPhase::Running);
+        assert_eq!(on.slot_phase(1), SlotPhase::Cold);
+        on.submit(newcomer()).unwrap();
+        on.step().unwrap();
+        assert_eq!(on.slot_phase(1), SlotPhase::Warming, "admitted, prompt split across steps");
+        let done = on.run().unwrap();
+        assert_eq!(done.len(), 2);
+        assert_eq!(on.metrics.max_decode_stall_steps(), 0, "decode priority: no stall at all");
+        // Budget 8 minus 1 decode lane leaves 7 prompt tokens per call.
+        assert_eq!(on.engine().max_prefill_call_tokens, 7);
+        // ceil(40/7) = 6 prefill calls for the newcomer, every one of them
+        // composed with a decode call.
+        assert_eq!(on.engine().prefill_calls, 7, "1 warmup + 6 newcomer calls");
+        assert!(on.metrics.mixed_steps >= 6);
+        // The schedule changed; the bytes must not have.
+        let mut by_id_on: Vec<_> = done.iter().map(|c| (c.id, c.completion.clone())).collect();
+        by_id_on.sort();
+        let mut solo = sched(1, 256, 8);
+        solo.submit(GenRequest::greedy(b"ab", 30)).unwrap();
+        let want = solo.run().unwrap();
+        assert_eq!(by_id_on[0].1, want[0].completion);
+    }
+
+    #[test]
+    fn composer_starvation_guard_keeps_prefill_moving() {
+        // 8 decode lanes over budget 4: once all 8 are running, the decode
+        // batch alone overflows the budget, but the guard (max(1, 4/4) = 1)
+        // still feeds the newcomer's prompt one token per step — prefill
+        // never starves, and no call ever exceeds the plan.
+        let mut s = sched_prefill(9, 512, 16, 16).with_step_budget(4).unwrap();
+        for i in 0..8 {
+            s.submit(GenRequest::sampled(b"abcd", 60, Sampler::top_k(8, 0.9), i)).unwrap();
+        }
+        // Warm up under the budget until every lane decodes.
+        for _ in 0..100 {
+            if (0..8).all(|b| s.slot_phase(b) == SlotPhase::Running) {
+                break;
+            }
+            s.step().unwrap();
+        }
+        assert!((0..8).all(|b| s.slot_phase(b) == SlotPhase::Running));
+        // No step may have fed more than the budget's prefill share
+        // (decode lanes were still warming, so the share was 1..=4).
+        assert!(s.engine().max_prefill_call_tokens <= 4);
+        let calls_before = s.engine().prefill_calls;
+        let late = s.submit(GenRequest::greedy(&[b'n'; 12], 2)).unwrap();
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 9);
+        assert!(done.iter().any(|c| c.id == late));
+        assert_eq!(s.metrics.max_decode_stall_steps(), 0);
+        // 8 running lanes >= budget 4, so the guard's single token per
+        // step is all the newcomer gets: exactly 12 one-token calls.
+        assert_eq!(s.engine().prefill_calls - calls_before, 12);
+        assert!(s.engine().max_prefill_call_tokens <= 4, "guard calls carried 1 token");
+    }
+
+    #[test]
+    fn composer_splits_prompts_at_arbitrary_boundaries() {
+        // Budget 5 under a T=16 graph: a 13-token prompt is consumed as
+        // 5 + 5 + 3 — boundaries no artifact was built for, carried by the
+        // ragged n_valid input.
+        let mut s = sched_prefill(1, 64, 8, 16).with_step_budget(5).unwrap();
+        s.submit(GenRequest::greedy(&[b'q'; 13], 2)).unwrap();
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].completion.len(), 2);
+        assert_eq!(s.engine().prefill_calls, 3);
+        assert_eq!(s.engine().prefill_tokens_fed, 13);
+        assert_eq!(s.engine().max_prefill_call_tokens, 5);
+        assert_eq!(s.engine().steps, 1, "token 1 from the last chunk, token 2 from decode");
+        assert_eq!(s.metrics.tokens_prefilled, 13);
+    }
+
+    #[test]
+    fn composer_is_byte_identical_with_paged_eviction_and_prefix_cache() {
+        // Satellite: composer x prefix cache x paged eviction. Two
+        // requests that each need 4 pages over a 5-page pool force an
+        // eviction at every budget pacing (the survivor alone grows to 4
+        // pages while the other holds one and needs a second); the victim
+        // restarts warm through the survivor's donated pages. With the
+        // composer on, every completion must still be byte-identical to
+        // the budget-off run AND to a solo dense run.
+        let prompt: Vec<u8> = (0..8).map(|j| b'A' + j).collect();
+        let req = |seed| GenRequest::sampled(&prompt, 8, Sampler::top_k(8, 0.9), seed);
+        let mk = |budget: usize| {
+            let e = MockEngine::new(2, 32, 64).with_block_pool(5, 4).with_prefill_chunk(4);
+            let s = Scheduler::new(e, 8).unwrap().with_prefix_cache().unwrap();
+            if budget > 0 {
+                s.with_step_budget(budget).unwrap()
+            } else {
+                s
+            }
+        };
+        for budget in [0usize, 2, 3, 8] {
+            let mut s = mk(budget);
+            let a = s.submit(req(1)).unwrap();
+            let b = s.submit(req(2)).unwrap();
+            let done = s.run().unwrap();
+            assert_eq!(done.len(), 2, "budget {budget}");
+            assert!(
+                s.metrics.requests_evicted >= 1,
+                "budget {budget}: 2x4-page demand over 5 pages must evict"
+            );
+            for (seed, id) in [(1, a), (2, b)] {
+                let mut solo = sched(1, 32, 4);
+                solo.submit(req(seed)).unwrap();
+                let want = solo.run().unwrap();
+                let got = done.iter().find(|c| c.id == id).expect("completed");
+                assert_eq!(got.completion, want[0].completion, "budget {budget}, request {id}");
+            }
+            // Pages all returned or index-held, same as budget off.
+            let pool = s.slots.pool().unwrap();
+            assert_eq!(pool.used_blocks(), s.slots.prefix().unwrap().cached_pages());
+        }
+    }
+
+    #[test]
+    fn composer_warm_prefix_skip_is_byte_identical_on_and_off() {
+        // Warm restarts through cached prefix pages under the composer:
+        // same reuse accounting, same bytes as the budget-off warm run.
+        let run = |budget: usize| {
+            let mut s = {
+                let e =
+                    MockEngine::new(2, 128, 64).with_block_pool(32, 8).with_prefill_chunk(8);
+                let s = Scheduler::new(e, 64).unwrap().with_prefix_cache().unwrap();
+                if budget > 0 {
+                    s.with_step_budget(budget).unwrap()
+                } else {
+                    s
+                }
+            };
+            let w = shared_prefix_workload(2, 16, 8);
+            s.submit(w[0].clone()).unwrap();
+            s.run().unwrap();
+            s.submit(w[1].clone()).unwrap();
+            let d = s.run().unwrap();
+            (d[0].completion.clone(), s.metrics.tokens_reused)
+        };
+        let (off_bytes, off_reused) = run(0);
+        for budget in [3usize, 8, 32] {
+            let (bytes, reused) = run(budget);
+            assert_eq!(bytes, off_bytes, "budget {budget}");
+            assert_eq!(reused, off_reused, "budget {budget}: warm skip must be identical");
+            assert!(reused >= 16, "second request must map the shared pages");
+        }
+    }
+
+    #[test]
+    fn ttft_splits_queue_wait_from_prefill_spread() {
+        // Regression (satellite): a request that sat in the queue and a
+        // request whose prompt spread across many budgeted steps both have
+        // large TTFT — the split tells them apart.
+        let mut s = sched_prefill(1, 128, 8, 16).with_step_budget(2).unwrap();
+        s.submit(GenRequest::greedy(&[b'w'; 32], 2)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        let done = s.run().unwrap();
+        let ttft = done[0].ttft_ms.expect("generated");
+        assert_eq!(s.metrics.queue_us.len(), 1);
+        assert_eq!(s.metrics.prefill_spread_us.len(), 1);
+        let queue = s.metrics.queue_ms_p50();
+        let spread = s.metrics.prefill_spread_ms_p50();
+        assert!(queue >= 15.0, "queue wait {queue}ms lost the pre-step sleep");
+        assert!(spread >= 0.0);
+        // The two halves are stamped from one clock and sum exactly.
+        assert!((queue + spread - ttft).abs() < 1e-6, "{queue} + {spread} != {ttft}");
+        // 32 tokens at 2/step: the spread spans 16 prefill calls, so it
+        // must dominate the post-admission latency (strictly positive).
+        assert!(spread > 0.0);
+        assert_eq!(s.engine().prefill_calls, 16);
     }
 
     // -- legacy threaded Server ------------------------------------------

@@ -39,6 +39,24 @@ use anyhow::{bail, Result};
 use crate::serve::blocks::BlockPool;
 use crate::serve::prefix::{chain_of, chain_step, PrefixIndex, CHAIN_ROOT};
 
+/// Lifecycle phase of one slot with respect to its request's prompt — the
+/// partition the decode-priority step composer plans each step by:
+///
+/// * `Cold` — no occupant (the request, if any, is still queued).
+/// * `Warming` — occupied, still owes prompt tokens. Eligible for budgeted
+///   prefill chunks; its prompt may split across steps at arbitrary
+///   boundaries (partial-prompt positions: `pos` tracks exactly the prompt
+///   prefix written so far, cached prefix pages included).
+/// * `Running` — prompt fully fed; produces one token per decode call and
+///   is scheduled *first* under a step budget, so a newcomer's prefill can
+///   never stall it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotPhase {
+    Cold,
+    Warming,
+    Running,
+}
+
 /// Occupancy record for one slot.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct SlotInfo {

@@ -17,7 +17,15 @@
 //! implementations stay independent), LRU-clock touch on lookup, donation
 //! the moment a prompt page fills, per-entry slot reference counts, a
 //! watermark that charges only the non-shared remainder, and pool-pressure
-//! eviction of LRU unreferenced entries. No engine, no logits, no clocks —
+//! eviction of LRU unreferenced entries. With `step_budget > 0` it models
+//! the **decode-priority step composer**: the phase partition (running vs
+//! warming slots), the full decode batch first, budgeted prefill takes in
+//! slot order under the starvation guard, fixed (non-redistributed) plans
+//! across mid-growth evictions, and the mixed-step decode-call/prefill-call
+//! accounting. It also predicts `max_decode_stall_steps` — the worst
+//! number of engine-call iterations any running slot waited between its
+//! own tokens — for *every* configuration, which is the observable the
+//! composer exists to pin at zero. No engine, no logits, no clocks —
 //! just the admission/join/evict/budget/reuse arithmetic the real
 //! [`crate::serve::Scheduler`] must implement.
 //!
@@ -81,10 +89,14 @@ pub struct SimConfig {
     pub block_size: usize,
     /// Model the content-addressed prefix cache (needs `kv_blocks > 0`).
     pub prefix_cache: bool,
+    /// Per-step token budget of the decode-priority step composer; 0 = off
+    /// (the classic drain-prefill-then-decode loop). Needs
+    /// `prefill_chunk > 1`, like the real scheduler.
+    pub step_budget: usize,
 }
 
 impl SimConfig {
-    /// Dense configuration (no paging).
+    /// Dense configuration (no paging, composer off).
     pub fn dense(slots: usize, max_seq: usize, max_queue: usize, prefill_chunk: usize) -> Self {
         Self {
             slots,
@@ -94,7 +106,14 @@ impl SimConfig {
             kv_blocks: 0,
             block_size: 1,
             prefix_cache: false,
+            step_budget: 0,
         }
+    }
+
+    /// The composer's starvation guard — must match
+    /// `Scheduler::prefill_guard` exactly.
+    fn prefill_guard(budget: usize) -> usize {
+        (budget / 4).max(1)
     }
 }
 
@@ -127,6 +146,12 @@ pub struct SimResult {
     pub evictions: usize,
     /// Prefix cache only: prompt tokens mapped from cached pages.
     pub tokens_reused: usize,
+    /// Worst decode stall: the most engine-call iterations any running
+    /// slot (prompt fully fed) sat through without producing a token
+    /// between two of its own tokens. Budget-off chunked prefill drives
+    /// this to `ceil(len/chunk)` during a long prompt; the composer pins
+    /// it at 0.
+    pub max_decode_stall_steps: usize,
 }
 
 #[derive(Clone, Debug)]
@@ -143,6 +168,9 @@ struct SimSlot {
     /// Prefix: index entries this slot references — mapped at admission or
     /// donated by this slot (counts toward its table coverage).
     refs: Vec<u64>,
+    /// Engine-call iterations this slot idled through since its last token
+    /// (only ticks while running — mirrors `Active::stall_steps`).
+    stall: usize,
 }
 
 /// One cached page in the oracle's index: its exact token-prefix key, LRU
@@ -322,6 +350,7 @@ impl SimState {
                 pos: cached,
                 own_pages,
                 refs: matched,
+                stall: 0,
             });
         }
     }
@@ -391,11 +420,23 @@ impl SimState {
         }
     }
 
-    /// Mirror of `Scheduler::step`: admit, then one prefill call or one
-    /// decode step; retire finished slots in slot order.
+    /// Mirror of `Scheduler::step`: admit, then — with a step budget — one
+    /// composed decode-priority iteration, otherwise one prefill call or
+    /// one decode step; retire finished slots in slot order.
     fn step(&mut self, res: &mut SimResult) {
         self.admit(res);
         let chunk = self.cfg.prefill_chunk.max(1);
+        // Running snapshot, taken (like the real scheduler's) before any
+        // growth can evict a slot.
+        let running: Vec<bool> = self
+            .slots
+            .iter()
+            .map(|s| s.as_ref().map_or(false, |s| s.fed >= s.req.prompt_len))
+            .collect();
+        if self.cfg.step_budget > 0 {
+            self.composed_step(chunk, &running, res);
+            return;
+        }
         let owes = |s: &Option<SimSlot>| s.as_ref().map_or(false, |s| s.fed < s.req.prompt_len);
         let prefilling = chunk > 1 && self.slots.iter().any(owes);
         if prefilling {
@@ -410,7 +451,8 @@ impl SimState {
                 }
                 if !self.slots.iter().any(owes) {
                     // Every prefiller was evicted: the real scheduler skips
-                    // the engine call this iteration.
+                    // the engine call this iteration (no stall tick — no
+                    // call ran).
                     res.occupancy.push((self.occupied(), self.pending.len()));
                     return;
                 }
@@ -443,6 +485,15 @@ impl SimState {
                     }
                 }
             }
+            // Running slots idled through this prefill call: that is the
+            // decode hiccup, one stall tick each.
+            for b in 0..self.cfg.slots {
+                if running[b] {
+                    if let Some(s) = self.slots[b].as_mut() {
+                        s.stall += 1;
+                    }
+                }
+            }
         } else {
             if self.paged() {
                 for b in 0..self.cfg.slots {
@@ -465,6 +516,130 @@ impl SimState {
                         if s.fed < s.req.prompt_len {
                             s.fed += 1;
                         }
+                        let mut fin = false;
+                        if s.fed >= s.req.prompt_len {
+                            if s.gen < s.req.max_new {
+                                s.gen += 1;
+                            }
+                            if s.gen >= s.req.max_new {
+                                fin = true;
+                            }
+                        }
+                        if running[b] {
+                            // A running slot always samples on a decode
+                            // step: its accumulated stall is recorded.
+                            res.max_decode_stall_steps =
+                                res.max_decode_stall_steps.max(s.stall);
+                            s.stall = 0;
+                        }
+                        Some((old_pos, s.pos, fin || s.pos >= self.cfg.max_seq))
+                    }
+                    None => continue,
+                };
+                if let Some((old_pos, new_pos, finished)) = advanced {
+                    self.donate(b, old_pos, new_pos);
+                    if finished {
+                        self.retire(b, res);
+                    }
+                }
+            }
+        }
+        res.occupancy.push((self.occupied(), self.pending.len()));
+    }
+
+    /// Mirror of `Scheduler::composed_step`: partition by phase, run the
+    /// whole decode set, then fill what remains of the budget (floored by
+    /// the starvation guard) with prefill takes in slot order. Growth runs
+    /// decode slots first; an eviction drops its slot from the fixed plan.
+    fn composed_step(&mut self, chunk: usize, running: &[bool], res: &mut SimResult) {
+        if self.occupied() == 0 {
+            // Idle (a pending-but-unadmittable queue is impossible here:
+            // with every slot free the watermark always passes).
+            return;
+        }
+        let budget = self.cfg.step_budget;
+        let decode_tokens = running.iter().filter(|&&r| r).count();
+        let any_warming =
+            self.slots.iter().any(|s| s.as_ref().map_or(false, |s| s.fed < s.req.prompt_len));
+        let mut prefill_left = if any_warming {
+            budget.saturating_sub(decode_tokens).max(SimConfig::prefill_guard(budget))
+        } else {
+            0
+        };
+        let mut takes = vec![0usize; self.cfg.slots];
+        for b in 0..self.cfg.slots {
+            if prefill_left == 0 {
+                break;
+            }
+            if let Some(s) = self.slots[b].as_ref() {
+                if s.fed < s.req.prompt_len {
+                    let take = chunk.min(s.req.prompt_len - s.fed).min(prefill_left);
+                    takes[b] = take;
+                    prefill_left -= take;
+                }
+            }
+        }
+        if self.paged() {
+            for b in 0..self.cfg.slots {
+                if running[b] && self.slots[b].is_some() {
+                    let target = self.slots[b].as_ref().expect("occupied").pos + 1;
+                    self.grow_or_evict(b, target, res);
+                }
+            }
+            for b in 0..self.cfg.slots {
+                if takes[b] > 0 && self.slots[b].is_some() {
+                    let target = self.slots[b].as_ref().expect("occupied").pos + takes[b];
+                    self.grow_or_evict(b, target, res);
+                }
+            }
+        }
+        // -- decode call over the surviving decode set.
+        let any_d = (0..self.cfg.slots).any(|b| running[b] && self.slots[b].is_some());
+        if any_d {
+            res.decode_steps += 1;
+            for b in 0..self.cfg.slots {
+                if !running[b] {
+                    continue;
+                }
+                let advanced = match self.slots[b].as_mut() {
+                    Some(s) => {
+                        let old_pos = s.pos;
+                        s.pos += 1;
+                        let mut fin = false;
+                        if s.gen < s.req.max_new {
+                            s.gen += 1;
+                        }
+                        if s.gen >= s.req.max_new {
+                            fin = true;
+                        }
+                        res.max_decode_stall_steps = res.max_decode_stall_steps.max(s.stall);
+                        s.stall = 0;
+                        Some((old_pos, s.pos, fin || s.pos >= self.cfg.max_seq))
+                    }
+                    None => continue,
+                };
+                if let Some((old_pos, new_pos, finished)) = advanced {
+                    self.donate(b, old_pos, new_pos);
+                    if finished {
+                        self.retire(b, res);
+                    }
+                }
+            }
+        }
+        // -- at most one prefill call over the surviving planned takes.
+        let any_p = (0..self.cfg.slots).any(|b| takes[b] > 0 && self.slots[b].is_some());
+        if any_p {
+            res.prefill_calls += 1;
+            for b in 0..self.cfg.slots {
+                if takes[b] == 0 {
+                    continue;
+                }
+                let advanced = match self.slots[b].as_mut() {
+                    Some(s) => {
+                        let take = takes[b];
+                        let old_pos = s.pos;
+                        s.fed += take;
+                        s.pos += take;
                         let mut fin = false;
                         if s.fed >= s.req.prompt_len {
                             if s.gen < s.req.max_new {
@@ -535,12 +710,14 @@ mod tests {
         if cfg.kv_blocks > 0 {
             engine = engine.with_block_pool(cfg.kv_blocks, cfg.block_size);
         }
-        let s = Scheduler::new(engine, cfg.max_queue).expect("scheduler");
+        let mut s = Scheduler::new(engine, cfg.max_queue).expect("scheduler");
         if cfg.prefix_cache {
-            s.with_prefix_cache().expect("prefix cache over a paged engine")
-        } else {
-            s
+            s = s.with_prefix_cache().expect("prefix cache over a paged engine");
         }
+        if cfg.step_budget > 0 {
+            s = s.with_step_budget(cfg.step_budget).expect("budget over a prefill engine");
+        }
+        s
     }
 
     /// Drive the REAL scheduler (over MockEngine) through the same trace
@@ -577,6 +754,7 @@ mod tests {
         res.prefill_calls = s.engine().prefill_calls;
         res.evictions = s.metrics.requests_evicted;
         res.tokens_reused = s.metrics.tokens_reused;
+        res.max_decode_stall_steps = s.metrics.max_decode_stall_steps();
         res
     }
 
@@ -630,6 +808,7 @@ mod tests {
             kv_blocks: g.int(1, full.max(2)),
             block_size,
             prefix_cache: false,
+            step_budget: 0,
         };
         let events = random_events(g, &cfg);
         (cfg, events)
@@ -664,6 +843,7 @@ mod tests {
             kv_blocks: g.int(1, full.max(2)),
             block_size,
             prefix_cache: true,
+            step_budget: 0,
         };
         let n_events = g.int(4, 40);
         let mut events = Vec::with_capacity(n_events);
@@ -690,6 +870,120 @@ mod tests {
     fn check_equivalence_prefix(g: &mut Gen) -> Result<(), String> {
         let (cfg, events) = random_prefix_trace(g);
         check_trace(&cfg, &events)
+    }
+
+    /// Composer trace: chunk > 1 (the budget needs a prefill graph),
+    /// budget from far-below-chunk to far-above, dense or paged (with the
+    /// prefix cache sometimes stacked on top) — cancels and backpressure
+    /// included, since equivalence only needs matching ids, not matching
+    /// bytes across runs.
+    fn random_composer_trace(g: &mut Gen) -> (SimConfig, Vec<SimEvent>) {
+        let slots = g.int(1, 4);
+        let max_seq = g.int(6, 48);
+        let chunk = *g.pick(&[2usize, 3, 4, 8, 16]);
+        let budget = *g.pick(&[1usize, 2, 3, 4, 8, 16, 32]);
+        let paged = g.bool();
+        let block_size = *g.pick(&[1usize, 2, 3, 4, 8]);
+        let full = slots * max_seq.div_ceil(block_size);
+        let cfg = SimConfig {
+            slots,
+            max_seq,
+            max_queue: g.int(1, 6),
+            prefill_chunk: chunk,
+            kv_blocks: if paged { g.int(1, full.max(2)) } else { 0 },
+            block_size,
+            prefix_cache: paged && g.bool(),
+            step_budget: budget,
+        };
+        let n_events = g.int(4, 40);
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            match g.int(0, 9) {
+                0..=3 => {
+                    if cfg.prefix_cache {
+                        events.push(random_shared_submit(g, &cfg));
+                    } else {
+                        let prompt_len = if g.int(0, 19) == 0 {
+                            *g.pick(&[0usize, cfg.max_seq, cfg.max_seq + 3])
+                        } else {
+                            g.int(1, (cfg.max_seq - 1).min(24))
+                        };
+                        events.push(SimEvent::Submit(SimRequest::plain(prompt_len, g.int(0, 8))));
+                    }
+                }
+                4..=8 => events.push(SimEvent::Step),
+                _ => events.push(SimEvent::Cancel(g.int(0, 12) as u64)),
+            }
+        }
+        (cfg, events)
+    }
+
+    fn check_equivalence_composer(g: &mut Gen) -> Result<(), String> {
+        let (cfg, events) = random_composer_trace(g);
+        check_trace(&cfg, &events)
+    }
+
+    /// The latency-bound + regression-anchor property (satellite): on a
+    /// no-cancel, no-backpressure trace, (a) the budgeted run's worst
+    /// decode stall respects ceil(chunk/B) — checked inside `check_trace`
+    /// and re-checked here directly against the real scheduler — and (b)
+    /// every request's *bytes* are identical with the composer on and off
+    /// (the budget only reshapes the schedule; budget-off is the verbatim
+    /// PR 4 path, so this anchors the composer to it).
+    fn check_composer_latency_bound_and_off_anchor(g: &mut Gen) -> Result<(), String> {
+        let slots = g.int(1, 4);
+        let max_seq = g.int(8, 48);
+        let chunk = *g.pick(&[2usize, 4, 8, 16]);
+        let paged = g.bool();
+        let block_size = *g.pick(&[2usize, 4, 8]);
+        let full = slots * max_seq.div_ceil(block_size);
+        let on_cfg = SimConfig {
+            slots,
+            max_seq,
+            // No backpressure, no cancels: ids line up run to run.
+            max_queue: 64,
+            prefill_chunk: chunk,
+            kv_blocks: if paged { g.int(2, full.max(3)) } else { 0 },
+            block_size,
+            prefix_cache: paged && g.bool(),
+            step_budget: *g.pick(&[1usize, 2, 4, 8, 16]),
+        };
+        let off_cfg = SimConfig { step_budget: 0, ..on_cfg };
+        let n_events = g.int(4, 30);
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            if g.int(0, 2) == 0 {
+                events.push(random_shared_submit(g, &on_cfg));
+            } else {
+                events.push(SimEvent::Step);
+            }
+        }
+        let real_on = run_real(&on_cfg, &events);
+        let bound = chunk.div_ceil(on_cfg.step_budget);
+        if real_on.max_decode_stall_steps > bound {
+            return Err(format!(
+                "{on_cfg:?}: stall {} > ceil(chunk/B) = {bound}",
+                real_on.max_decode_stall_steps
+            ));
+        }
+        let on = completions_by_id(&on_cfg, &events);
+        let off = completions_by_id(&off_cfg, &events);
+        if on.len() != off.len() {
+            return Err(format!(
+                "{on_cfg:?}: {} completions with composer on, {} off",
+                on.len(),
+                off.len()
+            ));
+        }
+        for (id, bytes) in &on {
+            if off.get(id) != Some(bytes) {
+                return Err(format!(
+                    "{on_cfg:?}: request {id} diverged\non:  {bytes:?}\noff: {:?}",
+                    off.get(id)
+                ));
+            }
+        }
+        Ok(())
     }
 
     fn check_trace(cfg: &SimConfig, events: &[SimEvent]) -> Result<(), String> {
@@ -745,6 +1039,24 @@ mod tests {
                 real.tokens_reused, oracle.tokens_reused
             ));
         }
+        if real.max_decode_stall_steps != oracle.max_decode_stall_steps {
+            return Err(format!(
+                "{cfg:?}: max decode stall {} vs oracle {}",
+                real.max_decode_stall_steps, oracle.max_decode_stall_steps
+            ));
+        }
+        // THE composer latency guarantee, enforced on every budgeted
+        // trace: no running slot ever waits more than ceil(chunk/B) steps
+        // between its own tokens (decode priority actually pins it at 0).
+        if cfg.step_budget > 0 {
+            let bound = cfg.prefill_chunk.div_ceil(cfg.step_budget);
+            if real.max_decode_stall_steps > bound {
+                return Err(format!(
+                    "{cfg:?}: decode stall {} breaks the ceil(chunk/B) = {bound} bound",
+                    real.max_decode_stall_steps
+                ));
+            }
+        }
         Ok(())
     }
 
@@ -785,22 +1097,31 @@ mod tests {
     /// ids line up run to run), every completed request's *bytes* are
     /// identical with the cache on and off — the cache only removes
     /// recomputation — while the cache-on run actually reuses tokens on
-    /// traces with real sharing.
+    /// traces with real sharing. Extended for the composer: the same
+    /// identity must hold under a step budget (chunk > 1 then, since the
+    /// budget needs a prefill graph).
     fn check_prefix_on_off_bit_identical(g: &mut Gen) -> Result<(), String> {
         let slots = g.int(1, 4);
         let max_seq = g.int(8, 48);
         let block_size = *g.pick(&[2usize, 4, 8]);
         let full = slots * max_seq.div_ceil(block_size);
+        let step_budget = *g.pick(&[0usize, 0, 2, 4, 8]);
+        let chunk = if step_budget > 0 {
+            *g.pick(&[2usize, 4, 8])
+        } else {
+            *g.pick(&[1usize, 2, 4, 8])
+        };
         let on_cfg = SimConfig {
             slots,
             max_seq,
             // No backpressure: every submit is accepted (or rejected for
             // size in both runs identically).
             max_queue: 64,
-            prefill_chunk: *g.pick(&[1usize, 2, 4, 8]),
+            prefill_chunk: chunk,
             kv_blocks: g.int(2, full.max(3)),
             block_size,
             prefix_cache: true,
+            step_budget,
         };
         let off_cfg = SimConfig { prefix_cache: false, ..on_cfg };
         let n_events = g.int(4, 30);
@@ -932,6 +1253,33 @@ mod tests {
         forall(1111, 120, check_prefix_on_off_bit_identical);
     }
 
+    // Step-composer traces (--step-budget): three pinned seeds x 120 = 360
+    // randomized cases over the phase partition, budgeted takes, guard,
+    // mixed-step call accounting, and the max_decode_stall_steps
+    // observable (bounded by ceil(chunk/B) inside check_trace) — dense,
+    // paged, and prefix-cached configurations mixed.
+
+    #[test]
+    fn sim_trace_equivalence_composer_seed_a() {
+        forall(1212, 120, check_equivalence_composer);
+    }
+
+    #[test]
+    fn sim_trace_equivalence_composer_seed_b() {
+        forall(1313, 120, check_equivalence_composer);
+    }
+
+    #[test]
+    fn sim_trace_equivalence_composer_seed_c() {
+        forall(1414, 120, check_equivalence_composer);
+    }
+
+    /// Latency-bound property + budget-off regression anchor (satellite).
+    #[test]
+    fn sim_trace_equivalence_composer_latency_bound_and_off_anchor() {
+        forall(1616, 120, check_composer_latency_bound_and_off_anchor);
+    }
+
     /// Extra exploration knob: SPINQUANT_SIM_SEED=1234 cargo test — runs
     /// another 120 dense + 120 paged + 120 prefix traces from an arbitrary
     /// seed without a rebuild.
@@ -942,6 +1290,7 @@ mod tests {
             forall(seed, 120, check_equivalence);
             forall(seed ^ 0x9a9a, 120, check_equivalence_paged);
             forall(seed ^ 0x7e1f, 120, check_equivalence_prefix);
+            forall(seed ^ 0x51e9, 120, check_equivalence_composer);
         }
     }
 
@@ -976,6 +1325,7 @@ mod tests {
             kv_blocks: 4,
             block_size: 4,
             prefix_cache: false,
+            step_budget: 0,
         };
         let events = [
             SimEvent::Submit(SimRequest::plain(4, 8)),
@@ -1003,6 +1353,7 @@ mod tests {
             kv_blocks: 3,
             block_size: 4,
             prefix_cache: false,
+            step_budget: 0,
         };
         let events = [
             SimEvent::Submit(SimRequest::plain(2, 1)), // 1 page
@@ -1019,6 +1370,57 @@ mod tests {
     }
 
     #[test]
+    fn oracle_smoke_composed_step() {
+        // Hand-checkable composer trace: 2 slots, chunk 8, budget 4.
+        // A (prompt 6, budget 2) and B (prompt 3, budget 2) submitted
+        // together; the drain composes:
+        //   step 1: prefill A[0..4]                 (budget 4, B starved)
+        //   step 2: prefill A[4..6] + B[0..2]       (A's first token)
+        //   step 3: decode A (retires) + prefill B[2..3] (B's first token)
+        //   step 4: decode B (retires)
+        let mut cfg = SimConfig::dense(2, 64, 4, 8);
+        cfg.step_budget = 4;
+        let events = [
+            SimEvent::Submit(SimRequest::plain(6, 2)),
+            SimEvent::Submit(SimRequest::plain(3, 2)),
+        ];
+        let res = simulate(&cfg, &events);
+        assert_eq!(res.submits, vec![Some(0), Some(1)]);
+        assert_eq!(res.prefill_calls, 3);
+        assert_eq!(res.decode_steps, 2);
+        assert_eq!(res.completion_order, vec![0, 1]);
+        assert_eq!(res.generated.get(&0), Some(&2));
+        assert_eq!(res.generated.get(&1), Some(&2));
+        assert_eq!(res.occupancy, vec![(2, 0), (2, 0), (1, 0), (0, 0)]);
+        assert_eq!(res.max_decode_stall_steps, 0, "decode priority leaves no stall");
+        // The real scheduler agrees on the whole composed trace.
+        check_trace(&cfg, &events).unwrap();
+    }
+
+    #[test]
+    fn oracle_smoke_budget_off_stall_is_visible() {
+        // The observable the composer exists to remove: budget off, a
+        // 20-token prompt (chunk 8 -> 3 prefill calls) joins a running
+        // decode, which therefore waits 3 engine calls between tokens.
+        let cfg = SimConfig::dense(2, 64, 4, 8);
+        let events = [
+            SimEvent::Submit(SimRequest::plain(2, 6)),
+            SimEvent::Step, // prefill "A", first token
+            SimEvent::Step, // decode
+            SimEvent::Submit(SimRequest::plain(20, 1)),
+        ];
+        let res = simulate(&cfg, &events);
+        assert_eq!(res.max_decode_stall_steps, 3, "ceil(20/8) = 3 stalled calls");
+        check_trace(&cfg, &events).unwrap();
+        // Same trace, composed under budget 4: the stall disappears.
+        let mut on = cfg;
+        on.step_budget = 4;
+        let res = simulate(&on, &events);
+        assert_eq!(res.max_decode_stall_steps, 0);
+        check_trace(&on, &events).unwrap();
+    }
+
+    #[test]
     fn oracle_smoke_prefix_reuse() {
         // Hand-checkable prefix trace: pool of 6 pages x 4 tokens. Request
         // 0 (prompt 9 = 2 full shared pages + 1 token, budget 3) donates
@@ -1032,6 +1434,7 @@ mod tests {
             kv_blocks: 6,
             block_size: 4,
             prefix_cache: true,
+            step_budget: 0,
         };
         let shared = SimRequest { prompt_len: 9, max_new: 3, shared_len: 9, group: 7, tag: 0 };
         let events = [
