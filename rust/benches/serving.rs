@@ -35,6 +35,18 @@
 //! * `sampler` — per-draw top-k / top-p cost before (full vocabulary sort,
 //!   the pre-PR implementation, inlined here as the baseline) and after
 //!   (partial selection via `select_nth_unstable_by`).
+//! * `trace` — the flight recorder audited two ways on the decode-stall
+//!   scenario: (1) overhead — the identical leg with tracing off vs on
+//!   (ring capacity 2^20), mean step latency side by side, plus a
+//!   bit-identical completions check (recording must never reshape the
+//!   schedule; with the sink off the emission sites are one enum branch,
+//!   so the off numbers are the real hot path, not an instrumented one);
+//!   (2) fidelity — the traced leg's per-request timelines are folded
+//!   back and cross-checked against `ServingMetrics`
+//!   (`serve::verify_against_metrics`: TTFT = queue + spread per request,
+//!   stall histogram identical — asserted, exported as
+//!   `spans_match_metrics`), and the raw ring is exported as a Chrome
+//!   trace-event / Perfetto timeline in `BENCH_decode_stall_trace.json`.
 //!
 //! Engine selection: the PJRT engine is used when `make artifacts` has run
 //! (batch 1 via `decode_nohad`, batch N via `decode_nohad_b{N}`, prefill
@@ -54,8 +66,8 @@ use spinquant::model::{Manifest, Weights};
 use spinquant::report;
 use spinquant::runtime::Runtime;
 use spinquant::serve::{
-    blocks, DecodeVariant, GenRequest, MockEngine, PjrtEngine, Sampler, Scheduler,
-    ServingMetrics,
+    blocks, chrome_trace, verify_against_metrics, DecodeVariant, GenRequest, MockEngine,
+    PjrtEngine, Sampler, Scheduler, ServingMetrics, TraceRecord,
 };
 use spinquant::util::json::{self, Json};
 use spinquant::util::prng::Prng;
@@ -468,6 +480,8 @@ struct StallLeg {
     completions: Vec<(u64, Vec<u8>)>,
     steps: usize,
     prefill_calls: usize,
+    trace_records: Vec<TraceRecord>,
+    trace_dropped: u64,
 }
 
 /// 7 active decodes, then one 512-token prompt joins. `budget == 0` is the
@@ -475,13 +489,17 @@ struct StallLeg {
 /// every decoder for ceil(512/64) = 8 consecutive calls); `budget > 0`
 /// composes each step, so the decoders never stall — at the price of a
 /// slower (more spread-out) newcomer prefill. Both honest numbers land in
-/// the JSON.
-fn run_stall_leg(budget: usize) -> StallLeg {
+/// the JSON. `trace_capacity > 0` turns the flight recorder on (the
+/// `trace` section compares this leg against the untraced one).
+fn run_stall_leg(budget: usize, trace_capacity: usize) -> StallLeg {
     let engine =
         MockEngine::new(STALL_LANES, STALL_MAX_SEQ, 256).with_prefill_chunk(STALL_CHUNK);
     let mut sched = Scheduler::new(engine, 64).expect("scheduler");
     if budget > 0 {
         sched = sched.with_step_budget(budget).expect("prefill engine");
+    }
+    if trace_capacity > 0 {
+        sched = sched.with_trace(trace_capacity);
     }
     for i in 0..STALL_DECODERS {
         let prompt: Vec<u8> = (0..4).map(|j| (40 + i * 7 + j * 3) as u8).collect();
@@ -523,6 +541,8 @@ fn run_stall_leg(budget: usize) -> StallLeg {
         completions,
         steps: sched.engine().steps,
         prefill_calls: sched.engine().prefill_calls,
+        trace_records: sched.trace_records(),
+        trace_dropped: sched.trace_dropped_events(),
         metrics: sched.metrics,
     }
 }
@@ -538,7 +558,7 @@ fn decode_stall_sweep() -> Json {
         "budget", "max stall", "inter-tok p99 ms", "newcomer ttft", "mixed", "steps", "prefill"
     );
     let legs: Vec<(usize, StallLeg)> =
-        STALL_BUDGETS.iter().map(|&b| (b, run_stall_leg(b))).collect();
+        STALL_BUDGETS.iter().map(|&b| (b, run_stall_leg(b, 0))).collect();
     for (budget, leg) in &legs {
         println!(
             "{:<10} {:>12} {:>16.3} {:>14.3} {:>12} {:>12} {:>12}",
@@ -595,6 +615,66 @@ fn decode_stall_sweep() -> Json {
     }
     out.push(("bit_identical".to_string(), Json::Bool(bit_identical)));
     json::obj(out.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+}
+
+// -- flight recorder: overhead when off, fidelity when on --------------------
+
+const TRACE_RING: usize = 1 << 20;
+
+/// The decode-stall off leg, untraced vs traced. The off leg re-runs here
+/// (instead of reusing the sweep above) so both step-latency numbers come
+/// from adjacent runs of identical work on the same machine state.
+fn trace_sweep() -> Json {
+    let off = run_stall_leg(0, 0);
+    let on = run_stall_leg(0, TRACE_RING);
+    let bit_identical = off.completions == on.completions;
+    assert!(bit_identical, "tracing changed generated bytes");
+    assert!(off.trace_records.is_empty(), "untraced leg must record nothing");
+    assert_eq!(on.trace_dropped, 0, "2^20-event ring must hold the whole stall leg");
+    // Fold the recorded timelines back and hold them to the aggregate
+    // metrics: per-request TTFT = queue wait + prefill spread, identical
+    // stall histogram, token / completion / eviction / reuse counts.
+    let spans = verify_against_metrics(&on.trace_records, &on.metrics);
+    if let Err(e) = &spans {
+        eprintln!("trace verification failed: {e}");
+    }
+    assert!(spans.is_ok(), "trace timelines must agree with ServingMetrics");
+    let chrome = chrome_trace(&on.trace_records, on.trace_dropped);
+    let n_events = match &chrome {
+        Json::Obj(m) => match m.get("traceEvents") {
+            Some(Json::Arr(a)) => a.len(),
+            _ => 0,
+        },
+        _ => 0,
+    };
+    assert!(n_events > 0, "chrome export must carry events");
+    let trace_path = std::path::Path::new("BENCH_decode_stall_trace.json");
+    if let Err(e) = report::write_json(trace_path, &chrome) {
+        eprintln!("failed to write {}: {e:#}", trace_path.display());
+    }
+    let off_step = off.metrics.step_us.mean_us();
+    let on_step = on.metrics.step_us.mean_us();
+    println!();
+    println!(
+        "flight recorder (decode-stall leg): step {off_step:.3} us untraced vs \
+         {on_step:.3} us traced; {} events recorded, {} dropped; timelines agree \
+         with metrics; wrote {}",
+        on.trace_records.len(),
+        on.trace_dropped,
+        trace_path.display()
+    );
+    json::obj(vec![
+        ("ring_capacity", json::num(TRACE_RING as f64)),
+        ("off_step_us_mean", json::num(off_step)),
+        ("on_step_us_mean", json::num(on_step)),
+        ("overhead_x", json::num(on_step / off_step.max(1e-9))),
+        ("events", json::num(on.trace_records.len() as f64)),
+        ("dropped_events", json::num(on.trace_dropped as f64)),
+        ("chrome_events", json::num(n_events as f64)),
+        ("spans_match_metrics", Json::Bool(spans.is_ok())),
+        ("bit_identical", Json::Bool(bit_identical)),
+        ("chrome_trace", json::s("BENCH_decode_stall_trace.json")),
+    ])
 }
 
 // -- sampler cost: full-sort baseline vs partial selection -------------------
@@ -771,6 +851,7 @@ fn main() {
     let paged = paged_sweep();
     let prefix_cache = prefix_sweep();
     let decode_stall = decode_stall_sweep();
+    let trace = trace_sweep();
     let sampler = sampler_cost();
 
     let out = json::obj(vec![
@@ -784,6 +865,7 @@ fn main() {
         ("paged", paged),
         ("prefix_cache", prefix_cache),
         ("decode_stall", decode_stall),
+        ("trace", trace),
         ("sampler", sampler),
         (
             "ttft",

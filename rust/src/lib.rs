@@ -32,11 +32,19 @@
 //!   greedy/temperature/top-k/top-p samplers with partial candidate
 //!   selection (no full-vocabulary sorts on the hot path), and serving
 //!   metrics — TTFT from enqueue split into queue wait vs prefill
-//!   spread, latency percentiles, decode-stall histogram, inter-token
-//!   p99, tokens/sec, evictions), the seeded scheduler-simulation oracle
-//!   (`testing::sim`, dense / paged / prefix-cached / composed), and the
-//!   benchmark harnesses that regenerate every table and figure of the
-//!   paper.
+//!   spread, latency percentiles, decode-stall and log-bucketed latency
+//!   histograms, inter-token p99, tokens/sec, evictions — plus a
+//!   flight-recorder event trace (`serve::trace`: a bounded ring of
+//!   typed, step-indexed scheduler events — request lifecycle, page
+//!   alloc/retain/release, prefix donations/hits, composer plans —
+//!   enabled with `serve --trace out.json`, exported as a Chrome
+//!   trace-event/Perfetto timeline, folded into per-request timelines
+//!   that are cross-checked against the aggregate metrics, and replayed
+//!   event-for-event by the scheduler oracle)), the seeded
+//!   scheduler-simulation oracle (`testing::sim`, dense / paged /
+//!   prefix-cached / composed, including exact trace-event-stream
+//!   equivalence), and the benchmark harnesses that regenerate every
+//!   table and figure of the paper.
 //!
 //! Python never runs on the request path: `make artifacts` runs once, then
 //! the `spinquant` binary is self-contained.

@@ -25,7 +25,17 @@
 //!                tokens of prefill, so one long prompt can no longer
 //!                stall every in-flight decode for a whole prefill burst;
 //!                0/off = the classic drain-prefill-then-decode loop;
-//!                needs `--prefill-chunk > 1`); prints completions +
+//!                needs `--prefill-chunk > 1`) + `--trace out.json`
+//!                (flight recorder: record every scheduler decision —
+//!                Enqueued/Admitted/PrefixHit/PrefillChunk/TokenDecoded/
+//!                Evicted/Completed, page alloc/retain/release, composer
+//!                plans, per-step counters — and export a Chrome
+//!                trace-event / Perfetto JSON timeline: one track per
+//!                slot plus counter tracks for queue depth, free pages,
+//!                in-flight, and token mix; open in chrome://tracing or
+//!                ui.perfetto.dev) + `--trace-buffer N` (ring capacity in
+//!                events, default 2^20; drop-oldest, with the drop count
+//!                reported in the export); prints completions +
 //!                TTFT / latency-percentile / tokens-per-sec metrics
 //!   bench-table  regenerate one paper table/figure (see --id list)
 //!   selftest     end-to-end smoke: artifacts load + tiny eval
@@ -65,6 +75,8 @@ fn usage() -> ! {
                        --prefix-cache 1 (copy-on-write sharing of repeated prompt prefixes)\n\
                        --step-budget B (decode-priority step composer: bound the decode\n\
                        hiccup a long prompt's prefill causes; 0 = off)\n\
+                       --trace out.json (flight recorder -> Chrome/Perfetto trace JSON)\n\
+                       --trace-buffer N (trace ring capacity in events, default 2^20)\n\
          bench-table:  --id table1|table2|table3|table4|table5|table6|table10|table11|table12|table13|fig2|fig3|fig4|fig7|fig8 [--models a,b] [--out EXPERIMENTS.md]"
     );
     std::process::exit(2);
@@ -450,6 +462,24 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
             );
         }
     }
+    // Flight recorder: `--trace out.json` records every scheduler decision
+    // into a bounded ring and exports a Chrome trace-event / Perfetto JSON
+    // timeline after the run. `--trace-buffer N` sizes the ring (events;
+    // drop-oldest beyond that, counted in the export). Off by default: the
+    // sink is then a unit enum variant and the hot loop pays one branch.
+    let trace_path = get_extra(extra, "trace");
+    let trace_buffer: usize = get_extra(extra, "trace-buffer")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(1 << 20);
+    if trace_buffer == 0 {
+        anyhow::bail!("--trace-buffer must be >= 1 (events retained in the ring)");
+    }
+    if trace_path.is_some() {
+        sched = sched.with_trace(trace_buffer);
+    } else if get_extra(extra, "trace-buffer").is_some() {
+        eprintln!("note: --trace-buffer has no effect without --trace out.json");
+    }
 
     println!(
         "serving {} request(s) on {} slot(s), sampler {}, max {} new tokens, \
@@ -481,6 +511,17 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
     }
     println!();
     println!("{}", sched.metrics.table(&format!("serving metrics (batch={batch})")).to_markdown());
+    if let Some(path) = trace_path {
+        let records = sched.trace_records();
+        let dropped = sched.trace_dropped_events();
+        let json = serve::chrome_trace(&records, dropped);
+        spinquant::report::write_json(std::path::Path::new(path), &json)?;
+        println!(
+            "trace: {} events -> {path} ({dropped} dropped; open in chrome://tracing \
+             or ui.perfetto.dev)",
+            records.len()
+        );
+    }
     Ok(())
 }
 

@@ -257,18 +257,23 @@ impl ServingMetrics {
         self.in_flight.mean_us()
     }
 
-    /// JSON export (the `BENCH_serving.json` row shape).
+    /// JSON export (the `BENCH_serving.json` row shape). The multi-read
+    /// sample sets (`token_us` grows one sample per generated token) are
+    /// read through [`Samples::percentiles_us`], one sort per set instead
+    /// of one per percentile.
     pub fn to_json(&self) -> Json {
+        let token = self.token_us.percentiles_us(&[50.0, 95.0, 99.0]);
+        let ttft = self.ttft_us.percentiles_us(&[50.0, 95.0]);
         json::obj(vec![
             ("requests", json::num(self.requests_completed as f64)),
             ("tokens", json::num(self.tokens_generated as f64)),
             ("steps", json::num(self.step_us.len() as f64)),
             ("tokens_per_sec", json::num(self.tokens_per_sec())),
-            ("token_ms_p50", json::num(self.token_ms_p50())),
-            ("token_ms_p95", json::num(self.token_ms_p95())),
-            ("token_ms_p99", json::num(self.token_ms_p99())),
-            ("ttft_ms_p50", json::num(self.ttft_ms_p50())),
-            ("ttft_ms_p95", json::num(self.ttft_ms_p95())),
+            ("token_ms_p50", json::num(token[0] / 1e3)),
+            ("token_ms_p95", json::num(token[1] / 1e3)),
+            ("token_ms_p99", json::num(token[2] / 1e3)),
+            ("ttft_ms_p50", json::num(ttft[0] / 1e3)),
+            ("ttft_ms_p95", json::num(ttft[1] / 1e3)),
             ("prefill_calls", json::num(self.prefill_us.len() as f64)),
             ("prefill_ms_p50", json::num(self.prefill_ms_p50())),
             ("tokens_prefilled", json::num(self.tokens_prefilled as f64)),
@@ -285,6 +290,13 @@ impl ServingMetrics {
             ("mixed_steps", json::num(self.mixed_steps as f64)),
             ("queue_ms_p50", json::num(self.queue_ms_p50())),
             ("prefill_spread_ms_p50", json::num(self.prefill_spread_ms_p50())),
+            (
+                "histograms",
+                json::obj(vec![
+                    ("inter_token_ms", latency_histogram(&self.inter_token_us)),
+                    ("ttft_ms", latency_histogram(&self.ttft_us)),
+                ]),
+            ),
         ])
     }
 
@@ -292,7 +304,20 @@ impl ServingMetrics {
     pub fn table(&self, title: &str) -> Table {
         let mut t = Table::new(
             title,
-            &["req", "tokens", "tok/s", "p50 ms/tok", "p95", "p99", "TTFT p50 ms", "queue avg"],
+            &[
+                "req",
+                "tokens",
+                "tok/s",
+                "p50 ms/tok",
+                "p95",
+                "p99",
+                "TTFT p50 ms",
+                "queue avg",
+                "evicted",
+                "prefix_hit_rate",
+                "max_stall",
+                "inter-tok p99",
+            ],
         );
         t.row(vec![
             format!("{}", self.requests_completed),
@@ -303,9 +328,44 @@ impl ServingMetrics {
             format!("{:.2}", self.token_ms_p99()),
             format!("{:.2}", self.ttft_ms_p50()),
             format!("{:.1}", self.mean_queue_depth()),
+            format!("{}", self.requests_evicted),
+            format!("{:.2}", self.prefix_hit_rate()),
+            format!("{}", self.max_decode_stall_steps()),
+            format!("{:.2}", self.inter_token_ms_p99()),
         ]);
         t
     }
+}
+
+/// Fixed log2 bucket edges for the latency histograms, in milliseconds:
+/// 2^-4 .. 2^14 (62.5 us .. ~16.4 s). Point percentiles hide bimodal
+/// stall distributions (a clean 1 ms decode cadence plus occasional 30 ms
+/// prefill hiccups averages into a meaningless p95); the bucket counts
+/// keep both modes visible in `BENCH_serving.json`.
+const HIST_EDGES_MS: [f64; 19] = [
+    0.0625, 0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0, 128.0, 256.0, 512.0,
+    1024.0, 2048.0, 4096.0, 8192.0, 16384.0,
+];
+
+/// Bucket microsecond samples over [`HIST_EDGES_MS`] with Prometheus-style
+/// `le` semantics: a sample lands in the first bucket whose edge is `>=`
+/// its value in ms; anything beyond the last edge lands in `overflow`.
+fn latency_histogram(us: &Samples) -> Json {
+    let mut counts = [0usize; HIST_EDGES_MS.len()];
+    let mut overflow = 0usize;
+    for &v in us.values() {
+        let ms = v / 1e3;
+        match HIST_EDGES_MS.iter().position(|&e| ms <= e) {
+            Some(i) => counts[i] += 1,
+            None => overflow += 1,
+        }
+    }
+    json::obj(vec![
+        ("le_ms", json::arr(HIST_EDGES_MS.iter().map(|&e| json::num(e)).collect())),
+        ("counts", json::arr(counts.iter().map(|&c| json::num(c as f64)).collect())),
+        ("overflow", json::num(overflow as f64)),
+        ("total", json::num(us.len() as f64)),
+    ])
 }
 
 #[cfg(test)]
@@ -448,5 +508,54 @@ mod tests {
         assert_eq!(m.token_ms_p99(), 0.0);
         let md = m.table("t").to_markdown();
         assert!(md.contains("### t"));
+    }
+
+    #[test]
+    fn table_renders_eviction_prefix_and_stall_columns() {
+        // Satellite: the columns that used to exist only in JSON.
+        let mut m = ServingMetrics::new();
+        m.record_eviction();
+        m.record_admission(32, 40);
+        m.record_decode_token_wait(3, 3200.0);
+        let md = m.table("serve").to_markdown();
+        for header in ["evicted", "prefix_hit_rate", "max_stall", "inter-tok p99"] {
+            assert!(md.contains(header), "missing column {header:?} in:\n{md}");
+        }
+        assert!(md.contains("0.80"), "hit rate 32/40 renders: \n{md}");
+    }
+
+    #[test]
+    fn latency_histogram_bucket_boundaries() {
+        let mut m = ServingMetrics::new();
+        // 62.5us = first edge exactly (le semantics: first bucket);
+        // 62.6us = just past it (second bucket); 1ms = fifth edge exactly;
+        // 20s = beyond the last edge (overflow).
+        for us in [62.5, 62.6, 1000.0, 20_000_000.0] {
+            m.record_decode_token_wait(0, us);
+        }
+        let j = m.to_json();
+        let h = j.req("histograms").unwrap().req("inter_token_ms").unwrap();
+        let counts = h.req("counts").unwrap().as_arr().unwrap();
+        let edges = h.req("le_ms").unwrap().as_arr().unwrap();
+        assert_eq!(edges.len(), counts.len());
+        assert_eq!(edges[0].as_f64(), Some(0.0625));
+        assert_eq!(counts[0].as_f64(), Some(1.0));
+        assert_eq!(counts[1].as_f64(), Some(1.0));
+        assert_eq!(counts[4].as_f64(), Some(1.0));
+        assert_eq!(h.req("overflow").unwrap().as_f64(), Some(1.0));
+        assert_eq!(h.req("total").unwrap().as_f64(), Some(4.0));
+        // Buckets partition the samples.
+        let bucketed: f64 = counts.iter().map(|c| c.as_f64().unwrap()).sum();
+        assert_eq!(bucketed + 1.0, 4.0);
+    }
+
+    #[test]
+    fn latency_histogram_empty_case() {
+        let j = ServingMetrics::new().to_json();
+        let h = j.req("histograms").unwrap().req("ttft_ms").unwrap();
+        assert_eq!(h.req("total").unwrap().as_f64(), Some(0.0));
+        assert_eq!(h.req("overflow").unwrap().as_f64(), Some(0.0));
+        let counts = h.req("counts").unwrap().as_arr().unwrap();
+        assert!(counts.iter().all(|c| c.as_f64() == Some(0.0)));
     }
 }

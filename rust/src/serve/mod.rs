@@ -87,7 +87,26 @@
 //!   histogram + inter-token latency + prefill-share gauge the step
 //!   composer is tuned by, tokens/sec, queue depth, eviction counts,
 //!   prefix-cache reuse (`tokens_reused`, hit rate); exportable as JSON
-//!   through [`crate::report`].
+//!   through [`crate::report`]. Aggregates only — per-request attribution
+//!   lives in the trace layer below.
+//! * [`trace`] — the flight recorder: a bounded ring buffer of typed,
+//!   step-indexed [`TraceEvent`]s the whole stack emits into (request
+//!   lifecycle: `Enqueued` → `Admitted`/`PrefixHit` → `PrefillChunk`* →
+//!   `TokenDecoded`* → `Evicted`/`Completed`; resource plane:
+//!   `PageAllocated`/`PageRetained`/`PageReleased`, `PrefixDonated`;
+//!   per-step: `StepComposed`, `Counters`). Enabled with
+//!   [`Scheduler::with_trace`] (`serve --trace out.json --trace-buffer N`);
+//!   off, the sink is an enum unit variant — one branch per emission site,
+//!   no buffer, no allocation. [`trace::fold_timelines`] reconstructs
+//!   per-request lifecycle spans, [`trace::verify_against_metrics`]
+//!   cross-checks them against [`ServingMetrics`] (TTFT = queue + spread,
+//!   stall histogram identical), and [`trace::chrome_trace`] exports a
+//!   Chrome trace-event / Perfetto JSON view (one track per slot, counter
+//!   tracks for queue depth / free pages / in-flight / token mix). The
+//!   oracle in [`crate::testing::sim`] emits the same event stream from
+//!   its bookkeeping model, and the pinned-seed suites require exact
+//!   sequence equality (modulo timestamps) — scheduler decisions are a
+//!   CI-checked observable, not just telemetry.
 
 pub mod blocks;
 pub mod engine;
@@ -96,6 +115,7 @@ pub mod prefix;
 pub mod sampling;
 pub mod scheduler;
 pub mod slots;
+pub mod trace;
 
 pub use blocks::BlockPool;
 pub use engine::{DecodeEngine, DecodeVariant, GenerationSession, MockEngine, PjrtEngine};
@@ -103,3 +123,7 @@ pub use metrics::ServingMetrics;
 pub use sampling::{argmax, Sampler, SamplerKind};
 pub use scheduler::{Completion, GenRequest, Request, Response, Scheduler, Server};
 pub use slots::{SlotMap, SlotPhase};
+pub use trace::{
+    chrome_trace, fold_timelines, verify_against_metrics, EvictReason, FinishReason, Timeline,
+    TraceEvent, TraceRecord, TraceRing, TraceSink,
+};

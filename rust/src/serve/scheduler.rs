@@ -98,6 +98,7 @@ use crate::serve::engine::DecodeEngine;
 use crate::serve::metrics::ServingMetrics;
 use crate::serve::sampling::Sampler;
 use crate::serve::slots::{SlotMap, SlotPhase};
+use crate::serve::trace::{EvictReason, FinishReason, TraceEvent, TraceRecord, TraceSink};
 use crate::util::prng::Prng;
 
 /// A generation request for the continuous-batching scheduler.
@@ -203,6 +204,10 @@ pub struct Scheduler<E: DecodeEngine> {
     /// drain-prefill-then-decode paths run untouched.
     step_budget: Option<usize>,
     pub metrics: ServingMetrics,
+    /// Flight-recorder sink shared with the [`SlotMap`] (page-plane
+    /// events). `Off` by default: the disabled path is one branch per
+    /// emission site, no ring buffer is ever allocated.
+    trace: TraceSink,
 }
 
 impl<E: DecodeEngine> Scheduler<E> {
@@ -238,7 +243,37 @@ impl<E: DecodeEngine> Scheduler<E> {
             tables,
             step_budget: None,
             metrics: ServingMetrics::new(),
+            trace: TraceSink::Off,
         })
+    }
+
+    /// Attach a flight recorder: a bounded ring buffer of `capacity`
+    /// [`TraceRecord`]s (`serve --trace-buffer N`) that every scheduler
+    /// decision and page-plane change is appended to as a typed
+    /// [`TraceEvent`]. When full, the oldest record is dropped and
+    /// [`Self::trace_dropped_events`] counts it. Call before submitting
+    /// work so admission events are captured from the start.
+    pub fn with_trace(mut self, capacity: usize) -> Self {
+        self.trace = TraceSink::ring(capacity);
+        self.slots.set_trace(self.trace.clone());
+        self
+    }
+
+    /// The active trace sink (`TraceSink::Off` unless [`Self::with_trace`]
+    /// ran — the off variant is a unit, no buffer exists).
+    pub fn trace_sink(&self) -> &TraceSink {
+        &self.trace
+    }
+
+    /// Snapshot of the ring buffer's surviving records, oldest first
+    /// (empty when tracing is off).
+    pub fn trace_records(&self) -> Vec<TraceRecord> {
+        self.trace.records()
+    }
+
+    /// Records overwritten by ring wraparound since tracing began.
+    pub fn trace_dropped_events(&self) -> u64 {
+        self.trace.dropped_events()
     }
 
     /// Enable the decode-priority step composer (`serve --step-budget B`):
@@ -296,6 +331,9 @@ impl<E: DecodeEngine> Scheduler<E> {
             slots = slots.with_prefix_cache();
         }
         self.slots = slots;
+        // The rebuilt SlotMap starts with an Off sink; re-attach ours so
+        // `with_trace` composes with `with_kv_block_budget` in any order.
+        self.slots.set_trace(self.trace.clone());
         Ok(self)
     }
 
@@ -395,16 +433,21 @@ impl<E: DecodeEngine> Scheduler<E> {
         }
         let id = self.next_id;
         self.next_id += 1;
+        // One shared timestamp: the queued request's enqueue instant and
+        // the Enqueued trace record agree exactly, so the timeline fold's
+        // TTFT reproduces the metrics' to float rounding.
+        let now = Instant::now();
         self.pending.push_back(Queued {
             id,
             prompt: req.prompt.iter().map(|&b| b as i32).collect(),
             max_new: req.max_new_tokens,
             sampler: req.sampler,
             seed: req.seed,
-            submitted: Instant::now(),
+            submitted: now,
             blocks_needed,
             first_sched_us: None,
         });
+        self.trace.emit_at(now, TraceEvent::Enqueued { id });
         Ok(id)
     }
 
@@ -441,6 +484,11 @@ impl<E: DecodeEngine> Scheduler<E> {
                 self.slots.release(b)?;
                 self.refresh_table_row(b);
                 self.engine.reset_slot(b);
+                self.trace.emit(TraceEvent::Evicted {
+                    id,
+                    slot: b,
+                    reason: EvictReason::Cancelled,
+                });
                 return Ok(true);
             }
         }
@@ -478,6 +526,28 @@ impl<E: DecodeEngine> Scheduler<E> {
                 self.engine.adopt_prefix(slot, &self.tables[slot], cached)?;
             }
             self.metrics.record_admission(cached, q.prompt.len());
+            if self.trace.is_on() {
+                // Pages actually charged against the budget: end-to-end
+                // demand minus the whole pages the prefix cache mapped.
+                let pages_charged = match self.engine.kv_block_size() {
+                    Some(bs) => q.blocks_needed - cached / bs,
+                    None => 0,
+                };
+                self.trace.emit(TraceEvent::Admitted {
+                    id: q.id,
+                    slot,
+                    pages_charged,
+                    tokens_reused: cached,
+                });
+                if cached > 0 {
+                    let bs = self.engine.kv_block_size().expect("cached prefix implies paged");
+                    self.trace.emit(TraceEvent::PrefixHit {
+                        id: q.id,
+                        slot,
+                        pages: cached / bs,
+                    });
+                }
+            }
             self.active[slot] = Some(Active {
                 id: q.id,
                 prompt: q.prompt,
@@ -514,6 +584,11 @@ impl<E: DecodeEngine> Scheduler<E> {
         self.refresh_table_row(victim);
         self.engine.reset_slot(victim);
         self.metrics.record_eviction();
+        self.trace.emit(TraceEvent::Evicted {
+            id: a.id,
+            slot: victim,
+            reason: EvictReason::PoolExhausted,
+        });
         // Queue-front requeue keeps FIFO fairness (it was admitted before
         // anything still queued); this may transiently exceed `max_queue`,
         // which beats dropping the request on the floor. With the prefix
@@ -605,6 +680,7 @@ impl<E: DecodeEngine> Scheduler<E> {
         new_pos: usize,
         max_seq: usize,
         new_tokens: &mut usize,
+        stall: Option<usize>,
     ) -> bool {
         let a = self.active[b].as_mut().expect("occupied slot");
         let mut finished = false;
@@ -616,8 +692,21 @@ impl<E: DecodeEngine> Scheduler<E> {
                 a.last_token = next as i32;
                 a.generated.push(next as u8);
                 *new_tokens += 1;
-                if a.ttft_us.is_none() {
-                    a.ttft_us = Some(a.submitted.elapsed().as_secs_f64() * 1e6);
+                // The TTFT stamp and the TokenDecoded record share one
+                // Instant, so the trace-fold's TTFT matches the metrics'
+                // exactly; with tracing off this block runs (and reads the
+                // clock) only for the first token, as before.
+                if a.ttft_us.is_none() || self.trace.is_on() {
+                    let now = Instant::now();
+                    if a.ttft_us.is_none() {
+                        a.ttft_us = Some(
+                            now.saturating_duration_since(a.submitted).as_secs_f64() * 1e6,
+                        );
+                    }
+                    self.trace.emit_at(
+                        now,
+                        TraceEvent::TokenDecoded { id: a.id, slot: b, stall_steps: stall },
+                    );
                 }
             }
             if a.generated.len() >= a.max_new {
@@ -648,6 +737,12 @@ impl<E: DecodeEngine> Scheduler<E> {
             let queue = a.first_sched_us.unwrap_or(ttft).min(ttft);
             self.metrics.record_first_token(queue, ttft - queue);
         }
+        let reason = if a.generated.len() >= a.max_new {
+            FinishReason::BudgetExhausted
+        } else {
+            FinishReason::CacheFull
+        };
+        self.trace.emit(TraceEvent::Completed { id: a.id, slot: b, reason });
         Ok(Completion {
             id: a.id,
             prompt: a.prompt.iter().map(|&t| t as u8).collect(),
@@ -664,6 +759,7 @@ impl<E: DecodeEngine> Scheduler<E> {
     /// before. Returns the completions that finished on this iteration
     /// (empty when idle).
     pub fn step(&mut self) -> Result<Vec<Completion>> {
+        self.trace.begin_step();
         self.admit()?;
         let chunk = self.engine.prefill_chunk().max(1);
         // Running-slot snapshot for the plan partition and the stall
@@ -729,6 +825,17 @@ impl<E: DecodeEngine> Scheduler<E> {
                     prefill_left -= take;
                 }
             }
+        }
+        // The plan is fixed here; record it before growth can shrink the
+        // surviving set (the trace shows what was *scheduled*, engine-call
+        // events show what survived).
+        let planned_take: usize = takes.iter().sum();
+        if decode_tokens + planned_take > 0 {
+            self.trace.emit(TraceEvent::StepComposed {
+                decode_lanes: decode_tokens,
+                prefill_take: planned_take,
+                budget,
+            });
         }
         // -- grow (paged): decode slots first, then the planned takes.
         // An eviction mid-growth silently drops its slot from the plan;
@@ -796,8 +903,12 @@ impl<E: DecodeEngine> Scheduler<E> {
                 }
                 let new_pos = self.slots.advance(b)?;
                 decode_fed += 1;
-                let finished =
-                    self.sample_and_check(b, &logits[b], new_pos, max_seq, &mut new_tokens);
+                // Every lane in the decode set is Running: its stall count
+                // rides on the TokenDecoded record (read before the reset
+                // below zeroes it).
+                let stall = self.active[b].as_ref().map(|a| a.stall_steps);
+                let finished = self
+                    .sample_and_check(b, &logits[b], new_pos, max_seq, &mut new_tokens, stall);
                 {
                     // Every surviving running slot sampled: record how long
                     // it waited for this token, then reset.
@@ -833,8 +944,22 @@ impl<E: DecodeEngine> Scheduler<E> {
                 pactive[b] = true;
                 ptokens[b] = a.prompt[a.fed..a.fed + takes[b]].to_vec();
                 pos0[b] = self.slots.pos(b).expect("occupied slot has a position") as i32;
-                if a.first_sched_us.is_none() {
-                    a.first_sched_us = Some(a.submitted.elapsed().as_secs_f64() * 1e6);
+                if a.first_sched_us.is_none() || self.trace.is_on() {
+                    let now = Instant::now();
+                    if a.first_sched_us.is_none() {
+                        a.first_sched_us = Some(
+                            now.saturating_duration_since(a.submitted).as_secs_f64() * 1e6,
+                        );
+                    }
+                    self.trace.emit_at(
+                        now,
+                        TraceEvent::PrefillChunk {
+                            id: a.id,
+                            slot: b,
+                            pos0: pos0[b] as usize,
+                            take: takes[b],
+                        },
+                    );
                 }
             }
         }
@@ -856,7 +981,8 @@ impl<E: DecodeEngine> Scheduler<E> {
                 let new_pos = self.slots.advance_by(b, fed_now)?;
                 self.active[b].as_mut().expect("active slot").fed += fed_now;
                 prompt_fed += fed_now;
-                if self.sample_and_check(b, &logits[b], new_pos, max_seq, &mut new_tokens) {
+                if self.sample_and_check(b, &logits[b], new_pos, max_seq, &mut new_tokens, None)
+                {
                     done.push(self.retire(b)?);
                 }
             }
@@ -880,6 +1006,7 @@ impl<E: DecodeEngine> Scheduler<E> {
         }
         if ran_decode || ran_prefill {
             self.metrics.record_token_mix(prompt_fed, decode_fed);
+            self.emit_counters(prompt_fed, decode_fed);
         }
         if ran_decode && ran_prefill {
             self.metrics.record_mixed_step();
@@ -905,8 +1032,22 @@ impl<E: DecodeEngine> Scheduler<E> {
                     tokens[b] = a.prompt[a.fed..a.fed + take].to_vec();
                     pos0[b] = self.slots.pos(b).expect("occupied slot has a position") as i32;
                     active[b] = true;
-                    if a.first_sched_us.is_none() {
-                        a.first_sched_us = Some(a.submitted.elapsed().as_secs_f64() * 1e6);
+                    if a.first_sched_us.is_none() || self.trace.is_on() {
+                        let now = Instant::now();
+                        if a.first_sched_us.is_none() {
+                            a.first_sched_us = Some(
+                                now.saturating_duration_since(a.submitted).as_secs_f64() * 1e6,
+                            );
+                        }
+                        self.trace.emit_at(
+                            now,
+                            TraceEvent::PrefillChunk {
+                                id: a.id,
+                                slot: b,
+                                pos0: pos0[b] as usize,
+                                take,
+                            },
+                        );
                     }
                 }
             }
@@ -934,7 +1075,7 @@ impl<E: DecodeEngine> Scheduler<E> {
             // (new_pos >= max_seq is unreachable while submit() rejects
             // prompts >= max_seq, but sample_and_check keeps the guard so a
             // future admission policy can't silently overrun.)
-            if self.sample_and_check(b, &logits[b], new_pos, max_seq, &mut new_tokens) {
+            if self.sample_and_check(b, &logits[b], new_pos, max_seq, &mut new_tokens, None) {
                 done.push(self.retire(b)?);
             }
         }
@@ -957,6 +1098,7 @@ impl<E: DecodeEngine> Scheduler<E> {
             self.pending.len(),
         );
         self.metrics.record_token_mix(prompt_tokens, 0);
+        self.emit_counters(prompt_tokens, 0);
         Ok(done)
     }
 
@@ -976,7 +1118,8 @@ impl<E: DecodeEngine> Scheduler<E> {
             if let Some(a) = self.active[b].as_mut() {
                 any = true;
                 active[b] = true;
-                if a.fed < a.prompt.len() {
+                let warming = a.fed < a.prompt.len();
+                if warming {
                     tokens[b] = a.prompt[a.fed];
                     prompt_fed += 1;
                 } else {
@@ -984,8 +1127,26 @@ impl<E: DecodeEngine> Scheduler<E> {
                     decode_fed += 1;
                 }
                 pos[b] = self.slots.pos(b).expect("occupied slot has a position") as i32;
-                if a.first_sched_us.is_none() {
-                    a.first_sched_us = Some(a.submitted.elapsed().as_secs_f64() * 1e6);
+                // A warming lane on the interleaved path feeds one prompt
+                // token per call — a PrefillChunk of take 1.
+                if a.first_sched_us.is_none() || (warming && self.trace.is_on()) {
+                    let now = Instant::now();
+                    if a.first_sched_us.is_none() {
+                        a.first_sched_us = Some(
+                            now.saturating_duration_since(a.submitted).as_secs_f64() * 1e6,
+                        );
+                    }
+                    if warming {
+                        self.trace.emit_at(
+                            now,
+                            TraceEvent::PrefillChunk {
+                                id: a.id,
+                                slot: b,
+                                pos0: pos[b] as usize,
+                                take: 1,
+                            },
+                        );
+                    }
                 }
             }
         }
@@ -1014,7 +1175,13 @@ impl<E: DecodeEngine> Scheduler<E> {
                     a.fed += 1;
                 }
             }
-            let finished = self.sample_and_check(b, &logits[b], new_pos, max_seq, &mut new_tokens);
+            let stall = if running[b] {
+                self.active[b].as_ref().map(|a| a.stall_steps)
+            } else {
+                None
+            };
+            let finished =
+                self.sample_and_check(b, &logits[b], new_pos, max_seq, &mut new_tokens, stall);
             if running[b] {
                 // A running slot always samples on a decode step: record
                 // how many call iterations (and how much engine time) it
@@ -1032,7 +1199,24 @@ impl<E: DecodeEngine> Scheduler<E> {
         }
         self.metrics.record_step(step_us, new_tokens, self.slots.active_count(), self.pending.len());
         self.metrics.record_token_mix(prompt_fed, decode_fed);
+        self.emit_counters(prompt_fed, decode_fed);
         Ok(done)
+    }
+
+    /// Emit one `Counters` sample (queue depth, in-flight, free pages,
+    /// token mix of the call that just ran) — the Chrome exporter turns
+    /// these into counter tracks. A single branch when tracing is off.
+    fn emit_counters(&self, prompt_fed: usize, decode_fed: usize) {
+        if !self.trace.is_on() {
+            return;
+        }
+        self.trace.emit(TraceEvent::Counters {
+            queue_depth: self.pending.len(),
+            in_flight: self.slots.active_count(),
+            free_pages: self.slots.pool().map(|p| p.free_blocks()).unwrap_or(0),
+            prompt_fed,
+            decode_fed,
+        });
     }
 
     /// Step until every pending and in-flight request has completed.

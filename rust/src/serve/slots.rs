@@ -38,6 +38,7 @@ use anyhow::{bail, Result};
 
 use crate::serve::blocks::BlockPool;
 use crate::serve::prefix::{chain_of, chain_step, PrefixIndex, CHAIN_ROOT};
+use crate::serve::trace::{TraceEvent, TraceSink};
 
 /// Lifecycle phase of one slot with respect to its request's prompt — the
 /// partition the decode-priority step composer plans each step by:
@@ -92,6 +93,9 @@ pub struct SlotMap {
     /// processed prompt pages (mapped at admission + donated since), so
     /// registering a page never re-walks the prompt.
     chains: Vec<u64>,
+    /// Flight-recorder sink for page-plane events (shared with the
+    /// scheduler's; `Off` unless the scheduler attached one).
+    trace: TraceSink,
 }
 
 impl SlotMap {
@@ -105,7 +109,15 @@ impl SlotMap {
             prompts: vec![Vec::new(); capacity],
             shared: vec![0; capacity],
             chains: vec![CHAIN_ROOT; capacity],
+            trace: TraceSink::Off,
         }
+    }
+
+    /// Attach (or replace) the flight-recorder sink page-plane events are
+    /// emitted into. The scheduler shares its own sink here so request
+    /// lifecycle and page refcount events interleave in one stream.
+    pub fn set_trace(&mut self, sink: TraceSink) {
+        self.trace = sink;
     }
 
     /// Paged variant: slots share `total_blocks` physical pages of
@@ -178,12 +190,16 @@ impl SlotMap {
     fn allocate_page(&mut self) -> Option<u32> {
         let pool = self.pool.as_mut()?;
         if let Some(b) = pool.allocate() {
+            self.trace.emit(TraceEvent::PageAllocated { block: b, refcount: 1 });
             return Some(b);
         }
         let prefix = self.prefix.as_mut()?;
         let page = prefix.evict_lru(|p| pool.refcount(p) == 1)?;
         pool.release(&[page]).expect("evicted page held exactly the index reference");
-        pool.allocate()
+        self.trace.emit(TraceEvent::PageReleased { block: page, refcount: 0 });
+        let b = pool.allocate()?;
+        self.trace.emit(TraceEvent::PageAllocated { block: b, refcount: 1 });
+        Some(b)
     }
 
     pub fn capacity(&self) -> usize {
@@ -289,6 +305,10 @@ impl SlotMap {
         let pool = self.pool.as_mut().expect("checked paged");
         for &p in &matched {
             pool.retain(p)?;
+            self.trace.emit(TraceEvent::PageRetained {
+                block: p,
+                refcount: pool.refcount(p) as usize,
+            });
         }
         // The demand must exceed the cached prefix (it always does for a
         // scheduler-computed demand, since the match is capped one token
@@ -307,7 +327,14 @@ impl SlotMap {
         // double-count them as evictable supply.
         let needed_fresh = blocks_needed - matched.len();
         if self.available_pages() < needed_fresh {
-            self.pool.as_mut().expect("paged").release(&matched)?;
+            let pool = self.pool.as_mut().expect("paged");
+            pool.release(&matched)?;
+            for &p in &matched {
+                self.trace.emit(TraceEvent::PageReleased {
+                    block: p,
+                    refcount: pool.refcount(p) as usize,
+                });
+            }
             return Ok(None);
         }
         // First writable page now, before the slot is occupied, so every
@@ -345,6 +372,12 @@ impl SlotMap {
         if let Some(pool) = self.pool.as_mut() {
             // Validate-then-free: on error nothing (pool or slot) changes.
             pool.release(&self.tables[slot])?;
+            for &p in &self.tables[slot] {
+                self.trace.emit(TraceEvent::PageReleased {
+                    block: p,
+                    refcount: pool.refcount(p) as usize,
+                });
+            }
             self.tables[slot].clear();
         }
         let info = self.state[slot].take().expect("checked occupied");
@@ -422,6 +455,7 @@ impl SlotMap {
         let prefix = self.prefix.as_mut().expect("checked");
         let bs = pool.block_size();
         let prompt = &self.prompts[slot];
+        let mut donated = 0usize;
         for j in (old_pos / bs)..(new_pos / bs) {
             let end = (j + 1) * bs;
             if end > prompt.len() || j < self.shared[slot] {
@@ -431,8 +465,16 @@ impl SlotMap {
             let parent = self.chains[slot];
             if prefix.register(parent, &prompt[..end], bs, page) {
                 pool.retain(page)?;
+                self.trace.emit(TraceEvent::PageRetained {
+                    block: page,
+                    refcount: pool.refcount(page) as usize,
+                });
+                donated += 1;
             }
             self.chains[slot] = chain_step(parent, &prompt[j * bs..end]);
+        }
+        if donated > 0 {
+            self.trace.emit(TraceEvent::PrefixDonated { slot, pages: donated });
         }
         Ok(())
     }

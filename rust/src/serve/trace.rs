@@ -1,0 +1,915 @@
+//! Flight-recorder event trace for the serving stack.
+//!
+//! [`ServingMetrics`] reports end-of-run aggregates; when `inter-tok p99`
+//! or TTFT regresses they cannot say *which* request stalled, *why*
+//! (eviction, prefix miss, composer mix, pool pressure) or *when*. This
+//! module is the attribution layer: every scheduler decision and every
+//! resource-plane transition emits one typed [`TraceEvent`] into a bounded
+//! ring buffer ([`TraceRing`], `--trace-buffer N`, drop-oldest with a
+//! `dropped_events` counter), step-indexed and timestamped.
+//!
+//! The event vocabulary, in lifecycle order:
+//!
+//! * [`TraceEvent::Enqueued`] — the request entered the admission queue.
+//! * [`TraceEvent::Admitted`] — it won a slot: which one, how many fresh
+//!   pages the watermark charged, how many prompt tokens were mapped from
+//!   the prefix cache; followed by [`TraceEvent::PrefixHit`] when that
+//!   reuse was non-zero.
+//! * [`TraceEvent::PrefillChunk`] — one prompt chunk entered an engine
+//!   call (`pos0`, `take`); the first one marks "first scheduled", the
+//!   boundary `ServingMetrics` splits TTFT at.
+//! * [`TraceEvent::TokenDecoded`] — a token was sampled; for a *running*
+//!   slot it carries the engine-call stall count the decode-stall
+//!   histogram records.
+//! * [`TraceEvent::StepComposed`] — the step composer's plan for one
+//!   iteration (decode lanes vs budgeted prefill take).
+//! * [`TraceEvent::PrefixDonated`] / [`TraceEvent::PageAllocated`] /
+//!   [`TraceEvent::PageRetained`] / [`TraceEvent::PageReleased`] — the
+//!   resource plane: COW prefix donations and refcounted page traffic.
+//! * [`TraceEvent::Evicted`] — the slot was torn down mid-flight
+//!   (pool-exhaustion requeue or cancel).
+//! * [`TraceEvent::Completed`] — retirement, with the finish reason.
+//! * [`TraceEvent::Counters`] — per-engine-call gauges (queue depth,
+//!   in-flight, free pages, fed-token mix) for counter tracks.
+//!
+//! The sink ([`TraceSink`]) is an **enum, not a trait object**: the
+//! disabled path is a two-variant branch on the hot loop (no vtable, no
+//! allocation — the bench's `trace` section records on/off step latency to
+//! hold that claim). On top of the raw stream:
+//!
+//! * [`fold_timelines`] reconstructs per-request lifecycle spans (queued →
+//!   prefill spread → decode, with stall gaps), tolerant of ring
+//!   wraparound truncating old requests' prefixes.
+//! * [`verify_against_metrics`] cross-checks a complete (no-drop) stream
+//!   against [`ServingMetrics`] — token counts, stall histogram, eviction
+//!   and reuse counters, and the `ttft == queue + spread` split, exactly —
+//!   so the trace is provably not write-only telemetry.
+//! * [`chrome_trace`] exports Chrome trace-event / Perfetto JSON (one
+//!   track per slot, a queue track, counter tracks) through
+//!   [`crate::util::json`]; `spinquant serve --trace out.json` writes it.
+//!
+//! The scheduler's twin obligation lives in [`crate::testing::sim`]: the
+//! bookkeeping oracle emits the same *decision* events (everything but the
+//! page/counter plane), and the pinned-seed equivalence suites compare the
+//! two streams event for event, modulo timestamps.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::serve::metrics::ServingMetrics;
+use crate::util::json::{self, Json};
+
+/// Why a slot was torn down before completion.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictReason {
+    /// Paged pool ran dry; the request was requeued (front) to restart.
+    PoolExhausted,
+    /// `Scheduler::cancel` hit a mid-flight request.
+    Cancelled,
+}
+
+/// Why a request retired.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Generated its full `max_new_tokens` budget.
+    BudgetExhausted,
+    /// Ran out of KV-cache positions (`max_seq`) first.
+    CacheFull,
+}
+
+/// One typed scheduler/resource event. `Copy` and field-only (no heap) so
+/// emission is a ring-buffer write, and `PartialEq` so the sim oracle's
+/// stream can be compared against the real scheduler's exactly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceEvent {
+    Enqueued { id: u64 },
+    Admitted { id: u64, slot: usize, pages_charged: usize, tokens_reused: usize },
+    PrefixHit { id: u64, slot: usize, pages: usize },
+    PrefillChunk { id: u64, slot: usize, pos0: usize, take: usize },
+    /// `stall_steps` is `Some` only for a token produced by a slot that was
+    /// *running* (prompt fully fed) at the start of the iteration — exactly
+    /// the tokens the decode-stall histogram samples.
+    TokenDecoded { id: u64, slot: usize, stall_steps: Option<usize> },
+    Evicted { id: u64, slot: usize, reason: EvictReason },
+    Completed { id: u64, slot: usize, reason: FinishReason },
+    StepComposed { decode_lanes: usize, prefill_take: usize, budget: usize },
+    PrefixDonated { slot: usize, pages: usize },
+    PageAllocated { block: u32, refcount: usize },
+    PageRetained { block: u32, refcount: usize },
+    PageReleased { block: u32, refcount: usize },
+    /// Per-engine-call gauges (emitted after each decode/prefill call).
+    Counters {
+        queue_depth: usize,
+        in_flight: usize,
+        free_pages: usize,
+        prompt_fed: usize,
+        decode_fed: usize,
+    },
+}
+
+impl TraceEvent {
+    /// Whether the sim oracle models this event. Scheduler *decisions* are
+    /// oracle-checked; the physical page plane and timing gauges are
+    /// real-scheduler-only (the oracle has no pool layout and no clock).
+    pub fn in_oracle_scope(&self) -> bool {
+        !matches!(
+            self,
+            TraceEvent::PageAllocated { .. }
+                | TraceEvent::PageRetained { .. }
+                | TraceEvent::PageReleased { .. }
+                | TraceEvent::Counters { .. }
+        )
+    }
+}
+
+/// One ring-buffer entry: the event plus its envelope — the scheduler
+/// iteration it happened in and microseconds since the sink was created.
+/// Timestamps live here, not in [`TraceEvent`], so oracle equivalence can
+/// compare events directly ("exact sequence modulo timestamps").
+#[derive(Clone, Copy, Debug)]
+pub struct TraceRecord {
+    pub step: u64,
+    pub t_us: f64,
+    pub event: TraceEvent,
+}
+
+/// Bounded drop-oldest event buffer.
+#[derive(Debug)]
+pub struct TraceRing {
+    cap: usize,
+    buf: VecDeque<TraceRecord>,
+    dropped: u64,
+    step: u64,
+    epoch: Instant,
+}
+
+impl TraceRing {
+    fn push(&mut self, t_us: f64, event: TraceEvent) {
+        if self.buf.len() == self.cap {
+            self.buf.pop_front();
+            self.dropped += 1;
+        }
+        self.buf.push_back(TraceRecord { step: self.step, t_us, event });
+    }
+}
+
+/// The sink the serving stack emits into. An enum — deliberately not a
+/// `dyn` trait object — so the tracing-off hot path is one branch on a
+/// discriminant with nothing allocated behind it. Cloning shares the ring
+/// (`Rc`), which is how the scheduler and its `SlotMap` write into one
+/// buffer.
+#[derive(Clone, Debug, Default)]
+pub enum TraceSink {
+    /// Tracing disabled: every emit is a no-op branch.
+    #[default]
+    Off,
+    Ring(Rc<RefCell<TraceRing>>),
+}
+
+impl TraceSink {
+    /// A recording sink over a fresh ring of `capacity` records (minimum
+    /// 1); `t_us` timestamps are measured from this call.
+    pub fn ring(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        TraceSink::Ring(Rc::new(RefCell::new(TraceRing {
+            cap,
+            buf: VecDeque::with_capacity(cap.min(4096)),
+            dropped: 0,
+            step: 0,
+            epoch: Instant::now(),
+        })))
+    }
+
+    #[inline]
+    pub fn is_on(&self) -> bool {
+        matches!(self, TraceSink::Ring(_))
+    }
+
+    /// Record `event` stamped with the current time (no-op when off).
+    #[inline]
+    pub fn emit(&self, event: TraceEvent) {
+        if let TraceSink::Ring(r) = self {
+            let mut r = r.borrow_mut();
+            let t_us = r.epoch.elapsed().as_secs_f64() * 1e6;
+            r.push(t_us, event);
+        }
+    }
+
+    /// Record `event` stamped with a clock reading the caller already took
+    /// — emission points share one `Instant::now()` with the metrics stamp
+    /// they sit next to, so the reconstructed timelines agree with
+    /// [`ServingMetrics`] down to float rounding.
+    #[inline]
+    pub fn emit_at(&self, now: Instant, event: TraceEvent) {
+        if let TraceSink::Ring(r) = self {
+            let mut r = r.borrow_mut();
+            let t_us = now.saturating_duration_since(r.epoch).as_secs_f64() * 1e6;
+            r.push(t_us, event);
+        }
+    }
+
+    /// Advance the step index stamped into subsequent records.
+    pub fn begin_step(&self) {
+        if let TraceSink::Ring(r) = self {
+            r.borrow_mut().step += 1;
+        }
+    }
+
+    /// Snapshot of the buffered records, oldest first.
+    pub fn records(&self) -> Vec<TraceRecord> {
+        match self {
+            TraceSink::Off => Vec::new(),
+            TraceSink::Ring(r) => r.borrow().buf.iter().copied().collect(),
+        }
+    }
+
+    /// Events evicted from the ring so far (0 when off or within budget).
+    pub fn dropped_events(&self) -> u64 {
+        match self {
+            TraceSink::Off => 0,
+            TraceSink::Ring(r) => r.borrow().dropped,
+        }
+    }
+}
+
+/// One request's reconstructed lifecycle. Times are ring-relative
+/// microseconds; fields stay `None` when the corresponding events were
+/// dropped by wraparound (partial timelines are still well-formed).
+#[derive(Clone, Debug, Default)]
+pub struct Timeline {
+    pub id: u64,
+    pub enqueued_us: Option<f64>,
+    /// First prefill chunk *ever* (survives eviction restarts, like the
+    /// scheduler's queue-wait stamp).
+    pub first_sched_us: Option<f64>,
+    /// First token after the *last* admission (eviction restarts reset it,
+    /// matching the TTFT the metrics record at retirement).
+    pub first_token_us: Option<f64>,
+    pub completed_us: Option<f64>,
+    pub finish: Option<FinishReason>,
+    pub admissions: usize,
+    /// Pool-exhaustion evictions only; cancels set `cancelled`.
+    pub evictions: usize,
+    pub cancelled: bool,
+    /// Tokens generated since the last admission (what the completion
+    /// reports; tokens lost to eviction restarts are not counted here).
+    pub tokens: usize,
+    /// Stall-step samples (running-lane tokens), across the whole
+    /// lifetime — the per-request slice of the decode-stall histogram.
+    pub stalls: Vec<usize>,
+    /// Prompt tokens fed through prefill chunks, cumulative across
+    /// restarts.
+    pub prompt_tokens_fed: usize,
+    /// Prompt tokens mapped from the prefix cache, summed over admissions.
+    pub tokens_reused: usize,
+}
+
+impl Timeline {
+    /// The TTFT split exactly as `ServingMetrics::record_first_token`
+    /// computes it: `(queue_us, spread_us)` relative to enqueue, with
+    /// `queue + spread == ttft`. `None` unless the timeline completed with
+    /// a first token and its enqueue survived in the ring.
+    pub fn ttft_split(&self) -> Option<(f64, f64)> {
+        self.completed_us?;
+        let enq = self.enqueued_us?;
+        let ttft = self.first_token_us? - enq;
+        let first_sched = self.first_sched_us.map_or(ttft, |t| t - enq);
+        let queue = first_sched.min(ttft);
+        Some((queue, ttft - queue))
+    }
+}
+
+fn timeline(out: &mut BTreeMap<u64, Timeline>, id: u64) -> &mut Timeline {
+    let t = out.entry(id).or_default();
+    t.id = id;
+    t
+}
+
+/// Fold a record stream into per-request timelines. Tolerates partial
+/// streams (ring wraparound): a request whose early events were dropped
+/// simply has those fields `None`.
+pub fn fold_timelines(records: &[TraceRecord]) -> BTreeMap<u64, Timeline> {
+    let mut out = BTreeMap::new();
+    for r in records {
+        match r.event {
+            TraceEvent::Enqueued { id } => {
+                timeline(&mut out, id).enqueued_us = Some(r.t_us);
+            }
+            TraceEvent::Admitted { id, tokens_reused, .. } => {
+                let t = timeline(&mut out, id);
+                t.admissions += 1;
+                t.tokens_reused += tokens_reused;
+                // A restart re-generates from scratch: TTFT is the first
+                // token after the LAST admission.
+                t.first_token_us = None;
+                t.tokens = 0;
+            }
+            TraceEvent::PrefillChunk { id, take, .. } => {
+                let t = timeline(&mut out, id);
+                if t.first_sched_us.is_none() {
+                    t.first_sched_us = Some(r.t_us);
+                }
+                t.prompt_tokens_fed += take;
+            }
+            TraceEvent::TokenDecoded { id, stall_steps, .. } => {
+                let t = timeline(&mut out, id);
+                if t.first_token_us.is_none() {
+                    t.first_token_us = Some(r.t_us);
+                }
+                t.tokens += 1;
+                if let Some(s) = stall_steps {
+                    t.stalls.push(s);
+                }
+            }
+            TraceEvent::Evicted { id, reason, .. } => {
+                let t = timeline(&mut out, id);
+                match reason {
+                    EvictReason::PoolExhausted => t.evictions += 1,
+                    EvictReason::Cancelled => t.cancelled = true,
+                }
+            }
+            TraceEvent::Completed { id, reason, .. } => {
+                let t = timeline(&mut out, id);
+                t.completed_us = Some(r.t_us);
+                t.finish = Some(reason);
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// Timestamp slack for cross-checking trace times against metrics times:
+/// both sides stamp from the *same* `Instant::now()` at every shared
+/// emission point, so the residual is pure float rounding (~1e-9 us); one
+/// nanosecond of slack is six orders of magnitude of margin.
+const T_EPS_US: f64 = 1e-3;
+
+fn sorted(mut v: Vec<f64>) -> Vec<f64> {
+    v.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    v
+}
+
+/// Cross-check a **complete** (no events dropped) record stream against
+/// the metrics the same run recorded. This is the "trace is not write-only
+/// telemetry" guarantee: every aggregate the metrics report must be
+/// re-derivable from the event stream —
+///
+/// * token / completion / eviction / prefix-reuse counts, exactly;
+/// * the decode-stall histogram, as an exact multiset;
+/// * per-request TTFT and its queue/spread split, to [`T_EPS_US`];
+/// * per-timeline monotonicity (enqueue <= first-sched <= first-token <=
+///   completion).
+pub fn verify_against_metrics(
+    records: &[TraceRecord],
+    m: &ServingMetrics,
+) -> Result<(), String> {
+    let mut tokens = 0usize;
+    let mut stalls = Vec::new();
+    let mut evictions = 0usize;
+    let mut reused = 0usize;
+    let mut hits = 0usize;
+    let mut completions = 0usize;
+    for r in records {
+        match r.event {
+            TraceEvent::TokenDecoded { stall_steps, .. } => {
+                tokens += 1;
+                if let Some(s) = stall_steps {
+                    stalls.push(s as f64);
+                }
+            }
+            TraceEvent::Evicted { reason: EvictReason::PoolExhausted, .. } => evictions += 1,
+            TraceEvent::Admitted { tokens_reused, .. } => reused += tokens_reused,
+            TraceEvent::PrefixHit { .. } => hits += 1,
+            TraceEvent::Completed { .. } => completions += 1,
+            _ => {}
+        }
+    }
+    if tokens != m.tokens_generated {
+        return Err(format!("trace has {tokens} TokenDecoded, metrics {}", m.tokens_generated));
+    }
+    if completions != m.requests_completed {
+        return Err(format!("trace has {completions} Completed, metrics {}", m.requests_completed));
+    }
+    if evictions != m.requests_evicted {
+        return Err(format!("trace has {evictions} evictions, metrics {}", m.requests_evicted));
+    }
+    if reused != m.tokens_reused {
+        return Err(format!("trace reuses {reused} tokens, metrics {}", m.tokens_reused));
+    }
+    if hits != m.prefix_hits {
+        return Err(format!("trace has {hits} prefix hits, metrics {}", m.prefix_hits));
+    }
+    let stalls = sorted(stalls);
+    let metric_stalls = sorted(m.decode_stall_steps.values().to_vec());
+    if stalls != metric_stalls {
+        return Err(format!(
+            "stall histogram diverged: trace {stalls:?} vs metrics {metric_stalls:?}"
+        ));
+    }
+
+    let timelines = fold_timelines(records);
+    let mut splits = Vec::new();
+    let mut ttfts = Vec::new();
+    for t in timelines.values() {
+        let marks = [t.enqueued_us, t.first_sched_us, t.first_token_us, t.completed_us];
+        let mut prev = f64::NEG_INFINITY;
+        for v in marks.into_iter().flatten() {
+            if v + T_EPS_US < prev {
+                return Err(format!("request {}: timeline not monotone: {marks:?}", t.id));
+            }
+            prev = v;
+        }
+        if let Some((queue, spread)) = t.ttft_split() {
+            splits.push((queue, spread));
+            ttfts.push(queue + spread);
+        }
+    }
+    let ttfts = sorted(ttfts);
+    let metric_ttfts = sorted(m.ttft_us.values().to_vec());
+    if ttfts.len() != metric_ttfts.len() {
+        return Err(format!(
+            "trace reconstructs {} TTFTs, metrics recorded {}",
+            ttfts.len(),
+            metric_ttfts.len()
+        ));
+    }
+    for (a, b) in ttfts.iter().zip(&metric_ttfts) {
+        if (a - b).abs() > T_EPS_US {
+            return Err(format!("TTFT mismatch: trace {a} us vs metrics {b} us"));
+        }
+    }
+    splits.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let mut metric_splits: Vec<(f64, f64)> = m
+        .queue_us
+        .values()
+        .iter()
+        .copied()
+        .zip(m.prefill_spread_us.values().iter().copied())
+        .collect();
+    metric_splits.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    if splits.len() != metric_splits.len() {
+        return Err(format!(
+            "trace reconstructs {} TTFT splits, metrics recorded {}",
+            splits.len(),
+            metric_splits.len()
+        ));
+    }
+    for ((tq, ts), (mq, ms)) in splits.iter().zip(&metric_splits) {
+        if (tq - mq).abs() > T_EPS_US || (ts - ms).abs() > T_EPS_US {
+            return Err(format!(
+                "TTFT split mismatch: trace ({tq}, {ts}) vs metrics ({mq}, {ms}) us"
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn chrome_event(name: String, ph: &str, tid: usize, extra: Vec<(&str, Json)>) -> Json {
+    let mut pairs = vec![
+        ("name", json::s(&name)),
+        ("ph", json::s(ph)),
+        ("pid", json::num(1.0)),
+        ("tid", json::num(tid as f64)),
+    ];
+    pairs.extend(extra);
+    json::obj(pairs)
+}
+
+fn chrome_span(name: String, tid: usize, t0: f64, t1: f64) -> Json {
+    chrome_event(
+        name,
+        "X",
+        tid,
+        vec![("ts", json::num(t0)), ("dur", json::num((t1 - t0).max(0.0)))],
+    )
+}
+
+fn chrome_counter(name: &str, ts: f64, value: f64) -> Json {
+    chrome_event(name.to_string(), "C", 0, vec![
+        ("ts", json::num(ts)),
+        ("args", json::obj(vec![("value", json::num(value))])),
+    ])
+}
+
+/// Export a record stream as Chrome trace-event JSON (load in
+/// `chrome://tracing` or Perfetto). Track layout: `tid 0` is the admission
+/// queue (one span per queued interval) plus the counter tracks; `tid
+/// s + 1` is slot `s`, carrying each occupant's prefill span, then its
+/// decode span, with instant markers at evictions. Spans left open by
+/// wraparound or still-live requests are closed at the last timestamp.
+pub fn chrome_trace(records: &[TraceRecord], dropped_events: u64) -> Json {
+    let mut events = Vec::new();
+    let max_slot = records
+        .iter()
+        .filter_map(|r| match r.event {
+            TraceEvent::Admitted { slot, .. }
+            | TraceEvent::PrefillChunk { slot, .. }
+            | TraceEvent::TokenDecoded { slot, .. }
+            | TraceEvent::Evicted { slot, .. }
+            | TraceEvent::Completed { slot, .. } => Some(slot),
+            _ => None,
+        })
+        .max();
+    events.push(chrome_event("process_name".into(), "M", 0, vec![(
+        "args",
+        json::obj(vec![("name", json::s("spinquant-serve"))]),
+    )]));
+    events.push(chrome_event("thread_name".into(), "M", 0, vec![(
+        "args",
+        json::obj(vec![("name", json::s("queue"))]),
+    )]));
+    for slot in 0..=max_slot.unwrap_or(0) {
+        events.push(chrome_event("thread_name".into(), "M", slot + 1, vec![(
+            "args",
+            json::obj(vec![("name", json::s(&format!("slot {slot}")))]),
+        )]));
+    }
+
+    let mut queue_open: BTreeMap<u64, f64> = BTreeMap::new();
+    let mut slot_open: BTreeMap<usize, (u64, &'static str, f64)> = BTreeMap::new();
+    let mut last_ts = 0.0f64;
+    for r in records {
+        last_ts = last_ts.max(r.t_us);
+        match r.event {
+            TraceEvent::Enqueued { id } => {
+                queue_open.insert(id, r.t_us);
+            }
+            TraceEvent::Admitted { id, slot, .. } => {
+                if let Some(t0) = queue_open.remove(&id) {
+                    events.push(chrome_span(format!("req{id} queued"), 0, t0, r.t_us));
+                }
+                // A span left open here means its Completed/Evicted record
+                // was dropped by wraparound: close it at the handover.
+                if let Some((oid, phase, t0)) = slot_open.insert(slot, (id, "prefill", r.t_us)) {
+                    events.push(chrome_span(format!("req{oid} {phase}"), slot + 1, t0, r.t_us));
+                }
+            }
+            TraceEvent::TokenDecoded { id, slot, .. } => {
+                if let Some(&(oid, phase, t0)) = slot_open.get(&slot) {
+                    if phase == "prefill" && oid == id {
+                        events.push(chrome_span(format!("req{id} prefill"), slot + 1, t0, r.t_us));
+                        slot_open.insert(slot, (id, "decode", r.t_us));
+                    }
+                }
+            }
+            TraceEvent::Evicted { id, slot, reason } => {
+                if let Some((oid, phase, t0)) = slot_open.remove(&slot) {
+                    events.push(chrome_span(format!("req{oid} {phase}"), slot + 1, t0, r.t_us));
+                }
+                events.push(chrome_event(
+                    format!("req{id} evicted ({reason:?})"),
+                    "i",
+                    slot + 1,
+                    vec![("ts", json::num(r.t_us)), ("s", json::s("t"))],
+                ));
+                if reason == EvictReason::PoolExhausted {
+                    // Back to the queue front: reopen its queue span.
+                    queue_open.insert(id, r.t_us);
+                }
+            }
+            TraceEvent::Completed { id, slot, .. } => {
+                if let Some((_, phase, t0)) = slot_open.remove(&slot) {
+                    events.push(chrome_span(format!("req{id} {phase}"), slot + 1, t0, r.t_us));
+                }
+            }
+            TraceEvent::StepComposed { decode_lanes, prefill_take, .. } => {
+                events.push(chrome_counter("decode_lanes", r.t_us, decode_lanes as f64));
+                events.push(chrome_counter("prefill_take", r.t_us, prefill_take as f64));
+            }
+            TraceEvent::Counters { queue_depth, in_flight, free_pages, prompt_fed, decode_fed } => {
+                events.push(chrome_counter("queue_depth", r.t_us, queue_depth as f64));
+                events.push(chrome_counter("in_flight", r.t_us, in_flight as f64));
+                events.push(chrome_counter("free_pages", r.t_us, free_pages as f64));
+                let fed = prompt_fed + decode_fed;
+                let share = if fed > 0 { prompt_fed as f64 / fed as f64 } else { 0.0 };
+                events.push(chrome_counter("prefill_share", r.t_us, share));
+            }
+            _ => {}
+        }
+    }
+    for (id, t0) in queue_open {
+        events.push(chrome_span(format!("req{id} queued"), 0, t0, last_ts));
+    }
+    for (slot, (id, phase, t0)) in slot_open {
+        events.push(chrome_span(format!("req{id} {phase}"), slot + 1, t0, last_ts));
+    }
+    json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", json::s("ms")),
+        ("otherData", json::obj(vec![("dropped_events", json::num(dropped_events as f64))])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{GenRequest, MockEngine, Scheduler};
+    use crate::testing::prop::forall;
+
+    fn rec(step: u64, t_us: f64, event: TraceEvent) -> TraceRecord {
+        TraceRecord { step, t_us, event }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let sink = TraceSink::ring(4);
+        for i in 0..6 {
+            sink.emit(TraceEvent::Enqueued { id: i });
+        }
+        let records = sink.records();
+        assert_eq!(records.len(), 4);
+        assert_eq!(sink.dropped_events(), 2);
+        assert_eq!(records[0].event, TraceEvent::Enqueued { id: 2 });
+        assert_eq!(records[3].event, TraceEvent::Enqueued { id: 5 });
+    }
+
+    #[test]
+    fn off_sink_is_inert() {
+        let sink = TraceSink::Off;
+        assert!(!sink.is_on());
+        sink.emit(TraceEvent::Enqueued { id: 0 });
+        sink.emit_at(Instant::now(), TraceEvent::Enqueued { id: 1 });
+        sink.begin_step();
+        assert!(sink.records().is_empty());
+        assert_eq!(sink.dropped_events(), 0);
+    }
+
+    #[test]
+    fn step_index_stamps_records() {
+        let sink = TraceSink::ring(8);
+        sink.begin_step();
+        sink.emit(TraceEvent::Enqueued { id: 0 });
+        sink.begin_step();
+        sink.emit(TraceEvent::Enqueued { id: 1 });
+        let records = sink.records();
+        assert_eq!(records[0].step, 1);
+        assert_eq!(records[1].step, 2);
+    }
+
+    #[test]
+    fn fold_reconstructs_single_lifecycle() {
+        let records = [
+            rec(1, 0.0, TraceEvent::Enqueued { id: 7 }),
+            rec(2, 10.0, TraceEvent::Admitted { id: 7, slot: 0, pages_charged: 2, tokens_reused: 4 }),
+            rec(2, 12.0, TraceEvent::PrefillChunk { id: 7, slot: 0, pos0: 4, take: 5 }),
+            rec(3, 20.0, TraceEvent::TokenDecoded { id: 7, slot: 0, stall_steps: None }),
+            rec(4, 30.0, TraceEvent::TokenDecoded { id: 7, slot: 0, stall_steps: Some(0) }),
+            rec(4, 31.0, TraceEvent::Completed { id: 7, slot: 0, reason: FinishReason::BudgetExhausted }),
+        ];
+        let tl = fold_timelines(&records);
+        let t = &tl[&7];
+        assert_eq!(t.enqueued_us, Some(0.0));
+        assert_eq!(t.first_sched_us, Some(12.0));
+        assert_eq!(t.first_token_us, Some(20.0));
+        assert_eq!(t.completed_us, Some(31.0));
+        assert_eq!(t.finish, Some(FinishReason::BudgetExhausted));
+        assert_eq!(t.tokens, 2);
+        assert_eq!(t.stalls, vec![0]);
+        assert_eq!(t.prompt_tokens_fed, 5);
+        assert_eq!(t.tokens_reused, 4);
+        // ttft = 20; queue = 12; spread = 8.
+        assert_eq!(t.ttft_split(), Some((12.0, 8.0)));
+    }
+
+    #[test]
+    fn fold_resets_first_token_on_readmission() {
+        let records = [
+            rec(1, 0.0, TraceEvent::Enqueued { id: 3 }),
+            rec(1, 5.0, TraceEvent::Admitted { id: 3, slot: 1, pages_charged: 1, tokens_reused: 0 }),
+            rec(1, 6.0, TraceEvent::PrefillChunk { id: 3, slot: 1, pos0: 0, take: 2 }),
+            rec(2, 9.0, TraceEvent::TokenDecoded { id: 3, slot: 1, stall_steps: None }),
+            rec(3, 12.0, TraceEvent::Evicted { id: 3, slot: 1, reason: EvictReason::PoolExhausted }),
+            rec(4, 20.0, TraceEvent::Admitted { id: 3, slot: 0, pages_charged: 1, tokens_reused: 0 }),
+            rec(4, 21.0, TraceEvent::PrefillChunk { id: 3, slot: 0, pos0: 0, take: 2 }),
+            rec(5, 25.0, TraceEvent::TokenDecoded { id: 3, slot: 0, stall_steps: None }),
+            rec(5, 26.0, TraceEvent::Completed { id: 3, slot: 0, reason: FinishReason::BudgetExhausted }),
+        ];
+        let tl = fold_timelines(&records);
+        let t = &tl[&3];
+        assert_eq!(t.admissions, 2);
+        assert_eq!(t.evictions, 1);
+        // TTFT restarts with the re-admission; queue wait keeps the FIRST
+        // schedule (t=6), exactly like the scheduler's stamps.
+        assert_eq!(t.first_token_us, Some(25.0));
+        assert_eq!(t.first_sched_us, Some(6.0));
+        assert_eq!(t.tokens, 1);
+        assert_eq!(t.ttft_split(), Some((6.0, 19.0)));
+    }
+
+    #[test]
+    fn verify_cross_checks_hand_built_metrics() {
+        let records = [
+            rec(1, 0.0, TraceEvent::Enqueued { id: 0 }),
+            rec(1, 4.0, TraceEvent::Admitted { id: 0, slot: 0, pages_charged: 1, tokens_reused: 2 }),
+            rec(1, 4.5, TraceEvent::PrefixHit { id: 0, slot: 0, pages: 1 }),
+            rec(1, 5.0, TraceEvent::PrefillChunk { id: 0, slot: 0, pos0: 2, take: 3 }),
+            rec(2, 9.0, TraceEvent::TokenDecoded { id: 0, slot: 0, stall_steps: None }),
+            rec(3, 14.0, TraceEvent::TokenDecoded { id: 0, slot: 0, stall_steps: Some(1) }),
+            rec(3, 15.0, TraceEvent::Completed { id: 0, slot: 0, reason: FinishReason::BudgetExhausted }),
+        ];
+        let mut m = ServingMetrics::new();
+        m.tokens_generated = 2;
+        m.requests_completed = 1;
+        m.tokens_reused = 2;
+        m.prefix_hits = 1;
+        m.decode_stall_steps.push(1.0);
+        m.ttft_us.push(9.0);
+        m.queue_us.push(5.0);
+        m.prefill_spread_us.push(4.0);
+        verify_against_metrics(&records, &m).unwrap();
+        // Any single divergence is caught.
+        let mut bad = m.clone();
+        bad.decode_stall_steps.push(5.0);
+        assert!(verify_against_metrics(&records, &bad).is_err());
+        let mut bad = m.clone();
+        bad.ttft_us = crate::util::timer::Samples::new();
+        bad.ttft_us.push(9.5);
+        assert!(verify_against_metrics(&records, &bad).is_err());
+        let mut bad = m.clone();
+        bad.tokens_generated = 3;
+        assert!(verify_against_metrics(&records, &bad).is_err());
+        let mut bad = m;
+        bad.queue_us = crate::util::timer::Samples::new();
+        bad.queue_us.push(6.0);
+        assert!(verify_against_metrics(&records, &bad).is_err());
+    }
+
+    #[test]
+    fn oracle_scope_excludes_physical_plane() {
+        assert!(TraceEvent::Enqueued { id: 0 }.in_oracle_scope());
+        assert!(TraceEvent::StepComposed { decode_lanes: 1, prefill_take: 2, budget: 4 }
+            .in_oracle_scope());
+        assert!(TraceEvent::PrefixDonated { slot: 0, pages: 1 }.in_oracle_scope());
+        assert!(!TraceEvent::PageAllocated { block: 0, refcount: 1 }.in_oracle_scope());
+        assert!(!TraceEvent::PageRetained { block: 0, refcount: 2 }.in_oracle_scope());
+        assert!(!TraceEvent::PageReleased { block: 0, refcount: 0 }.in_oracle_scope());
+        assert!(!TraceEvent::Counters {
+            queue_depth: 0,
+            in_flight: 0,
+            free_pages: 0,
+            prompt_fed: 0,
+            decode_fed: 0
+        }
+        .in_oracle_scope());
+    }
+
+    #[test]
+    fn tracing_does_not_change_scheduling() {
+        // Trace-off byte-identity with the PR 5 paths: the sink is a
+        // branch, never a behavior change.
+        let run = |traced: bool| {
+            let engine = MockEngine::new(2, 64, 64).with_prefill_chunk(4);
+            let mut s = Scheduler::new(engine, 16).expect("scheduler");
+            if traced {
+                s = s.with_trace(1 << 12);
+            }
+            for len in [3usize, 10, 7] {
+                s.submit(GenRequest::greedy(&vec![9u8; len], 5)).expect("submit");
+            }
+            let mut done = Vec::new();
+            while !s.is_idle() {
+                done.extend(s.step().expect("step"));
+            }
+            let outs: Vec<(u64, Vec<u8>)> =
+                done.into_iter().map(|c| (c.id, c.completion)).collect();
+            (outs, s.engine().steps, s.engine().prefill_calls)
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn trace_off_sink_is_never_allocated() {
+        let s = Scheduler::new(MockEngine::new(1, 16, 64), 4).expect("scheduler");
+        assert!(matches!(s.trace_sink(), TraceSink::Off));
+        assert!(s.trace_records().is_empty());
+        assert_eq!(s.trace_dropped_events(), 0);
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_live_timelines_well_formed() {
+        let engine = MockEngine::new(2, 64, 64).with_prefill_chunk(4);
+        let mut s = Scheduler::new(engine, 16).expect("scheduler").with_trace(24);
+        let mut last = 0u64;
+        for _ in 0..6 {
+            last = s.submit(GenRequest::greedy(&[5u8; 10], 4)).expect("submit");
+            while !s.is_idle() {
+                s.step().expect("step");
+            }
+        }
+        assert!(s.trace_dropped_events() > 0, "24-record ring must wrap over 6 requests");
+        let records = s.trace_records();
+        // Order survives the wrap.
+        for w in records.windows(2) {
+            assert!(w[0].step <= w[1].step);
+            assert!(w[0].t_us <= w[1].t_us + T_EPS_US);
+        }
+        // The newest request's lifecycle is complete and internally
+        // consistent even though older requests were truncated.
+        let tl = fold_timelines(&records);
+        let t = &tl[&last];
+        assert_eq!(t.tokens, 4);
+        assert!(t.completed_us.is_some());
+        assert_eq!(t.finish, Some(FinishReason::BudgetExhausted));
+        let (queue, spread) = t.ttft_split().expect("full lifecycle survived");
+        assert!(queue >= 0.0 && spread >= 0.0);
+    }
+
+    #[test]
+    fn metrics_vs_trace_fold_property() {
+        // Seeded random workloads over every scheduler shape: a complete
+        // trace must re-derive the metrics exactly.
+        forall(2024, 60, |g| {
+            let slots = g.int(1, 4);
+            let max_seq = g.int(6, 48);
+            let chunk = *g.pick(&[1usize, 2, 4, 8]);
+            let paged = g.bool();
+            let block_size = *g.pick(&[1usize, 2, 4, 8]);
+            let full = slots * max_seq.div_ceil(block_size);
+            let mut engine = MockEngine::new(slots, max_seq, 64).with_prefill_chunk(chunk);
+            if paged {
+                engine = engine.with_block_pool(g.int(1, full.max(2)), block_size);
+            }
+            let mut s = Scheduler::new(engine, g.int(1, 6))
+                .map_err(|e| e.to_string())?
+                .with_trace(1 << 16);
+            if paged && g.bool() {
+                s = s.with_prefix_cache().map_err(|e| e.to_string())?;
+            }
+            if chunk > 1 && g.bool() {
+                s = s
+                    .with_step_budget(*g.pick(&[2usize, 4, 8]))
+                    .map_err(|e| e.to_string())?;
+            }
+            for _ in 0..g.int(4, 30) {
+                match g.int(0, 9) {
+                    0..=3 => {
+                        let len = g.int(1, (max_seq - 1).min(24));
+                        let fill = g.int(0, 60) as u8;
+                        let _ = s.submit(GenRequest::greedy(&vec![fill; len], g.int(0, 8)));
+                    }
+                    4..=8 => {
+                        s.step().map_err(|e| e.to_string())?;
+                    }
+                    _ => {
+                        s.cancel(g.int(0, 12) as u64).map_err(|e| e.to_string())?;
+                    }
+                }
+            }
+            while !s.is_idle() {
+                s.step().map_err(|e| e.to_string())?;
+            }
+            if s.trace_dropped_events() != 0 {
+                return Err("trace ring overflowed a 64k budget".into());
+            }
+            verify_against_metrics(&s.trace_records(), &s.metrics)
+        });
+    }
+
+    #[test]
+    fn chrome_export_is_valid_and_tracked() {
+        let engine =
+            MockEngine::new(2, 64, 64).with_prefill_chunk(4).with_block_pool(16, 4);
+        let mut s = Scheduler::new(engine, 8)
+            .expect("scheduler")
+            .with_trace(1 << 12)
+            .with_prefix_cache()
+            .expect("prefix cache")
+            .with_step_budget(4)
+            .expect("budget");
+        for _ in 0..3 {
+            s.submit(GenRequest::greedy(&[1u8; 9], 3)).expect("submit");
+        }
+        while !s.is_idle() {
+            s.step().expect("step");
+        }
+        let j = chrome_trace(&s.trace_records(), s.trace_dropped_events());
+        // Round-trips through the parser and keeps the format contract.
+        let parsed = Json::parse(&j.to_string()).expect("valid JSON");
+        let evs = parsed.req("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!evs.is_empty());
+        let (mut saw_x, mut saw_c, mut saw_m) = (false, false, false);
+        for e in evs {
+            assert!(e.get("pid").is_some() && e.get("name").is_some());
+            match e.req("ph").unwrap().as_str().unwrap() {
+                "X" => {
+                    saw_x = true;
+                    assert!(e.req("dur").unwrap().as_f64().unwrap() >= 0.0);
+                    assert!(e.req("ts").unwrap().as_f64().unwrap() >= 0.0);
+                }
+                "C" => saw_c = true,
+                "M" => saw_m = true,
+                "i" => {}
+                other => panic!("unexpected phase {other:?}"),
+            }
+        }
+        assert!(saw_x && saw_c && saw_m, "spans, counters and metadata all present");
+        assert_eq!(
+            parsed.req("otherData").unwrap().req("dropped_events").unwrap().as_f64(),
+            Some(0.0)
+        );
+    }
+}

@@ -29,12 +29,22 @@
 //! just the admission/join/evict/budget/reuse arithmetic the real
 //! [`crate::serve::Scheduler`] must implement.
 //!
+//! The oracle also emits the scheduler's **flight-recorder event stream**
+//! ([`crate::serve::trace::TraceEvent`]) from its bookkeeping — request
+//! lifecycle (`Enqueued`/`Admitted`/`PrefixHit`/`PrefillChunk`/
+//! `TokenDecoded`/`Evicted`/`Completed`), donations, and composer plans —
+//! in the exact order the real scheduler's instrumented hot path emits
+//! them (pre-call batch-build emissions, then post-call per-slot
+//! processing). The physical page plane (`PageAllocated`/`Retained`/
+//! `Released`) and counter samples are deliberately *not* modeled; the
+//! comparison filters them out via [`TraceEvent::in_oracle_scope`].
+//!
 //! The randomized trace tests at the bottom generate hundreds of seeded
 //! traces, run each against both the oracle and the real scheduler over
 //! [`crate::serve::MockEngine`], and require them to agree on accepted
 //! ids, completion order, per-request token counts, per-step slot
-//! occupancy and queue depth, and the exact number of decode steps and
-//! prefill calls. The shared-prefix suites additionally require the real
+//! occupancy and queue depth, the exact number of decode steps and
+//! prefill calls, and — event by event — the trace stream itself. The shared-prefix suites additionally require the real
 //! scheduler's completions to be **byte-identical with the prefix cache on
 //! and off**. Failures print the seed/case (via [`super::prop::forall`])
 //! so any divergence is reproducible. CI pins the seeds (see
@@ -42,6 +52,8 @@
 //! build.
 
 use std::collections::{BTreeMap, VecDeque};
+
+use crate::serve::trace::{EvictReason, FinishReason, TraceEvent};
 
 /// One generation request, reduced to what the bookkeeping depends on —
 /// plus just enough *content* structure to express shared prompt prefixes:
@@ -152,6 +164,14 @@ pub struct SimResult {
     /// this to `ceil(len/chunk)` during a long prompt; the composer pins
     /// it at 0.
     pub max_decode_stall_steps: usize,
+    /// The oracle's flight-recorder stream: every logical scheduling event
+    /// (request lifecycle + composer plans) in emission order, mirroring
+    /// what the real scheduler's trace emits — minus the physical page
+    /// plane and counter samples, which [`TraceEvent::in_oracle_scope`]
+    /// filters from the real stream before comparison. The equivalence
+    /// suites require *exact sequence equality*, so scheduler decisions
+    /// themselves (not just their aggregates) are a checked observable.
+    pub events: Vec<TraceEvent>,
 }
 
 #[derive(Clone, Debug)]
@@ -290,7 +310,7 @@ impl SimState {
         }
     }
 
-    fn cancel(&mut self, id: u64) -> bool {
+    fn cancel(&mut self, id: u64, res: &mut SimResult) -> bool {
         if let Some(i) = self.pending.iter().position(|(pid, _)| *pid == id) {
             self.pending.remove(i);
             return true;
@@ -299,6 +319,11 @@ impl SimState {
             if self.slots[b].as_ref().map(|s| s.id) == Some(id) {
                 let s = self.slots[b].take().expect("occupied");
                 self.release_slot_pages(&s);
+                res.events.push(TraceEvent::Evicted {
+                    id,
+                    slot: b,
+                    reason: EvictReason::Cancelled,
+                });
                 return true;
             }
         }
@@ -341,6 +366,19 @@ impl SimState {
                 0
             };
             res.tokens_reused += cached;
+            // Mirror of the scheduler's Admitted emission: end-to-end page
+            // demand minus the whole pages the prefix cache mapped.
+            let pages_charged =
+                if self.paged() { self.pages_needed(&r) - matched.len() } else { 0 };
+            res.events.push(TraceEvent::Admitted {
+                id,
+                slot: b,
+                pages_charged,
+                tokens_reused: cached,
+            });
+            if cached > 0 {
+                res.events.push(TraceEvent::PrefixHit { id, slot: b, pages: matched.len() });
+            }
             self.slots[b] = Some(SimSlot {
                 id,
                 req: r,
@@ -358,6 +396,12 @@ impl SimState {
     fn retire(&mut self, b: usize, res: &mut SimResult) {
         let s = self.slots[b].take().expect("retiring an occupied slot");
         self.release_slot_pages(&s);
+        let reason = if s.gen >= s.req.max_new {
+            FinishReason::BudgetExhausted
+        } else {
+            FinishReason::CacheFull
+        };
+        res.events.push(TraceEvent::Completed { id: s.id, slot: b, reason });
         res.completion_order.push(s.id);
         res.generated.insert(s.id, s.gen);
     }
@@ -372,6 +416,11 @@ impl SimState {
         let s = self.slots[victim].take().expect("occupied");
         self.release_slot_pages(&s);
         res.evictions += 1;
+        res.events.push(TraceEvent::Evicted {
+            id: s.id,
+            slot: victim,
+            reason: EvictReason::PoolExhausted,
+        });
         self.pending.push_front((s.id, s.req));
     }
 
@@ -396,12 +445,13 @@ impl SimState {
     /// Mirror of the donation inside `SlotMap::advance_by`: every page that
     /// filled in `(old_pos, new_pos]` wholly inside the prompt enters the
     /// index (duplicates keep the existing entry; the page stays owned).
-    fn donate(&mut self, b: usize, old_pos: usize, new_pos: usize) {
+    fn donate(&mut self, b: usize, old_pos: usize, new_pos: usize, res: &mut SimResult) {
         if !self.cfg.prefix_cache {
             return;
         }
         let bs = self.cfg.block_size;
         let prompt = self.slots[b].as_ref().expect("occupied").prompt.clone();
+        let mut donated = 0usize;
         for j in (old_pos / bs)..(new_pos / bs) {
             if (j + 1) * bs > prompt.len() {
                 continue;
@@ -417,6 +467,10 @@ impl SimState {
             let s = self.slots[b].as_mut().expect("occupied");
             s.own_pages -= 1;
             s.refs.push(id);
+            donated += 1;
+        }
+        if donated > 0 {
+            res.events.push(TraceEvent::PrefixDonated { slot: b, pages: donated });
         }
     }
 
@@ -458,6 +512,22 @@ impl SimState {
                 }
             }
             res.prefill_calls += 1;
+            // The real scheduler emits every PrefillChunk while *building*
+            // the batched call, then processes the results — two passes, so
+            // the oracle's emissions must split the same way.
+            for b in 0..self.cfg.slots {
+                if let Some(s) = self.slots[b].as_ref() {
+                    if s.fed < s.req.prompt_len {
+                        let take = chunk.min(s.req.prompt_len - s.fed);
+                        res.events.push(TraceEvent::PrefillChunk {
+                            id: s.id,
+                            slot: b,
+                            pos0: s.pos,
+                            take,
+                        });
+                    }
+                }
+            }
             for b in 0..self.cfg.slots {
                 let advanced = match self.slots[b].as_mut() {
                     Some(s) if s.fed < s.req.prompt_len => {
@@ -465,21 +535,32 @@ impl SimState {
                         let old_pos = s.pos;
                         s.fed += take;
                         s.pos += take;
+                        let mut sampled = false;
                         let mut fin = false;
                         if s.fed >= s.req.prompt_len {
                             if s.gen < s.req.max_new {
                                 s.gen += 1;
+                                sampled = true;
                             }
                             if s.gen >= s.req.max_new {
                                 fin = true;
                             }
                         }
-                        Some((old_pos, s.pos, fin || s.pos >= self.cfg.max_seq))
+                        Some((s.id, old_pos, s.pos, sampled, fin || s.pos >= self.cfg.max_seq))
                     }
                     _ => continue,
                 };
-                if let Some((old_pos, new_pos, finished)) = advanced {
-                    self.donate(b, old_pos, new_pos);
+                if let Some((id, old_pos, new_pos, sampled, finished)) = advanced {
+                    self.donate(b, old_pos, new_pos, res);
+                    if sampled {
+                        // First token, sampled off the chunk that completed
+                        // the prompt — not a decode-set token, so no stall.
+                        res.events.push(TraceEvent::TokenDecoded {
+                            id,
+                            slot: b,
+                            stall_steps: None,
+                        });
+                    }
                     if finished {
                         self.retire(b, res);
                     }
@@ -508,6 +589,21 @@ impl SimState {
                 return;
             }
             res.decode_steps += 1;
+            // Pre-call pass, mirroring the real batch-build loop: a warming
+            // lane on the interleaved path feeds one prompt token per call —
+            // a PrefillChunk of take 1, emitted before any result lands.
+            for b in 0..self.cfg.slots {
+                if let Some(s) = self.slots[b].as_ref() {
+                    if s.fed < s.req.prompt_len {
+                        res.events.push(TraceEvent::PrefillChunk {
+                            id: s.id,
+                            slot: b,
+                            pos0: s.pos,
+                            take: 1,
+                        });
+                    }
+                }
+            }
             for b in 0..self.cfg.slots {
                 let advanced = match self.slots[b].as_mut() {
                     Some(s) => {
@@ -516,28 +612,41 @@ impl SimState {
                         if s.fed < s.req.prompt_len {
                             s.fed += 1;
                         }
+                        let mut sampled = false;
                         let mut fin = false;
                         if s.fed >= s.req.prompt_len {
                             if s.gen < s.req.max_new {
                                 s.gen += 1;
+                                sampled = true;
                             }
                             if s.gen >= s.req.max_new {
                                 fin = true;
                             }
                         }
-                        if running[b] {
+                        let stall = if running[b] {
                             // A running slot always samples on a decode
                             // step: its accumulated stall is recorded.
                             res.max_decode_stall_steps =
                                 res.max_decode_stall_steps.max(s.stall);
+                            let stall = s.stall;
                             s.stall = 0;
-                        }
-                        Some((old_pos, s.pos, fin || s.pos >= self.cfg.max_seq))
+                            Some(stall)
+                        } else {
+                            None
+                        };
+                        Some((s.id, old_pos, s.pos, sampled, stall, fin || s.pos >= self.cfg.max_seq))
                     }
                     None => continue,
                 };
-                if let Some((old_pos, new_pos, finished)) = advanced {
-                    self.donate(b, old_pos, new_pos);
+                if let Some((id, old_pos, new_pos, sampled, stall, finished)) = advanced {
+                    self.donate(b, old_pos, new_pos, res);
+                    if sampled {
+                        res.events.push(TraceEvent::TokenDecoded {
+                            id,
+                            slot: b,
+                            stall_steps: stall,
+                        });
+                    }
                     if finished {
                         self.retire(b, res);
                     }
@@ -579,6 +688,16 @@ impl SimState {
                 }
             }
         }
+        // The plan is fixed here — record it before growth can shrink the
+        // surviving set, like the real composer does.
+        let planned_take: usize = takes.iter().sum();
+        if decode_tokens + planned_take > 0 {
+            res.events.push(TraceEvent::StepComposed {
+                decode_lanes: decode_tokens,
+                prefill_take: planned_take,
+                budget,
+            });
+        }
         if self.paged() {
             for b in 0..self.cfg.slots {
                 if running[b] && self.slots[b].is_some() {
@@ -605,21 +724,38 @@ impl SimState {
                     Some(s) => {
                         let old_pos = s.pos;
                         s.pos += 1;
+                        let mut sampled = false;
                         let mut fin = false;
                         if s.gen < s.req.max_new {
                             s.gen += 1;
+                            sampled = true;
                         }
                         if s.gen >= s.req.max_new {
                             fin = true;
                         }
                         res.max_decode_stall_steps = res.max_decode_stall_steps.max(s.stall);
+                        let stall = s.stall;
                         s.stall = 0;
-                        Some((old_pos, s.pos, fin || s.pos >= self.cfg.max_seq))
+                        Some((
+                            s.id,
+                            old_pos,
+                            s.pos,
+                            sampled,
+                            Some(stall),
+                            fin || s.pos >= self.cfg.max_seq,
+                        ))
                     }
                     None => continue,
                 };
-                if let Some((old_pos, new_pos, finished)) = advanced {
-                    self.donate(b, old_pos, new_pos);
+                if let Some((id, old_pos, new_pos, sampled, stall, finished)) = advanced {
+                    self.donate(b, old_pos, new_pos, res);
+                    if sampled {
+                        res.events.push(TraceEvent::TokenDecoded {
+                            id,
+                            slot: b,
+                            stall_steps: stall,
+                        });
+                    }
                     if finished {
                         self.retire(b, res);
                     }
@@ -630,6 +766,21 @@ impl SimState {
         let any_p = (0..self.cfg.slots).any(|b| takes[b] > 0 && self.slots[b].is_some());
         if any_p {
             res.prefill_calls += 1;
+            // Pre-call pass: every surviving planned take is announced
+            // before any result is processed (the real batch-build loop).
+            for b in 0..self.cfg.slots {
+                if takes[b] == 0 {
+                    continue;
+                }
+                if let Some(s) = self.slots[b].as_ref() {
+                    res.events.push(TraceEvent::PrefillChunk {
+                        id: s.id,
+                        slot: b,
+                        pos0: s.pos,
+                        take: takes[b],
+                    });
+                }
+            }
             for b in 0..self.cfg.slots {
                 if takes[b] == 0 {
                     continue;
@@ -640,21 +791,30 @@ impl SimState {
                         let old_pos = s.pos;
                         s.fed += take;
                         s.pos += take;
+                        let mut sampled = false;
                         let mut fin = false;
                         if s.fed >= s.req.prompt_len {
                             if s.gen < s.req.max_new {
                                 s.gen += 1;
+                                sampled = true;
                             }
                             if s.gen >= s.req.max_new {
                                 fin = true;
                             }
                         }
-                        Some((old_pos, s.pos, fin || s.pos >= self.cfg.max_seq))
+                        Some((s.id, old_pos, s.pos, sampled, fin || s.pos >= self.cfg.max_seq))
                     }
                     None => continue,
                 };
-                if let Some((old_pos, new_pos, finished)) = advanced {
-                    self.donate(b, old_pos, new_pos);
+                if let Some((id, old_pos, new_pos, sampled, finished)) = advanced {
+                    self.donate(b, old_pos, new_pos, res);
+                    if sampled {
+                        res.events.push(TraceEvent::TokenDecoded {
+                            id,
+                            slot: b,
+                            stall_steps: None,
+                        });
+                    }
                     if finished {
                         self.retire(b, res);
                     }
@@ -682,10 +842,13 @@ pub fn simulate(cfg: &SimConfig, events: &[SimEvent]) -> SimResult {
         match ev {
             SimEvent::Submit(r) => {
                 let got = st.submit(*r);
+                if let Some(id) = got {
+                    res.events.push(TraceEvent::Enqueued { id });
+                }
                 res.submits.push(got);
             }
             SimEvent::Cancel(id) => {
-                let got = st.cancel(*id);
+                let got = st.cancel(*id, &mut res);
                 res.cancels.push(got);
             }
             SimEvent::Step => st.step(&mut res),
@@ -721,9 +884,11 @@ mod tests {
     }
 
     /// Drive the REAL scheduler (over MockEngine) through the same trace
-    /// the oracle saw, collecting the same observables.
+    /// the oracle saw, collecting the same observables — including the
+    /// flight-recorder event stream, filtered to the logical (oracle-scope)
+    /// events for exact sequence comparison.
     fn run_real(cfg: &SimConfig, events: &[SimEvent]) -> SimResult {
-        let mut s = build_scheduler(cfg);
+        let mut s = build_scheduler(cfg).with_trace(1 << 16);
         let mut res = SimResult::default();
         let record = |s: &mut Scheduler<MockEngine>, res: &mut SimResult| {
             let was_idle = s.is_idle();
@@ -755,6 +920,17 @@ mod tests {
         res.evictions = s.metrics.requests_evicted;
         res.tokens_reused = s.metrics.tokens_reused;
         res.max_decode_stall_steps = s.metrics.max_decode_stall_steps();
+        assert_eq!(
+            s.trace_dropped_events(),
+            0,
+            "equivalence traces must fit the ring buffer entirely"
+        );
+        res.events = s
+            .trace_records()
+            .into_iter()
+            .map(|r| r.event)
+            .filter(TraceEvent::in_oracle_scope)
+            .collect();
         res
     }
 
@@ -1043,6 +1219,26 @@ mod tests {
             return Err(format!(
                 "{cfg:?}: max decode stall {} vs oracle {}",
                 real.max_decode_stall_steps, oracle.max_decode_stall_steps
+            ));
+        }
+        // Event-stream equivalence: the real scheduler's flight-recorder
+        // stream (oracle-scope events only) must equal the oracle's event
+        // by event — exact sequence, not just aggregate counts. Report the
+        // first divergence so a failure pinpoints the decision that split.
+        if real.events != oracle.events {
+            let i = real
+                .events
+                .iter()
+                .zip(&oracle.events)
+                .position(|(a, b)| a != b)
+                .unwrap_or(real.events.len().min(oracle.events.len()));
+            return Err(format!(
+                "{cfg:?}: event streams diverge at index {i} \
+                 (real has {} events, oracle {}):\nreal:   {:?}\noracle: {:?}",
+                real.events.len(),
+                oracle.events.len(),
+                real.events.get(i),
+                oracle.events.get(i)
             ));
         }
         // THE composer latency guarantee, enforced on every budgeted

@@ -41,21 +41,42 @@ impl Samples {
     }
 
     pub fn percentile_us(&self, p: f64) -> f64 {
+        self.percentiles_us(&[p])[0]
+    }
+
+    /// Batched percentiles: sort once, read many. Nearest-rank on the same
+    /// index formula the single-percentile path always used, so the results
+    /// are bit-identical — but `ServingMetrics::to_json` reads ~10
+    /// percentiles of the same (growing) sample sets, and this does one
+    /// clone-and-sort for all of them instead of one per call.
+    pub fn percentiles_us(&self, ps: &[f64]) -> Vec<f64> {
         if self.us.is_empty() {
-            return 0.0;
+            return vec![0.0; ps.len()];
         }
         let mut v = self.us.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((v.len() - 1) as f64 * p / 100.0).round() as usize;
-        v[idx]
+        ps.iter()
+            .map(|&p| v[((v.len() - 1) as f64 * p / 100.0).round() as usize])
+            .collect()
     }
 
     pub fn median_us(&self) -> f64 {
         self.percentile_us(50.0)
     }
 
+    /// Smallest sample, or 0.0 on an empty set — like every other accessor
+    /// here, so JSON export can never emit `inf`.
     pub fn min_us(&self) -> f64 {
+        if self.us.is_empty() {
+            return 0.0;
+        }
         self.us.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    /// Raw samples in insertion order (the trace verifier and the histogram
+    /// export consume these).
+    pub fn values(&self) -> &[f64] {
+        &self.us
     }
 
     pub fn stddev_us(&self) -> f64 {
@@ -93,5 +114,49 @@ mod tests {
         assert_eq!(out, 42);
         assert_eq!(s.len(), 1);
         assert!(s.mean_us() >= 0.0);
+    }
+
+    #[test]
+    fn empty_set_accessors_are_zero() {
+        let s = Samples::new();
+        assert_eq!(s.mean_us(), 0.0);
+        assert_eq!(s.min_us(), 0.0, "min over an empty set must not be inf");
+        assert_eq!(s.stddev_us(), 0.0);
+        assert_eq!(s.percentile_us(99.0), 0.0);
+        assert_eq!(s.percentiles_us(&[50.0, 95.0, 99.0]), vec![0.0, 0.0, 0.0]);
+        assert!(s.values().is_empty());
+    }
+
+    #[test]
+    fn percentiles_batched_bit_identical_to_per_call() {
+        use crate::testing::prop::forall;
+        forall(77, 200, |g| {
+            let n = g.int(0, 40);
+            let mut s = Samples::new();
+            for _ in 0..n {
+                s.push(g.f32(0.0, 1000.0) as f64);
+            }
+            let ps: Vec<f64> =
+                (0..g.int(1, 8)).map(|_| g.f32(0.0, 100.0) as f64).collect();
+            let batched = s.percentiles_us(&ps);
+            for (i, &p) in ps.iter().enumerate() {
+                // Reference: the old per-call clone-and-sort path, inlined
+                // so the comparison is not circular through the delegation.
+                let reference = if s.is_empty() {
+                    0.0
+                } else {
+                    let mut v = s.values().to_vec();
+                    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    v[((v.len() - 1) as f64 * p / 100.0).round() as usize]
+                };
+                if batched[i].to_bits() != reference.to_bits() {
+                    return Err(format!(
+                        "p{p}: batched {} != per-call {}",
+                        batched[i], reference
+                    ));
+                }
+            }
+            Ok(())
+        });
     }
 }
