@@ -23,6 +23,12 @@ single lowered module covers all W-A-KV rows of paper Table 1:
                          memory scales with tokens in flight, not slots
   prefill_*_paged_b{4,8}_t16  paged twin of the prefill graphs
 
+Quantized KV pages (`serve --kv-bits`) need no artifacts of their own: the
+paged quant variants already take the qcfg vector as a runtime input, and
+the graphs fake-quant K/V at qcfg[1] bits before scattering to physical
+pages, so one lowered module covers 4/8/16-bit KV storage (16 = exact
+pass-through).
+
 The manifest records the exact input ABI (names, shapes, dtypes, order) for
 each artifact; rust/src/runtime asserts against it at load time.
 

@@ -598,6 +598,16 @@ def prefill_batched(params, cfg: Config, tokens, pos0, n_valid, cache_k, cache_v
 # n_blocks = B * max_seq // bs) the gathered logical view *is* the dense
 # cache, element for element, so logits and (reshaped) caches are bit-equal
 # to the dense graphs — tested in test_model.py.
+#
+# Quantized KV storage (`serve --kv-bits {4,8,16}`): K/V pass through
+# `_kvq` *before* the scatter, so physical pages hold quantize->dequantize
+# round-tripped values at qcfg[1] bits — the page is the storage grid, not a
+# staging buffer for full-precision rows. `qcfg` is a runtime input, so the
+# same lowered artifact serves every KV width; kv_bits >= 16 is an exact
+# pass-through (pages bit-equal to the fp path), and 4/8-bit pages drift
+# from fp by a bounded, grid-sized amount (tested in test_model.py). The
+# rust MockEngine (rust/src/serve/engine.rs) mirrors exactly this model
+# when it packs its own pages.
 
 
 def _paged_gather(cache_layer, block_table, n_blocks):

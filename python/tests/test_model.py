@@ -609,6 +609,137 @@ def test_prefill_paged_ragged_chunks_cross_page_boundaries():
     assert np.array_equal(_dense_view(cv_p, B), np.asarray(cv_d))
 
 
+# ---------------------------------------------------------------------------
+# Quantized KV page storage (`serve --kv-bits {4,8,16}`)
+# ---------------------------------------------------------------------------
+# The paged graphs run `_kvq` on K/V *before* the scatter, so physical pages
+# hold quantize->dequantize round-tripped values on the kv_bits grid — the
+# page is the storage format, not a staging buffer. These tests pin the
+# three properties the rust serving stack builds on: 16-bit is bit-exact
+# pass-through (one artifact serves fp rows), 4/8-bit pages agree exactly
+# with the dense graph under the same qcfg (storage is where the error is
+# introduced, not the layout), and the end-to-end drift is bounded and
+# ordered by width.
+
+
+def test_paged_qcfg16_bit_equal_to_no_qcfg():
+    # kv_bits >= 16 is exact pass-through in fake_quant_ste, so the
+    # all-default qcfg vector through the quant paged graphs must be
+    # bit-identical to qcfg=None — `--kv-bits 16` is the pre-PR paged path.
+    params = make_params()
+    B, S, T = 2, 4, 8
+    t = tokens(61, b=B, s=S)
+    table = _identity_table(B)
+    q16 = model_mod.qcfg_vector()
+    ck_a, cv_a = _paged_caches(B * (CFG.max_seq // BS))
+    ck_b, cv_b = ck_a, cv_a
+    for pos in range(S):
+        pv = jnp.full((B,), pos, jnp.int32)
+        lg_a, ck_a, cv_a = model_mod.decode_paged(
+            params, CFG, t[:, pos], pv, table, ck_a, cv_a
+        )
+        lg_b, ck_b, cv_b = model_mod.decode_paged(
+            params, CFG, t[:, pos], pv, table, ck_b, cv_b, qcfg=q16
+        )
+        assert np.array_equal(np.asarray(lg_b), np.asarray(lg_a)), f"pos {pos}"
+    assert np.array_equal(np.asarray(ck_b), np.asarray(ck_a))
+    assert np.array_equal(np.asarray(cv_b), np.asarray(cv_a))
+    tp = tokens(67, b=B, s=T)
+    ck0, cv0 = _paged_caches(B * (CFG.max_seq // BS))
+    zeros, full = jnp.zeros((B,), jnp.int32), jnp.full((B,), T, jnp.int32)
+    lgp_a, ckp_a, cvp_a = model_mod.prefill_paged(
+        params, CFG, tp, zeros, full, table, ck0, cv0
+    )
+    lgp_b, ckp_b, cvp_b = model_mod.prefill_paged(
+        params, CFG, tp, zeros, full, table, ck0, cv0, qcfg=q16
+    )
+    assert np.array_equal(np.asarray(lgp_b), np.asarray(lgp_a))
+    assert np.array_equal(np.asarray(ckp_b), np.asarray(ckp_a))
+    assert np.array_equal(np.asarray(cvp_b), np.asarray(cvp_a))
+
+
+@pytest.mark.parametrize("kv_bits", [4.0, 8.0])
+def test_decode_paged_kv_only_quant_pages_hold_storage_grid(kv_bits):
+    # KV-only qcfg (a/w stay at 16): under the identity table the paged
+    # graph must agree bit-for-bit with the dense decode — both insert the
+    # same `_kvq` before the cache write — and the page contents must equal
+    # the dense quantized cache. Then the written pages must be a fixed
+    # point of `_kvq`: re-quantizing storage-grid values changes nothing,
+    # which is what lets the rust engine treat a page as the ground truth.
+    params = make_params()
+    qcfg = model_mod.qcfg_vector(kv_bits=kv_bits, kv_sym=1.0)
+    B, S = 2, 8
+    t = tokens(71, b=B, s=S)
+    ck_d, cv_d = _zero_caches(B)
+    ck_p, cv_p = _paged_caches(B * (CFG.max_seq // BS))
+    table = _identity_table(B)
+    for pos in range(S):
+        pv = jnp.full((B,), pos, jnp.int32)
+        lg_d, ck_d, cv_d = model_mod.decode_step_batched(
+            params, CFG, t[:, pos], pv, ck_d, cv_d, qcfg=qcfg
+        )
+        lg_p, ck_p, cv_p = model_mod.decode_paged(
+            params, CFG, t[:, pos], pv, table, ck_p, cv_p, qcfg=qcfg
+        )
+        assert np.array_equal(np.asarray(lg_p), np.asarray(lg_d)), f"pos {pos}"
+    assert np.array_equal(_dense_view(ck_p, B), np.asarray(ck_d))
+    assert np.array_equal(_dense_view(cv_p, B), np.asarray(cv_d))
+    written = _dense_view(ck_p, B)[:, :, :S]
+    requant = np.asarray(model_mod._kvq(jnp.asarray(written), qcfg))
+    np.testing.assert_allclose(requant, written, rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("kv_bits", [4.0, 8.0])
+def test_prefill_paged_kv_only_quant_matches_dense(kv_bits):
+    params = make_params()
+    qcfg = model_mod.qcfg_vector(kv_bits=kv_bits, kv_sym=1.0)
+    B, T = 4, 8
+    t = tokens(73, b=B, s=T)
+    ck_d, cv_d = _zero_caches(B)
+    ck_p, cv_p = _paged_caches(B * (CFG.max_seq // BS))
+    table = _identity_table(B)
+    zeros, full = jnp.zeros((B,), jnp.int32), jnp.full((B,), T, jnp.int32)
+    lg_d, ck_d, cv_d = model_mod.prefill_batched(
+        params, CFG, t, zeros, full, ck_d, cv_d, qcfg=qcfg
+    )
+    lg_p, ck_p, cv_p = model_mod.prefill_paged(
+        params, CFG, t, zeros, full, table, ck_p, cv_p, qcfg=qcfg
+    )
+    assert np.array_equal(np.asarray(lg_p), np.asarray(lg_d))
+    assert np.array_equal(_dense_view(ck_p, B), np.asarray(ck_d))
+    assert np.array_equal(_dense_view(cv_p, B), np.asarray(cv_d))
+
+
+def test_paged_kv_quant_drift_bounded():
+    # End-to-end logit drift from quantized KV storage is zero at 16 bits
+    # and ordered by grid width below that: 0 < mse(kv8) < mse(kv4).
+    params = make_params()
+    B, S = 2, 8
+    t = tokens(79, b=B, s=S)
+    table = _identity_table(B)
+
+    def run(qcfg):
+        ck, cv = _paged_caches(B * (CFG.max_seq // BS))
+        outs = []
+        for pos in range(S):
+            pv = jnp.full((B,), pos, jnp.int32)
+            lg, ck, cv = model_mod.decode_paged(
+                params, CFG, t[:, pos], pv, table, ck, cv, qcfg=qcfg
+            )
+            outs.append(np.asarray(lg))
+        return np.stack(outs, axis=1)
+
+    fp = run(None)
+    mse = {
+        b: float(np.mean(
+            (run(model_mod.qcfg_vector(kv_bits=b, kv_sym=1.0)) - fp) ** 2
+        ))
+        for b in (4.0, 8.0, 16.0)
+    }
+    assert mse[16.0] == 0.0
+    assert 0.0 < mse[8.0] < mse[4.0]
+
+
 def test_prefill_inactive_slot_untouched():
     # n_valid = 0 marks an inactive slot: its cache must come back
     # bit-identical (padding rows are scatter-dropped, never written).

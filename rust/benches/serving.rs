@@ -12,13 +12,26 @@
 //!
 //! * `paged` — paged (block-pool) vs dense KV cache at an *equal memory
 //!   budget* on a mixed-length trace. Resident KV bytes for a pool are
-//!   `blocks x block_size x 2 (K,V) x n_layers x n_heads x d_head x
-//!   kv_bits/8` (`serve::blocks::kv_memory_bytes`); the dense comparator
-//!   gets the same token budget as `budget_tokens / max_seq` full slots.
-//!   Token-budget admission sustains several times the concurrent requests
-//!   (the `concurrency_x` field; the acceptance bar is >= 2x) with
-//!   bit-identical generations — checked request by request, enforced by
-//!   the sim harness in CI.
+//!   per packed page: `blocks x 2 (K,V) x n_layers x
+//!   (ceil(block_size x n_heads x d_head x kv_bits / 8) + per-group
+//!   scale metadata)` (`serve::blocks::kv_memory_bytes`); the dense
+//!   comparator gets the same token budget as `budget_tokens / max_seq`
+//!   full slots. Token-budget admission sustains several times the
+//!   concurrent requests (the `concurrency_x` field; the acceptance bar
+//!   is >= 2x) with bit-identical generations — checked request by
+//!   request, enforced by the sim harness in CI.
+//! * `kv_quant` — quantized KV page storage (`--kv-bits`) measured two
+//!   ways. Capacity: the same uniform 2-page workload served at an equal
+//!   page-*byte* budget (540 KiB of sq-2m-shaped pages = 16 fp16 pages
+//!   vs 60 int4 pages), mean in-flight sampled while the backlog
+//!   persists; the `concurrency_multiple` acceptance bar is >= 3.5x for
+//!   int4 vs fp16. Quality: pinned greedy traces replayed at kv 16/8/4
+//!   bits against the pre-PR fp engine — 16-bit is asserted
+//!   byte-identical, int8 is asserted token-identical (its accumulated
+//!   round-trip error stays under half the mock's guaranteed logit gap),
+//!   and the int4 token-match fraction is recorded. Resident page bytes
+//!   are *measured* from the pools (`MockEngine::resident_kv_bytes`) and
+//!   cross-checked against the accounting formula exactly.
 //! * `prefix_cache` — the shared-system-prompt sweep: N users whose
 //!   prompts repeat one system prefix, served over the same paged pool
 //!   with the refcounted copy-on-write prefix cache on vs off. Records
@@ -261,11 +274,12 @@ fn paged_sweep() -> Json {
     let ratio = paged.metrics.mean_in_flight() / dense.metrics.mean_in_flight().max(1e-9);
     println!();
     println!(
-        "paged vs dense at {} KV tokens ({} pages x {}): sq-2m int4 KV = {} bytes resident",
+        "paged vs dense at {} KV tokens ({} pages x {}): sq-2m fp16 KV = {} bytes resident \
+         (quantized pages: see kv_quant)",
         budget_tokens,
         budget_blocks,
         PAGED_BLOCK_SIZE,
-        blocks::kv_memory_bytes(budget_blocks, PAGED_BLOCK_SIZE, 4, 4, 32, 4.0)
+        blocks::kv_memory_bytes(budget_blocks, PAGED_BLOCK_SIZE, 4, 4, 32, 16.0, true)
     );
     println!(
         "{:<8} {:>6} {:>10} {:>14} {:>10} {:>10} {:>10}",
@@ -307,27 +321,18 @@ fn paged_sweep() -> Json {
                 ("budget_tokens", json::num(budget_tokens as f64)),
                 ("requests", json::num(scaled(PAGED_REQUESTS) as f64)),
                 // Resident KV bytes at this budget for the sq-2m shape
-                // (L=4, H=4, dh=32): blocks x bs x 2 x L x H x dh x bits/8.
+                // (L=4, H=4, dh=32), full precision. Quantized-page
+                // figures live in `kv_quant`, *measured* from real pools.
                 (
-                    "kv_bytes_int4",
+                    "kv_bytes_fp16",
                     json::num(blocks::kv_memory_bytes(
                         budget_blocks,
                         PAGED_BLOCK_SIZE,
                         4,
                         4,
                         32,
-                        4.0,
-                    ) as f64),
-                ),
-                (
-                    "kv_bytes_fp32",
-                    json::num(blocks::kv_memory_bytes(
-                        budget_blocks,
-                        PAGED_BLOCK_SIZE,
-                        4,
-                        4,
-                        32,
-                        32.0,
+                        16.0,
+                        true,
                     ) as f64),
                 ),
             ]),
@@ -336,6 +341,225 @@ fn paged_sweep() -> Json {
         ("paged", leg_json(&paged)),
         ("concurrency_x", json::num(ratio)),
         ("bit_identical", Json::Bool(bit_identical)),
+    ])
+}
+
+// -- kv_quant: quantized KV page storage, capacity + drift -------------------
+
+const KVQ_BLOCK_SIZE: usize = 16;
+const KVQ_MAX_SEQ: usize = 128;
+// Equal page-BYTE budget for the capacity legs: 540 KiB of sq-2m-shaped
+// KV pages = exactly 60 int4 pages (9216 B each), 31 int8 pages
+// (17408 B), or 16 fp16 pages (32768 B).
+const KVQ_BUDGET_BYTES: usize = 552_960;
+const KVQ_LANES: usize = 32;
+// Not `scaled()`: the concurrency ratio needs a persistent backlog, and
+// the mock serves 96 tiny requests in well under a second.
+const KVQ_REQUESTS: usize = 96;
+const KVQ_PROMPT: usize = 26;
+const KVQ_MAX_NEW: usize = 6; // 26 + 6 = 32 tokens = exactly 2 pages
+// Drift legs: pinned greedy traces, long enough that int4's accumulated
+// round-trip error visibly crosses the mock's guaranteed logit gap while
+// int8's provably cannot.
+const KVQ_DRIFT_REQUESTS: usize = 6;
+const KVQ_DRIFT_PROMPT: usize = 12;
+const KVQ_DRIFT_MAX_NEW: usize = 80;
+
+/// Bytes of one sq-2m-shaped KV page (L=4, H=4, dh=32) at `bits`.
+fn kvq_page_bytes(bits: f64) -> usize {
+    blocks::kv_memory_bytes(1, KVQ_BLOCK_SIZE, 4, 4, 32, bits, true)
+}
+
+struct KvLeg {
+    completions: Vec<(u64, Vec<u8>)>,
+    peak_resident: usize,
+    mean_in_flight: f64,
+}
+
+/// Submit everything up front, then step to completion, sampling
+/// `in_flight` while the backlog persists (fewer than `window` requests
+/// done) and tracking the pool's peak measured resident KV bytes.
+fn run_kv_leg(engine: MockEngine, reqs: Vec<GenRequest>, window: usize) -> KvLeg {
+    let n = reqs.len();
+    let mut sched = Scheduler::new(engine, n).expect("scheduler");
+    for r in reqs {
+        sched.submit(r).expect("submit");
+    }
+    let mut completions: Vec<(u64, Vec<u8>)> = Vec::with_capacity(n);
+    let mut peak_resident = 0usize;
+    let mut samples: Vec<usize> = Vec::new();
+    while !sched.is_idle() {
+        let done = sched.step().expect("step");
+        completions.extend(done.into_iter().map(|c| (c.id, c.completion)));
+        peak_resident = peak_resident.max(sched.engine().resident_kv_bytes());
+        if completions.len() < window {
+            samples.push(sched.in_flight());
+        }
+    }
+    completions.sort();
+    let mean_in_flight = if samples.is_empty() {
+        0.0
+    } else {
+        samples.iter().sum::<usize>() as f64 / samples.len() as f64
+    };
+    KvLeg { completions, peak_resident, mean_in_flight }
+}
+
+/// Uniform 2-page requests: capacity is then purely pages-per-request.
+fn kvq_capacity_workload() -> Vec<GenRequest> {
+    (0..KVQ_REQUESTS)
+        .map(|i| {
+            let prompt: Vec<u8> =
+                (0..KVQ_PROMPT).map(|j| (32 + ((i * 19 + j * 3) % 90)) as u8).collect();
+            GenRequest::greedy(&prompt, KVQ_MAX_NEW)
+        })
+        .collect()
+}
+
+/// Pinned prompts for the greedy drift comparison.
+fn kvq_drift_workload() -> Vec<GenRequest> {
+    (0..KVQ_DRIFT_REQUESTS)
+        .map(|i| {
+            let prompt: Vec<u8> =
+                (0..KVQ_DRIFT_PROMPT).map(|j| (40 + ((i * 7 + j * 11) % 80)) as u8).collect();
+            GenRequest::greedy(&prompt, KVQ_DRIFT_MAX_NEW)
+        })
+        .collect()
+}
+
+/// Ample identical pool for every drift leg; `None` keeps the engine's
+/// default construction — the pre-PR fp paged path the 16-bit leg must
+/// reproduce byte for byte.
+fn kvq_drift_engine(kv_bits: Option<f32>) -> MockEngine {
+    let pool = KVQ_DRIFT_REQUESTS
+        * (KVQ_DRIFT_PROMPT + KVQ_DRIFT_MAX_NEW).div_ceil(KVQ_BLOCK_SIZE);
+    let mut e = MockEngine::new(KVQ_DRIFT_REQUESTS, KVQ_MAX_SEQ, 256)
+        .with_block_pool(pool, KVQ_BLOCK_SIZE);
+    if let Some(b) = kv_bits {
+        e = e.with_kv_bits(b);
+    }
+    e
+}
+
+/// Fraction of generated bytes that agree position by position.
+fn token_match(a: &[(u64, Vec<u8>)], b: &[(u64, Vec<u8>)]) -> f64 {
+    let mut matched = 0usize;
+    let mut total = 0usize;
+    for ((ia, ta), (ib, tb)) in a.iter().zip(b) {
+        assert_eq!(ia, ib, "drift legs must complete the same request ids");
+        total += ta.len().max(tb.len());
+        matched += ta.iter().zip(tb).filter(|(x, y)| x == y).count();
+    }
+    matched as f64 / total.max(1) as f64
+}
+
+fn kv_quant_sweep() -> Json {
+    // Capacity: the pool each width affords at the same byte budget.
+    let blocks_at = |bits: f64| KVQ_BUDGET_BYTES / kvq_page_bytes(bits);
+    let capacity_leg = |bits: f32| {
+        let engine = MockEngine::new(KVQ_LANES, KVQ_MAX_SEQ, 256)
+            .with_block_pool(blocks_at(bits as f64), KVQ_BLOCK_SIZE)
+            .with_kv_bits(bits);
+        run_kv_leg(engine, kvq_capacity_workload(), KVQ_REQUESTS / 2)
+    };
+    let cap16 = capacity_leg(16.0);
+    let cap8 = capacity_leg(8.0);
+    let cap4 = capacity_leg(4.0);
+    let multiple = cap4.mean_in_flight / cap16.mean_in_flight.max(1e-9);
+    println!();
+    println!(
+        "kv_quant: {} uniform 2-page requests at a {} KiB page-byte budget ({} lanes)",
+        KVQ_REQUESTS,
+        KVQ_BUDGET_BYTES / 1024,
+        KVQ_LANES
+    );
+    println!(
+        "{:<8} {:>12} {:>8} {:>16} {:>20}",
+        "kv bits", "page bytes", "pages", "mean in-flight", "peak resident"
+    );
+    for (bits, leg) in [(16.0, &cap16), (8.0, &cap8), (4.0, &cap4)] {
+        println!(
+            "{:<8} {:>12} {:>8} {:>16.2} {:>20}",
+            bits,
+            kvq_page_bytes(bits),
+            blocks_at(bits),
+            leg.mean_in_flight,
+            leg.peak_resident
+        );
+    }
+    println!("int4 concurrency multiple vs fp16 at equal bytes: {multiple:.2}x (bar: 3.5x)");
+    assert!(
+        multiple >= 3.5,
+        "int4 must sustain >= 3.5x fp16 in-flight at an equal page-byte budget, \
+         got {multiple:.2}x"
+    );
+
+    // Quality on pinned greedy traces: the pre-PR engine construction (fp)
+    // vs explicit kv 16/8/4-bit page storage over the identical pool.
+    let fp = run_kv_leg(kvq_drift_engine(None), kvq_drift_workload(), 0);
+    let kv16 = run_kv_leg(kvq_drift_engine(Some(16.0)), kvq_drift_workload(), 0);
+    let kv8 = run_kv_leg(kvq_drift_engine(Some(8.0)), kvq_drift_workload(), 0);
+    let kv4 = run_kv_leg(kvq_drift_engine(Some(4.0)), kvq_drift_workload(), 0);
+    let bit_identical_16 = kv16.completions == fp.completions;
+    assert!(bit_identical_16, "16-bit KV pages must match the pre-PR paged path byte for byte");
+    let int8_match = token_match(&kv8.completions, &fp.completions);
+    let int4_match = token_match(&kv4.completions, &fp.completions);
+    // Int8's accumulated round-trip error keeps every logit within half
+    // the mock's guaranteed greedy gap, so this is an identity — not a
+    // tolerance.
+    assert!(int8_match == 1.0, "int8 KV must stay greedy-identical to fp, got {int8_match:.4}");
+    println!(
+        "drift on {} pinned {}-token greedy traces: kv16 bit-identical {}, \
+         int8 token match {:.4}, int4 token match {:.4}",
+        KVQ_DRIFT_REQUESTS, KVQ_DRIFT_MAX_NEW, bit_identical_16, int8_match, int4_match
+    );
+
+    // Measured resident bytes must match the accounting formula exactly:
+    // every leg walks the identical token trajectory, so the measured
+    // peaks relate as the per-page formula bytes do (cross-multiplied to
+    // stay integral).
+    assert_eq!(kv16.peak_resident, fp.peak_resident);
+    for (bits, leg) in [(8.0, &kv8), (4.0, &kv4)] {
+        assert_eq!(
+            fp.peak_resident * kvq_page_bytes(bits),
+            leg.peak_resident * kvq_page_bytes(16.0),
+            "measured fp16/int{bits} resident ratio must equal kv_memory_bytes"
+        );
+    }
+
+    let cap_json = |bits: f64, leg: &KvLeg| {
+        json::obj(vec![
+            ("pool_blocks", json::num(blocks_at(bits) as f64)),
+            ("page_bytes", json::num(kvq_page_bytes(bits) as f64)),
+            ("pool_bytes", json::num((blocks_at(bits) * kvq_page_bytes(bits)) as f64)),
+            ("mean_in_flight", json::num(leg.mean_in_flight)),
+        ])
+    };
+    json::obj(vec![
+        (
+            "config",
+            json::obj(vec![
+                ("block_size", json::num(KVQ_BLOCK_SIZE as f64)),
+                ("budget_bytes", json::num(KVQ_BUDGET_BYTES as f64)),
+                ("lanes", json::num(KVQ_LANES as f64)),
+                ("requests", json::num(KVQ_REQUESTS as f64)),
+                ("prompt_len", json::num(KVQ_PROMPT as f64)),
+                ("max_new_tokens", json::num(KVQ_MAX_NEW as f64)),
+                ("drift_requests", json::num(KVQ_DRIFT_REQUESTS as f64)),
+                ("drift_max_new", json::num(KVQ_DRIFT_MAX_NEW as f64)),
+            ]),
+        ),
+        ("fp16", cap_json(16.0, &cap16)),
+        ("int8", cap_json(8.0, &cap8)),
+        ("int4", cap_json(4.0, &cap4)),
+        ("concurrency_multiple", json::num(multiple)),
+        ("bit_identical_16", Json::Bool(bit_identical_16)),
+        ("int8_token_match", json::num(int8_match)),
+        ("int4_token_match", json::num(int4_match)),
+        ("peak_resident_fp16", json::num(fp.peak_resident as f64)),
+        ("peak_resident_int8", json::num(kv8.peak_resident as f64)),
+        ("peak_resident_int4", json::num(kv4.peak_resident as f64)),
+        ("resident_matches_formula", Json::Bool(true)),
     ])
 }
 
@@ -849,6 +1073,7 @@ fn main() {
         None => "none",
     };
     let paged = paged_sweep();
+    let kv_quant = kv_quant_sweep();
     let prefix_cache = prefix_sweep();
     let decode_stall = decode_stall_sweep();
     let trace = trace_sweep();
@@ -863,6 +1088,7 @@ fn main() {
         ("max_new_tokens", json::num(MAX_NEW as f64)),
         ("batches", json::obj(rows.iter().map(|(k, v)| (*k, v.clone())).collect())),
         ("paged", paged),
+        ("kv_quant", kv_quant),
         ("prefix_cache", prefix_cache),
         ("decode_stall", decode_stall),
         ("trace", trace),

@@ -50,6 +50,14 @@ impl QcfgVec {
         self
     }
 
+    /// Symmetric KV grid (1.0) vs asymmetric (0.0). The quantized paged KV
+    /// path stores symmetrically: R3 Gaussianizes the cached K, so the
+    /// zero-point buys nothing and the per-group metadata halves.
+    pub fn with_kv_sym(mut self, sym: f32) -> Self {
+        self.0[3] = sym;
+        self
+    }
+
     pub fn with_w_bits(mut self, bits: f32) -> Self {
         self.0[6] = bits;
         self
@@ -302,6 +310,8 @@ mod tests {
         assert_eq!(q.0[0], 16.0);
         let q = q.with_a_bits(4.0).with_kv_bits(8.0).with_w_bits(3.0);
         assert_eq!(q.0, [4.0, 8.0, 0.0, 0.0, 1.0, 1.0, 3.0, 1.0]);
+        let q = q.with_kv_sym(1.0);
+        assert_eq!(q.0, [4.0, 8.0, 0.0, 1.0, 1.0, 1.0, 3.0, 1.0]);
         assert_eq!(q.tensor().shape, vec![8]);
     }
 

@@ -28,7 +28,13 @@
 //!   with prompt chunks split at arbitrary boundaries over the ragged
 //!   `n_valid` prefill graphs, so one long prompt can no longer stall
 //!   every in-flight decode — worst-case decode stall drops from
-//!   `ceil(len/T)` engine calls to zero, byte-identical output), seeded
+//!   `ceil(len/T)` engine calls to zero, byte-identical output),
+//!   quantized KV page storage (`serve --kv-bits {4,8,16}`: the paged
+//!   graphs fake-quant K/V before the page scatter, so pages hold
+//!   symmetric per-group storage-grid values and an equal page-byte
+//!   budget holds ~3.6x more tokens at int4 than fp16 — 16-bit is exact
+//!   pass-through, and `serve::blocks::kv_memory_bytes` prices the
+//!   packed payload plus scale metadata), seeded
 //!   greedy/temperature/top-k/top-p samplers with partial candidate
 //!   selection (no full-vocabulary sorts on the hot path), and serving
 //!   metrics — TTFT from enqueue split into queue wait vs prefill

@@ -15,7 +15,13 @@
 //!                (paged KV cache via the `decode_*_paged_b{B}` artifacts:
 //!                memory scales with tokens in flight, admission by
 //!                free-page token budget) + `--kv-blocks M` (restrict the
-//!                page budget to M pages) + `--prefix-cache 1` (refcounted
+//!                page budget to M pages) + `--kv-bits {4,8,16}` (quantized
+//!                KV page storage: cached K/V held at 4 or 8 bits on the
+//!                symmetric per-group grid, ~3.6x / ~1.9x more tokens per
+//!                page byte than fp16; 16 = full precision; rides the
+//!                runtime qcfg vector, so no extra artifacts — falls back
+//!                with a warning on the fp variant or the dense cache) +
+//!                `--prefix-cache 1` (refcounted
 //!                copy-on-write prefix sharing: requests repeating a
 //!                system prompt map its cached pages read-only instead of
 //!                recomputing them — bit-identical output, lower TTFT,
@@ -72,6 +78,7 @@ fn usage() -> ! {
                        --top-k 40 --top-p 0.95 --seed 0 --max-new-tokens 48 --prompt \"a|b|c\"\n\
                        --prefill-chunk 16|64 (batched prompt prefill; 1 = per-token loop)\n\
                        --block-size 16 (paged KV cache) --kv-blocks M (page budget)\n\
+                       --kv-bits 4|8|16 (quantized KV page storage; 16 = full precision)\n\
                        --prefix-cache 1 (copy-on-write sharing of repeated prompt prefixes)\n\
                        --step-budget B (decode-priority step composer: bound the decode\n\
                        hiccup a long prompt's prefill causes; 0 = off)\n\
@@ -304,6 +311,17 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
         get_extra(extra, "block-size").map(|v| v.parse()).transpose()?.unwrap_or(0);
     let kv_blocks: usize =
         get_extra(extra, "kv-blocks").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    // Quantized KV page storage: `--kv-bits {4,8,16}` stores cached K/V at
+    // the requested width (16 = full precision, the pre-existing path).
+    // The width rides the runtime qcfg vector, so no new artifact shapes
+    // are needed; sub-byte storage uses the symmetric grid (R3's head-wise
+    // Hadamard Gaussianizes cached K, so a zero-point buys nothing and the
+    // per-group metadata halves).
+    let kv_bits: f32 =
+        get_extra(extra, "kv-bits").map(|v| v.parse()).transpose()?.unwrap_or(16.0);
+    if kv_bits != 4.0 && kv_bits != 8.0 && kv_bits != 16.0 {
+        anyhow::bail!("--kv-bits {kv_bits}: expected 4, 8, or 16");
+    }
     // A page budget only makes sense on the paged path, so --kv-blocks
     // implies it (page granularity then comes from the artifact).
     let mut paged = block_size > 0 || kv_blocks > 0;
@@ -344,7 +362,16 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
             Err(e) => return Err(e),
         },
     };
-    let qcfg = if variant == serve::DecodeVariant::Fp { None } else { Some(qm.qcfg) };
+    let mut qcfg = if variant == serve::DecodeVariant::Fp { None } else { Some(qm.qcfg) };
+    if kv_bits < 16.0 {
+        match qcfg {
+            Some(q) => qcfg = Some(q.with_kv_bits(kv_bits).with_kv_sym(1.0)),
+            None => eprintln!(
+                "note: --kv-bits {kv_bits:.0} NOT enforced — the fp variant has no \
+                 quantization config input (pick a quantized --method)"
+            ),
+        }
+    }
     let mut engine = PjrtEngine::new(exe, &qm.weights, qcfg)?;
     {
         use spinquant::serve::DecodeEngine as _;
@@ -433,6 +460,17 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
             );
         }
     }
+    // Same contract for --kv-bits: the width still quantizes the KV values
+    // (the qcfg vector reaches the artifact either way), but without the
+    // paged pool there are no packed pages, so the page-byte savings the
+    // flag exists for are not realized. Never silent.
+    if kv_bits < 16.0 && qcfg.is_some() && (block_size > 0 || kv_blocks > 0) && !paged {
+        eprintln!(
+            "note: --kv-bits {kv_bits:.0} quantizes KV values, but serving fell back to \
+             the dense KV cache (see notes above) — no packed pages, so the page-byte \
+             savings are not realized"
+        );
+    }
     if prefix_cache {
         if paged {
             sched = sched.with_prefix_cache()?;
@@ -483,13 +521,18 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
 
     println!(
         "serving {} request(s) on {} slot(s), sampler {}, max {} new tokens, \
-         prefill chunk {}{}{}{}",
+         prefill chunk {}{}{}{}{}",
         prompts.len(),
         batch,
         sampler.name(),
         n_new,
         chunk_in_use,
         pool_desc,
+        if kv_bits < 16.0 && qcfg.is_some() {
+            format!(", kv {kv_bits:.0}-bit")
+        } else {
+            String::new()
+        },
         if prefix_cache && paged { ", prefix cache on" } else { "" },
         if composing { format!(", step budget {step_budget}") } else { String::new() }
     );

@@ -243,6 +243,36 @@ pub fn unpack_int4(bytes: &[u8], n: usize) -> Vec<i32> {
     out
 }
 
+/// Pack *symmetric* (signed) 4-bit codes in [-8, 7] two-per-byte using an
+/// offset-binary nibble (code + 8, so -8 -> 0x0 and 7 -> 0xF; low nibble
+/// first). `pack_int4` is the unsigned twin and clamps negatives to 0 —
+/// feeding it symmetric codes silently destroys the whole negative half of
+/// the grid, which is why the quantized KV pages use this pair instead.
+pub fn pack_int4_symmetric(codes: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(codes.len().div_ceil(2));
+    for pair in codes.chunks(2) {
+        let lo = (pair[0].clamp(-8, 7) + 8) as u8;
+        let hi = if pair.len() > 1 { (pair[1].clamp(-8, 7) + 8) as u8 } else { 0 };
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+pub fn unpack_int4_symmetric(bytes: &[u8], n: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(n);
+    for &b in bytes {
+        out.push((b & 0x0F) as i32 - 8);
+        if out.len() < n {
+            out.push((b >> 4) as i32 - 8);
+        }
+        if out.len() >= n {
+            break;
+        }
+    }
+    out.truncate(n);
+    out
+}
+
 /// Bytes needed to store a tensor at `bits` (+ per-group scale/zero in f16
 /// equivalents) — the memory-saving headline of PTQ.
 pub fn quantized_size_bytes(numel: usize, groups: usize, bits: f32, symmetric: bool) -> usize {
@@ -442,6 +472,45 @@ mod tests {
             let back = unpack_int4(&packed, n);
             if back != codes {
                 return Err(format!("roundtrip mismatch at n={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int4_symmetric_pack_preserves_negative_codes() {
+        // The regression this PR fixes: the unsigned packer clamps the
+        // negative half of a symmetric grid to 0; the offset-binary pair
+        // must round-trip the full [-8, 7] range instead.
+        let codes: Vec<i32> = (-8..8).collect();
+        let clamped = unpack_int4(&pack_int4(&codes), codes.len());
+        assert!(clamped[..8].iter().all(|&c| c == 0), "unsigned packer zeroes negatives");
+        let packed = pack_int4_symmetric(&codes);
+        assert_eq!(packed.len(), 8);
+        assert_eq!(unpack_int4_symmetric(&packed, codes.len()), codes);
+    }
+
+    #[test]
+    fn prop_int4_symmetric_pack_roundtrips_codes_and_values_any_length() {
+        // Quantize real values symmetrically at 4 bits, pack, unpack,
+        // dequantize: codes must survive exactly (odd lengths exercise the
+        // half-filled trailing byte) and the dequantized values must equal
+        // dequantizing the original codes — i.e. packing is lossless.
+        forall(23, 60, |g: &mut Gen| {
+            let n = g.int(1, 65);
+            let scale = g.f32(0.05, 6.0);
+            let t = g.tensor(&[n], scale);
+            let (codes, s, z) = quantize_group_codes(&t.data, 4.0, true);
+            let packed = pack_int4_symmetric(&codes);
+            if packed.len() != n.div_ceil(2) {
+                return Err(format!("{n} codes packed into {} bytes", packed.len()));
+            }
+            let back = unpack_int4_symmetric(&packed, n);
+            if back != codes {
+                return Err(format!("code roundtrip mismatch at n={n}"));
+            }
+            if dequantize_codes(&back, s, z) != dequantize_codes(&codes, s, z) {
+                return Err(format!("dequantized values diverged at n={n}"));
             }
             Ok(())
         });

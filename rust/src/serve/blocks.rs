@@ -29,11 +29,17 @@
 //! [`SlotMap`](crate::serve::SlotMap) property tests cross-check the pool
 //! against a mirror model under retain/release/COW/donate interleavings.
 //!
-//! KV memory per pool, at `kv_bits` per cache element:
+//! KV memory per pool, at `kv_bits` per cache element. Sub-byte widths are
+//! packed **per page** (each layer's K or V page is its own packed buffer,
+//! so a ragged tail rounds up once per page, not once over the pool) and
+//! carry per-group quantization metadata — one group per token per head
+//! (`d_head` elements, matching the `_kvq` fake-quant axis), 2 bytes for a
+//! symmetric scale, 4 for an asymmetric scale+zero pair:
 //!
 //! ```text
-//! bytes = blocks x block_size x 2 (K and V) x n_layers x n_heads x d_head
-//!         x kv_bits / 8
+//! page_payload = ceil(block_size x n_heads x d_head x kv_bits / 8)
+//! page_meta    = kv_bits < 16 ? block_size x n_heads x (sym ? 2 : 4) : 0
+//! bytes        = blocks x 2 (K and V) x n_layers x (page_payload + page_meta)
 //! ```
 //!
 //! (see [`kv_memory_bytes`]); the serving bench prints this next to its
@@ -164,6 +170,15 @@ impl BlockPool {
 /// once, which is the whole point of prefix sharing — the pool invariant
 /// `free + Σ(refcount > 0) == total` means resident bytes never exceed
 /// this figure no matter how many tables alias a page.
+///
+/// Sub-byte packing rounds up **per page**, not once over the whole pool
+/// (each layer's K or V page is its own packed buffer, so its tail byte
+/// can't be shared with the next page), and quantized widths (< 16 bits)
+/// additionally carry per-group metadata: one group per token per head —
+/// the `d_head`-element groups the `_kvq` fake-quant path uses — at 2
+/// bytes (f16 scale) when `symmetric`, 4 (scale + zero) otherwise. The
+/// previous single-`ceil`-over-the-pool version under-counted both, which
+/// made the bench's "equal byte budget" comparison quietly favor int4.
 pub fn kv_memory_bytes(
     blocks: usize,
     block_size: usize,
@@ -171,9 +186,13 @@ pub fn kv_memory_bytes(
     n_heads: usize,
     d_head: usize,
     kv_bits: f64,
+    symmetric: bool,
 ) -> usize {
-    let elems = blocks * block_size * 2 * n_layers * n_heads * d_head;
-    (elems as f64 * kv_bits / 8.0).ceil() as usize
+    let page_elems = block_size * n_heads * d_head;
+    let page_payload = (page_elems as f64 * kv_bits / 8.0).ceil() as usize;
+    let page_meta =
+        if kv_bits < 16.0 { block_size * n_heads * if symmetric { 2 } else { 4 } } else { 0 };
+    blocks * 2 * n_layers * (page_payload + page_meta)
 }
 
 #[cfg(test)]
@@ -335,10 +354,28 @@ mod tests {
 
     #[test]
     fn kv_memory_formula() {
-        // sq-2m at 4-bit KV: blocks x bs x 2 x L x H x dh x 0.5 bytes.
-        let bytes = kv_memory_bytes(32, 16, 4, 4, 32, 4.0);
-        assert_eq!(bytes, 32 * 16 * 2 * 4 * 4 * 32 / 2);
+        // sq-2m at symmetric 4-bit KV. Per page per layer per K/V side:
+        // payload ceil(16*4*32 * 4 / 8) = 1024 bytes, metadata 16 tokens x
+        // 4 heads x 2 bytes = 128, so 1152 per packed page.
+        let bytes = kv_memory_bytes(32, 16, 4, 4, 32, 4.0, true);
+        assert_eq!(bytes, 32 * 2 * 4 * 1152);
+        // Asymmetric doubles the metadata (scale + zero per group).
+        assert_eq!(kv_memory_bytes(32, 16, 4, 4, 32, 4.0, false), 32 * 2 * 4 * 1280);
+        // >= 16 bits: no quantization metadata, pure payload.
         // fp32 reference for the dense comparison.
-        assert_eq!(kv_memory_bytes(1, 1, 1, 1, 1, 32.0), 2 * 4);
+        assert_eq!(kv_memory_bytes(1, 1, 1, 1, 1, 32.0, true), 2 * 4);
+        assert_eq!(kv_memory_bytes(8, 16, 4, 4, 32, 16.0, true), 8 * 16 * 2 * 4 * 4 * 32 * 2);
+    }
+
+    #[test]
+    fn kv_memory_rounds_per_packed_page() {
+        // Regression (satellite): one `.ceil()` over the whole pool let
+        // partial tail bytes from different pages share a byte, which is
+        // physically impossible — each page is its own packed buffer. With
+        // 3 elements per page at 4 bits, each page's payload is 2 bytes
+        // (ceil(1.5)), not 1.5 pooled: 2 blocks x 2 sides x (2 payload +
+        // 1 token x 1 head x 2 meta) = 16, where the old formula said
+        // ceil(12 x 4 / 8) = 6.
+        assert_eq!(kv_memory_bytes(2, 1, 1, 1, 3, 4.0, true), 16);
     }
 }

@@ -143,6 +143,14 @@ pub trait DecodeEngine {
         0
     }
 
+    /// KV-cache storage width in bits per element (16 = full precision).
+    /// Engines whose cache entries are quantized on write report the real
+    /// width here so the scheduler and CLI can account page-byte budgets
+    /// honestly (`--kv-bits`, [`crate::serve::blocks::kv_memory_bytes`]).
+    fn kv_bits(&self) -> f32 {
+        16.0
+    }
+
     /// One decode step over a paged cache: like `step`, plus `tables[b]` —
     /// slot `b`'s block table, padded to the logical page count with the
     /// `kv_blocks()` sentinel (inactive slots: all-sentinel rows, so they
@@ -660,6 +668,8 @@ pub struct PjrtEngine {
     bind: DecodeBinding,
     prefill_exe: Option<Executable>,
     prefill_bind: Option<PrefillBinding>,
+    /// KV storage width the bound qcfg asks the graphs for (16 = fp).
+    kv_bits: f32,
     pub step_times: Samples,
     pub prefill_times: Samples,
 }
@@ -674,6 +684,7 @@ impl PjrtEngine {
             bind,
             prefill_exe: None,
             prefill_bind: None,
+            kv_bits: qcfg.map(|q| q.0[1]).unwrap_or(16.0),
             step_times: Samples::new(),
             prefill_times: Samples::new(),
         })
@@ -807,6 +818,10 @@ impl DecodeEngine for PjrtEngine {
         self.bind.n_blocks
     }
 
+    fn kv_bits(&self) -> f32 {
+        self.kv_bits
+    }
+
     fn step_paged(
         &mut self,
         tokens: &[i32],
@@ -883,6 +898,17 @@ impl DecodeEngine for PjrtEngine {
 /// simulation artifact. [`MockEngine::adopt_prefix`] seeds a slot's
 /// history from the shared pages its table maps, mirroring what the real
 /// graphs see by gathering KV through an aliased table.
+///
+/// With [`MockEngine::with_kv_bits`] below 16, every cached position also
+/// carries a synthetic KV row through a *real* symmetric
+/// quantize→pack→unpack→dequantize round trip (the `crate::quant` codec the
+/// serving accounting is based on); paged pages store the round-tripped
+/// payload, and each slot's accumulated row error deterministically
+/// perturbs its logits ([`MockEngine::logits_for_kv`] is the from-scratch
+/// reference). The perturbation is scaled so int8 storage provably never
+/// flips a greedy argmax while int4 does after a few dozen positions —
+/// giving schedulers, benches and the sim oracle an exactly reproducible
+/// stand-in for quantized-KV quality drift.
 pub struct MockEngine {
     n_slots: usize,
     max_seq: usize,
@@ -894,8 +920,16 @@ pub struct MockEngine {
     chunk: usize,
     /// Paged mode: tokens per physical page (None = dense).
     block_size: Option<usize>,
-    /// Paged mode: physical page storage.
-    blocks: Vec<Vec<i32>>,
+    /// Paged mode: physical page storage — each written position holds its
+    /// token plus the *stored* (quantize→dequantize round-tripped at
+    /// `kv_bits`) synthetic KV row, mirroring what the real quantized paged
+    /// graphs keep resident.
+    blocks: Vec<Vec<PageEntry>>,
+    /// KV storage width in bits (16 = full precision, no drift).
+    kv_bits: f32,
+    /// Per-slot accumulated L1 quantization error of the slot's cached KV
+    /// rows — the state the deterministic drift model perturbs logits with.
+    kv_err: Vec<f32>,
     /// Total decode steps executed (for batching-efficiency assertions).
     pub steps: usize,
     /// Total batched prefill calls executed (a prompt of `len` tokens must
@@ -918,6 +952,71 @@ fn hash_fold(h: u64, token: i32) -> u64 {
     (h ^ token as u64).wrapping_mul(HASH_PRIME)
 }
 
+/// Synthetic KV row width per cached token — matches sq-2m's per-layer
+/// `n_heads x d_head` (4 x 32) so the mock pool's measured bytes line up
+/// with [`crate::serve::blocks::kv_memory_bytes`] at `n_layers = 1`.
+pub const MOCK_KV_DIM: usize = 128;
+/// Quantization group size within a row (one group per head: `d_head`).
+pub const MOCK_KV_GROUP: usize = 32;
+/// Drift coefficient: each logit is perturbed by `DRIFT x kv_err x u`,
+/// `u ∈ [-1, 1)`. Sized so int8 KV (per-token row error ≈ 0.25, so
+/// `kv_err <= 32` over a full 128-position history) moves any logit by
+/// < 1.3 — strictly inside the mock's guaranteed > 4 greedy gap, making
+/// int8 greedy completions *provably* byte-identical to fp — while int4
+/// (per-token error ≈ 4.5) crosses the gap within a few dozen tokens.
+const MOCK_KV_DRIFT: f32 = 0.04;
+
+/// One written position in a mock physical page: the token plus the KV
+/// payload actually stored at `kv_bits`.
+#[derive(Clone, Debug, PartialEq)]
+struct PageEntry {
+    token: i32,
+    kv: KvPayload,
+}
+
+/// What the mock pool keeps resident for one cached position.
+#[derive(Clone, Debug, PartialEq)]
+enum KvPayload {
+    /// `kv_bits >= 16`: the row is stored exactly (f16 elements in the
+    /// real pool — 2 bytes each for accounting; regenerated on read since
+    /// the row is a pure function of (token, pos)).
+    Exact,
+    /// Quantized storage: symmetric codes packed to `bits` (offset-binary
+    /// nibbles at 4, one byte per code at 8) + one f16 scale per
+    /// [`MOCK_KV_GROUP`]-element group.
+    Quant { bits: u8, packed: Vec<u8>, scales: Vec<f32> },
+}
+
+impl KvPayload {
+    /// The row as the gather path sees it: exact for fp, decode(pack) for
+    /// quantized storage.
+    fn dequantize(&self, token: i32, pos: usize) -> Vec<f32> {
+        match self {
+            KvPayload::Exact => MockEngine::mock_kv_row(token, pos),
+            KvPayload::Quant { bits, packed, scales } => {
+                let codes = if *bits == 4 {
+                    crate::quant::unpack_int4_symmetric(packed, MOCK_KV_DIM)
+                } else {
+                    packed.iter().map(|&b| b as i8 as i32).collect()
+                };
+                let mut out = Vec::with_capacity(MOCK_KV_DIM);
+                for (g, grp) in codes.chunks(MOCK_KV_GROUP).enumerate() {
+                    out.extend(crate::quant::dequantize_codes(grp, scales[g], 0.0));
+                }
+                out
+            }
+        }
+    }
+
+    /// Bytes this position occupies in the pool (f16 scales/elements).
+    fn resident_bytes(&self) -> usize {
+        match self {
+            KvPayload::Exact => MOCK_KV_DIM * 2,
+            KvPayload::Quant { packed, scales, .. } => packed.len() + scales.len() * 2,
+        }
+    }
+}
+
 impl MockEngine {
     pub fn new(slots: usize, max_seq: usize, vocab: usize) -> Self {
         Self {
@@ -929,6 +1028,8 @@ impl MockEngine {
             chunk: 1,
             block_size: None,
             blocks: Vec::new(),
+            kv_bits: 16.0,
+            kv_err: vec![0.0; slots],
             steps: 0,
             prefill_calls: 0,
             prefill_tokens_fed: 0,
@@ -960,6 +1061,92 @@ impl MockEngine {
         self
     }
 
+    /// Store KV at `bits` per element (4, 8 or 16). Below 16 every cached
+    /// position's synthetic KV row goes through a real symmetric
+    /// quantize→pack→unpack→dequantize round trip; the accumulated row
+    /// error deterministically perturbs the slot's logits, so quantization
+    /// quality is *observable* (and exactly reproducible) without a model.
+    pub fn with_kv_bits(mut self, bits: f32) -> Self {
+        assert!(
+            bits == 4.0 || bits == 8.0 || bits == 16.0,
+            "mock engine: kv_bits must be 4, 8 or 16 (got {bits})"
+        );
+        self.kv_bits = bits;
+        self
+    }
+
+    /// The synthetic KV row cached for (token, pos): MOCK_KV_DIM uniforms
+    /// in [-1, 1), a pure function of its arguments — so dense and paged
+    /// engines, and the sim oracle, all agree without shared state.
+    fn mock_kv_row(token: i32, pos: usize) -> Vec<f32> {
+        let seed = hash_fold(hash_fold(HASH_BASIS, token), pos as i32);
+        let mut rng = Prng::new(seed);
+        (0..MOCK_KV_DIM).map(|_| rng.uniform() * 2.0 - 1.0).collect()
+    }
+
+    /// Encode one row for storage at `kv_bits` (symmetric grid, per-group
+    /// scales; int4 through the offset-binary nibble codec).
+    fn encode_kv(row: &[f32], kv_bits: f32) -> KvPayload {
+        if kv_bits >= 16.0 {
+            return KvPayload::Exact;
+        }
+        let mut codes = Vec::with_capacity(MOCK_KV_DIM);
+        let mut scales = Vec::with_capacity(MOCK_KV_DIM / MOCK_KV_GROUP);
+        for grp in row.chunks(MOCK_KV_GROUP) {
+            let (c, scale, _zero) = crate::quant::quantize_group_codes(grp, kv_bits, true);
+            codes.extend(c);
+            scales.push(scale);
+        }
+        let packed = if kv_bits == 4.0 {
+            crate::quant::pack_int4_symmetric(&codes)
+        } else {
+            codes.iter().map(|&c| c as i8 as u8).collect()
+        };
+        KvPayload::Quant { bits: kv_bits as u8, packed, scales }
+    }
+
+    /// L1 error the storage round trip adds to (token, pos)'s row at
+    /// `kv_bits` — 0 at full precision.
+    fn kv_round_trip_err(token: i32, pos: usize, kv_bits: f32) -> f32 {
+        if kv_bits >= 16.0 {
+            return 0.0;
+        }
+        let row = Self::mock_kv_row(token, pos);
+        let deq = Self::encode_kv(&row, kv_bits).dequantize(token, pos);
+        row.iter().zip(&deq).map(|(x, y)| (x - y).abs()).sum()
+    }
+
+    /// Deterministic logit perturbation from accumulated KV storage error:
+    /// `logits[i] += DRIFT x kv_err x u_i`, `u_i` seeded by (history hash,
+    /// kv_bits). No-op at 16 bits, so the fp path stays byte-identical to
+    /// an engine built without `with_kv_bits`.
+    fn apply_kv_drift(logits: &mut [f32], hash: u64, kv_bits: f32, kv_err: f32) {
+        if kv_bits >= 16.0 {
+            return;
+        }
+        let mut rng = Prng::new(hash ^ ((kv_bits.to_bits() as u64) << 17));
+        for l in logits.iter_mut() {
+            *l += MOCK_KV_DRIFT * kv_err * (rng.uniform() * 2.0 - 1.0);
+        }
+    }
+
+    /// Measured resident bytes of the physical pool: what the stored page
+    /// payloads actually occupy (one KV "side" — the real pool holds K and
+    /// V, so compare `2x` this against
+    /// [`crate::serve::blocks::kv_memory_bytes`]).
+    pub fn resident_kv_bytes(&self) -> usize {
+        self.blocks.iter().flatten().map(|e| e.kv.resident_bytes()).sum()
+    }
+
+    /// The engine's slot-local logits: the history-hash base plus the KV
+    /// drift term for this slot's accumulated storage error.
+    fn slot_logits(&self, b: usize, last: i32) -> Vec<f32> {
+        let mut logits =
+            Self::logits_from(self.hash[b], self.history[b].len(), last, self.vocab);
+        Self::apply_kv_drift(&mut logits, self.hash[b], self.kv_bits, self.kv_err[b]);
+        logits
+    }
+
     /// Deterministic logits from the incrementally maintained state: a
     /// pseudo-random base (hash-seeded, so temperature sampling has
     /// texture) plus a strong peak on the "predicted" next token.
@@ -980,10 +1167,30 @@ impl MockEngine {
         Self::logits_from(h, history.len(), *history.last().unwrap_or(&0), vocab)
     }
 
-    /// Append one token to slot `b`'s true history + incremental hash.
+    /// From-scratch reference of the *quantized-KV* logits: [`logits_for`]
+    /// plus the drift term over the whole history's storage error at
+    /// `kv_bits`. Bit-identical to `logits_for` at 16 bits; the sim oracle
+    /// predicts a `with_kv_bits` engine with this.
+    pub fn logits_for_kv(history: &[i32], vocab: usize, kv_bits: f32) -> Vec<f32> {
+        let h = history.iter().fold(HASH_BASIS, |h, &t| hash_fold(h, t));
+        let mut logits =
+            Self::logits_from(h, history.len(), *history.last().unwrap_or(&0), vocab);
+        let err: f32 = history
+            .iter()
+            .enumerate()
+            .map(|(pos, &t)| Self::kv_round_trip_err(t, pos, kv_bits))
+            .sum();
+        Self::apply_kv_drift(&mut logits, h, kv_bits, err);
+        logits
+    }
+
+    /// Append one token to slot `b`'s true history + incremental hash, and
+    /// accrue the storage error its cached KV row picks up at `kv_bits`.
     fn push_token(&mut self, b: usize, token: i32) {
+        let pos = self.history[b].len();
         self.history[b].push(token);
         self.hash[b] = hash_fold(self.hash[b], token);
+        self.kv_err[b] += Self::kv_round_trip_err(token, pos, self.kv_bits);
     }
 
     /// Write one token into the physical page the table maps `pos` to,
@@ -1001,6 +1208,7 @@ impl MockEngine {
                 self.blocks.len()
             );
         }
+        let kv = Self::encode_kv(&Self::mock_kv_row(token, pos), self.kv_bits);
         let page = &mut self.blocks[phys as usize];
         if off == 0 {
             page.clear();
@@ -1012,7 +1220,7 @@ impl MockEngine {
                 page.len()
             );
         }
-        page.push(token);
+        page.push(PageEntry { token, kv });
         Ok(())
     }
 
@@ -1032,7 +1240,9 @@ impl MockEngine {
                 .ok_or_else(|| {
                     anyhow!("mock engine: slot {b} history spans unmapped page table[{j}]")
                 })?;
-            if page.len() != take || page[..] != hist[consumed..consumed + take] {
+            if page.len() != take
+                || page.iter().map(|e| e.token).ne(hist[consumed..consumed + take].iter().copied())
+            {
                 bail!(
                     "mock engine: slot {b} page {phys} diverges from history at logical \
                      page {j} (paged KV corruption)"
@@ -1141,8 +1351,7 @@ impl DecodeEngine for MockEngine {
                 bail!("mock engine: slot {b} cache full ({} positions)", self.max_seq);
             }
             self.push_token(b, tokens[b]);
-            let h = &self.history[b];
-            out.push(Self::logits_from(self.hash[b], h.len(), tokens[b], self.vocab));
+            out.push(self.slot_logits(b, tokens[b]));
         }
         Ok(out)
     }
@@ -1194,7 +1403,7 @@ impl DecodeEngine for MockEngine {
                 self.push_token(b, t);
             }
             let last = *self.history[b].last().expect("non-empty");
-            out.push(Self::logits_from(self.hash[b], self.history[b].len(), last, self.vocab));
+            out.push(self.slot_logits(b, last));
         }
         Ok(out)
     }
@@ -1202,6 +1411,7 @@ impl DecodeEngine for MockEngine {
     fn reset_slot(&mut self, slot: usize) {
         self.history[slot].clear();
         self.hash[slot] = HASH_BASIS;
+        self.kv_err[slot] = 0.0;
     }
 
     fn kv_block_size(&self) -> Option<usize> {
@@ -1210,6 +1420,10 @@ impl DecodeEngine for MockEngine {
 
     fn kv_blocks(&self) -> usize {
         self.blocks.len()
+    }
+
+    fn kv_bits(&self) -> f32 {
+        self.kv_bits
     }
 
     fn step_paged(
@@ -1253,12 +1467,7 @@ impl DecodeEngine for MockEngine {
             }
             self.paged_write(b, pos[b] as usize, tokens[b], &tables[b])?;
             self.push_token(b, tokens[b]);
-            out.push(Self::logits_from(
-                self.hash[b],
-                self.history[b].len(),
-                tokens[b],
-                self.vocab,
-            ));
+            out.push(self.slot_logits(b, tokens[b]));
         }
         // Every slot (the ones idling through this call included) must
         // still see its exact history through its table: shared pages hold
@@ -1320,7 +1529,7 @@ impl DecodeEngine for MockEngine {
                 self.push_token(b, tok);
             }
             let last = *self.history[b].last().expect("non-empty");
-            out.push(Self::logits_from(self.hash[b], self.history[b].len(), last, self.vocab));
+            out.push(self.slot_logits(b, last));
         }
         self.check_all_views(tables)?;
         Ok(out)
@@ -1344,7 +1553,7 @@ impl DecodeEngine for MockEngine {
                 .ok_or_else(|| {
                     anyhow!("mock engine: slot {slot} adopts unmapped page table[{j}] = {phys}")
                 })?;
-            let tok = page.get(pos % bs).copied().ok_or_else(|| {
+            let entry = page.get(pos % bs).ok_or_else(|| {
                 anyhow!(
                     "mock engine: slot {slot} adopts page {phys} holding {} tokens at \
                      in-page offset {} (shared page not full)",
@@ -1352,10 +1561,25 @@ impl DecodeEngine for MockEngine {
                     pos % bs
                 )
             })?;
-            toks.push(tok);
+            // The adopted KV must be what this engine would have stored for
+            // (token, pos) at its own kv_bits: a donor page written at a
+            // different width (or corrupted payload) would silently change
+            // the adopter's attention inputs in the real graphs.
+            let canon = Self::encode_kv(&Self::mock_kv_row(entry.token, pos), self.kv_bits);
+            if entry.kv != canon {
+                bail!(
+                    "mock engine: slot {slot} adopts page {phys} whose stored KV at \
+                     in-page offset {} does not match a {}-bit round trip of its token \
+                     (mixed-width or corrupted shared page)",
+                    pos % bs,
+                    self.kv_bits
+                );
+            }
+            toks.push(entry.token);
         }
         self.history[slot].clear();
         self.hash[slot] = HASH_BASIS;
+        self.kv_err[slot] = 0.0;
         for t in toks {
             self.push_token(slot, t);
         }
@@ -1727,6 +1951,153 @@ mod tests {
             .prefill_paged(&[Vec::new(), vec![7, 8]], &[0, 0], &[false, true], &clobber)
             .unwrap_err();
         assert!(err.to_string().contains("read-only"), "{err:#}");
+    }
+
+    // -- quantized KV storage (--kv-bits) ---------------------------------
+
+    #[test]
+    fn kv16_is_byte_identical_to_default_engine() {
+        // Explicit 16-bit KV must be a no-op: same logits, zero accumulated
+        // error, Exact page payloads — the dense-fallback/pre-PR contract.
+        let tables = identity_tables(1, 4);
+        let mut a = MockEngine::new(1, 16, 64).with_block_pool(4, 4);
+        let mut b = MockEngine::new(1, 16, 64).with_block_pool(4, 4).with_kv_bits(16.0);
+        for pos in 0..10 {
+            let t = (pos * 5 + 3) as i32 % 64;
+            let la = a.step_paged(&[t], &[pos as i32], &[true], &tables).unwrap();
+            let lb = b.step_paged(&[t], &[pos as i32], &[true], &tables).unwrap();
+            assert_eq!(la, lb, "pos {pos}");
+            assert_eq!(lb[0], MockEngine::logits_for(&b.history[0], 64));
+        }
+        assert_eq!(b.kv_err[0], 0.0);
+        assert_eq!(b.kv_bits(), 16.0);
+    }
+
+    #[test]
+    fn kv4_drifts_logits_but_dense_and_paged_agree() {
+        // Quantized KV must change logits vs fp (that's the point), but
+        // dense and paged storage at the same width stay bit-identical —
+        // the storage layout is not allowed to alter the math.
+        let tables = identity_tables(1, 8);
+        let mut fp = MockEngine::new(1, 64, 48);
+        let mut dense4 = MockEngine::new(1, 64, 48).with_kv_bits(4.0);
+        let mut paged4 = MockEngine::new(1, 64, 48).with_block_pool(8, 8).with_kv_bits(4.0);
+        let mut hist = Vec::new();
+        let mut diverged = false;
+        for pos in 0..40 {
+            let t = (pos * 11 + 2) as i32 % 48;
+            hist.push(t);
+            let lf = fp.step(&[t], &[pos as i32], &[true]).unwrap();
+            let ld = dense4.step(&[t], &[pos as i32], &[true]).unwrap();
+            let lp = paged4.step_paged(&[t], &[pos as i32], &[true], &tables).unwrap();
+            assert_eq!(ld, lp, "pos {pos}: dense vs paged int4");
+            assert_eq!(ld[0], MockEngine::logits_for_kv(&hist, 48, 4.0), "pos {pos}");
+            diverged |= ld[0] != lf[0];
+        }
+        assert!(diverged, "int4 KV drift never moved a logit");
+        assert!(dense4.kv_err[0] > 0.0);
+    }
+
+    #[test]
+    fn int8_kv_greedy_completion_matches_fp() {
+        // The drift coefficient is sized so int8's accumulated row error
+        // (~0.25/token, <= 32 over a 128-position history) perturbs any
+        // logit by < 1.3 — strictly inside the > 4 gap between the mock's
+        // peak (>= 8) and base (< 4) logits. Greedy decoding under int8 KV
+        // is therefore *guaranteed* byte-identical to fp, not just likely.
+        let mut fp = MockEngine::new(1, 128, 64);
+        let mut q8 = MockEngine::new(1, 128, 64).with_kv_bits(8.0);
+        let prompt = [7i32, 3, 19, 42];
+        let mut la = Vec::new();
+        let mut lb = Vec::new();
+        for (j, &t) in prompt.iter().enumerate() {
+            la = fp.step(&[t], &[j as i32], &[true]).unwrap().remove(0);
+            lb = q8.step(&[t], &[j as i32], &[true]).unwrap().remove(0);
+        }
+        for pos in prompt.len()..120 {
+            let ta = crate::serve::sampling::argmax(&la) as i32;
+            let tb = crate::serve::sampling::argmax(&lb) as i32;
+            assert_eq!(ta, tb, "pos {pos}: int8 greedy diverged from fp");
+            la = fp.step(&[ta], &[pos as i32], &[true]).unwrap().remove(0);
+            lb = q8.step(&[tb], &[pos as i32], &[true]).unwrap().remove(0);
+        }
+        assert!(q8.kv_err[0] > 0.0, "int8 accrues real (bounded) error");
+    }
+
+    #[test]
+    fn pages_store_round_tripped_payloads_and_measured_bytes() {
+        // Fill one physical page at each width and check (a) the stored
+        // payload dequantizes to the canonical round trip, not the raw row,
+        // and (b) measured resident bytes match the per-page accounting
+        // formula (x2 for the K and V sides the real pool holds).
+        let bs = 16;
+        for &(bits, per_token) in
+            &[(4.0f32, 64 + 4 * 2), (8.0, 128 + 4 * 2), (16.0, MOCK_KV_DIM * 2)]
+        {
+            let mut e = MockEngine::new(1, 32, 64).with_block_pool(2, bs).with_kv_bits(bits);
+            let tables = identity_tables(1, 2);
+            for pos in 0..bs {
+                e.step_paged(&[(pos * 3 + 1) as i32], &[pos as i32], &[true], &tables).unwrap();
+            }
+            assert_eq!(e.resident_kv_bytes(), bs * per_token, "bits {bits}");
+            assert_eq!(
+                2 * e.resident_kv_bytes(),
+                crate::serve::blocks::kv_memory_bytes(1, bs, 1, 4, 32, bits as f64, true),
+                "bits {bits}: measured pool bytes vs accounting formula"
+            );
+            let entry = &e.blocks[0][3];
+            let deq = entry.kv.dequantize(entry.token, 3);
+            let raw = MockEngine::mock_kv_row(entry.token, 3);
+            assert_eq!(deq.len(), MOCK_KV_DIM);
+            if bits < 16.0 {
+                assert_ne!(deq, raw, "bits {bits}: storage must be lossy");
+                let err: f32 =
+                    raw.iter().zip(&deq).map(|(x, y)| (x - y).abs()).sum();
+                assert_eq!(err, MockEngine::kv_round_trip_err(entry.token, 3, bits));
+            } else {
+                assert_eq!(deq, raw, "16-bit storage is exact");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_row_error_dominates_int8() {
+        // Per-token row error ordering the drift model rests on: int4 ~ 18x
+        // int8 (quant step 1/7 vs 1/127 on a [-1, 1) row).
+        let e4 = MockEngine::kv_round_trip_err(13, 5, 4.0);
+        let e8 = MockEngine::kv_round_trip_err(13, 5, 8.0);
+        assert!(e8 > 0.0);
+        assert!(e4 > 8.0 * e8, "int4 err {e4} vs int8 err {e8}");
+        // And int8 over a full history stays inside the greedy-gap bound
+        // the drift coefficient was sized for.
+        let worst: f32 =
+            (0..128).map(|p| MockEngine::kv_round_trip_err(p as i32 % 64, p, 8.0)).sum();
+        assert!(MOCK_KV_DRIFT * worst < 2.0, "int8 drift bound broke: {worst}");
+    }
+
+    #[test]
+    fn adopt_prefix_rejects_mixed_width_pages_and_rebuilds_kv_err() {
+        let bs = 4;
+        // Donor writes 4 tokens at int4; an int4 adopter inherits both the
+        // history and the accumulated storage error of the shared prefix.
+        let mut e = MockEngine::new(2, 32, 64).with_block_pool(8, bs).with_kv_bits(4.0);
+        let tables = vec![vec![0, 1], Vec::new()];
+        for p in 0..4 {
+            e.step_paged(&[p + 20, 0], &[p, 0], &[true, false], &tables).unwrap();
+        }
+        let donor_err = e.kv_err[0];
+        assert!(donor_err > 0.0);
+        e.adopt_prefix(1, &[0, 2], 4).unwrap();
+        assert_eq!(e.kv_err[1], donor_err, "adopter inherits the prefix's storage error");
+        // An engine at a different width must refuse the same pages: its
+        // graphs would dequantize them with the wrong codec.
+        let mut w = MockEngine::new(2, 32, 64).with_block_pool(8, bs).with_kv_bits(8.0);
+        for p in 0..4 {
+            w.step_paged(&[p + 20, 0], &[p, 0], &[true, false], &tables).unwrap();
+        }
+        w.kv_bits = 4.0; // simulate adopting a page stored at another width
+        let err = w.adopt_prefix(1, &[0, 2], 4).unwrap_err();
+        assert!(err.to_string().contains("round trip"), "{err:#}");
     }
 
     #[test]

@@ -26,7 +26,9 @@
 //!   invariant `free + Σ(refcount > 0) == total` (releases are
 //!   batch-atomic; double-frees are loud errors). Plus the
 //!   [`blocks::kv_memory_bytes`] formula the serving bench audits its
-//!   memory budgets with — physical pages, so shared pages count once.
+//!   memory budgets with — physical pages, so shared pages count once, at
+//!   any KV storage width (packed payload rounded up per page, plus
+//!   per-group scale metadata below 16 bits).
 //! * [`prefix`] — [`prefix::PrefixIndex`], the content-addressed prefix
 //!   cache: full, immutable prompt pages keyed by a `(parent chain, page
 //!   tokens)` hash chain. Donated pages stay resident (the index holds a
@@ -107,6 +109,21 @@
 //!   its bookkeeping model, and the pinned-seed suites require exact
 //!   sequence equality (modulo timestamps) — scheduler decisions are a
 //!   CI-checked observable, not just telemetry.
+//!
+//! Quantized KV page storage (`serve --kv-bits {4,8,16}`): the L2 paged
+//! graphs fake-quant K/V *before* scattering to physical pages, so a page
+//! holds quantize→dequantize round-tripped values on a symmetric per-group
+//! grid — the page is the storage format, not a staging buffer. `kv_bits`
+//! rides the runtime qcfg vector (one lowered artifact covers every width;
+//! 16 is exact pass-through, bit-identical to the pre-quantization paged
+//! path), [`DecodeEngine::kv_bits`] reports the width the engine stores
+//! at, and [`blocks::kv_memory_bytes`] prices the packed pages — at an
+//! equal page-byte budget, int4 pages hold ~3.6x the tokens of fp16
+//! (scale metadata included), which the `kv_quant` bench section measures
+//! as in-flight concurrency together with greedy-drift quality checks.
+//! The fp decode variant has no qcfg input, so `--kv-bits` there falls
+//! back to full-precision pages with a loud warning rather than silently
+//! misreporting capacity.
 
 pub mod blocks;
 pub mod engine;

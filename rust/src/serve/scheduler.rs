@@ -375,6 +375,13 @@ impl<E: DecodeEngine> Scheduler<E> {
         &mut self.engine
     }
 
+    /// KV storage width in bits of the underlying engine (16 = full
+    /// precision). Scheduling decisions never depend on it — pages are
+    /// counted in tokens, and `kv_memory_bytes` converts to bytes.
+    pub fn kv_bits(&self) -> f32 {
+        self.engine.kv_bits()
+    }
+
     pub fn queue_depth(&self) -> usize {
         self.pending.len()
     }

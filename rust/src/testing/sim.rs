@@ -105,6 +105,11 @@ pub struct SimConfig {
     /// (the classic drain-prefill-then-decode loop). Needs
     /// `prefill_chunk > 1`, like the real scheduler.
     pub step_budget: usize,
+    /// KV storage width in bits for the engine (16 = full precision).
+    /// The oracle's bookkeeping is width-independent — quantized KV only
+    /// perturbs logit *values*, never admission, paging, or step counts —
+    /// so traces must stay exact at any width.
+    pub kv_bits: f64,
 }
 
 impl SimConfig {
@@ -119,6 +124,7 @@ impl SimConfig {
             block_size: 1,
             prefix_cache: false,
             step_budget: 0,
+            kv_bits: 16.0,
         }
     }
 
@@ -869,7 +875,8 @@ mod tests {
 
     fn build_scheduler(cfg: &SimConfig) -> Scheduler<MockEngine> {
         let mut engine = MockEngine::new(cfg.slots, cfg.max_seq, 64)
-            .with_prefill_chunk(cfg.prefill_chunk);
+            .with_prefill_chunk(cfg.prefill_chunk)
+            .with_kv_bits(cfg.kv_bits as f32);
         if cfg.kv_blocks > 0 {
             engine = engine.with_block_pool(cfg.kv_blocks, cfg.block_size);
         }
@@ -985,6 +992,7 @@ mod tests {
             block_size,
             prefix_cache: false,
             step_budget: 0,
+            kv_bits: *g.pick(&[4.0, 8.0, 16.0]),
         };
         let events = random_events(g, &cfg);
         (cfg, events)
@@ -1020,6 +1028,7 @@ mod tests {
             block_size,
             prefix_cache: true,
             step_budget: 0,
+            kv_bits: *g.pick(&[4.0, 8.0, 16.0]),
         };
         let n_events = g.int(4, 40);
         let mut events = Vec::with_capacity(n_events);
@@ -1070,6 +1079,7 @@ mod tests {
             block_size,
             prefix_cache: paged && g.bool(),
             step_budget: budget,
+            kv_bits: *g.pick(&[4.0, 8.0, 16.0]),
         };
         let n_events = g.int(4, 40);
         let mut events = Vec::with_capacity(n_events);
@@ -1123,6 +1133,7 @@ mod tests {
             block_size,
             prefix_cache: paged && g.bool(),
             step_budget: *g.pick(&[1usize, 2, 4, 8, 16]),
+            kv_bits: *g.pick(&[4.0, 8.0, 16.0]),
         };
         let off_cfg = SimConfig { step_budget: 0, ..on_cfg };
         let n_events = g.int(4, 30);
@@ -1318,6 +1329,7 @@ mod tests {
             block_size,
             prefix_cache: true,
             step_budget,
+            kv_bits: *g.pick(&[4.0, 8.0, 16.0]),
         };
         let off_cfg = SimConfig { prefix_cache: false, ..on_cfg };
         let n_events = g.int(4, 30);
@@ -1522,6 +1534,7 @@ mod tests {
             block_size: 4,
             prefix_cache: false,
             step_budget: 0,
+            kv_bits: 4.0,
         };
         let events = [
             SimEvent::Submit(SimRequest::plain(4, 8)),
@@ -1550,6 +1563,7 @@ mod tests {
             block_size: 4,
             prefix_cache: false,
             step_budget: 0,
+            kv_bits: 8.0,
         };
         let events = [
             SimEvent::Submit(SimRequest::plain(2, 1)), // 1 page
@@ -1631,6 +1645,7 @@ mod tests {
             block_size: 4,
             prefix_cache: true,
             step_budget: 0,
+            kv_bits: 4.0,
         };
         let shared = SimRequest { prompt_len: 9, max_new: 3, shared_len: 9, group: 7, tag: 0 };
         let events = [
