@@ -48,6 +48,15 @@
 //! * `sampler` — per-draw top-k / top-p cost before (full vocabulary sort,
 //!   the pre-PR implementation, inlined here as the baseline) and after
 //!   (partial selection via `select_nth_unstable_by`).
+//! * `fault_recovery` — the chaos sweep: the identical seeded workload
+//!   served through the `FaultInjector` at fault rates {0, 0.01, 0.05}
+//!   (pinned schedule seed). Every leg audits the pool/slot bookkeeping
+//!   invariants after every step, every surviving request (anything not
+//!   quarantined) is asserted byte-identical to the fault-free leg — the
+//!   error kernel may reshape the schedule, never the bytes — and the
+//!   JSON records goodput (successfully delivered tokens per engine
+//!   step) vs fault rate plus the fault/retry/recovery/quarantine
+//!   counter set.
 //! * `trace` — the flight recorder audited two ways on the decode-stall
 //!   scenario: (1) overhead — the identical leg with tracing off vs on
 //!   (ring capacity 2^20), mean step latency side by side, plus a
@@ -79,8 +88,8 @@ use spinquant::model::{Manifest, Weights};
 use spinquant::report;
 use spinquant::runtime::Runtime;
 use spinquant::serve::{
-    blocks, chrome_trace, verify_against_metrics, DecodeVariant, GenRequest, MockEngine,
-    PjrtEngine, Sampler, Scheduler, ServingMetrics, TraceRecord,
+    blocks, chrome_trace, verify_against_metrics, DecodeVariant, FaultInjector, FinishReason,
+    GenRequest, MockEngine, PjrtEngine, Sampler, Scheduler, ServingMetrics, TraceRecord,
 };
 use spinquant::util::json::{self, Json};
 use spinquant::util::prng::Prng;
@@ -901,6 +910,153 @@ fn trace_sweep() -> Json {
     ])
 }
 
+// -- fault_recovery: chaos sweep over the error-kernel step loop -------------
+
+const FAULT_RATES: [f64; 3] = [0.0, 0.01, 0.05];
+const FAULT_SEED: u64 = 0xC405;
+const FAULT_LANES: usize = 4;
+const FAULT_MAX_SEQ: usize = 128;
+const FAULT_POOL: usize = 48; // pages x 8 tokens: tight enough to page
+const FAULT_BLOCK: usize = 8;
+const FAULT_CHUNK: usize = 8;
+const FAULT_REQUESTS: usize = 32;
+const FAULT_MAX_NEW: usize = 16;
+
+/// Seeded mixed-length workload, identical across every fault rate: the
+/// clean leg is the byte-identity reference for the faulty survivors.
+fn fault_workload() -> Vec<GenRequest> {
+    (0..scaled(FAULT_REQUESTS))
+        .map(|i| {
+            let len = 4 + (i * 3) % 12;
+            let prompt: Vec<u8> =
+                (0..len).map(|j| (32 + ((i * 23 + j * 7) % 90)) as u8).collect();
+            GenRequest::sampled(&prompt, FAULT_MAX_NEW, Sampler::top_k(8, 0.8), 7000 + i as u64)
+        })
+        .collect()
+}
+
+struct FaultLeg {
+    completions: std::collections::BTreeMap<u64, (Vec<u8>, FinishReason)>,
+    steps: usize,
+    metrics: ServingMetrics,
+}
+
+/// One chaos leg: the paged + chunked-prefill scheduler driven to drain
+/// through a seeded `FaultInjector` at `rate`, auditing the full
+/// bookkeeping invariants (`free + Σ(refcount > 0) == total`, slot and
+/// position accounting) after every single step.
+fn run_fault_leg(rate: f64) -> FaultLeg {
+    let n = scaled(FAULT_REQUESTS);
+    let engine = MockEngine::new(FAULT_LANES, FAULT_MAX_SEQ, 256)
+        .with_block_pool(FAULT_POOL, FAULT_BLOCK)
+        .with_prefill_chunk(FAULT_CHUNK);
+    let injector = FaultInjector::new(engine, FAULT_SEED, rate);
+    let mut sched = Scheduler::new(injector, n).expect("scheduler");
+    for r in fault_workload() {
+        sched.submit(r).expect("submit");
+    }
+    let mut completions = std::collections::BTreeMap::new();
+    while !sched.is_idle() {
+        for c in sched.step().expect("step must survive injected faults") {
+            let dup = completions.insert(c.id, (c.completion, c.reason)).is_some();
+            assert!(!dup, "request {} terminated twice at fault rate {rate}", c.id);
+        }
+        sched.check_invariants().expect("bookkeeping invariants under faults");
+    }
+    let steps = sched.engine().inner().steps;
+    FaultLeg { completions, steps, metrics: sched.metrics }
+}
+
+fn fault_recovery_sweep() -> Json {
+    let n = scaled(FAULT_REQUESTS);
+    let legs: Vec<(f64, FaultLeg)> =
+        FAULT_RATES.iter().map(|&r| (r, run_fault_leg(r))).collect();
+    let clean = &legs[0].1;
+    assert_eq!(clean.completions.len(), n, "clean leg must finish every request");
+    assert_eq!(
+        clean.metrics.step_faults + clean.metrics.slot_faults,
+        0,
+        "rate-0 injector must never fire"
+    );
+    println!();
+    println!(
+        "fault_recovery: {n} requests through the seeded FaultInjector (seed {FAULT_SEED:#x}, \
+         {FAULT_LANES} lanes, {FAULT_POOL} pages x {FAULT_BLOCK})"
+    );
+    println!(
+        "{:<8} {:>8} {:>12} {:>12} {:>10} {:>12} {:>10} {:>14}",
+        "rate", "steps", "step faults", "slot faults", "retries", "quarantined", "ok", "goodput t/s"
+    );
+    let mut rows: Vec<(String, Json)> = vec![(
+        "config".to_string(),
+        json::obj(vec![
+            ("seed", json::num(FAULT_SEED as f64)),
+            ("lanes", json::num(FAULT_LANES as f64)),
+            ("pool_blocks", json::num(FAULT_POOL as f64)),
+            ("block_size", json::num(FAULT_BLOCK as f64)),
+            ("prefill_chunk", json::num(FAULT_CHUNK as f64)),
+            ("requests", json::num(n as f64)),
+            ("max_new_tokens", json::num(FAULT_MAX_NEW as f64)),
+        ]),
+    )];
+    for (rate, leg) in &legs {
+        // Liveness: every request terminates exactly once, fault rate or
+        // not — recovered, quarantined, but never lost or duplicated.
+        assert_eq!(leg.completions.len(), n, "rate {rate}: a request was lost");
+        // The error kernel may reshape the schedule (retries, evictions,
+        // warm restarts) but never the bytes: every survivor must match
+        // the fault-free leg exactly.
+        let mut ok_tokens = 0usize;
+        let mut quarantined = 0usize;
+        let mut survivors_bit_identical = true;
+        for (id, (bytes, reason)) in &leg.completions {
+            if matches!(reason, FinishReason::Quarantined | FinishReason::DeadlineExpired) {
+                quarantined += 1;
+                continue;
+            }
+            ok_tokens += bytes.len();
+            let (clean_bytes, _) = &clean.completions[id];
+            if bytes != clean_bytes {
+                survivors_bit_identical = false;
+            }
+        }
+        assert!(
+            survivors_bit_identical,
+            "rate {rate}: a surviving request diverged from the fault-free run"
+        );
+        let goodput = ok_tokens as f64 / (leg.steps as f64).max(1.0);
+        println!(
+            "{:<8} {:>8} {:>12} {:>12} {:>10} {:>12} {:>10} {:>14.3}",
+            rate,
+            leg.steps,
+            leg.metrics.step_faults,
+            leg.metrics.slot_faults,
+            leg.metrics.retries_scheduled,
+            quarantined,
+            n - quarantined,
+            goodput,
+        );
+        let key = format!("rate_{}", format!("{rate}").replace('.', "_"));
+        rows.push((
+            key,
+            json::obj(vec![
+                ("rate", json::num(*rate)),
+                ("steps", json::num(leg.steps as f64)),
+                ("step_faults", json::num(leg.metrics.step_faults as f64)),
+                ("slot_faults", json::num(leg.metrics.slot_faults as f64)),
+                ("retries_scheduled", json::num(leg.metrics.retries_scheduled as f64)),
+                ("slots_recovered", json::num(leg.metrics.slots_recovered as f64)),
+                ("requests_quarantined", json::num(leg.metrics.requests_quarantined as f64)),
+                ("requests_fault_evicted", json::num(leg.metrics.requests_fault_evicted as f64)),
+                ("completed_ok", json::num((n - quarantined) as f64)),
+                ("goodput_tokens_per_step", json::num(goodput)),
+                ("survivors_bit_identical", Json::Bool(survivors_bit_identical)),
+            ]),
+        ));
+    }
+    json::obj(rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+}
+
 // -- sampler cost: full-sort baseline vs partial selection -------------------
 
 /// The pre-PR sampler: full descending sort of the vocabulary every draw.
@@ -1077,6 +1233,7 @@ fn main() {
     let prefix_cache = prefix_sweep();
     let decode_stall = decode_stall_sweep();
     let trace = trace_sweep();
+    let fault_recovery = fault_recovery_sweep();
     let sampler = sampler_cost();
 
     let out = json::obj(vec![
@@ -1092,6 +1249,7 @@ fn main() {
         ("prefix_cache", prefix_cache),
         ("decode_stall", decode_stall),
         ("trace", trace),
+        ("fault_recovery", fault_recovery),
         ("sampler", sampler),
         (
             "ttft",

@@ -46,11 +46,21 @@
 //!   enabled with `serve --trace out.json`, exported as a Chrome
 //!   trace-event/Perfetto timeline, folded into per-request timelines
 //!   that are cross-checked against the aggregate metrics, and replayed
-//!   event-for-event by the scheduler oracle)), the seeded
+//!   event-for-event by the scheduler oracle), and a fault-tolerant
+//!   **error-kernel** step loop (`serve --fault-rate R --fault-seed S
+//!   --retry-budget N --deadline-ms D`: engine failures are classified
+//!   transient / per-slot / fatal, every engine-touching path is
+//!   failure-atomic under the pool invariant `free + Σ(refcount>0) ==
+//!   total`, recovery retries with deterministic step-counted backoff,
+//!   exhausted step-wide streaks evict to the queue front for warm
+//!   restart, repeat offenders are quarantined, expired deadlines are
+//!   shed queued or mid-flight, and a seeded `FaultInjector` plus
+//!   chaos-mode oracle suites CI-check that surviving requests are
+//!   byte-identical to a fault-free run)), the seeded
 //!   scheduler-simulation oracle (`testing::sim`, dense / paged /
-//!   prefix-cached / composed, including exact trace-event-stream
-//!   equivalence), and the benchmark harnesses that regenerate every
-//!   table and figure of the paper.
+//!   prefix-cached / composed / fault-injected, including exact
+//!   trace-event-stream equivalence), and the benchmark harnesses that
+//!   regenerate every table and figure of the paper.
 //!
 //! Python never runs on the request path: `make artifacts` runs once, then
 //! the `spinquant` binary is self-contained.

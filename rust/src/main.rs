@@ -41,7 +41,19 @@
 //!                in-flight, and token mix; open in chrome://tracing or
 //!                ui.perfetto.dev) + `--trace-buffer N` (ring capacity in
 //!                events, default 2^20; drop-oldest, with the drop count
-//!                reported in the export); prints completions +
+//!                reported in the export) + fault tolerance:
+//!                `--fault-rate R` (chaos mode: wrap the engine in the
+//!                seeded fault injector, so a fraction R of engine calls
+//!                fail with transient or per-slot errors and the
+//!                scheduler's error kernel recovers), `--fault-seed S` /
+//!                `--fault-burst K` (deterministic schedule; K correlated
+//!                faults per trigger), `--retry-budget N` (deterministic
+//!                step-counted backoff; a request is quarantined after N
+//!                individual faults, a streak of N step-wide faults
+//!                evicts to the queue front for warm restart; 0 = keep
+//!                the default), `--deadline-ms D` (shed requests older
+//!                than D ms, queued or mid-flight; 0 = none); prints
+//!                completions (with quarantine/deadline markers) +
 //!                TTFT / latency-percentile / tokens-per-sec metrics
 //!   bench-table  regenerate one paper table/figure (see --id list)
 //!   selftest     end-to-end smoke: artifacts load + tiny eval
@@ -84,6 +96,10 @@ fn usage() -> ! {
                        hiccup a long prompt's prefill causes; 0 = off)\n\
                        --trace out.json (flight recorder -> Chrome/Perfetto trace JSON)\n\
                        --trace-buffer N (trace ring capacity in events, default 2^20)\n\
+                       --fault-rate R (chaos mode: seeded engine-fault injection at rate R)\n\
+                       --fault-seed S --fault-burst K (fault schedule seed / burst length)\n\
+                       --retry-budget N (faults per request before quarantine; 0 = default)\n\
+                       --deadline-ms D (shed requests older than D ms; 0 = none)\n\
          bench-table:  --id table1|table2|table3|table4|table5|table6|table10|table11|table12|table13|fig2|fig3|fig4|fig7|fig8 [--models a,b] [--out EXPERIMENTS.md]"
     );
     std::process::exit(2);
@@ -264,7 +280,7 @@ fn cmd_optimize(cfg: &PipelineConfig) -> Result<()> {
 }
 
 fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
-    use spinquant::serve::{GenRequest, PjrtEngine, Sampler, Scheduler};
+    use spinquant::serve::{PjrtEngine, Sampler};
 
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let rt = Runtime::cpu()?;
@@ -427,11 +443,77 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
             );
         }
     }
-    use spinquant::serve::DecodeEngine as _;
+    // Fault tolerance: `--fault-rate R` wraps the engine in the seeded
+    // FaultInjector, so every engine call may fail with a transient or
+    // per-slot ServeError — chaos-testing the scheduler's error kernel
+    // over the real artifacts. `--fault-seed S` / `--fault-burst K` shape
+    // the deterministic schedule; the recovery knobs (`--retry-budget`,
+    // `--deadline-ms`, parsed in the serve loop) apply either way.
+    let fault_rate: f64 =
+        get_extra(extra, "fault-rate").map(|v| v.parse()).transpose()?.unwrap_or(0.0);
+    if !(0.0..=1.0).contains(&fault_rate) {
+        anyhow::bail!("--fault-rate {fault_rate}: expected a probability in [0, 1]");
+    }
+    let fault_seed: u64 =
+        get_extra(extra, "fault-seed").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let fault_burst: usize =
+        get_extra(extra, "fault-burst").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let knobs = ServeKnobs {
+        extra,
+        prompts,
+        sampler,
+        seed,
+        n_new,
+        batch,
+        paged,
+        block_size,
+        kv_blocks,
+        kv_bits,
+        kv_quantized: qcfg.is_some(),
+    };
+    if fault_rate > 0.0 {
+        eprintln!(
+            "note: chaos mode — injecting engine faults at rate {fault_rate} \
+             (seed {fault_seed}, burst {fault_burst})"
+        );
+        serve_with(
+            serve::FaultInjector::new(engine, fault_seed, fault_rate).with_burst(fault_burst),
+            &knobs,
+        )
+    } else {
+        if get_extra(extra, "fault-seed").is_some() || get_extra(extra, "fault-burst").is_some() {
+            eprintln!("note: --fault-seed/--fault-burst have no effect without --fault-rate > 0");
+        }
+        serve_with(engine, &knobs)
+    }
+}
+
+/// Serving knobs that outlive engine construction, bundled so the generic
+/// serve loop below takes one parameter instead of a dozen.
+struct ServeKnobs<'a> {
+    extra: &'a [(String, String)],
+    prompts: Vec<Vec<u8>>,
+    sampler: serve::Sampler,
+    seed: u64,
+    n_new: usize,
+    batch: usize,
+    paged: bool,
+    block_size: usize,
+    kv_blocks: usize,
+    kv_bits: f32,
+    kv_quantized: bool,
+}
+
+/// The serve loop proper, generic over the engine so chaos mode
+/// (`--fault-rate`: engine wrapped in [`serve::FaultInjector`]) runs the
+/// exact same scheduler path as normal serving.
+fn serve_with<E: serve::DecodeEngine>(engine: E, k: &ServeKnobs) -> Result<()> {
+    use spinquant::serve::{FinishReason, GenRequest, Scheduler};
+
     let chunk_in_use = engine.prefill_chunk();
     let pool_desc = match engine.kv_block_size() {
         Some(bs) => {
-            let budget = if kv_blocks > 0 { kv_blocks } else { engine.kv_blocks() };
+            let budget = if k.kv_blocks > 0 { k.kv_blocks } else { engine.kv_blocks() };
             format!(", paged KV: {budget} pages x {bs} tokens")
         }
         None => String::new(),
@@ -440,7 +522,7 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
     // requests repeating a system prompt map its pages instead of
     // recomputing them (paged path only; completions are bit-identical
     // either way).
-    let prefix_cache: bool = match get_extra(extra, "prefix-cache") {
+    let prefix_cache: bool = match get_extra(k.extra, "prefix-cache") {
         None => false,
         Some("1" | "true" | "on" | "yes") => true,
         Some("0" | "false" | "off" | "no") => false,
@@ -449,14 +531,15 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
         ),
     };
     let mut sched = Scheduler::new(engine, 1024)?;
-    if kv_blocks > 0 {
-        if paged {
-            sched = sched.with_kv_block_budget(kv_blocks)?;
+    if k.kv_blocks > 0 {
+        if k.paged {
+            sched = sched.with_kv_block_budget(k.kv_blocks)?;
         } else {
             // Never drop a requested memory cap silently.
             eprintln!(
-                "note: --kv-blocks {kv_blocks} NOT enforced — serving fell back to the \
-                 dense KV cache (see notes above)"
+                "note: --kv-blocks {} NOT enforced — serving fell back to the \
+                 dense KV cache (see notes above)",
+                k.kv_blocks
             );
         }
     }
@@ -464,15 +547,16 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
     // (the qcfg vector reaches the artifact either way), but without the
     // paged pool there are no packed pages, so the page-byte savings the
     // flag exists for are not realized. Never silent.
-    if kv_bits < 16.0 && qcfg.is_some() && (block_size > 0 || kv_blocks > 0) && !paged {
+    if k.kv_bits < 16.0 && k.kv_quantized && (k.block_size > 0 || k.kv_blocks > 0) && !k.paged {
         eprintln!(
-            "note: --kv-bits {kv_bits:.0} quantizes KV values, but serving fell back to \
+            "note: --kv-bits {:.0} quantizes KV values, but serving fell back to \
              the dense KV cache (see notes above) — no packed pages, so the page-byte \
-             savings are not realized"
+             savings are not realized",
+            k.kv_bits
         );
     }
     if prefix_cache {
-        if paged {
+        if k.paged {
             sched = sched.with_prefix_cache()?;
         } else {
             eprintln!(
@@ -487,7 +571,7 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
     // classic drain-prefill-then-decode loop). Needs a multi-token
     // prefill path; never silently dropped.
     let step_budget: usize =
-        get_extra(extra, "step-budget").map(|v| v.parse()).transpose()?.unwrap_or(0);
+        get_extra(k.extra, "step-budget").map(|v| v.parse()).transpose()?.unwrap_or(0);
     let composing = step_budget > 0 && chunk_in_use > 1;
     if step_budget > 0 {
         if composing {
@@ -500,13 +584,30 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
             );
         }
     }
+    // Error-kernel recovery: `--retry-budget N` quarantines a request
+    // after N individual engine faults and evicts a call's participants
+    // for warm restart after a streak of N step-wide faults (backoff is
+    // counted in scheduler steps, deterministically). 0 = keep the
+    // default.
+    let retry_budget: usize =
+        get_extra(k.extra, "retry-budget").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    if retry_budget > 0 {
+        sched = sched.with_retry_budget(retry_budget)?;
+    }
+    // `--deadline-ms D` sheds any request older than D ms — still queued
+    // (nothing spent on it) or mid-flight (partial output returned).
+    let deadline_ms: f64 =
+        get_extra(k.extra, "deadline-ms").map(|v| v.parse()).transpose()?.unwrap_or(0.0);
+    if deadline_ms < 0.0 {
+        anyhow::bail!("--deadline-ms {deadline_ms}: expected >= 0 (0 = no deadline)");
+    }
     // Flight recorder: `--trace out.json` records every scheduler decision
     // into a bounded ring and exports a Chrome trace-event / Perfetto JSON
     // timeline after the run. `--trace-buffer N` sizes the ring (events;
     // drop-oldest beyond that, counted in the export). Off by default: the
     // sink is then a unit enum variant and the hot loop pays one branch.
-    let trace_path = get_extra(extra, "trace");
-    let trace_buffer: usize = get_extra(extra, "trace-buffer")
+    let trace_path = get_extra(k.extra, "trace");
+    let trace_buffer: usize = get_extra(k.extra, "trace-buffer")
         .map(|v| v.parse())
         .transpose()?
         .unwrap_or(1 << 20);
@@ -515,36 +616,46 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
     }
     if trace_path.is_some() {
         sched = sched.with_trace(trace_buffer);
-    } else if get_extra(extra, "trace-buffer").is_some() {
+    } else if get_extra(k.extra, "trace-buffer").is_some() {
         eprintln!("note: --trace-buffer has no effect without --trace out.json");
     }
 
     println!(
         "serving {} request(s) on {} slot(s), sampler {}, max {} new tokens, \
-         prefill chunk {}{}{}{}{}",
-        prompts.len(),
-        batch,
-        sampler.name(),
-        n_new,
+         prefill chunk {}{}{}{}{}{}",
+        k.prompts.len(),
+        k.batch,
+        k.sampler.name(),
+        k.n_new,
         chunk_in_use,
         pool_desc,
-        if kv_bits < 16.0 && qcfg.is_some() {
-            format!(", kv {kv_bits:.0}-bit")
+        if k.kv_bits < 16.0 && k.kv_quantized {
+            format!(", kv {:.0}-bit", k.kv_bits)
         } else {
             String::new()
         },
-        if prefix_cache && paged { ", prefix cache on" } else { "" },
-        if composing { format!(", step budget {step_budget}") } else { String::new() }
+        if prefix_cache && k.paged { ", prefix cache on" } else { "" },
+        if composing { format!(", step budget {step_budget}") } else { String::new() },
+        if deadline_ms > 0.0 { format!(", deadline {deadline_ms:.0} ms") } else { String::new() }
     );
-    let reqs = prompts
-        .iter()
-        .enumerate()
-        .map(|(i, p)| GenRequest::sampled(p, n_new, sampler, seed.wrapping_add(i as u64)));
+    let reqs = k.prompts.iter().enumerate().map(|(i, p)| {
+        let r = GenRequest::sampled(p, k.n_new, k.sampler, k.seed.wrapping_add(i as u64));
+        if deadline_ms > 0.0 {
+            r.with_deadline_ms(deadline_ms)
+        } else {
+            r
+        }
+    });
     let mut done = sched.serve_all(reqs)?;
     done.sort_by_key(|c| c.id);
     for c in &done {
+        let status = match c.reason {
+            FinishReason::Quarantined => "  [quarantined: engine faults]",
+            FinishReason::DeadlineExpired => "  [deadline expired]",
+            _ => "",
+        };
         println!(
-            "request {}: ttft {:>7.2} ms, total {:>8.1} ms  {:?} -> {:?}",
+            "request {}: ttft {:>7.2} ms, total {:>8.1} ms  {:?} -> {:?}{status}",
             c.id,
             c.ttft_ms.unwrap_or(f64::NAN),
             c.latency_ms,
@@ -553,7 +664,10 @@ fn cmd_serve(cfg: &PipelineConfig, extra: &[(String, String)]) -> Result<()> {
         );
     }
     println!();
-    println!("{}", sched.metrics.table(&format!("serving metrics (batch={batch})")).to_markdown());
+    println!(
+        "{}",
+        sched.metrics.table(&format!("serving metrics (batch={})", k.batch)).to_markdown()
+    );
     if let Some(path) = trace_path {
         let records = sched.trace_records();
         let dropped = sched.trace_dropped_events();

@@ -161,6 +161,40 @@ impl BlockPool {
         }
         Ok(())
     }
+
+    /// Full-accounting audit: `free + Σ(refcount > 0) == total`, every
+    /// free-listed page has refcount 0 and appears exactly once. The error
+    /// kernel's failure-atomicity guarantee is stated against this check —
+    /// the chaos property test runs it after every scheduler step.
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.free_blocks() + self.used_blocks() != self.total_blocks() {
+            bail!(
+                "pool accounting broke: {} free + {} used != {} total",
+                self.free_blocks(),
+                self.used_blocks(),
+                self.total_blocks()
+            );
+        }
+        let mut on_free_list = vec![false; self.total_blocks()];
+        for &b in &self.free {
+            let Some(seen) = on_free_list.get_mut(b as usize) else {
+                bail!("free list holds out-of-range block {b}");
+            };
+            if *seen {
+                bail!("block {b} on the free list twice");
+            }
+            *seen = true;
+            if self.refcount[b as usize] != 0 {
+                bail!("block {b} free-listed with refcount {}", self.refcount[b as usize]);
+            }
+        }
+        for (b, &rc) in self.refcount.iter().enumerate() {
+            if rc == 0 && !on_free_list[b] {
+                bail!("block {b} has refcount 0 but is not on the free list");
+            }
+        }
+        Ok(())
+    }
 }
 
 /// Resident KV-cache bytes for a pool of `blocks` pages of `block_size`
@@ -350,6 +384,21 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn invariant_audit_passes_under_churn_and_catches_corruption() {
+        let mut p = BlockPool::new(5, 4);
+        let a = p.allocate().unwrap();
+        let b = p.allocate().unwrap();
+        p.retain(a).unwrap();
+        p.check_invariants().unwrap();
+        p.release(&[a, b]).unwrap();
+        p.check_invariants().unwrap();
+        // Corrupt the pool directly: a live page smuggled onto the free
+        // list must be caught.
+        p.free.push(a);
+        assert!(p.check_invariants().is_err());
     }
 
     #[test]

@@ -7,7 +7,11 @@
 //! [`MockEngine`] is a deterministic in-process stand-in whose logits depend
 //! only on a slot's token history, so scheduler and sampler behaviour can be
 //! tested (and benched) without artifacts, and a request's generation is
-//! identical regardless of batch composition.
+//! identical regardless of batch composition. [`FaultInjector`] wraps any
+//! engine with a seeded deterministic fault schedule ([`ServeError`]
+//! transient/per-slot failures injected *before* the inner call runs), the
+//! chaos harness the scheduler's error kernel is tested and benched
+//! against.
 
 use std::time::Instant;
 
@@ -18,6 +22,46 @@ use crate::model::Weights;
 use crate::runtime::{Executable, Value};
 use crate::util::prng::Prng;
 use crate::util::timer::Samples;
+
+/// Structured serving-failure taxonomy — the scheduler's error kernel
+/// classifies every engine `Err` by downcasting to this type.
+///
+/// * [`ServeError::Transient`] — the whole engine call failed but the
+///   engine is still usable and **no slot advanced**; the error kernel
+///   retries the step after a deterministic backoff and, on retry
+///   exhaustion, evicts the participants to the queue front for a warm
+///   restart.
+/// * [`ServeError::Slot`] — one request is to blame (again with no slot
+///   advanced); the kernel retries that request alone and quarantines it
+///   after `retry_budget` individual faults.
+/// * [`ServeError::Fatal`] — the engine is unusable (e.g. a PJRT
+///   execution failure loses the KV caches). Propagates.
+///
+/// Errors that are **not** a `ServeError` also propagate: a real engine
+/// bug (arity mismatch, position drift, table corruption) must keep
+/// aborting loudly instead of being retried into silence.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// Step-wide transient fault: retryable, every call participant
+    /// affected.
+    Transient { what: String },
+    /// Per-slot fault: retryable, request in `slot` blamed.
+    Slot { slot: usize, what: String },
+    /// Unrecoverable engine failure.
+    Fatal { what: String },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Transient { what } => write!(f, "transient engine fault: {what}"),
+            ServeError::Slot { slot, what } => write!(f, "slot {slot} fault: {what}"),
+            ServeError::Fatal { what } => write!(f, "fatal engine fault: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
 
 /// Which decode artifact family to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -573,8 +617,11 @@ impl PrefillBinding {
     /// `tokens[b]` starting at `pos0[b]` for active slots, return the flat
     /// last-valid-position logits (n_slots * V) and hand the updated caches
     /// back to `decode`. (If execution fails the caches are lost — the
-    /// engine is unusable after an error, which the scheduler treats as
-    /// fatal anyway.)
+    /// engine is unusable, so PJRT errors stay **fatal** to the scheduler's
+    /// error kernel; only classified [`ServeError::Transient`]/
+    /// [`ServeError::Slot`] faults, whose contract is that no state
+    /// advanced, are retried or warm-restarted by re-prefill through the
+    /// recovery path.)
     fn step(
         &mut self,
         exe: &Executable,
@@ -1588,6 +1635,214 @@ impl DecodeEngine for MockEngine {
 }
 
 // ---------------------------------------------------------------------------
+// Seeded chaos wrapper: deterministic fault injection over any engine
+// ---------------------------------------------------------------------------
+
+/// A seeded fault-injecting wrapper around any [`DecodeEngine`].
+///
+/// Every intercepted engine call (`step`, `step_paged`, `prefill`,
+/// `prefill_paged`, `adopt_prefix`) first consults a deterministic fault
+/// schedule; a scheduled fault returns a [`ServeError`] **before the inner
+/// engine runs**, so the inner engine's state *and its counters* are
+/// exactly what they were before the call — the contract the scheduler's
+/// retry path depends on (a retried call sees identical pre-call state,
+/// and a mock's `steps`/`prefill_calls` only count calls that really ran).
+///
+/// Determinism protocol (the sim oracle replays this draw for draw):
+/// the schedule is a pure function of the *intercepted-call sequence* —
+/// each call consumes exactly **three** PRNG draws from the seeded
+/// [`Prng`], whether or not it faults:
+///
+/// 1. fault trigger: `uniform() < rate` (overridden to "fault" while a
+///    burst is draining);
+/// 2. fault kind: per-slot vs step-wide (`uniform() < 0.5`);
+/// 3. victim pick: an index into the call's active-slot set.
+///
+/// A triggered fault arms `burst - 1` forced follow-up faults (burst = 1,
+/// the default, means isolated faults). `adopt_prefix` faults are always
+/// blamed on the adopting slot (draws 2 and 3 are consumed and ignored),
+/// and a call with no active slot degrades to step-wide.
+pub struct FaultInjector<E: DecodeEngine> {
+    inner: E,
+    rng: Prng,
+    rate: f64,
+    burst: usize,
+    burst_left: usize,
+    /// Intercepted engine calls so far — the schedule's clock.
+    pub calls: u64,
+    /// Step-wide faults returned so far.
+    pub step_faults: usize,
+    /// Per-slot faults returned so far.
+    pub slot_faults: usize,
+}
+
+impl<E: DecodeEngine> FaultInjector<E> {
+    /// Wrap `inner` with a fault schedule seeded by `seed` at `rate`
+    /// (probability per intercepted call, 0.0 = never fault).
+    pub fn new(inner: E, seed: u64, rate: f64) -> Self {
+        Self {
+            inner,
+            rng: Prng::new(seed),
+            rate,
+            burst: 1,
+            burst_left: 0,
+            calls: 0,
+            step_faults: 0,
+            slot_faults: 0,
+        }
+    }
+
+    /// Each triggered fault forces the next `burst - 1` intercepted calls
+    /// to fault as well (correlated-failure bursts).
+    pub fn with_burst(mut self, burst: usize) -> Self {
+        self.burst = burst.max(1);
+        self
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut E {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+
+    /// Consume the call's three schedule draws; `(fault, per_slot, pick)`.
+    fn roll(&mut self) -> (bool, bool, f32) {
+        self.calls += 1;
+        let trigger = (self.rng.uniform() as f64) < self.rate;
+        let per_slot = self.rng.uniform() < 0.5;
+        let pick = self.rng.uniform();
+        let fault = if self.burst_left > 0 {
+            self.burst_left -= 1;
+            true
+        } else if trigger {
+            self.burst_left = self.burst - 1;
+            true
+        } else {
+            false
+        };
+        (fault, per_slot, pick)
+    }
+
+    /// Fault decision for a batch call over `active` lanes.
+    fn decide(&mut self, active: &[bool]) -> Option<ServeError> {
+        let (fault, per_slot, pick) = self.roll();
+        if !fault {
+            return None;
+        }
+        let victims: Vec<usize> = (0..active.len()).filter(|&b| active[b]).collect();
+        if per_slot && !victims.is_empty() {
+            let k = ((pick * victims.len() as f32) as usize).min(victims.len() - 1);
+            self.slot_faults += 1;
+            Some(ServeError::Slot { slot: victims[k], what: "injected fault".into() })
+        } else {
+            self.step_faults += 1;
+            Some(ServeError::Transient { what: "injected fault".into() })
+        }
+    }
+
+    /// Fault decision for `adopt_prefix`: always blamed on the adopter.
+    fn decide_adopt(&mut self, slot: usize) -> Option<ServeError> {
+        let (fault, _, _) = self.roll();
+        if !fault {
+            return None;
+        }
+        self.slot_faults += 1;
+        Some(ServeError::Slot { slot, what: "injected adopt fault".into() })
+    }
+}
+
+impl<E: DecodeEngine> DecodeEngine for FaultInjector<E> {
+    fn slots(&self) -> usize {
+        self.inner.slots()
+    }
+
+    fn max_seq(&self) -> usize {
+        self.inner.max_seq()
+    }
+
+    fn step(&mut self, tokens: &[i32], pos: &[i32], active: &[bool]) -> Result<Vec<Vec<f32>>> {
+        if let Some(e) = self.decide(active) {
+            return Err(e.into());
+        }
+        self.inner.step(tokens, pos, active)
+    }
+
+    fn prefill_chunk(&self) -> usize {
+        self.inner.prefill_chunk()
+    }
+
+    fn prefill(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<Vec<f32>>> {
+        // Intercept once per scheduler-level call, then delegate to the
+        // inner engine's own prefill (never the by-steps default, which
+        // would re-enter `self.step` and consume extra schedule draws).
+        if let Some(e) = self.decide(active) {
+            return Err(e.into());
+        }
+        self.inner.prefill(tokens, pos0, active)
+    }
+
+    fn reset_slot(&mut self, slot: usize) {
+        self.inner.reset_slot(slot);
+    }
+
+    fn kv_block_size(&self) -> Option<usize> {
+        self.inner.kv_block_size()
+    }
+
+    fn kv_blocks(&self) -> usize {
+        self.inner.kv_blocks()
+    }
+
+    fn kv_bits(&self) -> f32 {
+        self.inner.kv_bits()
+    }
+
+    fn step_paged(
+        &mut self,
+        tokens: &[i32],
+        pos: &[i32],
+        active: &[bool],
+        tables: &[Vec<i32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        if let Some(e) = self.decide(active) {
+            return Err(e.into());
+        }
+        self.inner.step_paged(tokens, pos, active, tables)
+    }
+
+    fn prefill_paged(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+        tables: &[Vec<i32>],
+    ) -> Result<Vec<Vec<f32>>> {
+        if let Some(e) = self.decide(active) {
+            return Err(e.into());
+        }
+        self.inner.prefill_paged(tokens, pos0, active, tables)
+    }
+
+    fn adopt_prefix(&mut self, slot: usize, table: &[i32], cached: usize) -> Result<()> {
+        if let Some(e) = self.decide_adopt(slot) {
+            return Err(e.into());
+        }
+        self.inner.adopt_prefix(slot, table, cached)
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Single-request convenience session (paper Table 6 / Fig. 7 harnesses)
 // ---------------------------------------------------------------------------
 
@@ -2109,5 +2364,100 @@ mod tests {
         );
         assert_eq!(label_variant("sq-2m/decode_nohad_paged_b4"), Some("nohad"));
         assert_eq!(label_variant("prefill_fp_paged_b4_t16"), Some("fp"));
+    }
+
+    #[test]
+    fn fault_injector_rate_zero_is_pure_passthrough() {
+        let mut plain = MockEngine::new(2, 16, 64);
+        let mut wrapped = FaultInjector::new(MockEngine::new(2, 16, 64), 42, 0.0);
+        let a = plain.step(&[7, 9], &[0, 0], &[true, true]).unwrap();
+        let b = wrapped.step(&[7, 9], &[0, 0], &[true, true]).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(wrapped.calls, 1);
+        assert_eq!(wrapped.step_faults + wrapped.slot_faults, 0);
+        assert_eq!(wrapped.inner().steps, 1);
+    }
+
+    #[test]
+    fn fault_injector_schedule_is_deterministic_across_reruns() {
+        let run = |seed: u64| {
+            let mut e = FaultInjector::new(MockEngine::new(1, 64, 64), seed, 0.3);
+            let mut faults = Vec::new();
+            let mut pos = 0i32;
+            for i in 0..40 {
+                match e.step(&[pos % 60], &[pos], &[true]) {
+                    Ok(_) => pos += 1,
+                    Err(err) => {
+                        let se = err.downcast::<ServeError>().expect("injected ServeError");
+                        faults.push((i, se));
+                    }
+                }
+            }
+            (faults, e.inner().steps)
+        };
+        assert_eq!(run(5), run(5), "same seed must replay the same schedule");
+        let (faults, steps) = run(5);
+        assert!(!faults.is_empty(), "rate 0.3 over 40 calls must fault");
+        // Only the calls that really ran reached the inner engine.
+        assert_eq!(steps, 40 - faults.len());
+    }
+
+    #[test]
+    fn fault_injector_fails_before_inner_state_or_counters_move() {
+        // Burst forces the very first call to fault (rate 1.0): the inner
+        // engine must be untouched, and the retry must then see the exact
+        // pre-call state once the schedule stops faulting.
+        let mut e = FaultInjector::new(MockEngine::new(1, 16, 64), 9, 1.0);
+        let err = e.step(&[5], &[0], &[true]).unwrap_err();
+        assert!(err.downcast_ref::<ServeError>().is_some());
+        assert_eq!(e.inner().steps, 0, "faulted call must not reach the inner engine");
+        assert_eq!(e.inner().history[0].len(), 0);
+        e.rate = 0.0;
+        e.burst_left = 0;
+        let ok = e.step(&[5], &[0], &[true]).unwrap();
+        assert_eq!(ok[0], MockEngine::new(1, 16, 64).step(&[5], &[0], &[true]).unwrap()[0]);
+    }
+
+    #[test]
+    fn fault_injector_burst_arms_followup_faults() {
+        // rate 1.0, burst 3: calls 1..=3 fault (1 trigger + 2 forced), and
+        // with the rate then dropped to 0 the armed burst still drains.
+        let mut e = FaultInjector::new(MockEngine::new(1, 16, 64), 1, 1.0).with_burst(3);
+        assert!(e.step(&[5], &[0], &[true]).is_err());
+        e.rate = 0.0;
+        assert!(e.step(&[5], &[0], &[true]).is_err());
+        assert!(e.step(&[5], &[0], &[true]).is_err());
+        assert!(e.step(&[5], &[0], &[true]).is_ok());
+        assert_eq!(e.inner().steps, 1);
+    }
+
+    #[test]
+    fn fault_injector_adopt_faults_blame_the_adopter() {
+        let bs = 4;
+        let mut inner = MockEngine::new(2, 32, 64).with_block_pool(8, bs);
+        let tables = vec![vec![0, 1], Vec::new()];
+        for p in 0..4 {
+            inner.step_paged(&[p + 20, 0], &[p, 0], &[true, false], &tables).unwrap();
+        }
+        let mut e = FaultInjector::new(inner, 3, 1.0);
+        let err = e.adopt_prefix(1, &[0, 2], 4).unwrap_err();
+        match err.downcast::<ServeError>().expect("injected ServeError") {
+            ServeError::Slot { slot, .. } => assert_eq!(slot, 1),
+            other => panic!("adopt fault must be per-slot, got {other:?}"),
+        }
+        assert_eq!(e.inner().history[1].len(), 0, "faulted adopt must not rebuild history");
+    }
+
+    #[test]
+    fn serve_error_display_and_downcast() {
+        let e: anyhow::Error = ServeError::Slot { slot: 3, what: "x".into() }.into();
+        assert!(e.to_string().contains("slot 3"));
+        assert!(e.downcast_ref::<ServeError>().is_some());
+        let f: anyhow::Error = ServeError::Fatal { what: "caches lost".into() }.into();
+        assert!(f.to_string().contains("fatal"));
+        assert!(
+            anyhow::anyhow!("plain").downcast_ref::<ServeError>().is_none(),
+            "unclassified errors must not look like ServeErrors"
+        );
     }
 }

@@ -75,6 +75,31 @@ pub struct ServingMetrics {
     /// other half of TTFT (`ttft == queue + spread`, same clock, stamped at
     /// the same instant).
     pub prefill_spread_us: Samples,
+    /// Step-wide (transient) engine faults absorbed by the error kernel.
+    pub step_faults: usize,
+    /// Per-slot engine faults absorbed by the error kernel.
+    pub slot_faults: usize,
+    /// Retries scheduled with a step-counted backoff (per-slot cooldowns
+    /// and step-wide pauses both count).
+    pub retries_scheduled: usize,
+    /// Slots whose next engine call after a fault succeeded (the retry
+    /// worked; the request kept its KV state).
+    pub slots_recovered: usize,
+    /// Requests retired with [`FinishReason::Quarantined`]: individually
+    /// charged `retry_budget` faults (poison-request isolation).
+    ///
+    /// [`FinishReason::Quarantined`]: crate::serve::trace::FinishReason::Quarantined
+    pub requests_quarantined: usize,
+    /// Requests evicted to the queue front by step-wide retry exhaustion
+    /// (warm restart through the donated-page path) — counted apart from
+    /// `requests_evicted`, which is pool pressure, not engine failure.
+    pub requests_fault_evicted: usize,
+    /// Requests shed in the admission queue because their deadline expired
+    /// before they ever reached a slot.
+    pub deadline_shed_queued: usize,
+    /// Requests shed mid-flight (slot freed, partial output returned)
+    /// because their deadline expired.
+    pub deadline_shed_inflight: usize,
 }
 
 impl ServingMetrics {
@@ -198,6 +223,52 @@ impl ServingMetrics {
         self.prefill_spread_us.percentile_us(50.0) / 1e3
     }
 
+    /// Record a step-wide (transient) engine fault absorbed by the kernel.
+    pub fn record_step_fault(&mut self) {
+        self.step_faults += 1;
+    }
+
+    /// Record a per-slot engine fault absorbed by the kernel.
+    pub fn record_slot_fault(&mut self) {
+        self.slot_faults += 1;
+    }
+
+    /// Record a retry scheduled with a step-counted backoff.
+    pub fn record_retry(&mut self) {
+        self.retries_scheduled += 1;
+    }
+
+    /// Record a slot whose first engine call after a fault succeeded.
+    pub fn record_recovery(&mut self) {
+        self.slots_recovered += 1;
+    }
+
+    /// Record a request quarantined after exhausting its retry budget.
+    pub fn record_quarantine(&mut self) {
+        self.requests_quarantined += 1;
+    }
+
+    /// Record a warm-restart eviction caused by step-wide retry exhaustion.
+    pub fn record_fault_eviction(&mut self) {
+        self.requests_fault_evicted += 1;
+    }
+
+    /// Record a queued request shed at admission for an expired deadline.
+    pub fn record_deadline_shed_queued(&mut self) {
+        self.deadline_shed_queued += 1;
+    }
+
+    /// Record an in-flight request shed for an expired deadline.
+    pub fn record_deadline_shed_inflight(&mut self) {
+        self.deadline_shed_inflight += 1;
+    }
+
+    /// Requests that failed (quarantine or deadline shed) rather than
+    /// completing — the goodput denominator's loss term.
+    pub fn requests_failed(&self) -> usize {
+        self.requests_quarantined + self.deadline_shed_queued + self.deadline_shed_inflight
+    }
+
     /// Record a completed request (latencies in microseconds).
     pub fn record_completion(&mut self, request_us: f64, ttft_us: Option<f64>) {
         self.requests_completed += 1;
@@ -290,6 +361,14 @@ impl ServingMetrics {
             ("mixed_steps", json::num(self.mixed_steps as f64)),
             ("queue_ms_p50", json::num(self.queue_ms_p50())),
             ("prefill_spread_ms_p50", json::num(self.prefill_spread_ms_p50())),
+            ("step_faults", json::num(self.step_faults as f64)),
+            ("slot_faults", json::num(self.slot_faults as f64)),
+            ("retries_scheduled", json::num(self.retries_scheduled as f64)),
+            ("slots_recovered", json::num(self.slots_recovered as f64)),
+            ("requests_quarantined", json::num(self.requests_quarantined as f64)),
+            ("requests_fault_evicted", json::num(self.requests_fault_evicted as f64)),
+            ("deadline_shed_queued", json::num(self.deadline_shed_queued as f64)),
+            ("deadline_shed_inflight", json::num(self.deadline_shed_inflight as f64)),
             (
                 "histograms",
                 json::obj(vec![
@@ -317,6 +396,8 @@ impl ServingMetrics {
                 "prefix_hit_rate",
                 "max_stall",
                 "inter-tok p99",
+                "faults",
+                "failed",
             ],
         );
         t.row(vec![
@@ -332,6 +413,8 @@ impl ServingMetrics {
             format!("{:.2}", self.prefix_hit_rate()),
             format!("{}", self.max_decode_stall_steps()),
             format!("{:.2}", self.inter_token_ms_p99()),
+            format!("{}", self.step_faults + self.slot_faults),
+            format!("{}", self.requests_failed()),
         ]);
         t
     }
@@ -522,6 +605,35 @@ mod tests {
             assert!(md.contains(header), "missing column {header:?} in:\n{md}");
         }
         assert!(md.contains("0.80"), "hit rate 32/40 renders: \n{md}");
+    }
+
+    #[test]
+    fn fault_and_shed_counters_export() {
+        let mut m = ServingMetrics::new();
+        m.record_step_fault();
+        m.record_slot_fault();
+        m.record_slot_fault();
+        m.record_retry();
+        m.record_retry();
+        m.record_recovery();
+        m.record_quarantine();
+        m.record_fault_eviction();
+        m.record_deadline_shed_queued();
+        m.record_deadline_shed_inflight();
+        assert_eq!(m.requests_failed(), 3);
+        let j = m.to_json();
+        assert_eq!(j.req("step_faults").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.req("slot_faults").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.req("retries_scheduled").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.req("slots_recovered").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.req("requests_quarantined").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.req("requests_fault_evicted").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.req("deadline_shed_queued").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.req("deadline_shed_inflight").unwrap().as_f64(), Some(1.0));
+        let md = m.table("serve").to_markdown();
+        for header in ["faults", "failed"] {
+            assert!(md.contains(header), "missing column {header:?} in:\n{md}");
+        }
     }
 
     #[test]

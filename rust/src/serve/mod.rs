@@ -124,6 +124,43 @@
 //! The fp decode variant has no qcfg input, so `--kv-bits` there falls
 //! back to full-precision pages with a loud warning rather than silently
 //! misreporting capacity.
+//!
+//! # Failure model & recovery
+//!
+//! The step loop is an **error kernel**: every engine-touching path in
+//! [`Scheduler::step`] is failure-atomic, so a failed call leaves the
+//! bookkeeping exactly where it was — no slot half-advanced, no page
+//! leaked, and the pool invariant `free + Σ(refcount > 0) == total`
+//! intact (auditable any time via [`Scheduler::check_invariants`]; the
+//! chaos suites run it after *every* step). Engine failures are
+//! classified by [`ServeError`]:
+//!
+//! * [`ServeError::Slot`] — one request blamed. Its slot keeps its KV
+//!   state but sits out `1, 2, 4, ... (≤ 64)` steps of deterministic
+//!   backoff (counted in scheduler *steps*, never wall clock, so the sim
+//!   oracle replays recovery exactly), then rejoins the batch; after
+//!   `--retry-budget` individual faults the request is **quarantined** —
+//!   completed with [`FinishReason::Quarantined`] and whatever bytes it
+//!   had generated.
+//! * [`ServeError::Transient`] — step-wide. The whole loop pauses for the
+//!   backoff; a streak of `--retry-budget` consecutive step-wide faults
+//!   evicts the call's participants to the queue *front* for a warm
+//!   restart (their fault counts survive the trip through the queue).
+//! * [`ServeError::Fatal`] — and any non-[`ServeError`] error, e.g. a
+//!   PJRT arity mismatch — propagates out of `step()` unretried; the
+//!   legacy threaded [`Server`] surfaces it to every pending and
+//!   subsequent caller instead of hanging.
+//!
+//! Requests may also carry a [`Deadline`] (`serve --deadline-ms`):
+//! expired requests are shed at admission and mid-flight with
+//! [`FinishReason::DeadlineExpired`] before any engine work is spent on
+//! them. Recovery *decisions* are observables: `FaultInjected`,
+//! `RetryScheduled`, `SlotRecovered`, `RequestFailed` and
+//! `DeadlineExpired` trace events plus eight [`ServingMetrics`] counters
+//! are modeled by the sim oracle and trace-equivalence-checked in CI
+//! against the seeded [`FaultInjector`] (`serve --fault-rate/--fault-seed`)
+//! at fault rates {0, 0.01, 0.05}, with surviving requests required to be
+//! byte-identical to the fault-free run.
 
 pub mod blocks;
 pub mod engine;
@@ -135,10 +172,15 @@ pub mod slots;
 pub mod trace;
 
 pub use blocks::BlockPool;
-pub use engine::{DecodeEngine, DecodeVariant, GenerationSession, MockEngine, PjrtEngine};
+pub use engine::{
+    DecodeEngine, DecodeVariant, FaultInjector, GenerationSession, MockEngine, PjrtEngine,
+    ServeError,
+};
 pub use metrics::ServingMetrics;
 pub use sampling::{argmax, Sampler, SamplerKind};
-pub use scheduler::{Completion, GenRequest, Request, Response, Scheduler, Server};
+pub use scheduler::{
+    Completion, Deadline, GenRequest, Request, Response, Scheduler, Server, DEFAULT_RETRY_BUDGET,
+};
 pub use slots::{SlotMap, SlotPhase};
 pub use trace::{
     chrome_trace, fold_timelines, verify_against_metrics, EvictReason, FinishReason, Timeline,

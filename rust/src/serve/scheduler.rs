@@ -83,6 +83,26 @@
 //! identical with the composer on or off (logits depend only on each
 //! request's own history); only the schedule changes.
 //!
+//! # Failure model (the error kernel)
+//!
+//! Engine calls can fail. A classified [`ServeError`] from any
+//! engine-touching path is absorbed by the scheduler's error kernel
+//! instead of aborting the serve loop: a per-slot fault puts the blamed
+//! request on a deterministic backoff counted in scheduler steps (and
+//! quarantines it once it has individually faulted `retry_budget`
+//! times); a step-wide transient fault pauses the whole engine on the
+//! same backoff schedule (and evicts the call's participants to the
+//! queue front for a warm restart through their donated prefix pages
+//! when the fault streak exhausts the budget); a request carrying a
+//! [`Deadline`] is shed at admission or mid-flight once it expires.
+//! Every fault path is failure-atomic: engines advance no state on an
+//! `Err`, so "don't advance the bookkeeping" is the whole rollback and
+//! `free + used == total` holds for the page pool after every step.
+//! Unclassified errors and [`ServeError::Fatal`] still propagate — they
+//! mean a real engine bug, not an injected or transient fault. The full
+//! taxonomy and guarantees live in the `serve` module docs ("Failure
+//! model & recovery").
+//!
 //! PJRT handles are not `Send`, so the scheduler is single-threaded by
 //! design; the batching parallelism lives *inside* the engine step. The
 //! old one-request-at-a-time [`Server`] (worker thread + channels) is kept
@@ -94,12 +114,26 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::serve::engine::DecodeEngine;
+use crate::serve::engine::{DecodeEngine, ServeError};
 use crate::serve::metrics::ServingMetrics;
 use crate::serve::sampling::Sampler;
 use crate::serve::slots::{SlotMap, SlotPhase};
 use crate::serve::trace::{EvictReason, FinishReason, TraceEvent, TraceRecord, TraceSink};
 use crate::util::prng::Prng;
+
+/// A request deadline (`serve --deadline-ms`).
+///
+/// `WallMs` is judged against the request's enqueue instant on the real
+/// clock — the production form. `Steps` is judged against scheduler step
+/// indices (expire once `step_index - submit_step >= k`), fully
+/// deterministic, which is what the sim-oracle fault suites replay.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Deadline {
+    /// Milliseconds after enqueue.
+    WallMs(f64),
+    /// Scheduler steps after enqueue.
+    Steps(u64),
+}
 
 /// A generation request for the continuous-batching scheduler.
 #[derive(Clone, Debug)]
@@ -110,15 +144,37 @@ pub struct GenRequest {
     /// Seed for this request's sampler PRNG (same seed + same model =>
     /// same completion, at any batch size).
     pub seed: u64,
+    /// Optional deadline; an expired request is shed — queued or
+    /// mid-flight — with [`FinishReason::DeadlineExpired`].
+    pub deadline: Option<Deadline>,
 }
 
 impl GenRequest {
     pub fn greedy(prompt: &[u8], max_new_tokens: usize) -> Self {
-        Self { prompt: prompt.to_vec(), max_new_tokens, sampler: Sampler::greedy(), seed: 0 }
+        Self {
+            prompt: prompt.to_vec(),
+            max_new_tokens,
+            sampler: Sampler::greedy(),
+            seed: 0,
+            deadline: None,
+        }
     }
 
     pub fn sampled(prompt: &[u8], max_new_tokens: usize, sampler: Sampler, seed: u64) -> Self {
-        Self { prompt: prompt.to_vec(), max_new_tokens, sampler, seed }
+        Self { prompt: prompt.to_vec(), max_new_tokens, sampler, seed, deadline: None }
+    }
+
+    /// Shed this request once `ms` milliseconds have passed since enqueue.
+    pub fn with_deadline_ms(mut self, ms: f64) -> Self {
+        self.deadline = Some(Deadline::WallMs(ms));
+        self
+    }
+
+    /// Shed this request once `steps` scheduler steps have passed since
+    /// enqueue (deterministic; what the sim oracle replays).
+    pub fn with_deadline_steps(mut self, steps: u64) -> Self {
+        self.deadline = Some(Deadline::Steps(steps));
+        self
     }
 }
 
@@ -133,6 +189,10 @@ pub struct Completion {
     pub ttft_ms: Option<f64>,
     /// Enqueue (submit) -> completion (ms), including queue wait.
     pub latency_ms: f64,
+    /// How the request finished. `BudgetExhausted`/`CacheFull` are
+    /// successes; `Quarantined`/`DeadlineExpired` are failures (the
+    /// completion carries whatever was generated before the failure).
+    pub reason: FinishReason,
 }
 
 /// Per-slot in-flight request state.
@@ -165,6 +225,21 @@ struct Active {
     /// End-to-end page demand, computed once at submit (prompt and
     /// max_new are immutable); carried through eviction requeues.
     blocks_needed: usize,
+    /// Individual (per-slot) engine faults this request has absorbed,
+    /// carried through eviction requeues; at `retry_budget` the request
+    /// is quarantined.
+    faults: usize,
+    /// Steps this slot still sits out after a per-slot fault (the
+    /// deterministic backoff). A cooling slot joins no engine call; it
+    /// rejoins on the `cooldown`-th step after the fault.
+    cooldown: u64,
+    /// Set between a fault that put this slot on backoff and its next
+    /// *successful* engine call, which emits `SlotRecovered`.
+    recovering: bool,
+    /// Optional deadline, checked at the top of every step.
+    deadline: Option<Deadline>,
+    /// `step_index` at enqueue time — the epoch for `Deadline::Steps`.
+    submit_step: u64,
 }
 
 /// One queued request, in admission-ready form: the prompt is already
@@ -183,6 +258,14 @@ struct Queued {
     /// `Some` only for eviction requeues: the request was scheduled once
     /// already, and its queue-wait half of TTFT must keep that timestamp.
     first_sched_us: Option<f64>,
+    /// Individual engine faults absorbed so far (see [`Active::faults`]).
+    faults: usize,
+    /// Admission defers while `step_index < not_before_step` — the
+    /// queue-side half of the deterministic backoff (a deferred head
+    /// blocks the queue: FIFO order is never reordered by faults).
+    not_before_step: u64,
+    deadline: Option<Deadline>,
+    submit_step: u64,
 }
 
 /// The continuous-batching loop over one [`DecodeEngine`].
@@ -208,7 +291,27 @@ pub struct Scheduler<E: DecodeEngine> {
     /// events). `Off` by default: the disabled path is one branch per
     /// emission site, no ring buffer is ever allocated.
     trace: TraceSink,
+    /// Individual faults a request may absorb before it is quarantined
+    /// (per-slot faults), and consecutive step-wide faults the scheduler
+    /// tolerates before evicting a call's participants for warm restart.
+    retry_budget: usize,
+    /// Steps taken so far — the clock every deterministic recovery
+    /// decision (backoff, pause, step deadlines) is counted in.
+    step_index: u64,
+    /// While `step_index < pause_until`, the step-wide backoff is in
+    /// force: deadlines are still swept but no admission or engine call
+    /// runs.
+    pause_until: u64,
+    /// Consecutive step-wide faults with no successful engine call in
+    /// between; reset on success, participants evicted when it reaches
+    /// `retry_budget`.
+    step_fault_streak: usize,
 }
+
+/// Default for [`Scheduler::with_retry_budget`]: a request may absorb
+/// two faults (backoffs of 1 then 2 steps) and is quarantined on its
+/// third.
+pub const DEFAULT_RETRY_BUDGET: usize = 3;
 
 impl<E: DecodeEngine> Scheduler<E> {
     /// `max_queue` bounds the admission queue (backpressure threshold); it
@@ -244,7 +347,31 @@ impl<E: DecodeEngine> Scheduler<E> {
             step_budget: None,
             metrics: ServingMetrics::new(),
             trace: TraceSink::Off,
+            retry_budget: DEFAULT_RETRY_BUDGET,
+            step_index: 0,
+            pause_until: 0,
+            step_fault_streak: 0,
         })
+    }
+
+    /// Set the retry budget (`serve --retry-budget N`, default
+    /// [`DEFAULT_RETRY_BUDGET`]): a request is quarantined after `N`
+    /// individual engine faults, and a step-wide fault streak of `N`
+    /// evicts the call's participants to the queue front for warm
+    /// restart.
+    pub fn with_retry_budget(mut self, budget: usize) -> Result<Self> {
+        if budget == 0 {
+            bail!("--retry-budget must be >= 1 (1 = no retries: first fault quarantines)");
+        }
+        self.retry_budget = budget;
+        Ok(self)
+    }
+
+    /// Deterministic backoff for the `attempt`-th consecutive fault,
+    /// counted in scheduler steps (1, 2, 4, ... capped at 64) — never
+    /// wall clock, so the sim oracle replays recovery exactly.
+    fn backoff(attempt: usize) -> u64 {
+        1u64 << attempt.saturating_sub(1).min(6)
     }
 
     /// Attach a flight recorder: a bounded ring buffer of `capacity`
@@ -363,6 +490,8 @@ impl<E: DecodeEngine> Scheduler<E> {
     /// budget, capped at the cache's logical capacity (generation truncates
     /// there anyway).
     fn blocks_needed(&self, prompt_len: usize, max_new: usize) -> usize {
+        // Invariant, not API-misuse: every caller gates on is_paged(),
+        // and a paged SlotMap always owns a pool.
         let pool = self.slots.pool().expect("paged mode");
         pool.blocks_for((prompt_len + max_new).min(self.engine.max_seq()))
     }
@@ -402,6 +531,15 @@ impl<E: DecodeEngine> Scheduler<E> {
         self.pending.is_empty() && self.slots.active_count() == 0
     }
 
+    /// Full bookkeeping audit (slot accounting, position bounds, pool
+    /// `free + used == total`, exact page-refcount mirror). Cheap enough
+    /// that the chaos property tests run it after every step; this is the
+    /// check the error kernel's failure-atomicity guarantee is stated
+    /// against.
+    pub fn check_invariants(&self) -> Result<()> {
+        self.slots.check_invariants()
+    }
+
     /// Enqueue a request; fails with a backpressure error when the
     /// admission queue is full (callers should retry after draining).
     pub fn submit(&mut self, req: GenRequest) -> Result<u64> {
@@ -419,6 +557,7 @@ impl<E: DecodeEngine> Scheduler<E> {
         // max_new are immutable for the life of the request.
         let blocks_needed = if self.slots.is_paged() {
             let needed = self.blocks_needed(req.prompt.len(), req.max_new_tokens);
+            // Invariant: is_paged() was checked one line up.
             let pool = self.slots.pool().expect("paged");
             if needed > pool.total_blocks() {
                 bail!(
@@ -453,6 +592,10 @@ impl<E: DecodeEngine> Scheduler<E> {
             submitted: now,
             blocks_needed,
             first_sched_us: None,
+            faults: 0,
+            not_before_step: 0,
+            deadline: req.deadline,
+            submit_step: self.step_index,
         });
         self.trace.emit_at(now, TraceEvent::Enqueued { id });
         Ok(id)
@@ -471,9 +614,16 @@ impl<E: DecodeEngine> Scheduler<E> {
 
     /// Snapshot of which slots are `Running` right now — taken at the top
     /// of a step, *before* paged growth can evict anyone, so stall
-    /// accounting and the decode plan agree on one consistent view.
+    /// accounting and the decode plan agree on one consistent view. A
+    /// slot cooling down after a fault is excluded: it joins no engine
+    /// call until its backoff expires.
     fn running_flags(&self) -> Vec<bool> {
-        (0..self.active.len()).map(|b| self.slot_phase(b) == SlotPhase::Running).collect()
+        (0..self.active.len())
+            .map(|b| {
+                self.slot_phase(b) == SlotPhase::Running
+                    && self.active[b].as_ref().is_some_and(|a| a.cooldown == 0)
+            })
+            .collect()
     }
 
     /// Cancel a request by id: drop it from the admission queue, or evict
@@ -512,8 +662,19 @@ impl<E: DecodeEngine> Scheduler<E> {
     /// jumped. With the prefix cache on, the head's longest cached prefix
     /// is mapped read-only into its block table and the scheduler will
     /// feed the prompt from the first uncached position.
-    fn admit(&mut self) -> Result<()> {
+    ///
+    /// A head on fault backoff (`not_before_step` unmet) also blocks the
+    /// queue. A classified fault from `adopt_prefix` rolls the admission
+    /// back (slot released, prefix refcounts dropped, request requeued at
+    /// the front with its fault charged) — or quarantines the request
+    /// once the charge reaches the retry budget, which is why this
+    /// returns failure [`Completion`]s.
+    fn admit(&mut self) -> Result<Vec<Completion>> {
+        let mut failed = Vec::new();
         while !self.pending.is_empty() && self.slots.free_count() > 0 {
+            if self.pending.front().expect("non-empty").not_before_step > self.step_index {
+                break;
+            }
             let (slot, cached) = if self.slots.is_paged() {
                 let head = self.pending.front().expect("non-empty");
                 let Some(admitted) =
@@ -524,13 +685,18 @@ impl<E: DecodeEngine> Scheduler<E> {
                 admitted
             } else {
                 let head = self.pending.front().expect("non-empty");
+                // Invariant: free_count() > 0 was checked by the loop
+                // condition, so a free slot must exist.
                 (self.slots.allocate(head.id).expect("free slot"), 0)
             };
             let q = self.pending.pop_front().expect("non-empty");
             self.refresh_table_row(slot);
             self.engine.reset_slot(slot);
             if cached > 0 {
-                self.engine.adopt_prefix(slot, &self.tables[slot], cached)?;
+                if let Err(err) = self.engine.adopt_prefix(slot, &self.tables[slot], cached) {
+                    self.admission_fault(err, slot, q, &mut failed)?;
+                    continue;
+                }
             }
             self.metrics.record_admission(cached, q.prompt.len());
             if self.trace.is_on() {
@@ -547,6 +713,8 @@ impl<E: DecodeEngine> Scheduler<E> {
                     tokens_reused: cached,
                 });
                 if cached > 0 {
+                    // Invariant: a nonzero cached prefix only exists in
+                    // paged mode (the prefix cache requires it).
                     let bs = self.engine.kv_block_size().expect("cached prefix implies paged");
                     self.trace.emit(TraceEvent::PrefixHit {
                         id: q.id,
@@ -571,6 +739,78 @@ impl<E: DecodeEngine> Scheduler<E> {
                 stall_steps: 0,
                 wait_us: 0.0,
                 blocks_needed: q.blocks_needed,
+                faults: q.faults,
+                cooldown: 0,
+                recovering: false,
+                deadline: q.deadline,
+                submit_step: q.submit_step,
+            });
+        }
+        Ok(failed)
+    }
+
+    /// Roll back an admission whose `adopt_prefix` call failed: the call
+    /// advanced nothing (engines validate before touching state), so
+    /// releasing the slot — which drops the watermark page and the mapped
+    /// prefix refcounts — restores the exact pre-admission accounting.
+    /// The request is requeued at the front with the fault charged, or
+    /// quarantined once its charge reaches the retry budget.
+    fn admission_fault(
+        &mut self,
+        err: anyhow::Error,
+        slot: usize,
+        q: Queued,
+        failed: &mut Vec<Completion>,
+    ) -> Result<()> {
+        let serr = match err.downcast::<ServeError>() {
+            Ok(e) => e,
+            // Unclassified: a real engine bug — keep the abort behavior.
+            Err(e) => return Err(e),
+        };
+        if let ServeError::Fatal { what } = serr {
+            bail!("fatal engine fault during admission: {what}");
+        }
+        self.slots.release(slot)?;
+        self.refresh_table_row(slot);
+        self.engine.reset_slot(slot);
+        match serr {
+            ServeError::Slot { .. } => {
+                self.metrics.record_slot_fault();
+                self.trace.emit(TraceEvent::FaultInjected { slot: Some(slot) });
+            }
+            _ => {
+                self.metrics.record_step_fault();
+                self.trace.emit(TraceEvent::FaultInjected { slot: None });
+            }
+        }
+        let attempt = q.faults + 1;
+        if attempt >= self.retry_budget {
+            self.metrics.record_quarantine();
+            self.trace.emit(TraceEvent::RequestFailed {
+                id: q.id,
+                slot: Some(slot),
+                faults: attempt,
+            });
+            failed.push(Completion {
+                id: q.id,
+                prompt: q.prompt.iter().map(|&t| t as u8).collect(),
+                completion: Vec::new(),
+                ttft_ms: None,
+                latency_ms: q.submitted.elapsed().as_secs_f64() * 1e3,
+                reason: FinishReason::Quarantined,
+            });
+        } else {
+            let backoff = Self::backoff(attempt);
+            self.metrics.record_retry();
+            self.trace.emit(TraceEvent::RetryScheduled {
+                slot: Some(slot),
+                backoff_steps: backoff as usize,
+                attempt,
+            });
+            self.pending.push_front(Queued {
+                faults: attempt,
+                not_before_step: self.step_index + backoff,
+                ..q
             });
         }
         Ok(())
@@ -610,8 +850,44 @@ impl<E: DecodeEngine> Scheduler<E> {
             submitted: a.submitted,
             blocks_needed: a.blocks_needed,
             first_sched_us: a.first_sched_us,
+            faults: a.faults,
+            not_before_step: 0,
+            deadline: a.deadline,
+            submit_step: a.submit_step,
         });
         Ok(victim)
+    }
+
+    /// Evict slot `b` to the queue front because a step-wide fault streak
+    /// exhausted the retry budget: same warm-restart path as pool
+    /// eviction (the request restarts through its donated prefix pages,
+    /// byte-identically), but tagged [`EvictReason::Fault`] and counted
+    /// separately. The request keeps its individual fault charge and is
+    /// re-admissible immediately — the *streak* was the engine's fault,
+    /// not this request's.
+    fn evict_for_fault(&mut self, b: usize) -> Result<()> {
+        // Invariant: callers only pass occupied participant slots.
+        let a = self.active[b].take().expect("fault-evicting an occupied slot");
+        self.slots.release(b)?;
+        self.refresh_table_row(b);
+        self.engine.reset_slot(b);
+        self.metrics.record_fault_eviction();
+        self.trace.emit(TraceEvent::Evicted { id: a.id, slot: b, reason: EvictReason::Fault });
+        self.pending.push_front(Queued {
+            id: a.id,
+            prompt: a.prompt,
+            max_new: a.max_new,
+            sampler: a.sampler,
+            seed: a.seed,
+            submitted: a.submitted,
+            blocks_needed: a.blocks_needed,
+            first_sched_us: a.first_sched_us,
+            faults: a.faults,
+            not_before_step: 0,
+            deadline: a.deadline,
+            submit_step: a.submit_step,
+        });
+        Ok(())
     }
 
     /// Grow slot `b`'s block table to cover `[0, target)`, evicting the
@@ -633,10 +909,12 @@ impl<E: DecodeEngine> Scheduler<E> {
     }
 
     /// Pre-step page growth for every occupied slot about to advance one
-    /// token (the chunk-1 interleaved path included).
+    /// token (the chunk-1 interleaved path included). Cooling slots are
+    /// skipped — they join no call this step, so growing their tables
+    /// now would be pure speculation the oracle would have to mirror.
     fn grow_for_decode(&mut self) -> Result<()> {
         for b in 0..self.active.len() {
-            if self.active[b].is_some() {
+            if self.active[b].as_ref().is_some_and(|a| a.cooldown == 0) {
                 let target = self.slots.pos(b).expect("occupied") + 1;
                 self.grow_or_evict(b, target)?;
             }
@@ -644,11 +922,14 @@ impl<E: DecodeEngine> Scheduler<E> {
         Ok(())
     }
 
-    /// Pre-call page growth for every slot about to prefill a chunk.
+    /// Pre-call page growth for every slot about to prefill a chunk
+    /// (cooling slots excluded, as in `grow_for_decode`).
     fn grow_for_prefill(&mut self, chunk: usize) -> Result<()> {
         for b in 0..self.active.len() {
             let take = match &self.active[b] {
-                Some(a) if a.fed < a.prompt.len() => chunk.min(a.prompt.len() - a.fed),
+                Some(a) if a.cooldown == 0 && a.fed < a.prompt.len() => {
+                    chunk.min(a.prompt.len() - a.fed)
+                }
                 _ => continue,
             };
             let target = self.slots.pos(b).expect("occupied") + take;
@@ -756,27 +1037,238 @@ impl<E: DecodeEngine> Scheduler<E> {
             completion: a.generated,
             ttft_ms: a.ttft_us.map(|us| us / 1e3),
             latency_ms: request_us / 1e3,
+            reason,
         })
     }
 
-    /// One scheduler iteration: admit, then — with a step budget — one
+    /// Retire slot `b` as a *failure* (quarantine or deadline expiry):
+    /// free the slot exactly like [`Self::retire`], but record no
+    /// completion metrics and emit no `Completed` event — the
+    /// trace-vs-metrics cross-check counts successes only, and failures
+    /// have their own counters (the caller emits the matching
+    /// `RequestFailed`/`DeadlineExpired` event and failure metric).
+    fn retire_failed(&mut self, b: usize, reason: FinishReason) -> Result<Completion> {
+        // Invariant: callers only retire occupied slots.
+        let a = self.active[b].take().expect("retiring an occupied slot");
+        self.slots.release(b)?;
+        self.refresh_table_row(b);
+        self.engine.reset_slot(b);
+        Ok(Completion {
+            id: a.id,
+            prompt: a.prompt.iter().map(|&t| t as u8).collect(),
+            completion: a.generated,
+            ttft_ms: a.ttft_us.map(|us| us / 1e3),
+            latency_ms: a.submitted.elapsed().as_secs_f64() * 1e3,
+            reason,
+        })
+    }
+
+    /// The error kernel: classify a failed engine call and apply the
+    /// recovery policy. `participants[b]` marks every slot the failed
+    /// call would have advanced — none of it happened (engines validate
+    /// and fail before touching state, see the [`DecodeEngine`] contract),
+    /// so *not* advancing the bookkeeping is the complete rollback and
+    /// pool/slot/prefix accounting is untouched.
+    ///
+    /// * `ServeError::Slot` — charge the blamed request; quarantine it at
+    ///   `retry_budget` faults, otherwise put it on step-counted backoff.
+    /// * `ServeError::Transient` — step-wide: pause the engine on the
+    ///   streak's backoff; at `retry_budget` consecutive step-wide faults
+    ///   evict the participants to the queue front (warm restart).
+    /// * `ServeError::Fatal` / unclassified — propagate: a real engine
+    ///   bug keeps the old abort-the-serve-loop behavior.
+    fn handle_fault(
+        &mut self,
+        err: anyhow::Error,
+        participants: &[bool],
+        done: &mut Vec<Completion>,
+    ) -> Result<()> {
+        let serr = match err.downcast::<ServeError>() {
+            Ok(e) => e,
+            Err(e) => return Err(e),
+        };
+        match serr {
+            ServeError::Fatal { what } => bail!("fatal engine fault: {what}"),
+            ServeError::Slot { slot, .. } => {
+                if slot >= self.active.len() || self.active[slot].is_none() {
+                    // API misuse by the engine, surfaced as an error
+                    // rather than the panic an unchecked index would be.
+                    bail!("engine blamed slot {slot}, which is not occupied");
+                }
+                self.metrics.record_slot_fault();
+                self.trace.emit(TraceEvent::FaultInjected { slot: Some(slot) });
+                let a = self.active[slot].as_mut().expect("checked above");
+                a.faults += 1;
+                let attempt = a.faults;
+                let id = a.id;
+                if attempt >= self.retry_budget {
+                    self.metrics.record_quarantine();
+                    self.trace.emit(TraceEvent::RequestFailed {
+                        id,
+                        slot: Some(slot),
+                        faults: attempt,
+                    });
+                    done.push(self.retire_failed(slot, FinishReason::Quarantined)?);
+                } else {
+                    let backoff = Self::backoff(attempt);
+                    let a = self.active[slot].as_mut().expect("checked above");
+                    a.cooldown = backoff;
+                    a.recovering = true;
+                    self.metrics.record_retry();
+                    self.trace.emit(TraceEvent::RetryScheduled {
+                        slot: Some(slot),
+                        backoff_steps: backoff as usize,
+                        attempt,
+                    });
+                }
+            }
+            ServeError::Transient { .. } => {
+                self.metrics.record_step_fault();
+                self.trace.emit(TraceEvent::FaultInjected { slot: None });
+                self.step_fault_streak += 1;
+                let attempt = self.step_fault_streak;
+                if attempt >= self.retry_budget {
+                    self.step_fault_streak = 0;
+                    // Descending slot order: each push_front leaves the
+                    // queue in ascending slot order, so re-admission
+                    // refills the slots deterministically.
+                    for b in (0..participants.len()).rev() {
+                        if participants[b] && self.active[b].is_some() {
+                            self.evict_for_fault(b)?;
+                        }
+                    }
+                } else {
+                    let backoff = Self::backoff(attempt);
+                    self.pause_until = self.step_index + 1 + backoff;
+                    for b in 0..participants.len() {
+                        if participants[b] {
+                            if let Some(a) = self.active[b].as_mut() {
+                                a.recovering = true;
+                            }
+                        }
+                    }
+                    self.metrics.record_retry();
+                    self.trace.emit(TraceEvent::RetryScheduled {
+                        slot: None,
+                        backoff_steps: backoff as usize,
+                        attempt,
+                    });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Post-success bookkeeping for one engine call: the step-wide fault
+    /// streak resets, and every participant that was waiting out a
+    /// retry emits `SlotRecovered` (ascending slot order).
+    fn note_engine_success(&mut self, participants: &[bool]) {
+        self.step_fault_streak = 0;
+        for b in 0..participants.len() {
+            if !participants[b] {
+                continue;
+            }
+            if let Some(a) = self.active[b].as_mut() {
+                if a.recovering {
+                    a.recovering = false;
+                    let id = a.id;
+                    self.metrics.record_recovery();
+                    self.trace.emit(TraceEvent::SlotRecovered { id, slot: b });
+                }
+            }
+        }
+    }
+
+    /// Has this request's deadline passed? Step deadlines count whole
+    /// scheduler steps since enqueue (deterministic); wall deadlines use
+    /// the real clock.
+    fn expired(&self, deadline: Option<Deadline>, submitted: Instant, submit_step: u64) -> bool {
+        match deadline {
+            None => false,
+            Some(Deadline::WallMs(ms)) => submitted.elapsed().as_secs_f64() * 1e3 >= ms,
+            Some(Deadline::Steps(k)) => self.step_index.saturating_sub(submit_step) >= k,
+        }
+    }
+
+    /// Shed every expired request — queued first (admission-time
+    /// shedding), then mid-flight — each with a failure [`Completion`]
+    /// carrying [`FinishReason::DeadlineExpired`]. Runs at the top of
+    /// every step, pause or not: a deadline must fire even while the
+    /// engine is backing off.
+    fn shed_expired(&mut self) -> Result<Vec<Completion>> {
+        let mut done = Vec::new();
+        let mut i = 0;
+        while i < self.pending.len() {
+            let q = &self.pending[i];
+            let (deadline, submitted, submit_step) = (q.deadline, q.submitted, q.submit_step);
+            if self.expired(deadline, submitted, submit_step) {
+                let q = self.pending.remove(i).expect("index in range");
+                self.metrics.record_deadline_shed_queued();
+                self.trace.emit(TraceEvent::DeadlineExpired { id: q.id, queued: true });
+                done.push(Completion {
+                    id: q.id,
+                    prompt: q.prompt.iter().map(|&t| t as u8).collect(),
+                    completion: Vec::new(),
+                    ttft_ms: None,
+                    latency_ms: q.submitted.elapsed().as_secs_f64() * 1e3,
+                    reason: FinishReason::DeadlineExpired,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        for b in 0..self.active.len() {
+            let expired = match self.active[b].as_ref() {
+                Some(a) => self.expired(a.deadline, a.submitted, a.submit_step),
+                None => false,
+            };
+            if expired {
+                let id = self.active[b].as_ref().expect("checked above").id;
+                self.metrics.record_deadline_shed_inflight();
+                self.trace.emit(TraceEvent::DeadlineExpired { id, queued: false });
+                done.push(self.retire_failed(b, FinishReason::DeadlineExpired)?);
+            }
+        }
+        Ok(done)
+    }
+
+    /// One scheduler iteration: tick the step clock (cooldowns, pause,
+    /// deadlines — recovery time is counted in steps, never wall clock),
+    /// shed expired requests, then admit and — with a step budget — one
     /// composed decode-priority step, or — without one — either a batched
     /// prefill call (when the engine has a multi-token prefill graph and
-    /// any slot still owes prompt tokens) or a decode step, exactly as
-    /// before. Returns the completions that finished on this iteration
-    /// (empty when idle).
+    /// any non-cooling slot still owes prompt tokens) or a decode step,
+    /// exactly as before. Returns the completions — successes *and*
+    /// failures, see [`Completion::reason`] — that finished on this
+    /// iteration (empty when idle).
     pub fn step(&mut self) -> Result<Vec<Completion>> {
         self.trace.begin_step();
-        self.admit()?;
+        self.step_index += 1;
+        for a in self.active.iter_mut().flatten() {
+            if a.cooldown > 0 {
+                a.cooldown -= 1;
+            }
+        }
+        let mut done = self.shed_expired()?;
+        if self.step_index < self.pause_until {
+            // Step-wide backoff: the engine is left alone this step.
+            return Ok(done);
+        }
+        done.extend(self.admit()?);
         let chunk = self.engine.prefill_chunk().max(1);
         // Running-slot snapshot for the plan partition and the stall
         // accounting, taken before growth can evict anyone.
         let running = self.running_flags();
         if let Some(budget) = self.step_budget {
-            return self.composed_step(budget, chunk, &running);
+            done.extend(self.composed_step(budget, chunk, &running)?);
+            return Ok(done);
         }
-        let owes_prompt =
-            |s: &Option<Active>| s.as_ref().map_or(false, |a| a.fed < a.prompt.len());
+        // A cooling slot owes nothing *this* step — routing must agree
+        // with the passes' participation rules or a pass could build an
+        // engine call with no active lane.
+        let owes_prompt = |s: &Option<Active>| {
+            s.as_ref().map_or(false, |a| a.cooldown == 0 && a.fed < a.prompt.len())
+        };
         if chunk > 1 && self.active.iter().any(owes_prompt) {
             if self.slots.is_paged() {
                 self.grow_for_prefill(chunk)?;
@@ -785,15 +1277,17 @@ impl<E: DecodeEngine> Scheduler<E> {
                 // next iteration re-admits and carries on. (No engine call
                 // ran, so decode-stall counters don't tick either.)
                 if !self.active.iter().any(owes_prompt) {
-                    return Ok(Vec::new());
+                    return Ok(done);
                 }
             }
-            return self.prefill_pass(chunk, &running);
+            done.extend(self.prefill_pass(chunk, &running)?);
+            return Ok(done);
         }
         if self.slots.is_paged() {
             self.grow_for_decode()?;
         }
-        self.decode_pass(&running)
+        done.extend(self.decode_pass(&running)?);
+        Ok(done)
     }
 
     /// One composed decode-priority iteration (see the module docs): plan
@@ -813,8 +1307,11 @@ impl<E: DecodeEngine> Scheduler<E> {
         let max_seq = self.engine.max_seq();
         // -- plan ----------------------------------------------------------
         let decode_tokens = running.iter().filter(|&&r| r).count();
-        let warming =
-            |s: &Option<Active>| s.as_ref().map_or(false, |a| a.fed < a.prompt.len());
+        // Cooling slots sit the step out entirely: not in the decode set
+        // (running_flags excluded them) and not prefill candidates.
+        let warming = |s: &Option<Active>| {
+            s.as_ref().map_or(false, |a| a.cooldown == 0 && a.fed < a.prompt.len())
+        };
         let mut prefill_left = if self.active.iter().any(warming) {
             budget.saturating_sub(decode_tokens).max(Self::prefill_guard(budget))
         } else {
@@ -826,7 +1323,7 @@ impl<E: DecodeEngine> Scheduler<E> {
                 break;
             }
             if let Some(a) = &self.active[b] {
-                if a.fed < a.prompt.len() {
+                if a.cooldown == 0 && a.fed < a.prompt.len() {
                     let take = chunk.min(a.prompt.len() - a.fed).min(prefill_left);
                     takes[b] = take;
                     prefill_left -= take;
@@ -896,12 +1393,27 @@ impl<E: DecodeEngine> Scheduler<E> {
         }
         if any {
             let t0 = Instant::now();
-            let logits = if self.slots.is_paged() {
-                self.engine.step_paged(&tokens, &pos, &active, &self.tables)?
+            let call = if self.slots.is_paged() {
+                self.engine.step_paged(&tokens, &pos, &active, &self.tables)
             } else {
-                self.engine.step(&tokens, &pos, &active)?
+                self.engine.step(&tokens, &pos, &active)
             };
+            let logits = match call {
+                Ok(l) => l,
+                Err(err) => {
+                    // Nothing advanced; the planned prefill half is
+                    // abandoned with the rest of the step.
+                    self.handle_fault(err, &active, &mut done)?;
+                    return Ok(done);
+                }
+            };
+            if logits.len() != n {
+                // Reachable under engine API misuse — an error, not the
+                // panic an unchecked logits[b] index would become.
+                bail!("engine returned {} logit rows for {n} slots", logits.len());
+            }
             let step_us = t0.elapsed().as_secs_f64() * 1e6;
+            self.note_engine_success(&active);
             ran_decode = true;
             let mut new_tokens = 0usize;
             for b in 0..n {
@@ -972,12 +1484,25 @@ impl<E: DecodeEngine> Scheduler<E> {
         }
         if any_p {
             let t0 = Instant::now();
-            let logits = if self.slots.is_paged() {
-                self.engine.prefill_paged(&ptokens, &pos0, &pactive, &self.tables)?
+            let call = if self.slots.is_paged() {
+                self.engine.prefill_paged(&ptokens, &pos0, &pactive, &self.tables)
             } else {
-                self.engine.prefill(&ptokens, &pos0, &pactive)?
+                self.engine.prefill(&ptokens, &pos0, &pactive)
             };
+            let logits = match call {
+                Ok(l) => l,
+                Err(err) => {
+                    // The decode half already ran and retired; keep its
+                    // completions — only the prefill half is abandoned.
+                    self.handle_fault(err, &pactive, &mut done)?;
+                    return Ok(done);
+                }
+            };
+            if logits.len() != n {
+                bail!("engine returned {} logit rows for {n} slots", logits.len());
+            }
             let prefill_us = t0.elapsed().as_secs_f64() * 1e6;
+            self.note_engine_success(&pactive);
             ran_prefill = true;
             let mut new_tokens = 0usize;
             for b in 0..n {
@@ -1034,7 +1559,7 @@ impl<E: DecodeEngine> Scheduler<E> {
         let mut active = vec![false; n];
         for b in 0..n {
             if let Some(a) = self.active[b].as_mut() {
-                if a.fed < a.prompt.len() {
+                if a.cooldown == 0 && a.fed < a.prompt.len() {
                     let take = chunk.min(a.prompt.len() - a.fed);
                     tokens[b] = a.prompt[a.fed..a.fed + take].to_vec();
                     pos0[b] = self.slots.pos(b).expect("occupied slot has a position") as i32;
@@ -1061,12 +1586,24 @@ impl<E: DecodeEngine> Scheduler<E> {
         }
 
         let t0 = Instant::now();
-        let logits = if self.slots.is_paged() {
-            self.engine.prefill_paged(&tokens, &pos0, &active, &self.tables)?
+        let call = if self.slots.is_paged() {
+            self.engine.prefill_paged(&tokens, &pos0, &active, &self.tables)
         } else {
-            self.engine.prefill(&tokens, &pos0, &active)?
+            self.engine.prefill(&tokens, &pos0, &active)
         };
+        let logits = match call {
+            Ok(l) => l,
+            Err(err) => {
+                let mut failed = Vec::new();
+                self.handle_fault(err, &active, &mut failed)?;
+                return Ok(failed);
+            }
+        };
+        if logits.len() != n {
+            bail!("engine returned {} logit rows for {n} slots", logits.len());
+        }
         let step_us = t0.elapsed().as_secs_f64() * 1e6;
+        self.note_engine_success(&active);
 
         let mut prompt_tokens = 0usize;
         let mut new_tokens = 0usize;
@@ -1123,6 +1660,15 @@ impl<E: DecodeEngine> Scheduler<E> {
         let mut decode_fed = 0usize;
         for b in 0..n {
             if let Some(a) = self.active[b].as_mut() {
+                if a.cooldown > 0 {
+                    // Cooling after a fault: joins no call — but the
+                    // decode graphs write a placeholder token at pos[b]
+                    // for every lane, active or not, so aim it at the
+                    // slot's own next (unwritten) position exactly like
+                    // the composer does for its idle lanes.
+                    pos[b] = self.slots.pos(b).expect("occupied slot has a position") as i32;
+                    continue;
+                }
                 any = true;
                 active[b] = true;
                 let warming = a.fed < a.prompt.len();
@@ -1162,17 +1708,29 @@ impl<E: DecodeEngine> Scheduler<E> {
         }
 
         let t0 = Instant::now();
-        let logits = if self.slots.is_paged() {
-            self.engine.step_paged(&tokens, &pos, &active, &self.tables)?
+        let call = if self.slots.is_paged() {
+            self.engine.step_paged(&tokens, &pos, &active, &self.tables)
         } else {
-            self.engine.step(&tokens, &pos, &active)?
+            self.engine.step(&tokens, &pos, &active)
         };
+        let logits = match call {
+            Ok(l) => l,
+            Err(err) => {
+                let mut failed = Vec::new();
+                self.handle_fault(err, &active, &mut failed)?;
+                return Ok(failed);
+            }
+        };
+        if logits.len() != n {
+            bail!("engine returned {} logit rows for {n} slots", logits.len());
+        }
         let step_us = t0.elapsed().as_secs_f64() * 1e6;
+        self.note_engine_success(&active);
 
         let mut new_tokens = 0usize;
         let mut done = Vec::new();
         for b in 0..n {
-            if self.active[b].is_none() {
+            if !active[b] || self.active[b].is_none() {
                 continue;
             }
             let new_pos = self.slots.advance(b)?;
@@ -1293,6 +1851,32 @@ pub struct Server {
     rx_resp: mpsc::Receiver<Result<Response, String>>,
     handle: Option<std::thread::JoinHandle<()>>,
     next_id: usize,
+    /// The worker's terminal status, written exactly once when the thread
+    /// exits (init failure, clean shutdown, channel closure, or panic —
+    /// the last via a drop guard) and surfaced by [`Self::worker_error`]
+    /// and the `submit` rejection message, so a dead worker is
+    /// diagnosable instead of a bare "worker dead".
+    terminal: std::sync::Arc<std::sync::Mutex<Option<String>>>,
+}
+
+/// Stamps the worker's terminal status on the way out of the thread —
+/// including unwinds: if the closure panicked before any explicit stamp,
+/// the `Drop` impl records that.
+struct TerminalGuard(std::sync::Arc<std::sync::Mutex<Option<String>>>);
+
+impl TerminalGuard {
+    fn stamp(&self, why: &str) {
+        let mut t = self.0.lock().unwrap_or_else(|p| p.into_inner());
+        if t.is_none() {
+            *t = Some(why.to_string());
+        }
+    }
+}
+
+impl Drop for TerminalGuard {
+    fn drop(&mut self) {
+        self.stamp("worker panicked");
+    }
 }
 
 impl Server {
@@ -1305,11 +1889,16 @@ impl Server {
     {
         let (tx, rx) = mpsc::channel::<Msg>();
         let (tx_resp, rx_resp) = mpsc::channel();
+        let terminal = std::sync::Arc::new(std::sync::Mutex::new(None));
+        let worker_terminal = terminal.clone();
         let handle = std::thread::spawn(move || {
+            let guard = TerminalGuard(worker_terminal);
             let mut serve_one = match factory() {
                 Ok(s) => s,
                 Err(e) => {
-                    let _ = tx_resp.send(Err(format!("worker init failed: {e:#}")));
+                    let why = format!("worker init failed: {e:#}");
+                    guard.stamp(&why);
+                    let _ = tx_resp.send(Err(why));
                     return;
                 }
             };
@@ -1327,11 +1916,15 @@ impl Server {
                             .map_err(|e| format!("{e:#}"));
                         let _ = tx_resp.send(resp);
                     }
-                    Msg::Shutdown => break,
+                    Msg::Shutdown => {
+                        guard.stamp("worker shut down cleanly");
+                        break;
+                    }
                 }
             }
+            guard.stamp("request channel closed");
         });
-        Self { tx, rx_resp, handle: Some(handle), next_id: 0 }
+        Self { tx, rx_resp, handle: Some(handle), next_id: 0, terminal }
     }
 
     /// Is the worker thread still running? (It exits on factory failure,
@@ -1340,12 +1933,26 @@ impl Server {
         self.handle.as_ref().map(|h| !h.is_finished()).unwrap_or(false)
     }
 
+    /// Why the worker exited: `None` while it is still running (or before
+    /// its exit was stamped), otherwise the stored terminal reason —
+    /// "worker init failed: ...", "worker shut down cleanly", "request
+    /// channel closed", or "worker panicked".
+    pub fn worker_error(&self) -> Option<String> {
+        if self.worker_alive() {
+            return None;
+        }
+        self.terminal.lock().unwrap_or_else(|p| p.into_inner()).clone()
+    }
+
     /// Enqueue a request. Fails — instead of silently dropping the message —
-    /// when the worker thread has died, so callers never end up waiting on
-    /// a response that can no longer arrive.
+    /// when the worker thread has died, carrying the worker's terminal
+    /// reason so callers can tell an init failure from a crash.
     pub fn submit(&mut self, req: Request) -> Result<usize> {
         if !self.worker_alive() {
-            bail!("server worker is dead; request rejected");
+            let why = self
+                .worker_error()
+                .unwrap_or_else(|| "no terminal status recorded".to_string());
+            bail!("server worker is dead ({why}); request rejected");
         }
         let id = self.next_id;
         self.tx
@@ -2297,5 +2904,463 @@ mod tests {
             .submit(Request { prompt: b"x".to_vec(), max_new_tokens: 1 })
             .unwrap_err();
         assert!(err.to_string().contains("dead"), "{err:#}");
+        // The terminal reason rides on the rejection and the accessor —
+        // callers can tell an init failure from a crash.
+        assert!(err.to_string().contains("worker init failed"), "{err:#}");
+        let why = server.worker_error().expect("dead worker has a reason");
+        assert!(why.contains("worker init failed"), "{why}");
+    }
+
+    #[test]
+    fn server_surfaces_worker_panic_reason() {
+        let mut server = Server::spawn(|| {
+            Ok(move |_req: &Request| -> Result<(Vec<u8>, f64)> { panic!("kaboom") })
+        });
+        server.submit(Request { prompt: b"x".to_vec(), max_new_tokens: 1 }).unwrap();
+        // The panic kills the worker before a response is sent.
+        assert!(server.recv().is_err());
+        for _ in 0..200 {
+            if !server.worker_alive() {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(!server.worker_alive());
+        let why = server.worker_error().expect("dead worker has a reason");
+        assert!(why.contains("panicked"), "{why}");
+        let err = server
+            .submit(Request { prompt: b"y".to_vec(), max_new_tokens: 1 })
+            .unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err:#}");
+    }
+
+    // -- error kernel: faults, retries, quarantine, deadlines --------------
+
+    /// Wraps a [`MockEngine`] and fails scripted call indices (1-based
+    /// count of engine calls actually attempted) with a given
+    /// [`ServeError`] — the precise control a unit test needs, where the
+    /// seeded [`crate::serve::engine::FaultInjector`] would need draw
+    /// bookkeeping (the injector is exercised by the sim-oracle chaos
+    /// suites instead).
+    struct ScriptedFaults {
+        inner: MockEngine,
+        calls: u64,
+        script: Vec<(u64, ServeError)>,
+    }
+
+    impl ScriptedFaults {
+        fn new(inner: MockEngine, script: Vec<(u64, ServeError)>) -> Self {
+            Self { inner, calls: 0, script }
+        }
+
+        fn fail_now(&mut self) -> Option<ServeError> {
+            self.calls += 1;
+            let call = self.calls;
+            self.script.iter().find(|(c, _)| *c == call).map(|(_, e)| e.clone())
+        }
+    }
+
+    impl DecodeEngine for ScriptedFaults {
+        fn slots(&self) -> usize {
+            self.inner.slots()
+        }
+
+        fn max_seq(&self) -> usize {
+            self.inner.max_seq()
+        }
+
+        fn prefill_chunk(&self) -> usize {
+            self.inner.prefill_chunk()
+        }
+
+        fn reset_slot(&mut self, slot: usize) {
+            self.inner.reset_slot(slot);
+        }
+
+        fn kv_block_size(&self) -> Option<usize> {
+            self.inner.kv_block_size()
+        }
+
+        fn kv_blocks(&self) -> usize {
+            self.inner.kv_blocks()
+        }
+
+        fn step(
+            &mut self,
+            tokens: &[i32],
+            pos: &[i32],
+            active: &[bool],
+        ) -> Result<Vec<Vec<f32>>> {
+            if let Some(e) = self.fail_now() {
+                return Err(e.into());
+            }
+            self.inner.step(tokens, pos, active)
+        }
+
+        fn prefill(
+            &mut self,
+            tokens: &[Vec<i32>],
+            pos0: &[i32],
+            active: &[bool],
+        ) -> Result<Vec<Vec<f32>>> {
+            if let Some(e) = self.fail_now() {
+                return Err(e.into());
+            }
+            self.inner.prefill(tokens, pos0, active)
+        }
+
+        fn step_paged(
+            &mut self,
+            tokens: &[i32],
+            pos: &[i32],
+            active: &[bool],
+            tables: &[Vec<i32>],
+        ) -> Result<Vec<Vec<f32>>> {
+            if let Some(e) = self.fail_now() {
+                return Err(e.into());
+            }
+            self.inner.step_paged(tokens, pos, active, tables)
+        }
+
+        fn prefill_paged(
+            &mut self,
+            tokens: &[Vec<i32>],
+            pos0: &[i32],
+            active: &[bool],
+            tables: &[Vec<i32>],
+        ) -> Result<Vec<Vec<f32>>> {
+            if let Some(e) = self.fail_now() {
+                return Err(e.into());
+            }
+            self.inner.prefill_paged(tokens, pos0, active, tables)
+        }
+
+        fn adopt_prefix(&mut self, slot: usize, table: &[i32], cached: usize) -> Result<()> {
+            if let Some(e) = self.fail_now() {
+                return Err(e.into());
+            }
+            self.inner.adopt_prefix(slot, table, cached)
+        }
+    }
+
+    fn slot_fault(slot: usize) -> ServeError {
+        ServeError::Slot { slot, what: "scripted".into() }
+    }
+
+    fn step_fault() -> ServeError {
+        ServeError::Transient { what: "scripted".into() }
+    }
+
+    #[test]
+    fn slot_fault_retries_then_recovers_byte_identically() {
+        let req = || GenRequest::sampled(b"abc", 5, Sampler::top_k(8, 0.9), 7);
+        let e = ScriptedFaults::new(MockEngine::new(1, 64, 64), vec![(2, slot_fault(0))]);
+        let mut s = Scheduler::new(e, 8).unwrap().with_trace(1024);
+        let id = s.submit(req()).unwrap();
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].reason, FinishReason::BudgetExhausted);
+        assert_eq!(s.metrics.slot_faults, 1);
+        assert_eq!(s.metrics.retries_scheduled, 1);
+        assert_eq!(s.metrics.slots_recovered, 1);
+        assert_eq!(s.metrics.requests_quarantined, 0);
+        assert_eq!(s.metrics.requests_completed, 1);
+        // The faulted call advanced nothing: the retry replays it and the
+        // bytes match a fault-free run exactly.
+        let mut clean = sched(1, 64, 8);
+        clean.submit(req()).unwrap();
+        let want = clean.run().unwrap();
+        assert_eq!(done[0].completion, want[0].completion);
+        assert_eq!(s.engine().inner.steps, clean.engine().steps);
+        let evs: Vec<TraceEvent> = s.trace_records().iter().map(|r| r.event).collect();
+        assert!(evs.contains(&TraceEvent::FaultInjected { slot: Some(0) }));
+        assert!(evs.contains(&TraceEvent::RetryScheduled {
+            slot: Some(0),
+            backoff_steps: 1,
+            attempt: 1,
+        }));
+        assert!(evs.contains(&TraceEvent::SlotRecovered { id, slot: 0 }));
+        // The trace/metrics cross-check covers the new failure counters.
+        crate::serve::trace::verify_against_metrics(&s.trace_records(), &s.metrics).unwrap();
+    }
+
+    #[test]
+    fn quarantine_after_retry_budget_individual_faults() {
+        // Three scripted per-slot faults against the default budget of 3:
+        // two retries (backoffs 1 then 2 steps), then quarantine. The
+        // engine call indices count only calls actually attempted —
+        // cooling steps make no call.
+        let script = vec![(1, slot_fault(0)), (2, slot_fault(0)), (3, slot_fault(0))];
+        let e = ScriptedFaults::new(MockEngine::new(1, 64, 64), script);
+        let mut s = Scheduler::new(e, 8).unwrap().with_trace(1024);
+        let id = s.submit(GenRequest::greedy(b"ab", 4)).unwrap();
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, id);
+        assert_eq!(done[0].reason, FinishReason::Quarantined);
+        assert!(done[0].completion.is_empty(), "nothing ever successfully fed");
+        assert_eq!(s.metrics.slot_faults, 3);
+        assert_eq!(s.metrics.retries_scheduled, 2);
+        assert_eq!(s.metrics.requests_quarantined, 1);
+        assert_eq!(s.metrics.requests_completed, 0, "a quarantine is not a completion");
+        assert_eq!(s.metrics.slots_recovered, 0);
+        assert_eq!(s.engine().inner.steps, 0, "no engine call ever succeeded");
+        assert_eq!(s.in_flight(), 0, "the slot was freed");
+        assert!(s.is_idle());
+        let evs: Vec<TraceEvent> = s.trace_records().iter().map(|r| r.event).collect();
+        assert!(evs.contains(&TraceEvent::RequestFailed { id, slot: Some(0), faults: 3 }));
+        assert!(!evs.iter().any(|e| matches!(e, TraceEvent::Completed { .. })));
+        crate::serve::trace::verify_against_metrics(&s.trace_records(), &s.metrics).unwrap();
+    }
+
+    #[test]
+    fn poison_request_cannot_wedge_the_batch() {
+        // Two healthy requests ride alongside one that faults every time
+        // its slot is in the call... simulated here by blaming slot 0 on
+        // three calls: the poison request is quarantined and the healthy
+        // ones complete byte-identically to a fault-free run.
+        let healthy = |seed| GenRequest::sampled(b"ok", 4, Sampler::top_k(8, 0.9), seed);
+        let script = vec![(2, slot_fault(0)), (3, slot_fault(0)), (4, slot_fault(0))];
+        let e = ScriptedFaults::new(MockEngine::new(3, 64, 64), script);
+        let mut s = Scheduler::new(e, 8).unwrap();
+        let poison = s.submit(GenRequest::greedy(b"poison", 4)).unwrap();
+        let h1 = s.submit(healthy(1)).unwrap();
+        let h2 = s.submit(healthy(2)).unwrap();
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 3);
+        let by_id = |id| done.iter().find(|c| c.id == id).expect("present");
+        assert_eq!(by_id(poison).reason, FinishReason::Quarantined);
+        for (id, seed) in [(h1, 1), (h2, 2)] {
+            assert_eq!(by_id(id).reason, FinishReason::BudgetExhausted);
+            let mut solo = sched(1, 64, 8);
+            solo.submit(healthy(seed)).unwrap();
+            let want = solo.run().unwrap();
+            assert_eq!(by_id(id).completion, want[0].completion, "request {id}");
+        }
+        assert_eq!(s.metrics.requests_quarantined, 1);
+        assert_eq!(s.metrics.requests_completed, 2);
+    }
+
+    #[test]
+    fn step_fault_streak_evicts_for_warm_restart() {
+        let req = || GenRequest::sampled(b"ab", 3, Sampler::top_k(8, 0.9), 11);
+        let script = vec![(1, step_fault()), (2, step_fault())];
+        let e = ScriptedFaults::new(MockEngine::new(1, 64, 64), script);
+        let mut s = Scheduler::new(e, 8).unwrap().with_retry_budget(2).unwrap().with_trace(1024);
+        let id = s.submit(req()).unwrap();
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].reason, FinishReason::BudgetExhausted);
+        assert_eq!(s.metrics.step_faults, 2);
+        assert_eq!(s.metrics.retries_scheduled, 1, "streak hit the budget on fault 2");
+        assert_eq!(s.metrics.requests_fault_evicted, 1);
+        assert_eq!(s.metrics.requests_evicted, 0, "fault evictions are counted apart");
+        assert_eq!(s.metrics.requests_quarantined, 0, "the engine was at fault, not the request");
+        // The evicted request restarted from scratch with its seed: bytes
+        // identical to a fault-free run.
+        let mut clean = sched(1, 64, 8);
+        clean.submit(req()).unwrap();
+        let want = clean.run().unwrap();
+        assert_eq!(done[0].completion, want[0].completion);
+        let evs: Vec<TraceEvent> = s.trace_records().iter().map(|r| r.event).collect();
+        assert!(evs.contains(&TraceEvent::Evicted { id, slot: 0, reason: EvictReason::Fault }));
+        assert!(evs.contains(&TraceEvent::RetryScheduled {
+            slot: None,
+            backoff_steps: 1,
+            attempt: 1,
+        }));
+        crate::serve::trace::verify_against_metrics(&s.trace_records(), &s.metrics).unwrap();
+    }
+
+    #[test]
+    fn backoff_is_deterministic_across_reruns() {
+        // Same scripted faults, two runs: the step-counted backoff (never
+        // wall clock) makes the full oracle-scope event sequence — and
+        // the engine call count — reproduce exactly.
+        let run = || {
+            let script = vec![(1, step_fault()), (2, slot_fault(0))];
+            let e = ScriptedFaults::new(MockEngine::new(1, 64, 64), script);
+            let mut s = Scheduler::new(e, 8).unwrap().with_trace(1024);
+            s.submit(GenRequest::sampled(b"abc", 4, Sampler::top_k(8, 0.9), 3)).unwrap();
+            let done = s.run().unwrap();
+            let evs: Vec<TraceEvent> = s
+                .trace_records()
+                .iter()
+                .map(|r| r.event)
+                .filter(|e| e.in_oracle_scope())
+                .collect();
+            (evs, done[0].completion.clone(), s.engine().calls, s.engine().inner.steps)
+        };
+        let (ev1, bytes1, calls1, steps1) = run();
+        let (ev2, bytes2, calls2, steps2) = run();
+        assert_eq!(ev1, ev2);
+        assert_eq!(bytes1, bytes2);
+        assert_eq!(calls1, calls2);
+        assert_eq!(steps1, steps2);
+        // And the schedule actually backed off: faults happened.
+        assert!(ev1.contains(&TraceEvent::FaultInjected { slot: None }));
+        assert!(ev1.contains(&TraceEvent::FaultInjected { slot: Some(0) }));
+    }
+
+    #[test]
+    fn deadline_sheds_queued_request_at_admission() {
+        let mut s = sched(1, 64, 8).with_trace(1024);
+        let long = s.submit(GenRequest::greedy(b"aaaa", 40)).unwrap();
+        let doomed = s
+            .submit(GenRequest::greedy(b"bbbb", 4).with_deadline_steps(2))
+            .unwrap();
+        let d1 = s.step().unwrap(); // long admitted, doomed queued
+        assert!(d1.is_empty());
+        let d2 = s.step().unwrap(); // step 2: doomed expires in the queue
+        assert_eq!(d2.len(), 1);
+        assert_eq!(d2[0].id, doomed);
+        assert_eq!(d2[0].reason, FinishReason::DeadlineExpired);
+        assert!(d2[0].completion.is_empty());
+        assert!(d2[0].ttft_ms.is_none());
+        assert_eq!(s.metrics.deadline_shed_queued, 1);
+        assert_eq!(s.metrics.deadline_shed_inflight, 0);
+        let rest = s.run().unwrap();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].id, long);
+        assert_eq!(rest[0].reason, FinishReason::BudgetExhausted);
+        assert_eq!(s.metrics.requests_completed, 1, "sheds are not completions");
+        let evs: Vec<TraceEvent> = s.trace_records().iter().map(|r| r.event).collect();
+        assert!(evs.contains(&TraceEvent::DeadlineExpired { id: doomed, queued: true }));
+        crate::serve::trace::verify_against_metrics(&s.trace_records(), &s.metrics).unwrap();
+    }
+
+    #[test]
+    fn deadline_sheds_in_flight_request_with_partial_output() {
+        let mut s = sched(1, 64, 8).with_trace(1024);
+        let id = s
+            .submit(GenRequest::greedy(b"ab", 100).with_deadline_steps(3))
+            .unwrap();
+        let done = s.run().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, id);
+        assert_eq!(done[0].reason, FinishReason::DeadlineExpired);
+        // Steps 1-2 fed the prompt and sampled the first token; the shed
+        // at step 3 keeps the partial output.
+        assert_eq!(done[0].completion.len(), 1);
+        assert!(done[0].ttft_ms.is_some());
+        assert_eq!(s.metrics.deadline_shed_inflight, 1);
+        assert_eq!(s.metrics.deadline_shed_queued, 0);
+        assert_eq!(s.metrics.requests_completed, 0);
+        assert_eq!(s.in_flight(), 0, "the slot was freed");
+        assert!(s.is_idle());
+        let evs: Vec<TraceEvent> = s.trace_records().iter().map(|r| r.event).collect();
+        assert!(evs.contains(&TraceEvent::DeadlineExpired { id, queued: false }));
+        crate::serve::trace::verify_against_metrics(&s.trace_records(), &s.metrics).unwrap();
+    }
+
+    #[test]
+    fn wall_clock_deadline_sheds_after_elapsed_time() {
+        let mut s = sched(1, 64, 8);
+        s.submit(GenRequest::greedy(b"ab", 4).with_deadline_ms(5.0)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let done = s.step().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].reason, FinishReason::DeadlineExpired);
+        assert_eq!(s.metrics.deadline_shed_queued, 1);
+    }
+
+    #[test]
+    fn retry_budget_validation_and_adopt_fault_rollback() {
+        assert!(sched(1, 64, 8).with_retry_budget(0).is_err());
+        // A scripted adopt_prefix fault at admission rolls the watermark
+        // back (pool accounting intact) and requeues the request, which
+        // then admits cleanly and completes byte-identically.
+        let prompt: Vec<u8> = (0..8).map(|j| b'A' + j).collect();
+        let req = |seed| GenRequest::sampled(&prompt, 4, Sampler::top_k(8, 0.9), seed);
+        // Warm the cache, then fault the warm request's adopt call: with
+        // chunk 1 the warmup costs 8 prompt feeds + 3 decode steps = 11
+        // calls, so the adopt attempt is call 12.
+        let e = ScriptedFaults::new(
+            MockEngine::new(2, 32, 64).with_block_pool(16, 4),
+            vec![(12, slot_fault(0))],
+        );
+        let mut s = Scheduler::new(e, 8).unwrap().with_prefix_cache().unwrap();
+        s.submit(req(1)).unwrap();
+        let cold = s.run().unwrap();
+        assert_eq!(s.engine().calls, 11);
+        s.submit(req(1)).unwrap();
+        let warm = s.run().unwrap();
+        assert_eq!(warm.len(), 1);
+        assert_eq!(warm[0].reason, FinishReason::BudgetExhausted);
+        assert_eq!(warm[0].completion, cold[0].completion, "retry after rollback is exact");
+        assert_eq!(s.metrics.slot_faults, 1);
+        assert_eq!(s.metrics.retries_scheduled, 1);
+        // All transient pages returned: only index-held pages remain.
+        let pool = s.slots.pool().unwrap();
+        assert_eq!(pool.used_blocks(), s.slots.prefix().unwrap().cached_pages());
+        s.slots.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn fatal_and_unclassified_errors_still_propagate() {
+        let e = ScriptedFaults::new(
+            MockEngine::new(1, 64, 64),
+            vec![(1, ServeError::Fatal { what: "bad artifact".into() })],
+        );
+        let mut s = Scheduler::new(e, 8).unwrap();
+        s.submit(GenRequest::greedy(b"ab", 2)).unwrap();
+        let err = s.run().unwrap_err();
+        assert!(err.to_string().contains("fatal engine fault"), "{err:#}");
+    }
+
+    /// The error-kernel sweep (satellite): inject a single transient
+    /// fault at EVERY call index of a mixed prefill/decode/adopt workload
+    /// in turn. Wherever the fault lands — mid-prefill, mid-decode, or on
+    /// an admission `adopt_prefix` — the bookkeeping invariants hold
+    /// after every step, every request still completes, and (one fault
+    /// being below the retry budget) every byte matches the clean run.
+    #[test]
+    fn any_single_fault_index_preserves_invariants_and_bytes() {
+        let engine = || MockEngine::new(2, 48, 64).with_prefill_chunk(2).with_block_pool(24, 4);
+        let shared: Vec<u8> = (0..10).map(|j| b'a' + j).collect();
+        let submit_all = |s: &mut Scheduler<ScriptedFaults>| {
+            for seed in 0..3u64 {
+                let mut p = shared.clone();
+                p.push(b'z' + seed as u8);
+                s.submit(GenRequest::sampled(&p, 4, Sampler::top_k(8, 0.9), seed)).unwrap();
+            }
+        };
+        let mut clean = Scheduler::new(ScriptedFaults::new(engine(), vec![]), 8)
+            .unwrap()
+            .with_prefix_cache()
+            .unwrap();
+        submit_all(&mut clean);
+        let want = clean.run().unwrap();
+        assert_eq!(want.len(), 3);
+        let want_for = |id: u64| want.iter().find(|c| c.id == id).map(|c| &c.completion);
+        let total_calls = clean.engine().calls;
+        assert!(total_calls > 10, "workload too small to sweep");
+        for k in 1..=total_calls {
+            let e = ScriptedFaults::new(engine(), vec![(k, step_fault())]);
+            let mut s = Scheduler::new(e, 8).unwrap().with_prefix_cache().unwrap();
+            submit_all(&mut s);
+            let mut done = Vec::new();
+            while !s.is_idle() {
+                done.extend(
+                    s.step().unwrap_or_else(|e| panic!("fault at call {k}: step failed: {e}")),
+                );
+                s.check_invariants().unwrap_or_else(|e| panic!("fault at call {k}: {e}"));
+            }
+            assert_eq!(done.len(), want.len(), "fault at call {k} lost a request");
+            for c in &done {
+                assert_eq!(
+                    c.reason,
+                    FinishReason::BudgetExhausted,
+                    "fault at call {k}: request {} failed",
+                    c.id
+                );
+                assert_eq!(
+                    Some(&c.completion),
+                    want_for(c.id),
+                    "fault at call {k}: request {} diverged",
+                    c.id
+                );
+            }
+        }
     }
 }

@@ -478,6 +478,82 @@ impl SlotMap {
         }
         Ok(())
     }
+
+    /// Full bookkeeping audit, cheap enough to run after every step in the
+    /// chaos property tests: slot-capacity accounting, per-slot position
+    /// bounds (inside `max_seq`, inside the covered table range, never
+    /// inside read-only shared pages), clean free-slot state, and — in
+    /// paged mode — the pool's own audit plus an exact refcount mirror
+    /// (`refcount(page) == table occurrences + index membership`). This is
+    /// the invariant the error kernel's failure-atomicity guarantee is
+    /// stated against.
+    pub fn check_invariants(&self) -> Result<()> {
+        if self.active_count() + self.free_count() != self.capacity() {
+            bail!(
+                "slot accounting broke: {} active + {} free != {} capacity",
+                self.active_count(),
+                self.free_count(),
+                self.capacity()
+            );
+        }
+        let bs = self.pool.as_ref().map(|p| p.block_size());
+        for (slot, info) in self.state.iter().enumerate() {
+            match info {
+                Some(info) => {
+                    if info.pos > self.max_seq {
+                        bail!("slot {slot}: pos {} past max_seq {}", info.pos, self.max_seq);
+                    }
+                    if let Some(bs) = bs {
+                        let covered = self.tables[slot].len() * bs;
+                        if info.pos > covered {
+                            bail!("slot {slot}: pos {} past covered {covered}", info.pos);
+                        }
+                        if info.pos < self.shared[slot] * bs {
+                            bail!(
+                                "slot {slot}: pos {} inside its {} read-only shared pages",
+                                info.pos,
+                                self.shared[slot]
+                            );
+                        }
+                    }
+                }
+                None => {
+                    if !self.tables[slot].is_empty() {
+                        bail!("free slot {slot} still holds {} pages", self.tables[slot].len());
+                    }
+                    if !self.prompts[slot].is_empty() || self.shared[slot] != 0 {
+                        bail!("free slot {slot} has stale prompt/shared state");
+                    }
+                }
+            }
+        }
+        let Some(pool) = self.pool.as_ref() else { return Ok(()) };
+        pool.check_invariants()?;
+        let mut refs = vec![0u32; pool.total_blocks()];
+        for table in &self.tables {
+            for &p in table {
+                match refs.get_mut(p as usize) {
+                    Some(r) => *r += 1,
+                    None => bail!("table maps out-of-range page {p}"),
+                }
+            }
+        }
+        if let Some(idx) = self.prefix.as_ref() {
+            for &p in &idx.pages() {
+                match refs.get_mut(p as usize) {
+                    Some(r) => *r += 1,
+                    None => bail!("prefix index holds out-of-range page {p}"),
+                }
+            }
+        }
+        for (p, &want) in refs.iter().enumerate() {
+            let got = pool.refcount(p as u32);
+            if got != want {
+                bail!("page {p}: refcount {got}, but tables+index hold {want} references");
+            }
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -610,6 +686,26 @@ mod tests {
         let mut d = SlotMap::new(1, 8);
         let s = d.allocate(1).unwrap();
         assert!(d.ensure_capacity(s, 1).is_err(), "dense map has no pages");
+    }
+
+    #[test]
+    fn invariant_audit_covers_dense_paged_and_prefix_maps() {
+        let mut d = SlotMap::new(2, 8);
+        d.check_invariants().unwrap();
+        let s = d.allocate(1).unwrap();
+        d.advance(s).unwrap();
+        d.check_invariants().unwrap();
+        let mut m = SlotMap::paged(2, 16, 4, 4).with_prefix_cache();
+        let prompt: Vec<i32> = (0..8).collect();
+        let (a, _) = m.admit_paged(1, &prompt, 3).unwrap().unwrap();
+        m.ensure_capacity(a, 8).unwrap();
+        m.advance_by(a, 8).unwrap();
+        m.check_invariants().unwrap();
+        m.release(a).unwrap();
+        m.check_invariants().unwrap();
+        // Corruption is caught: a page reference the tables don't hold.
+        m.pool.as_mut().unwrap().retain(m.prefix().unwrap().pages()[0]).unwrap();
+        assert!(m.check_invariants().is_err());
     }
 
     // -- prefix cache (refcounted copy-on-write sharing) -------------------

@@ -27,8 +27,15 @@
 //!   [`TraceEvent::PageRetained`] / [`TraceEvent::PageReleased`] — the
 //!   resource plane: COW prefix donations and refcounted page traffic.
 //! * [`TraceEvent::Evicted`] — the slot was torn down mid-flight
-//!   (pool-exhaustion requeue or cancel).
+//!   (pool-exhaustion requeue, cancel, or fault-requeue).
 //! * [`TraceEvent::Completed`] — retirement, with the finish reason.
+//! * [`TraceEvent::FaultInjected`] / [`TraceEvent::RetryScheduled`] /
+//!   [`TraceEvent::SlotRecovered`] / [`TraceEvent::RequestFailed`] /
+//!   [`TraceEvent::DeadlineExpired`] — the error kernel: engine faults
+//!   (per-slot or step-wide), the deterministic step-counted backoff the
+//!   recovery policy schedules, successful recoveries, quarantines after
+//!   retry exhaustion, and deadline sheds. All oracle-scope: the sim
+//!   replays the fault schedule and must predict every one of these.
 //! * [`TraceEvent::Counters`] — per-engine-call gauges (queue depth,
 //!   in-flight, free pages, fed-token mix) for counter tracks.
 //!
@@ -69,6 +76,9 @@ pub enum EvictReason {
     PoolExhausted,
     /// `Scheduler::cancel` hit a mid-flight request.
     Cancelled,
+    /// A step-wide engine fault exhausted its retry budget; the slot was
+    /// requeued (front) for a warm restart through its donated pages.
+    Fault,
 }
 
 /// Why a request retired.
@@ -78,6 +88,12 @@ pub enum FinishReason {
     BudgetExhausted,
     /// Ran out of KV-cache positions (`max_seq`) first.
     CacheFull,
+    /// Individually faulted `retry_budget` times and was isolated so it
+    /// can no longer wedge the batch (poison-request quarantine).
+    Quarantined,
+    /// Missed its request deadline and was shed (at admission or
+    /// mid-flight).
+    DeadlineExpired,
 }
 
 /// One typed scheduler/resource event. `Copy` and field-only (no heap) so
@@ -96,6 +112,23 @@ pub enum TraceEvent {
     Evicted { id: u64, slot: usize, reason: EvictReason },
     Completed { id: u64, slot: usize, reason: FinishReason },
     StepComposed { decode_lanes: usize, prefill_take: usize, budget: usize },
+    /// An engine call faulted; `slot` is `Some` for a per-slot fault
+    /// (one request blamed) and `None` for a step-wide one (every
+    /// participant of the call affected).
+    FaultInjected { slot: Option<usize> },
+    /// The error kernel scheduled a deterministic retry: the affected
+    /// slot (or the whole step when `None`) sits out `backoff_steps`
+    /// scheduler steps before attempt `attempt + 1`.
+    RetryScheduled { slot: Option<usize>, backoff_steps: usize, attempt: usize },
+    /// A slot that had a retry pending advanced through a successful
+    /// engine call again.
+    SlotRecovered { id: u64, slot: usize },
+    /// A request exhausted its retry budget and was quarantined
+    /// (`slot` is `None` when it failed from the admission queue).
+    RequestFailed { id: u64, slot: Option<usize>, faults: usize },
+    /// A request missed its deadline and was shed — from the queue
+    /// (`queued`) or mid-flight.
+    DeadlineExpired { id: u64, queued: bool },
     PrefixDonated { slot: usize, pages: usize },
     PageAllocated { block: u32, refcount: usize },
     PageRetained { block: u32, refcount: usize },
@@ -253,6 +286,8 @@ pub struct Timeline {
     pub admissions: usize,
     /// Pool-exhaustion evictions only; cancels set `cancelled`.
     pub evictions: usize,
+    /// Fault-requeue evictions (retry exhaustion on a step-wide fault).
+    pub fault_evictions: usize,
     pub cancelled: bool,
     /// Tokens generated since the last admission (what the completion
     /// reports; tokens lost to eviction restarts are not counted here).
@@ -329,12 +364,23 @@ pub fn fold_timelines(records: &[TraceRecord]) -> BTreeMap<u64, Timeline> {
                 match reason {
                     EvictReason::PoolExhausted => t.evictions += 1,
                     EvictReason::Cancelled => t.cancelled = true,
+                    EvictReason::Fault => t.fault_evictions += 1,
                 }
             }
             TraceEvent::Completed { id, reason, .. } => {
                 let t = timeline(&mut out, id);
                 t.completed_us = Some(r.t_us);
                 t.finish = Some(reason);
+            }
+            // Failure retirements terminate the lifecycle without a
+            // `Completed` (they never count as a served request), so
+            // only the finish reason is recorded — `completed_us` stays
+            // `None` and `ttft_split` correctly yields nothing.
+            TraceEvent::RequestFailed { id, .. } => {
+                timeline(&mut out, id).finish = Some(FinishReason::Quarantined);
+            }
+            TraceEvent::DeadlineExpired { id, .. } => {
+                timeline(&mut out, id).finish = Some(FinishReason::DeadlineExpired);
             }
             _ => {}
         }
@@ -370,9 +416,17 @@ pub fn verify_against_metrics(
     let mut tokens = 0usize;
     let mut stalls = Vec::new();
     let mut evictions = 0usize;
+    let mut fault_evictions = 0usize;
     let mut reused = 0usize;
     let mut hits = 0usize;
     let mut completions = 0usize;
+    let mut step_faults = 0usize;
+    let mut slot_faults = 0usize;
+    let mut retries = 0usize;
+    let mut recovered = 0usize;
+    let mut quarantined = 0usize;
+    let mut shed_queued = 0usize;
+    let mut shed_inflight = 0usize;
     for r in records {
         match r.event {
             TraceEvent::TokenDecoded { stall_steps, .. } => {
@@ -382,9 +436,17 @@ pub fn verify_against_metrics(
                 }
             }
             TraceEvent::Evicted { reason: EvictReason::PoolExhausted, .. } => evictions += 1,
+            TraceEvent::Evicted { reason: EvictReason::Fault, .. } => fault_evictions += 1,
             TraceEvent::Admitted { tokens_reused, .. } => reused += tokens_reused,
             TraceEvent::PrefixHit { .. } => hits += 1,
             TraceEvent::Completed { .. } => completions += 1,
+            TraceEvent::FaultInjected { slot: None } => step_faults += 1,
+            TraceEvent::FaultInjected { slot: Some(_) } => slot_faults += 1,
+            TraceEvent::RetryScheduled { .. } => retries += 1,
+            TraceEvent::SlotRecovered { .. } => recovered += 1,
+            TraceEvent::RequestFailed { .. } => quarantined += 1,
+            TraceEvent::DeadlineExpired { queued: true, .. } => shed_queued += 1,
+            TraceEvent::DeadlineExpired { queued: false, .. } => shed_inflight += 1,
             _ => {}
         }
     }
@@ -402,6 +464,22 @@ pub fn verify_against_metrics(
     }
     if hits != m.prefix_hits {
         return Err(format!("trace has {hits} prefix hits, metrics {}", m.prefix_hits));
+    }
+    // The error-kernel plane must re-derive exactly as well: fault events
+    // are decisions, not telemetry.
+    for (name, got, want) in [
+        ("step faults", step_faults, m.step_faults),
+        ("slot faults", slot_faults, m.slot_faults),
+        ("retries scheduled", retries, m.retries_scheduled),
+        ("slots recovered", recovered, m.slots_recovered),
+        ("quarantines", quarantined, m.requests_quarantined),
+        ("fault evictions", fault_evictions, m.requests_fault_evicted),
+        ("queued deadline sheds", shed_queued, m.deadline_shed_queued),
+        ("in-flight deadline sheds", shed_inflight, m.deadline_shed_inflight),
+    ] {
+        if got != want {
+            return Err(format!("trace has {got} {name}, metrics {want}"));
+        }
     }
     let stalls = sorted(stalls);
     let metric_stalls = sorted(m.decode_stall_steps.values().to_vec());
@@ -566,8 +644,9 @@ pub fn chrome_trace(records: &[TraceRecord], dropped_events: u64) -> Json {
                     slot + 1,
                     vec![("ts", json::num(r.t_us)), ("s", json::s("t"))],
                 ));
-                if reason == EvictReason::PoolExhausted {
-                    // Back to the queue front: reopen its queue span.
+                if reason != EvictReason::Cancelled {
+                    // Back to the queue front (pool-exhaustion or fault
+                    // requeue): reopen its queue span.
                     queue_open.insert(id, r.t_us);
                 }
             }
@@ -575,6 +654,53 @@ pub fn chrome_trace(records: &[TraceRecord], dropped_events: u64) -> Json {
                 if let Some((_, phase, t0)) = slot_open.remove(&slot) {
                     events.push(chrome_span(format!("req{id} {phase}"), slot + 1, t0, r.t_us));
                 }
+            }
+            TraceEvent::FaultInjected { slot } => {
+                let tid = slot.map_or(0, |s| s + 1);
+                events.push(chrome_event(
+                    "fault".to_string(),
+                    "i",
+                    tid,
+                    vec![("ts", json::num(r.t_us)), ("s", json::s("t"))],
+                ));
+            }
+            TraceEvent::RequestFailed { id, slot, .. } => {
+                if let Some(s) = slot {
+                    if let Some((oid, phase, t0)) = slot_open.remove(&s) {
+                        events.push(chrome_span(format!("req{oid} {phase}"), s + 1, t0, r.t_us));
+                    }
+                }
+                if let Some(t0) = queue_open.remove(&id) {
+                    events.push(chrome_span(format!("req{id} queued"), 0, t0, r.t_us));
+                }
+                events.push(chrome_event(
+                    format!("req{id} quarantined"),
+                    "i",
+                    slot.map_or(0, |s| s + 1),
+                    vec![("ts", json::num(r.t_us)), ("s", json::s("t"))],
+                ));
+            }
+            TraceEvent::DeadlineExpired { id, queued } => {
+                if let Some(t0) = queue_open.remove(&id) {
+                    events.push(chrome_span(format!("req{id} queued"), 0, t0, r.t_us));
+                }
+                if !queued {
+                    // Mid-flight shed: its slot span is closed by the
+                    // Evicted-free teardown path emitting this event last,
+                    // so find and close the span that names this request.
+                    if let Some((&s, &(oid, phase, t0))) =
+                        slot_open.iter().find(|(_, (oid, _, _))| *oid == id)
+                    {
+                        events.push(chrome_span(format!("req{oid} {phase}"), s + 1, t0, r.t_us));
+                        slot_open.remove(&s);
+                    }
+                }
+                events.push(chrome_event(
+                    format!("req{id} deadline expired"),
+                    "i",
+                    0,
+                    vec![("ts", json::num(r.t_us)), ("s", json::s("t"))],
+                ));
             }
             TraceEvent::StepComposed { decode_lanes, prefill_take, .. } => {
                 events.push(chrome_counter("decode_lanes", r.t_us, decode_lanes as f64));
@@ -744,6 +870,14 @@ mod tests {
         assert!(TraceEvent::StepComposed { decode_lanes: 1, prefill_take: 2, budget: 4 }
             .in_oracle_scope());
         assert!(TraceEvent::PrefixDonated { slot: 0, pages: 1 }.in_oracle_scope());
+        // The error-kernel plane is a scheduler decision stream: all of it
+        // is replayed by the oracle.
+        assert!(TraceEvent::FaultInjected { slot: None }.in_oracle_scope());
+        assert!(TraceEvent::RetryScheduled { slot: Some(1), backoff_steps: 2, attempt: 1 }
+            .in_oracle_scope());
+        assert!(TraceEvent::SlotRecovered { id: 0, slot: 1 }.in_oracle_scope());
+        assert!(TraceEvent::RequestFailed { id: 0, slot: None, faults: 3 }.in_oracle_scope());
+        assert!(TraceEvent::DeadlineExpired { id: 0, queued: true }.in_oracle_scope());
         assert!(!TraceEvent::PageAllocated { block: 0, refcount: 1 }.in_oracle_scope());
         assert!(!TraceEvent::PageRetained { block: 0, refcount: 2 }.in_oracle_scope());
         assert!(!TraceEvent::PageReleased { block: 0, refcount: 0 }.in_oracle_scope());

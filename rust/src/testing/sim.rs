@@ -25,9 +25,16 @@
 //! accounting. It also predicts `max_decode_stall_steps` — the worst
 //! number of engine-call iterations any running slot waited between its
 //! own tokens — for *every* configuration, which is the observable the
-//! composer exists to pin at zero. No engine, no logits, no clocks —
-//! just the admission/join/evict/budget/reuse arithmetic the real
-//! [`crate::serve::Scheduler`] must implement.
+//! composer exists to pin at zero. With `fault_rate > 0` it additionally
+//! models the **seeded fault injector and the scheduler's error kernel**:
+//! the injector's three-draw schedule over every intercepted engine call
+//! (trigger, per-slot-vs-step-wide, victim pick — plus correlated bursts),
+//! per-slot cooldown/quarantine recovery, the step-wide pause and
+//! fault-evict streak, admission (`adopt_prefix`) fault rollback, and
+//! step-counted deadline shedding — so recovery *decisions* are
+//! trace-checked observables too, not just the happy path. No engine, no
+//! logits, no clocks — just the admission/join/evict/budget/reuse/recovery
+//! arithmetic the real [`crate::serve::Scheduler`] must implement.
 //!
 //! The oracle also emits the scheduler's **flight-recorder event stream**
 //! ([`crate::serve::trace::TraceEvent`]) from its bookkeeping — request
@@ -54,6 +61,8 @@
 use std::collections::{BTreeMap, VecDeque};
 
 use crate::serve::trace::{EvictReason, FinishReason, TraceEvent};
+use crate::serve::DEFAULT_RETRY_BUDGET;
+use crate::util::prng::Prng;
 
 /// One generation request, reduced to what the bookkeeping depends on —
 /// plus just enough *content* structure to express shared prompt prefixes:
@@ -66,12 +75,15 @@ pub struct SimRequest {
     pub shared_len: usize,
     pub group: u64,
     pub tag: u64,
+    /// Step-counted deadline (0 = none): the request is shed — queued or
+    /// mid-flight — once `step_index - submit_step >= deadline_steps`.
+    pub deadline_steps: u64,
 }
 
 impl SimRequest {
     /// A request whose content doesn't matter (dense / plain paged traces).
     pub fn plain(prompt_len: usize, max_new: usize) -> Self {
-        Self { prompt_len, max_new, shared_len: 0, group: 0, tag: 0 }
+        Self { prompt_len, max_new, shared_len: 0, group: 0, tag: 0, deadline_steps: 0 }
     }
 
     /// The deterministic prompt bytes both the oracle and the real run
@@ -110,6 +122,16 @@ pub struct SimConfig {
     /// perturbs logit *values*, never admission, paging, or step counts —
     /// so traces must stay exact at any width.
     pub kv_bits: f64,
+    /// Fault probability per intercepted engine call (0.0 = fault-free);
+    /// mirrors [`crate::serve::FaultInjector`]'s schedule exactly.
+    pub fault_rate: f64,
+    /// Seed of the modeled fault schedule.
+    pub fault_seed: u64,
+    /// Correlated-failure burst length (1 = isolated faults).
+    pub fault_burst: usize,
+    /// Faults a request (or step-wide streak) survives before quarantine
+    /// (or warm-restart eviction) — `Scheduler::with_retry_budget`.
+    pub retry_budget: usize,
 }
 
 impl SimConfig {
@@ -125,6 +147,10 @@ impl SimConfig {
             prefix_cache: false,
             step_budget: 0,
             kv_bits: 16.0,
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_burst: 1,
+            retry_budget: DEFAULT_RETRY_BUDGET,
         }
     }
 
@@ -132,6 +158,12 @@ impl SimConfig {
     /// `Scheduler::prefill_guard` exactly.
     fn prefill_guard(budget: usize) -> usize {
         (budget / 4).max(1)
+    }
+
+    /// The error kernel's step-counted backoff — must match
+    /// `Scheduler::backoff` exactly (1, 2, 4, ... capped at 64).
+    fn backoff(attempt: usize) -> u64 {
+        1u64 << attempt.saturating_sub(1).min(6)
     }
 }
 
@@ -170,6 +202,20 @@ pub struct SimResult {
     /// this to `ceil(len/chunk)` during a long prompt; the composer pins
     /// it at 0.
     pub max_decode_stall_steps: usize,
+    /// Fault plane (all zero on fault-free traces): step-wide and per-slot
+    /// engine faults the modeled injector returned, retries the error
+    /// kernel scheduled, slots that recovered on their next successful
+    /// call, requests quarantined at the retry budget, requests evicted by
+    /// a step-wide fault streak, and deadline sheds (queued / mid-flight).
+    /// Mirror the eight `ServingMetrics` fault counters exactly.
+    pub step_faults: usize,
+    pub slot_faults: usize,
+    pub retries: usize,
+    pub recovered: usize,
+    pub quarantined: usize,
+    pub fault_evictions: usize,
+    pub shed_queued: usize,
+    pub shed_inflight: usize,
     /// The oracle's flight-recorder stream: every logical scheduling event
     /// (request lifecycle + composer plans) in emission order, mirroring
     /// what the real scheduler's trace emits — minus the physical page
@@ -197,6 +243,28 @@ struct SimSlot {
     /// Engine-call iterations this slot idled through since its last token
     /// (only ticks while running — mirrors `Active::stall_steps`).
     stall: usize,
+    /// Individual faults charged to this request (quarantine at
+    /// `retry_budget`) — survives evictions, mirrors `Active::faults`.
+    faults: usize,
+    /// Steps left before this slot may rejoin engine calls.
+    cooldown: u64,
+    /// Waiting for its first successful call after a fault.
+    recovering: bool,
+    /// Step the request was submitted on (step deadlines count from here).
+    submit_step: u64,
+}
+
+/// A queued request plus the recovery bookkeeping that rides with it
+/// (mirrors the real scheduler's `Queued` fault fields).
+#[derive(Clone, Copy, Debug)]
+struct SimQueued {
+    id: u64,
+    req: SimRequest,
+    faults: usize,
+    /// Admission is blocked while `step_index < not_before_step` — the
+    /// head on backoff blocks the whole (FIFO) queue.
+    not_before_step: u64,
+    submit_step: u64,
 }
 
 /// One cached page in the oracle's index: its exact token-prefix key, LRU
@@ -212,7 +280,7 @@ struct CacheEntry {
 struct SimState {
     cfg: SimConfig,
     slots: Vec<Option<SimSlot>>,
-    pending: VecDeque<(u64, SimRequest)>,
+    pending: VecDeque<SimQueued>,
     next_id: u64,
     /// Paged: free pages in the pool (refcount 0).
     free_pages: usize,
@@ -220,6 +288,15 @@ struct SimState {
     index: BTreeMap<u64, CacheEntry>,
     next_entry: u64,
     clock: u64,
+    /// Modeled `FaultInjector` schedule: same PRNG, same three draws per
+    /// intercepted call, same burst arming.
+    rng: Prng,
+    burst_left: usize,
+    /// Mirrors `Scheduler::step_index` / `pause_until` /
+    /// `step_fault_streak` — the error kernel's step-counted clock.
+    step_index: u64,
+    pause_until: u64,
+    step_fault_streak: usize,
 }
 
 impl SimState {
@@ -303,8 +380,217 @@ impl SimState {
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.pending.push_back((id, r));
+        self.pending.push_back(SimQueued {
+            id,
+            req: r,
+            faults: 0,
+            not_before_step: 0,
+            submit_step: self.step_index,
+        });
         Some(id)
+    }
+
+    /// Mirror of `FaultInjector::roll`: exactly three schedule draws per
+    /// intercepted engine call — `(fault, per_slot, pick)`. Forced burst
+    /// follow-ups consume their draws too.
+    fn roll(&mut self) -> (bool, bool, f32) {
+        let trigger = (self.rng.uniform() as f64) < self.cfg.fault_rate;
+        let per_slot = self.rng.uniform() < 0.5;
+        let pick = self.rng.uniform();
+        let fault = if self.burst_left > 0 {
+            self.burst_left -= 1;
+            true
+        } else if trigger {
+            self.burst_left = self.cfg.fault_burst.max(1) - 1;
+            true
+        } else {
+            false
+        };
+        (fault, per_slot, pick)
+    }
+
+    /// Mirror of `FaultInjector::decide` for a batch call over `active`
+    /// lanes: `Some(Some(slot))` = per-slot fault, `Some(None)` =
+    /// step-wide, `None` = the call succeeds. Fault-free configurations
+    /// consume no draws (the real run uses no injector then).
+    fn decide(&mut self, active: &[bool]) -> Option<Option<usize>> {
+        if self.cfg.fault_rate <= 0.0 {
+            return None;
+        }
+        let (fault, per_slot, pick) = self.roll();
+        if !fault {
+            return None;
+        }
+        let victims: Vec<usize> = (0..active.len()).filter(|&b| active[b]).collect();
+        if per_slot && !victims.is_empty() {
+            let k = ((pick * victims.len() as f32) as usize).min(victims.len() - 1);
+            Some(Some(victims[k]))
+        } else {
+            Some(None)
+        }
+    }
+
+    /// Mirror of `FaultInjector::decide_adopt`: an `adopt_prefix` call is
+    /// always blamed on the adopting slot (draws 2 and 3 consumed and
+    /// ignored).
+    fn decide_adopt(&mut self) -> bool {
+        if self.cfg.fault_rate <= 0.0 {
+            return false;
+        }
+        self.roll().0
+    }
+
+    /// Mirror of `Scheduler::retire_failed`: free the slot, count the
+    /// terminal outcome — but emit no `Completed` event (failures have
+    /// their own records, emitted by the caller).
+    fn retire_failed(&mut self, b: usize, res: &mut SimResult) {
+        let s = self.slots[b].take().expect("retiring an occupied slot");
+        self.release_slot_pages(&s);
+        res.completion_order.push(s.id);
+        res.generated.insert(s.id, s.gen);
+    }
+
+    /// Mirror of `Scheduler::evict_for_fault`: warm-restart eviction to
+    /// the queue front after a step-wide fault streak — the request keeps
+    /// its individual fault charge and is re-admissible immediately.
+    fn evict_for_fault(&mut self, b: usize, res: &mut SimResult) {
+        let s = self.slots[b].take().expect("fault-evicting an occupied slot");
+        self.release_slot_pages(&s);
+        res.fault_evictions += 1;
+        res.events.push(TraceEvent::Evicted { id: s.id, slot: b, reason: EvictReason::Fault });
+        self.pending.push_front(SimQueued {
+            id: s.id,
+            req: s.req,
+            faults: s.faults,
+            not_before_step: 0,
+            submit_step: s.submit_step,
+        });
+    }
+
+    /// Mirror of `Scheduler::handle_fault`: `fault` is `Some(slot)`
+    /// (per-slot) or `None` (step-wide); `participants` marks the lanes of
+    /// the abandoned call. Nothing advanced — not advancing the
+    /// bookkeeping *is* the rollback.
+    fn handle_fault(
+        &mut self,
+        fault: Option<usize>,
+        participants: &[bool],
+        res: &mut SimResult,
+    ) {
+        match fault {
+            Some(slot) => {
+                res.slot_faults += 1;
+                res.events.push(TraceEvent::FaultInjected { slot: Some(slot) });
+                let s = self.slots[slot].as_mut().expect("blamed slot is occupied");
+                s.faults += 1;
+                let attempt = s.faults;
+                let id = s.id;
+                if attempt >= self.cfg.retry_budget {
+                    res.quarantined += 1;
+                    res.events.push(TraceEvent::RequestFailed {
+                        id,
+                        slot: Some(slot),
+                        faults: attempt,
+                    });
+                    self.retire_failed(slot, res);
+                } else {
+                    let backoff = SimConfig::backoff(attempt);
+                    let s = self.slots[slot].as_mut().expect("occupied");
+                    s.cooldown = backoff;
+                    s.recovering = true;
+                    res.retries += 1;
+                    res.events.push(TraceEvent::RetryScheduled {
+                        slot: Some(slot),
+                        backoff_steps: backoff as usize,
+                        attempt,
+                    });
+                }
+            }
+            None => {
+                res.step_faults += 1;
+                res.events.push(TraceEvent::FaultInjected { slot: None });
+                self.step_fault_streak += 1;
+                let attempt = self.step_fault_streak;
+                if attempt >= self.cfg.retry_budget {
+                    self.step_fault_streak = 0;
+                    // Descending slot order, so the queue ends up in
+                    // ascending slot order — same as the real kernel.
+                    for b in (0..participants.len()).rev() {
+                        if participants[b] && self.slots[b].is_some() {
+                            self.evict_for_fault(b, res);
+                        }
+                    }
+                } else {
+                    let backoff = SimConfig::backoff(attempt);
+                    self.pause_until = self.step_index + 1 + backoff;
+                    for b in 0..participants.len() {
+                        if participants[b] {
+                            if let Some(s) = self.slots[b].as_mut() {
+                                s.recovering = true;
+                            }
+                        }
+                    }
+                    res.retries += 1;
+                    res.events.push(TraceEvent::RetryScheduled {
+                        slot: None,
+                        backoff_steps: backoff as usize,
+                        attempt,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Mirror of `Scheduler::note_engine_success`: a successful call
+    /// resets the step-wide streak and recovers its waiting participants
+    /// (ascending slot order).
+    fn note_success(&mut self, participants: &[bool], res: &mut SimResult) {
+        self.step_fault_streak = 0;
+        for b in 0..participants.len() {
+            if !participants[b] {
+                continue;
+            }
+            if let Some(s) = self.slots[b].as_mut() {
+                if s.recovering {
+                    s.recovering = false;
+                    res.recovered += 1;
+                    res.events.push(TraceEvent::SlotRecovered { id: s.id, slot: b });
+                }
+            }
+        }
+    }
+
+    /// Mirror of `Scheduler::shed_expired`: queued requests first (in
+    /// queue order), then mid-flight slots (ascending). Runs before the
+    /// pause gate — deadlines fire even while the engine backs off.
+    fn shed_expired(&mut self, res: &mut SimResult) {
+        let mut i = 0;
+        while i < self.pending.len() {
+            let q = self.pending[i];
+            if q.req.deadline_steps > 0
+                && self.step_index.saturating_sub(q.submit_step) >= q.req.deadline_steps
+            {
+                self.pending.remove(i).expect("index in range");
+                res.shed_queued += 1;
+                res.events.push(TraceEvent::DeadlineExpired { id: q.id, queued: true });
+                res.completion_order.push(q.id);
+                res.generated.insert(q.id, 0);
+            } else {
+                i += 1;
+            }
+        }
+        for b in 0..self.cfg.slots {
+            let expired = self.slots[b].as_ref().is_some_and(|s| {
+                s.req.deadline_steps > 0
+                    && self.step_index.saturating_sub(s.submit_step) >= s.req.deadline_steps
+            });
+            if expired {
+                let id = self.slots[b].as_ref().expect("checked above").id;
+                res.shed_inflight += 1;
+                res.events.push(TraceEvent::DeadlineExpired { id, queued: false });
+                self.retire_failed(b, res);
+            }
+        }
     }
 
     /// Drop a slot's page references: exclusive pages free, index entries
@@ -317,7 +603,7 @@ impl SimState {
     }
 
     fn cancel(&mut self, id: u64, res: &mut SimResult) -> bool {
-        if let Some(i) = self.pending.iter().position(|(pid, _)| *pid == id) {
+        if let Some(i) = self.pending.iter().position(|q| q.id == id) {
             self.pending.remove(i);
             return true;
         }
@@ -339,7 +625,11 @@ impl SimState {
     fn admit(&mut self, res: &mut SimResult) {
         while !self.pending.is_empty() {
             let Some(b) = self.slots.iter().position(|s| s.is_none()) else { break };
-            let (_, r) = *self.pending.front().expect("non-empty");
+            // A head on fault backoff blocks the (FIFO) queue.
+            if self.pending.front().expect("non-empty").not_before_step > self.step_index {
+                break;
+            }
+            let r = self.pending.front().expect("non-empty").req;
             let (matched, cached) = if self.paged() && self.cfg.prefix_cache {
                 let m = self.lookup_touch(&r.prompt());
                 let cached = m.len() * self.cfg.block_size;
@@ -362,7 +652,8 @@ impl SimState {
                     break;
                 }
             }
-            let (id, r) = self.pending.pop_front().expect("non-empty");
+            let q = self.pending.pop_front().expect("non-empty");
+            let (id, r) = (q.id, q.req);
             let own_pages = if self.paged() {
                 // First writable page claimed now (watermark guarantees
                 // needed_fresh >= 1 is claimable).
@@ -371,6 +662,45 @@ impl SimState {
             } else {
                 0
             };
+            // A nonzero cached prefix means the real scheduler calls
+            // `adopt_prefix` — an intercepted call the injector may fail.
+            // On a fault the admission rolls back completely (the claimed
+            // page frees, the prefix refcounts drop; LRU touches and any
+            // page-claim eviction persist) and the request is requeued at
+            // the front on backoff, or quarantined at the budget.
+            if cached > 0 && self.decide_adopt() {
+                self.free_pages += own_pages;
+                for eid in &matched {
+                    self.index.get_mut(eid).expect("matched").slot_refs -= 1;
+                }
+                res.slot_faults += 1;
+                res.events.push(TraceEvent::FaultInjected { slot: Some(b) });
+                let attempt = q.faults + 1;
+                if attempt >= self.cfg.retry_budget {
+                    res.quarantined += 1;
+                    res.events.push(TraceEvent::RequestFailed {
+                        id,
+                        slot: Some(b),
+                        faults: attempt,
+                    });
+                    res.completion_order.push(id);
+                    res.generated.insert(id, 0);
+                } else {
+                    let backoff = SimConfig::backoff(attempt);
+                    res.retries += 1;
+                    res.events.push(TraceEvent::RetryScheduled {
+                        slot: Some(b),
+                        backoff_steps: backoff as usize,
+                        attempt,
+                    });
+                    self.pending.push_front(SimQueued {
+                        faults: attempt,
+                        not_before_step: self.step_index + backoff,
+                        ..q
+                    });
+                }
+                continue;
+            }
             res.tokens_reused += cached;
             // Mirror of the scheduler's Admitted emission: end-to-end page
             // demand minus the whole pages the prefix cache mapped.
@@ -395,6 +725,10 @@ impl SimState {
                 own_pages,
                 refs: matched,
                 stall: 0,
+                faults: q.faults,
+                cooldown: 0,
+                recovering: false,
+                submit_step: q.submit_step,
             });
         }
     }
@@ -427,7 +761,13 @@ impl SimState {
             slot: victim,
             reason: EvictReason::PoolExhausted,
         });
-        self.pending.push_front((s.id, s.req));
+        self.pending.push_front(SimQueued {
+            id: s.id,
+            req: s.req,
+            faults: s.faults,
+            not_before_step: 0,
+            submit_step: s.submit_step,
+        });
     }
 
     /// Mirror of `Scheduler::grow_or_evict`: grow slot `b` to cover
@@ -480,30 +820,60 @@ impl SimState {
         }
     }
 
-    /// Mirror of `Scheduler::step`: admit, then — with a step budget — one
-    /// composed decode-priority iteration, otherwise one prefill call or
-    /// one decode step; retire finished slots in slot order.
+    /// Mirror of `Scheduler::step`: tick the step clock (cooldowns, pause,
+    /// deadlines — all counted in steps, never wall clock), shed expired
+    /// requests, then admit and — with a step budget — one composed
+    /// decode-priority iteration, otherwise one prefill call or one decode
+    /// step; retire finished slots in slot order. Every modeled engine
+    /// call first consults the modeled injector: a faulted call advances
+    /// nothing and routes through the mirrored error kernel instead.
     fn step(&mut self, res: &mut SimResult) {
+        // The harness records occupancy after every step that did not
+        // *start* idle — mirror that from the same pre-step snapshot (a
+        // queue head on fault backoff keeps the scheduler non-idle even
+        // when nothing runs).
+        let was_idle = self.is_idle();
+        self.step_index += 1;
+        for s in self.slots.iter_mut().flatten() {
+            if s.cooldown > 0 {
+                s.cooldown -= 1;
+            }
+        }
+        self.shed_expired(res);
+        if self.step_index < self.pause_until {
+            // Step-wide backoff: the engine is left alone this step.
+            if !was_idle {
+                res.occupancy.push((self.occupied(), self.pending.len()));
+            }
+            return;
+        }
         self.admit(res);
         let chunk = self.cfg.prefill_chunk.max(1);
         // Running snapshot, taken (like the real scheduler's) before any
-        // growth can evict a slot.
+        // growth can evict a slot; cooling slots are excluded — they join
+        // no engine call until their backoff expires.
         let running: Vec<bool> = self
             .slots
             .iter()
-            .map(|s| s.as_ref().map_or(false, |s| s.fed >= s.req.prompt_len))
+            .map(|s| {
+                s.as_ref().is_some_and(|s| s.fed >= s.req.prompt_len && s.cooldown == 0)
+            })
             .collect();
         if self.cfg.step_budget > 0 {
-            self.composed_step(chunk, &running, res);
+            self.composed_step(chunk, &running, was_idle, res);
             return;
         }
-        let owes = |s: &Option<SimSlot>| s.as_ref().map_or(false, |s| s.fed < s.req.prompt_len);
+        let owes = |s: &Option<SimSlot>| {
+            s.as_ref().is_some_and(|s| s.cooldown == 0 && s.fed < s.req.prompt_len)
+        };
         let prefilling = chunk > 1 && self.slots.iter().any(owes);
         if prefilling {
             if self.paged() {
                 for b in 0..self.cfg.slots {
                     let take = match self.slots[b].as_ref() {
-                        Some(s) if s.fed < s.req.prompt_len => chunk.min(s.req.prompt_len - s.fed),
+                        Some(s) if s.cooldown == 0 && s.fed < s.req.prompt_len => {
+                            chunk.min(s.req.prompt_len - s.fed)
+                        }
                         _ => continue,
                     };
                     let target = self.slots[b].as_ref().expect("occupied").pos + take;
@@ -517,13 +887,15 @@ impl SimState {
                     return;
                 }
             }
-            res.prefill_calls += 1;
             // The real scheduler emits every PrefillChunk while *building*
             // the batched call, then processes the results — two passes, so
-            // the oracle's emissions must split the same way.
+            // the oracle's emissions must split the same way. On a fault
+            // the build-time events stay and the processing never runs.
+            let mut pactive = vec![false; self.cfg.slots];
             for b in 0..self.cfg.slots {
                 if let Some(s) = self.slots[b].as_ref() {
-                    if s.fed < s.req.prompt_len {
+                    if s.cooldown == 0 && s.fed < s.req.prompt_len {
+                        pactive[b] = true;
                         let take = chunk.min(s.req.prompt_len - s.fed);
                         res.events.push(TraceEvent::PrefillChunk {
                             id: s.id,
@@ -534,7 +906,17 @@ impl SimState {
                     }
                 }
             }
+            if let Some(fault) = self.decide(&pactive) {
+                self.handle_fault(fault, &pactive, res);
+                res.occupancy.push((self.occupied(), self.pending.len()));
+                return;
+            }
+            res.prefill_calls += 1;
+            self.note_success(&pactive, res);
             for b in 0..self.cfg.slots {
+                if !pactive[b] {
+                    continue;
+                }
                 let advanced = match self.slots[b].as_mut() {
                     Some(s) if s.fed < s.req.prompt_len => {
                         let take = chunk.min(s.req.prompt_len - s.fed);
@@ -584,21 +966,41 @@ impl SimState {
         } else {
             if self.paged() {
                 for b in 0..self.cfg.slots {
-                    if let Some(pos) = self.slots[b].as_ref().map(|s| s.pos) {
-                        self.grow_or_evict(b, pos + 1, res);
-                    }
+                    // Cooling slots are skipped by `grow_for_decode` too.
+                    let pos = match self.slots[b].as_ref() {
+                        Some(s) if s.cooldown == 0 => s.pos,
+                        _ => continue,
+                    };
+                    self.grow_or_evict(b, pos + 1, res);
                 }
             }
             if self.occupied() == 0 {
-                // The real scheduler returns without an engine call (and
-                // without recording occupancy) when nothing is in flight.
+                // The real scheduler returns without an engine call; the
+                // harness records occupancy only if the step started
+                // non-idle (possible with a queue head on backoff).
+                if !was_idle {
+                    res.occupancy.push((self.occupied(), self.pending.len()));
+                }
                 return;
             }
-            res.decode_steps += 1;
+            let dactive: Vec<bool> = self
+                .slots
+                .iter()
+                .map(|s| s.as_ref().is_some_and(|s| s.cooldown == 0))
+                .collect();
+            if !dactive.iter().any(|&a| a) {
+                // Every occupied slot is cooling: no engine call runs this
+                // step (the real decode pass bails before calling).
+                res.occupancy.push((self.occupied(), self.pending.len()));
+                return;
+            }
             // Pre-call pass, mirroring the real batch-build loop: a warming
             // lane on the interleaved path feeds one prompt token per call —
             // a PrefillChunk of take 1, emitted before any result lands.
             for b in 0..self.cfg.slots {
+                if !dactive[b] {
+                    continue;
+                }
                 if let Some(s) = self.slots[b].as_ref() {
                     if s.fed < s.req.prompt_len {
                         res.events.push(TraceEvent::PrefillChunk {
@@ -610,7 +1012,17 @@ impl SimState {
                     }
                 }
             }
+            if let Some(fault) = self.decide(&dactive) {
+                self.handle_fault(fault, &dactive, res);
+                res.occupancy.push((self.occupied(), self.pending.len()));
+                return;
+            }
+            res.decode_steps += 1;
+            self.note_success(&dactive, res);
             for b in 0..self.cfg.slots {
+                if !dactive[b] {
+                    continue;
+                }
                 let advanced = match self.slots[b].as_mut() {
                     Some(s) => {
                         let old_pos = s.pos;
@@ -666,16 +1078,32 @@ impl SimState {
     /// whole decode set, then fill what remains of the budget (floored by
     /// the starvation guard) with prefill takes in slot order. Growth runs
     /// decode slots first; an eviction drops its slot from the fixed plan.
-    fn composed_step(&mut self, chunk: usize, running: &[bool], res: &mut SimResult) {
+    /// A fault on the decode call abandons the whole step (the planned
+    /// prefill included); a fault on the prefill call keeps the decode
+    /// half's results — exactly the real composer's two hazard points.
+    fn composed_step(
+        &mut self,
+        chunk: usize,
+        running: &[bool],
+        was_idle: bool,
+        res: &mut SimResult,
+    ) {
         if self.occupied() == 0 {
-            // Idle (a pending-but-unadmittable queue is impossible here:
-            // with every slot free the watermark always passes).
+            // No engine call; occupancy recorded only if the step started
+            // non-idle (possible with a queue head on fault backoff — with
+            // every slot free the watermark itself always passes).
+            if !was_idle {
+                res.occupancy.push((self.occupied(), self.pending.len()));
+            }
             return;
         }
         let budget = self.cfg.step_budget;
         let decode_tokens = running.iter().filter(|&&r| r).count();
-        let any_warming =
-            self.slots.iter().any(|s| s.as_ref().map_or(false, |s| s.fed < s.req.prompt_len));
+        // Cooling slots sit the step out entirely: not in the decode set
+        // (the running snapshot excluded them), not prefill candidates.
+        let any_warming = self.slots.iter().any(|s| {
+            s.as_ref().is_some_and(|s| s.cooldown == 0 && s.fed < s.req.prompt_len)
+        });
         let mut prefill_left = if any_warming {
             budget.saturating_sub(decode_tokens).max(SimConfig::prefill_guard(budget))
         } else {
@@ -687,7 +1115,7 @@ impl SimState {
                 break;
             }
             if let Some(s) = self.slots[b].as_ref() {
-                if s.fed < s.req.prompt_len {
+                if s.cooldown == 0 && s.fed < s.req.prompt_len {
                     let take = chunk.min(s.req.prompt_len - s.fed).min(prefill_left);
                     takes[b] = take;
                     prefill_left -= take;
@@ -719,9 +1147,18 @@ impl SimState {
             }
         }
         // -- decode call over the surviving decode set.
-        let any_d = (0..self.cfg.slots).any(|b| running[b] && self.slots[b].is_some());
-        if any_d {
+        let dactive: Vec<bool> =
+            (0..self.cfg.slots).map(|b| running[b] && self.slots[b].is_some()).collect();
+        if dactive.iter().any(|&a| a) {
+            if let Some(fault) = self.decide(&dactive) {
+                // Nothing advanced; the planned prefill half is abandoned
+                // with the rest of the step.
+                self.handle_fault(fault, &dactive, res);
+                res.occupancy.push((self.occupied(), self.pending.len()));
+                return;
+            }
             res.decode_steps += 1;
+            self.note_success(&dactive, res);
             for b in 0..self.cfg.slots {
                 if !running[b] {
                     continue;
@@ -769,13 +1206,14 @@ impl SimState {
             }
         }
         // -- at most one prefill call over the surviving planned takes.
-        let any_p = (0..self.cfg.slots).any(|b| takes[b] > 0 && self.slots[b].is_some());
-        if any_p {
-            res.prefill_calls += 1;
+        let pactive: Vec<bool> =
+            (0..self.cfg.slots).map(|b| takes[b] > 0 && self.slots[b].is_some()).collect();
+        if pactive.iter().any(|&a| a) {
             // Pre-call pass: every surviving planned take is announced
-            // before any result is processed (the real batch-build loop).
+            // before any result is processed (the real batch-build loop);
+            // on a fault the announcements stay, the results never land.
             for b in 0..self.cfg.slots {
-                if takes[b] == 0 {
+                if !pactive[b] {
                     continue;
                 }
                 if let Some(s) = self.slots[b].as_ref() {
@@ -787,6 +1225,15 @@ impl SimState {
                     });
                 }
             }
+            if let Some(fault) = self.decide(&pactive) {
+                // The decode half already ran and retired; only the
+                // prefill half is abandoned.
+                self.handle_fault(fault, &pactive, res);
+                res.occupancy.push((self.occupied(), self.pending.len()));
+                return;
+            }
+            res.prefill_calls += 1;
+            self.note_success(&pactive, res);
             for b in 0..self.cfg.slots {
                 if takes[b] == 0 {
                     continue;
@@ -842,6 +1289,11 @@ pub fn simulate(cfg: &SimConfig, events: &[SimEvent]) -> SimResult {
         index: BTreeMap::new(),
         next_entry: 0,
         clock: 0,
+        rng: Prng::new(cfg.fault_seed),
+        burst_left: 0,
+        step_index: 0,
+        pause_until: 0,
+        step_fault_streak: 0,
     };
     let mut res = SimResult::default();
     for ev in events {
@@ -869,7 +1321,7 @@ pub fn simulate(cfg: &SimConfig, events: &[SimEvent]) -> SimResult {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::{GenRequest, MockEngine, Scheduler};
+    use crate::serve::{DecodeEngine, FaultInjector, GenRequest, MockEngine, Scheduler};
     use crate::testing::prop::{forall, Gen};
     use std::collections::BTreeMap;
 
@@ -890,14 +1342,54 @@ mod tests {
         s
     }
 
-    /// Drive the REAL scheduler (over MockEngine) through the same trace
-    /// the oracle saw, collecting the same observables — including the
-    /// flight-recorder event stream, filtered to the logical (oracle-scope)
-    /// events for exact sequence comparison.
-    fn run_real(cfg: &SimConfig, events: &[SimEvent]) -> SimResult {
-        let mut s = build_scheduler(cfg).with_trace(1 << 16);
+    /// A paged-mode scheduler over a `FaultInjector`-wrapped engine,
+    /// configured from the same `SimConfig` knobs the oracle models.
+    fn build_fault_scheduler(cfg: &SimConfig) -> Scheduler<FaultInjector<MockEngine>> {
+        let mut engine = MockEngine::new(cfg.slots, cfg.max_seq, 64)
+            .with_prefill_chunk(cfg.prefill_chunk)
+            .with_kv_bits(cfg.kv_bits as f32);
+        if cfg.kv_blocks > 0 {
+            engine = engine.with_block_pool(cfg.kv_blocks, cfg.block_size);
+        }
+        let injector =
+            FaultInjector::new(engine, cfg.fault_seed, cfg.fault_rate).with_burst(cfg.fault_burst);
+        let mut s = Scheduler::new(injector, cfg.max_queue).expect("scheduler");
+        if cfg.prefix_cache {
+            s = s.with_prefix_cache().expect("prefix cache over a paged engine");
+        }
+        if cfg.step_budget > 0 {
+            s = s.with_step_budget(cfg.step_budget).expect("budget over a prefill engine");
+        }
+        s.with_retry_budget(cfg.retry_budget).expect("retry budget")
+    }
+
+    /// Build the `GenRequest` a `SimEvent::Submit` maps to on the real
+    /// scheduler (greedy path; deadlines carried over step-counted).
+    fn real_request(r: &SimRequest) -> GenRequest {
+        let req = GenRequest::greedy(&r.prompt(), r.max_new);
+        if r.deadline_steps > 0 {
+            req.with_deadline_steps(r.deadline_steps)
+        } else {
+            req
+        }
+    }
+
+    /// Drive a REAL scheduler through the same trace the oracle saw,
+    /// collecting the same observables — including the flight-recorder
+    /// event stream, filtered to the logical (oracle-scope) events for
+    /// exact sequence comparison. Generic over the engine so the chaos
+    /// suites run the identical harness over a `FaultInjector`-wrapped
+    /// `MockEngine`; `counts` reads the underlying mock's call counters
+    /// (which only delegated — non-faulted — calls increment). The full
+    /// bookkeeping audit runs after every step, so any run through this
+    /// harness is also a failure-atomicity check.
+    fn drive_real<E: DecodeEngine>(
+        mut s: Scheduler<E>,
+        events: &[SimEvent],
+        counts: impl Fn(&Scheduler<E>) -> (usize, usize),
+    ) -> SimResult {
         let mut res = SimResult::default();
-        let record = |s: &mut Scheduler<MockEngine>, res: &mut SimResult| {
+        let record = |s: &mut Scheduler<E>, res: &mut SimResult| {
             let was_idle = s.is_idle();
             let done = s.step().expect("step");
             for c in done {
@@ -907,11 +1399,12 @@ mod tests {
             if !was_idle {
                 res.occupancy.push((s.in_flight(), s.queue_depth()));
             }
+            s.check_invariants().expect("bookkeeping invariants after step");
         };
         for ev in events {
             match ev {
                 SimEvent::Submit(r) => {
-                    res.submits.push(s.submit(GenRequest::greedy(&r.prompt(), r.max_new)).ok());
+                    res.submits.push(s.submit(real_request(r)).ok());
                 }
                 SimEvent::Cancel(id) => {
                     res.cancels.push(s.cancel(*id).expect("cancel"));
@@ -922,11 +1415,20 @@ mod tests {
         while !s.is_idle() {
             record(&mut s, &mut res);
         }
-        res.decode_steps = s.engine().steps;
-        res.prefill_calls = s.engine().prefill_calls;
+        let (decode_steps, prefill_calls) = counts(&s);
+        res.decode_steps = decode_steps;
+        res.prefill_calls = prefill_calls;
         res.evictions = s.metrics.requests_evicted;
         res.tokens_reused = s.metrics.tokens_reused;
         res.max_decode_stall_steps = s.metrics.max_decode_stall_steps();
+        res.step_faults = s.metrics.step_faults;
+        res.slot_faults = s.metrics.slot_faults;
+        res.retries = s.metrics.retries_scheduled;
+        res.recovered = s.metrics.slots_recovered;
+        res.quarantined = s.metrics.requests_quarantined;
+        res.fault_evictions = s.metrics.requests_fault_evicted;
+        res.shed_queued = s.metrics.deadline_shed_queued;
+        res.shed_inflight = s.metrics.deadline_shed_inflight;
         assert_eq!(
             s.trace_dropped_events(),
             0,
@@ -939,6 +1441,18 @@ mod tests {
             .filter(TraceEvent::in_oracle_scope)
             .collect();
         res
+    }
+
+    fn run_real(cfg: &SimConfig, events: &[SimEvent]) -> SimResult {
+        if cfg.fault_rate > 0.0 {
+            let s = build_fault_scheduler(cfg).with_trace(1 << 16);
+            drive_real(s, events, |s| {
+                (s.engine().inner().steps, s.engine().inner().prefill_calls)
+            })
+        } else {
+            let s = build_scheduler(cfg).with_trace(1 << 16);
+            drive_real(s, events, |s| (s.engine().steps, s.engine().prefill_calls))
+        }
     }
 
     fn random_events(g: &mut Gen, cfg: &SimConfig) -> Vec<SimEvent> {
@@ -993,6 +1507,10 @@ mod tests {
             prefix_cache: false,
             step_budget: 0,
             kv_bits: *g.pick(&[4.0, 8.0, 16.0]),
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_burst: 1,
+            retry_budget: DEFAULT_RETRY_BUDGET,
         };
         let events = random_events(g, &cfg);
         (cfg, events)
@@ -1009,6 +1527,7 @@ mod tests {
             shared_len: g.int(0, prompt_len),
             group: g.int(0, 2) as u64,
             tag: g.int(0, 40) as u64,
+            deadline_steps: 0,
         })
     }
 
@@ -1029,6 +1548,10 @@ mod tests {
             prefix_cache: true,
             step_budget: 0,
             kv_bits: *g.pick(&[4.0, 8.0, 16.0]),
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_burst: 1,
+            retry_budget: DEFAULT_RETRY_BUDGET,
         };
         let n_events = g.int(4, 40);
         let mut events = Vec::with_capacity(n_events);
@@ -1080,6 +1603,10 @@ mod tests {
             prefix_cache: paged && g.bool(),
             step_budget: budget,
             kv_bits: *g.pick(&[4.0, 8.0, 16.0]),
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_burst: 1,
+            retry_budget: DEFAULT_RETRY_BUDGET,
         };
         let n_events = g.int(4, 40);
         let mut events = Vec::with_capacity(n_events);
@@ -1134,6 +1661,10 @@ mod tests {
             prefix_cache: paged && g.bool(),
             step_budget: *g.pick(&[1usize, 2, 4, 8, 16]),
             kv_bits: *g.pick(&[4.0, 8.0, 16.0]),
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_burst: 1,
+            retry_budget: DEFAULT_RETRY_BUDGET,
         };
         let off_cfg = SimConfig { step_budget: 0, ..on_cfg };
         let n_events = g.int(4, 30);
@@ -1232,6 +1763,35 @@ mod tests {
                 real.max_decode_stall_steps, oracle.max_decode_stall_steps
             ));
         }
+        // Recovery decisions are observables too: the eight fault/retry/
+        // recovery/shed counters must match the modeled error kernel
+        // exactly (all zero on fault-free, deadline-free traces).
+        let real_fault = (
+            real.step_faults,
+            real.slot_faults,
+            real.retries,
+            real.recovered,
+            real.quarantined,
+            real.fault_evictions,
+            real.shed_queued,
+            real.shed_inflight,
+        );
+        let oracle_fault = (
+            oracle.step_faults,
+            oracle.slot_faults,
+            oracle.retries,
+            oracle.recovered,
+            oracle.quarantined,
+            oracle.fault_evictions,
+            oracle.shed_queued,
+            oracle.shed_inflight,
+        );
+        if real_fault != oracle_fault {
+            return Err(format!(
+                "{cfg:?}: fault counters (step, slot, retries, recovered, quarantined, \
+                 evicted, shed_q, shed_f) {real_fault:?} vs oracle {oracle_fault:?}"
+            ));
+        }
         // Event-stream equivalence: the real scheduler's flight-recorder
         // stream (oracle-scope events only) must equal the oracle's event
         // by event — exact sequence, not just aggregate counts. Report the
@@ -1255,7 +1815,9 @@ mod tests {
         // THE composer latency guarantee, enforced on every budgeted
         // trace: no running slot ever waits more than ceil(chunk/B) steps
         // between its own tokens (decode priority actually pins it at 0).
-        if cfg.step_budget > 0 {
+        // Injected faults abandon whole composed steps, so the bound only
+        // binds on fault-free traces.
+        if cfg.step_budget > 0 && cfg.fault_rate == 0.0 {
             let bound = cfg.prefill_chunk.div_ceil(cfg.step_budget);
             if real.max_decode_stall_steps > bound {
                 return Err(format!(
@@ -1330,6 +1892,10 @@ mod tests {
             prefix_cache: true,
             step_budget,
             kv_bits: *g.pick(&[4.0, 8.0, 16.0]),
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_burst: 1,
+            retry_budget: DEFAULT_RETRY_BUDGET,
         };
         let off_cfg = SimConfig { prefix_cache: false, ..on_cfg };
         let n_events = g.int(4, 30);
@@ -1393,6 +1959,170 @@ mod tests {
             collect(s.step().expect("step"), &mut out);
         }
         out
+    }
+
+    /// Chaos trace: a paged / prefix / composer shape with the seeded
+    /// injector armed at `rate` and roughly a quarter of submits carrying
+    /// a step-counted deadline — so fault recovery, deadline shedding,
+    /// eviction and the prefix cache all interleave on one trace.
+    fn random_fault_trace(g: &mut Gen, rate: f64) -> (SimConfig, Vec<SimEvent>) {
+        let (mut cfg, mut events) = match g.int(0, 2) {
+            0 => random_paged_trace(g),
+            1 => random_prefix_trace(g),
+            _ => random_composer_trace(g),
+        };
+        cfg.fault_rate = rate;
+        cfg.fault_seed = g.int(0, 1 << 30) as u64;
+        cfg.fault_burst = *g.pick(&[1usize, 1, 2, 3]);
+        cfg.retry_budget = *g.pick(&[1usize, 2, 3, 4]);
+        for ev in events.iter_mut() {
+            if let SimEvent::Submit(r) = ev {
+                if g.int(0, 3) == 0 {
+                    r.deadline_steps = g.int(1, 30) as u64;
+                }
+            }
+        }
+        (cfg, events)
+    }
+
+    fn check_fault_equivalence(g: &mut Gen, rate: f64) -> Result<(), String> {
+        let (cfg, events) = random_fault_trace(g, rate);
+        check_trace(&cfg, &events)
+    }
+
+    /// Drive a real scheduler to drain, collecting `(bytes, reason)` per
+    /// terminated request, failing on a double termination and auditing
+    /// the full bookkeeping invariants after every step.
+    fn collect_fault_run<E: DecodeEngine>(
+        mut s: Scheduler<E>,
+        events: &[SimEvent],
+    ) -> Result<BTreeMap<u64, (Vec<u8>, FinishReason)>, String> {
+        let mut out = BTreeMap::new();
+        let drain = |s: &mut Scheduler<E>,
+                     out: &mut BTreeMap<u64, (Vec<u8>, FinishReason)>|
+         -> Result<(), String> {
+            for c in s.step().map_err(|e| format!("step failed: {e}"))? {
+                if out.insert(c.id, (c.completion, c.reason)).is_some() {
+                    return Err(format!("request {} terminated twice", c.id));
+                }
+            }
+            s.check_invariants().map_err(|e| format!("invariants broke: {e}"))
+        };
+        for ev in events {
+            match ev {
+                SimEvent::Submit(r) => {
+                    // Seeded sampling keyed off the tag: a warm restart
+                    // after a fault eviction must regenerate the same
+                    // bytes or the identity check below catches it.
+                    let req = GenRequest::sampled(
+                        &r.prompt(),
+                        r.max_new,
+                        crate::serve::Sampler::top_k(8, 0.9),
+                        r.tag,
+                    );
+                    let _ = s.submit(req);
+                }
+                SimEvent::Cancel(id) => {
+                    let _ = s.cancel(*id);
+                }
+                SimEvent::Step => drain(&mut s, &mut out)?,
+            }
+        }
+        while !s.is_idle() {
+            drain(&mut s, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    fn fault_completions_by_id(
+        cfg: &SimConfig,
+        events: &[SimEvent],
+    ) -> Result<BTreeMap<u64, (Vec<u8>, FinishReason)>, String> {
+        if cfg.fault_rate > 0.0 {
+            collect_fault_run(build_fault_scheduler(cfg), events)
+        } else {
+            collect_fault_run(build_scheduler(cfg), events)
+        }
+    }
+
+    /// THE fault-recovery acceptance property (oracle-independent, real
+    /// scheduler only): on a no-cancel, no-backpressure, no-deadline
+    /// trace (so ids line up run to run), (a) the bookkeeping invariants
+    /// hold after every step of the faulty run, (b) no request terminates
+    /// twice and none is lost, and (c) every request that *survives* the
+    /// faults — finishes with a success reason — produces bytes identical
+    /// to the fault-free run: recovery replays, it never corrupts.
+    fn check_fault_survivors_bit_identical(g: &mut Gen) -> Result<(), String> {
+        let rate = *g.pick(&[0.01f64, 0.05]);
+        let slots = g.int(1, 4);
+        let max_seq = g.int(8, 48);
+        let paged = g.bool();
+        let block_size = *g.pick(&[2usize, 4, 8]);
+        let full = slots * max_seq.div_ceil(block_size);
+        let step_budget = *g.pick(&[0usize, 0, 2, 4]);
+        let chunk = if step_budget > 0 {
+            *g.pick(&[2usize, 4, 8])
+        } else {
+            *g.pick(&[1usize, 2, 4, 8])
+        };
+        let faulty = SimConfig {
+            slots,
+            max_seq,
+            // No backpressure: every submit is accepted in both runs.
+            max_queue: 64,
+            prefill_chunk: chunk,
+            kv_blocks: if paged { g.int(2, full.max(3)) } else { 0 },
+            block_size,
+            prefix_cache: paged && g.bool(),
+            step_budget,
+            kv_bits: 16.0,
+            fault_rate: rate,
+            fault_seed: g.int(0, 1 << 30) as u64,
+            fault_burst: *g.pick(&[1usize, 2, 3]),
+            retry_budget: *g.pick(&[1usize, 2, 3, 4]),
+        };
+        let clean = SimConfig { fault_rate: 0.0, ..faulty };
+        let n_events = g.int(4, 30);
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            if g.int(0, 2) == 0 {
+                if faulty.prefix_cache {
+                    events.push(random_shared_submit(g, &faulty));
+                } else {
+                    events.push(SimEvent::Submit(SimRequest::plain(
+                        g.int(1, (max_seq - 1).min(24)),
+                        g.int(0, 8),
+                    )));
+                }
+            } else {
+                events.push(SimEvent::Step);
+            }
+        }
+        let faulty_out = fault_completions_by_id(&faulty, &events)?;
+        let clean_out = fault_completions_by_id(&clean, &events)?;
+        if faulty_out.len() != clean_out.len() {
+            return Err(format!(
+                "{faulty:?}: {} terminations under faults vs {} clean — a request was lost",
+                faulty_out.len(),
+                clean_out.len()
+            ));
+        }
+        for (id, (bytes, reason)) in &faulty_out {
+            if matches!(reason, FinishReason::Quarantined | FinishReason::DeadlineExpired) {
+                // Shed by the kernel; its partial output may differ.
+                continue;
+            }
+            match clean_out.get(id) {
+                Some((clean_bytes, _)) if clean_bytes == bytes => {}
+                other => {
+                    return Err(format!(
+                        "{faulty:?}: surviving request {id} diverged\n\
+                         faulty: {bytes:?}\nclean:  {other:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
     }
 
     // Three pinned seeds x 120 traces per suite in CI; any failure prints
@@ -1488,6 +2218,32 @@ mod tests {
         forall(1616, 120, check_composer_latency_bound_and_off_anchor);
     }
 
+    // Chaos traces: the seeded injector armed over mixed paged / prefix /
+    // composer shapes (deadlines included) at every fault rate the
+    // acceptance criteria name — the oracle must reproduce the error
+    // kernel's recovery decisions event by event and counter by counter.
+
+    #[test]
+    fn sim_trace_equivalence_fault_rate_zero() {
+        forall(1717, 80, |g| check_fault_equivalence(g, 0.0));
+    }
+
+    #[test]
+    fn sim_trace_equivalence_fault_rate_1pct() {
+        forall(1818, 80, |g| check_fault_equivalence(g, 0.01));
+    }
+
+    #[test]
+    fn sim_trace_equivalence_fault_rate_5pct() {
+        forall(1919, 80, |g| check_fault_equivalence(g, 0.05));
+    }
+
+    /// Fault-recovery byte identity + per-step invariant audit (satellite).
+    #[test]
+    fn sim_fault_survivors_bit_identical() {
+        forall(2020, 120, check_fault_survivors_bit_identical);
+    }
+
     /// Extra exploration knob: SPINQUANT_SIM_SEED=1234 cargo test — runs
     /// another 120 dense + 120 paged + 120 prefix traces from an arbitrary
     /// seed without a rebuild.
@@ -1499,6 +2255,7 @@ mod tests {
             forall(seed ^ 0x9a9a, 120, check_equivalence_paged);
             forall(seed ^ 0x7e1f, 120, check_equivalence_prefix);
             forall(seed ^ 0x51e9, 120, check_equivalence_composer);
+            forall(seed ^ 0xfa17, 120, |g| check_fault_equivalence(g, 0.05));
         }
     }
 
@@ -1519,6 +2276,31 @@ mod tests {
     }
 
     #[test]
+    fn oracle_smoke_deadline_shed() {
+        // 1 slot, chunk 4: request 0 (prompt 6) is admitted and prefilled
+        // at step 1; request 1 waits behind it. Both carry a 2-step
+        // deadline, so at the top of step 2 request 1 is shed from the
+        // queue and request 0 mid-flight — before any further engine work.
+        let cfg = SimConfig::dense(1, 32, 4, 4);
+        let events = [
+            SimEvent::Submit(SimRequest { deadline_steps: 2, ..SimRequest::plain(6, 4) }),
+            SimEvent::Submit(SimRequest { deadline_steps: 2, tag: 1, ..SimRequest::plain(4, 2) }),
+        ];
+        let res = simulate(&cfg, &events);
+        assert_eq!(res.submits, vec![Some(0), Some(1)]);
+        assert_eq!(res.shed_queued, 1);
+        assert_eq!(res.shed_inflight, 1);
+        // Queue scan first, then in-flight slots in ascending order.
+        assert_eq!(res.completion_order, vec![1, 0]);
+        assert_eq!(res.generated.get(&0), Some(&0));
+        assert_eq!(res.generated.get(&1), Some(&0));
+        assert_eq!(res.prefill_calls, 1);
+        assert_eq!(res.decode_steps, 0);
+        // The real scheduler agrees on the whole trace.
+        check_trace(&cfg, &events).unwrap();
+    }
+
+    #[test]
     fn oracle_smoke_paged_eviction() {
         // Hand-checkable paged trace: 2 slots, 4 pages of 4 tokens.
         // Two (prompt 4, budget 8) requests each need 3 pages end to end;
@@ -1535,6 +2317,10 @@ mod tests {
             prefix_cache: false,
             step_budget: 0,
             kv_bits: 4.0,
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_burst: 1,
+            retry_budget: DEFAULT_RETRY_BUDGET,
         };
         let events = [
             SimEvent::Submit(SimRequest::plain(4, 8)),
@@ -1564,6 +2350,10 @@ mod tests {
             prefix_cache: false,
             step_budget: 0,
             kv_bits: 8.0,
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_burst: 1,
+            retry_budget: DEFAULT_RETRY_BUDGET,
         };
         let events = [
             SimEvent::Submit(SimRequest::plain(2, 1)), // 1 page
@@ -1646,8 +2436,19 @@ mod tests {
             prefix_cache: true,
             step_budget: 0,
             kv_bits: 4.0,
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_burst: 1,
+            retry_budget: DEFAULT_RETRY_BUDGET,
         };
-        let shared = SimRequest { prompt_len: 9, max_new: 3, shared_len: 9, group: 7, tag: 0 };
+        let shared = SimRequest {
+            prompt_len: 9,
+            max_new: 3,
+            shared_len: 9,
+            group: 7,
+            tag: 0,
+            deadline_steps: 0,
+        };
         let events = [
             SimEvent::Submit(shared),
             SimEvent::Submit(SimRequest { tag: 1, ..shared }),
