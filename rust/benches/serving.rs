@@ -57,6 +57,15 @@
 //!   JSON records goodput (successfully delivered tokens per engine
 //!   step) vs fault rate plus the fault/retry/recovery/quarantine
 //!   counter set.
+//! * `spec_decode` — the speculative-decoding sweep: a pinned repetitive
+//!   greedy trace (the mock's greedy stream is exactly 128-periodic, so
+//!   the prompt-lookup drafter locks on after one cycle) served on one
+//!   lane at `--spec-k` {0, 2, 4, 8}. Records accept rate and tokens per
+//!   engine call per K (the acceptance bar is > 1.5x at K = 4), asserts
+//!   every speculative leg byte-identical to the K = 0 leg and the max
+//!   decode stall no worse, and adds one engine-drafter leg (a second
+//!   same-fidelity mock rung, so greedy acceptance must be 100% — the
+//!   drafter rung's own calls are free here and are not counted).
 //! * `trace` — the flight recorder audited two ways on the decode-stall
 //!   scenario: (1) overhead — the identical leg with tracing off vs on
 //!   (ring capacity 2^20), mean step latency side by side, plus a
@@ -89,7 +98,8 @@ use spinquant::report;
 use spinquant::runtime::Runtime;
 use spinquant::serve::{
     blocks, chrome_trace, verify_against_metrics, DecodeVariant, FaultInjector, FinishReason,
-    GenRequest, MockEngine, PjrtEngine, Sampler, Scheduler, ServingMetrics, TraceRecord,
+    GenRequest, MockEngine, PjrtEngine, Sampler, Scheduler, ServingMetrics, SpecDraft,
+    TraceRecord,
 };
 use spinquant::util::json::{self, Json};
 use spinquant::util::prng::Prng;
@@ -1057,6 +1067,169 @@ fn fault_recovery_sweep() -> Json {
     json::obj(rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
 }
 
+// -- speculative decoding: draft cheap, verify once --------------------------
+
+const SPEC_MAX_SEQ: usize = 512;
+const SPEC_MAX_NEW: usize = 360; // nearly three full 128-token greedy cycles
+const SPEC_REQUESTS: usize = 3;
+const SPEC_KS: [usize; 4] = [0, 2, 4, 8];
+
+/// The pinned repetitive trace: greedy requests on the mock engine, whose
+/// greedy continuation is *exactly* 128-periodic — so once the first cycle
+/// has been generated, the prompt-lookup drafter proposes from history and
+/// is right every time. Short distinct prompts keep the streams distinct.
+fn spec_workload() -> Vec<GenRequest> {
+    (0..SPEC_REQUESTS)
+        .map(|i| {
+            let prompt: Vec<u8> = (0..2 + i).map(|j| (97 + ((i * 5 + j) % 26)) as u8).collect();
+            GenRequest::greedy(&prompt, SPEC_MAX_NEW)
+        })
+        .collect()
+}
+
+struct SpecLeg {
+    completions: std::collections::BTreeMap<u64, Vec<u8>>,
+    engine_calls: usize,
+    metrics: ServingMetrics,
+}
+
+/// One leg of the sweep on a single lane (so tokens-per-engine-call is the
+/// speculation multiplier itself, not diluted by batching). `k == 0` is the
+/// plain decode loop; otherwise drafting comes from prompt lookup or, with
+/// `engine_drafter`, a second same-shape mock rung (whose own calls are not
+/// counted — a real drafter rung sits lower on the quantization ladder and
+/// is priced separately).
+fn run_spec_leg(k: usize, engine_drafter: bool) -> SpecLeg {
+    let engine = MockEngine::new(1, SPEC_MAX_SEQ, 64);
+    let mut sched = Scheduler::new(engine, SPEC_REQUESTS).expect("scheduler");
+    if k > 0 {
+        let draft = if engine_drafter {
+            SpecDraft::Engine(Box::new(MockEngine::new(1, SPEC_MAX_SEQ, 64)))
+        } else {
+            SpecDraft::NGram
+        };
+        sched = sched.with_speculation(k, draft).expect("speculation config");
+    }
+    for r in spec_workload() {
+        sched.submit(r).expect("submit");
+    }
+    let mut completions = std::collections::BTreeMap::new();
+    while !sched.is_idle() {
+        for c in sched.step().expect("step") {
+            assert_eq!(c.reason, FinishReason::BudgetExhausted, "request {} cut short", c.id);
+            let dup = completions.insert(c.id, c.completion).is_some();
+            assert!(!dup, "request {} terminated twice at spec-k {k}", c.id);
+        }
+        sched.check_invariants().expect("bookkeeping invariants under speculation");
+    }
+    let e = sched.engine();
+    let engine_calls = e.steps + e.prefill_calls + e.verify_calls;
+    SpecLeg { completions, engine_calls, metrics: sched.metrics }
+}
+
+fn spec_leg_json(leg: &SpecLeg, tok_per_call: f64) -> Json {
+    json::obj(vec![
+        ("engine_calls", json::num(leg.engine_calls as f64)),
+        ("tokens_generated", json::num(leg.metrics.tokens_generated as f64)),
+        ("tokens_per_engine_call", json::num(tok_per_call)),
+        ("verify_calls", json::num(leg.metrics.verify_calls as f64)),
+        ("draft_tokens_proposed", json::num(leg.metrics.draft_tokens_proposed as f64)),
+        ("draft_tokens_accepted", json::num(leg.metrics.draft_tokens_accepted as f64)),
+        ("accept_rate", json::num(leg.metrics.accept_rate())),
+        ("max_decode_stall_steps", json::num(leg.metrics.max_decode_stall_steps() as f64)),
+    ])
+}
+
+fn spec_decode_sweep() -> Json {
+    println!();
+    println!(
+        "spec_decode: {SPEC_REQUESTS} greedy requests x {SPEC_MAX_NEW} tokens on one lane \
+         (mock greedy stream is 128-periodic, so the prompt-lookup drafter locks on)"
+    );
+    println!(
+        "{:<10} {:>8} {:>10} {:>10} {:>10} {:>12} {:>12}",
+        "spec-k", "draft", "calls", "tok/call", "accept", "verify", "max stall"
+    );
+    let legs: Vec<(usize, SpecLeg)> =
+        SPEC_KS.iter().map(|&k| (k, run_spec_leg(k, false))).collect();
+    let baseline = &legs[0].1;
+    assert_eq!(
+        baseline.completions.len(),
+        SPEC_REQUESTS,
+        "the k = 0 leg must finish every request"
+    );
+    assert_eq!(baseline.metrics.verify_calls, 0, "--spec-k 0 must never touch the verify path");
+    let mut rows: Vec<(String, Json)> = vec![(
+        "config".to_string(),
+        json::obj(vec![
+            ("requests", json::num(SPEC_REQUESTS as f64)),
+            ("max_new_tokens", json::num(SPEC_MAX_NEW as f64)),
+            ("max_seq", json::num(SPEC_MAX_SEQ as f64)),
+            ("lanes", json::num(1.0)),
+        ]),
+    )];
+    let print_row = |k: usize, draft: &str, leg: &SpecLeg, tok_per_call: f64| {
+        println!(
+            "{:<10} {:>8} {:>10} {:>10.3} {:>10.3} {:>12} {:>12}",
+            k,
+            draft,
+            leg.engine_calls,
+            tok_per_call,
+            leg.metrics.accept_rate(),
+            leg.metrics.verify_calls,
+            leg.metrics.max_decode_stall_steps(),
+        );
+    };
+    for (k, leg) in &legs {
+        // Speculation reshapes the call schedule, never the bytes: every
+        // request must match the plain decode loop exactly, and decode
+        // stall must be no worse than running without speculation.
+        assert_eq!(
+            leg.completions, baseline.completions,
+            "spec-k {k}: speculative decoding changed generated bytes"
+        );
+        assert!(
+            leg.metrics.max_decode_stall_steps() <= baseline.metrics.max_decode_stall_steps(),
+            "spec-k {k}: speculation must not worsen decode stall"
+        );
+        let tok_per_call =
+            leg.metrics.tokens_generated as f64 / (leg.engine_calls as f64).max(1.0);
+        print_row(*k, if *k == 0 { "-" } else { "ngram" }, leg, tok_per_call);
+        if *k == 4 {
+            // The headline number: once the drafter has one full cycle of
+            // history, most verify calls commit several tokens at once.
+            assert!(
+                tok_per_call > 1.5,
+                "spec-k 4 must clear 1.5 tokens per engine call on the repetitive \
+                 trace (got {tok_per_call:.3})"
+            );
+            assert!(
+                leg.metrics.accept_rate() > 0.3,
+                "spec-k 4: the locked-on drafter must land well over 0.3 accept rate"
+            );
+        }
+        rows.push((format!("k_{k}"), spec_leg_json(leg, tok_per_call)));
+    }
+    // The ladder rung: a second same-fidelity mock rung drafts, so greedy
+    // verification must accept every proposal (identical argmax).
+    let rung = run_spec_leg(4, true);
+    assert_eq!(
+        rung.completions, baseline.completions,
+        "engine drafter changed generated bytes"
+    );
+    assert!(
+        (rung.metrics.accept_rate() - 1.0).abs() < 1e-12,
+        "a same-parameters drafter rung must be accepted verbatim under greedy"
+    );
+    assert_eq!(rung.metrics.draft_tokens_accepted, rung.metrics.draft_tokens_proposed);
+    let rung_tok_per_call =
+        rung.metrics.tokens_generated as f64 / (rung.engine_calls as f64).max(1.0);
+    print_row(4, "engine", &rung, rung_tok_per_call);
+    rows.push(("engine_drafter_k4".to_string(), spec_leg_json(&rung, rung_tok_per_call)));
+    rows.push(("bit_identical".to_string(), Json::Bool(true)));
+    json::obj(rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
+}
+
 // -- sampler cost: full-sort baseline vs partial selection -------------------
 
 /// The pre-PR sampler: full descending sort of the vocabulary every draw.
@@ -1234,6 +1407,7 @@ fn main() {
     let decode_stall = decode_stall_sweep();
     let trace = trace_sweep();
     let fault_recovery = fault_recovery_sweep();
+    let spec_decode = spec_decode_sweep();
     let sampler = sampler_cost();
 
     let out = json::obj(vec![
@@ -1250,6 +1424,7 @@ fn main() {
         ("decode_stall", decode_stall),
         ("trace", trace),
         ("fault_recovery", fault_recovery),
+        ("spec_decode", spec_decode),
         ("sampler", sampler),
         (
             "ttft",

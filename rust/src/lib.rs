@@ -56,7 +56,15 @@
 //!   restart, repeat offenders are quarantined, expired deadlines are
 //!   shed queued or mid-flight, and a seeded `FaultInjector` plus
 //!   chaos-mode oracle suites CI-check that surviving requests are
-//!   byte-identical to a fault-free run)), the seeded
+//!   byte-identical to a fault-free run), and self-speculative decoding
+//!   over the quantization ladder (`serve --spec-k K --spec-draft
+//!   {ngram,engine}`: each running slot drafts up to K tokens — zero-cost
+//!   prompt lookup, or a second lower-fidelity `DecodeEngine` rung — and
+//!   the target verifies all K+1 positions in one ragged call; greedy
+//!   acceptance keeps the longest agreeing prefix plus a free correction
+//!   token, rejections roll back positions *and* pages, and output is
+//!   byte-identical to `--spec-k 0` with any sampler — only
+//!   tokens-per-engine-call changes)), the seeded
 //!   scheduler-simulation oracle (`testing::sim`, dense / paged /
 //!   prefix-cached / composed / fault-injected, including exact
 //!   trace-event-stream equivalence), and the benchmark harnesses that

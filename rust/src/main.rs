@@ -31,7 +31,21 @@
 //!                tokens of prefill, so one long prompt can no longer
 //!                stall every in-flight decode for a whole prefill burst;
 //!                0/off = the classic drain-prefill-then-decode loop;
-//!                needs `--prefill-chunk > 1`) + `--trace out.json`
+//!                needs `--prefill-chunk > 1`) + `--spec-k K`
+//!                (self-speculative decoding: each running slot drafts up
+//!                to K tokens and the target engine verifies all K+1
+//!                positions in one ragged call — greedy acceptance keeps
+//!                the longest agreeing prefix plus a free correction
+//!                token, rejections roll back pages and positions, and
+//!                output stays byte-identical to `--spec-k 0` with any
+//!                sampler; only tokens-per-engine-call changes) +
+//!                `--spec-draft ngram|engine` (draft source: `ngram` =
+//!                zero-cost prompt lookup over the slot's own history,
+//!                the default; `engine` = a second lower-fidelity drafter
+//!                rung — the demo binary has no second artifact set wired,
+//!                so it says so and falls back to ngram; the
+//!                `Scheduler::with_speculation` API takes any
+//!                `DecodeEngine` drafter) + `--trace out.json`
 //!                (flight recorder: record every scheduler decision —
 //!                Enqueued/Admitted/PrefixHit/PrefillChunk/TokenDecoded/
 //!                Evicted/Completed, page alloc/retain/release, composer
@@ -94,6 +108,9 @@ fn usage() -> ! {
                        --prefix-cache 1 (copy-on-write sharing of repeated prompt prefixes)\n\
                        --step-budget B (decode-priority step composer: bound the decode\n\
                        hiccup a long prompt's prefill causes; 0 = off)\n\
+                       --spec-k K (speculative decoding: draft up to K tokens per slot,\n\
+                       verify in one call; byte-identical output, fewer engine calls)\n\
+                       --spec-draft ngram|engine (draft source; default ngram prompt lookup)\n\
                        --trace out.json (flight recorder -> Chrome/Perfetto trace JSON)\n\
                        --trace-buffer N (trace ring capacity in events, default 2^20)\n\
                        --fault-rate R (chaos mode: seeded engine-fault injection at rate R)\n\
@@ -508,7 +525,7 @@ struct ServeKnobs<'a> {
 /// (`--fault-rate`: engine wrapped in [`serve::FaultInjector`]) runs the
 /// exact same scheduler path as normal serving.
 fn serve_with<E: serve::DecodeEngine>(engine: E, k: &ServeKnobs) -> Result<()> {
-    use spinquant::serve::{FinishReason, GenRequest, Scheduler};
+    use spinquant::serve::{FinishReason, GenRequest, Scheduler, SpecDraft};
 
     let chunk_in_use = engine.prefill_chunk();
     let pool_desc = match engine.kv_block_size() {
@@ -584,6 +601,33 @@ fn serve_with<E: serve::DecodeEngine>(engine: E, k: &ServeKnobs) -> Result<()> {
             );
         }
     }
+    // Self-speculative decoding: `--spec-k K` drafts up to K tokens per
+    // running slot and verifies the whole window in one ragged engine
+    // call — greedy acceptance keeps the longest agreeing prefix plus one
+    // free correction token; rejections roll back positions and pages.
+    // Output is byte-identical to --spec-k 0; only tokens-per-engine-call
+    // changes. `--spec-draft ngram` (default) proposes from the slot's own
+    // history at zero cost; `engine` wants a second, lower-fidelity
+    // drafter rung, which this demo binary has no second artifact set
+    // wired for — never silently: it says so and drafts via ngram (the
+    // `Scheduler::with_speculation` API takes any `DecodeEngine` drafter).
+    let spec_k: usize =
+        get_extra(k.extra, "spec-k").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let spec_draft = get_extra(k.extra, "spec-draft");
+    if spec_k > 0 {
+        match spec_draft.unwrap_or("ngram") {
+            "ngram" => {}
+            "engine" => eprintln!(
+                "note: --spec-draft engine needs a second (lower-bit) drafter artifact, \
+                 which this binary does not wire up — drafting via prompt lookup (ngram) \
+                 instead"
+            ),
+            other => anyhow::bail!("--spec-draft {other:?}: expected ngram or engine"),
+        }
+        sched = sched.with_speculation(spec_k, SpecDraft::NGram)?;
+    } else if spec_draft.is_some() {
+        eprintln!("note: --spec-draft has no effect without --spec-k >= 1");
+    }
     // Error-kernel recovery: `--retry-budget N` quarantines a request
     // after N individual engine faults and evicts a call's participants
     // for warm restart after a streak of N step-wide faults (backoff is
@@ -622,7 +666,7 @@ fn serve_with<E: serve::DecodeEngine>(engine: E, k: &ServeKnobs) -> Result<()> {
 
     println!(
         "serving {} request(s) on {} slot(s), sampler {}, max {} new tokens, \
-         prefill chunk {}{}{}{}{}{}",
+         prefill chunk {}{}{}{}{}{}{}",
         k.prompts.len(),
         k.batch,
         k.sampler.name(),
@@ -636,6 +680,7 @@ fn serve_with<E: serve::DecodeEngine>(engine: E, k: &ServeKnobs) -> Result<()> {
         },
         if prefix_cache && k.paged { ", prefix cache on" } else { "" },
         if composing { format!(", step budget {step_budget}") } else { String::new() },
+        if spec_k > 0 { format!(", spec window {spec_k} (ngram)") } else { String::new() },
         if deadline_ms > 0.0 { format!(", deadline {deadline_ms:.0} ms") } else { String::new() }
     );
     let reqs = k.prompts.iter().enumerate().map(|(i, p)| {
@@ -668,6 +713,15 @@ fn serve_with<E: serve::DecodeEngine>(engine: E, k: &ServeKnobs) -> Result<()> {
         "{}",
         sched.metrics.table(&format!("serving metrics (batch={})", k.batch)).to_markdown()
     );
+    if spec_k > 0 {
+        println!(
+            "speculation: {} verify calls, {}/{} draft tokens accepted (accept rate {:.2})",
+            sched.metrics.verify_calls,
+            sched.metrics.draft_tokens_accepted,
+            sched.metrics.draft_tokens_proposed,
+            sched.metrics.accept_rate()
+        );
+    }
     if let Some(path) = trace_path {
         let records = sched.trace_records();
         let dropped = sched.trace_dropped_events();

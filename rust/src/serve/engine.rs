@@ -237,6 +237,57 @@ pub trait DecodeEngine {
     fn adopt_prefix(&mut self, _slot: usize, _table: &[i32], _cached: usize) -> Result<()> {
         Ok(())
     }
+
+    // -- speculative decoding (draft / verify / rewind) --------------------
+
+    /// Verify a batch of drafted continuations in one call: feed
+    /// `tokens[b]` into every slot with `active[b]` set starting at cache
+    /// position `pos0[b]`, and return **one logits row per fed token** —
+    /// `out[b][i]` is the next-token distribution after `tokens[b][..=i]`,
+    /// exactly what `tokens[b].len()` sequential [`step`](Self::step) calls
+    /// would have produced. The scheduler samples through these rows left
+    /// to right and keeps the longest draft prefix the sampler agrees with
+    /// plus one free correction token; trailing rows past the first
+    /// disagreement are simply discarded (and the cache rewound).
+    ///
+    /// Default: a loop of single decode steps keeping every row — the same
+    /// ragged fallback as `prefill`, except `prefill` only returns the last
+    /// row. Engines with a multi-token graph can do this in
+    /// `ceil(k/chunk)`-ish calls instead.
+    fn verify(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        verify_by_steps(self, tokens, pos0, active)
+    }
+
+    /// Paged twin of [`verify`](Self::verify).
+    fn verify_paged(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+        tables: &[Vec<i32>],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        verify_paged_by_steps(self, tokens, pos0, active, tables)
+    }
+
+    /// Forget cache state past `new_len` tokens in `slot` — the rollback
+    /// half of speculative decoding, called after a verify pass rejected a
+    /// draft suffix. `table` is the slot's block-table row *after* the
+    /// scheduler's own page rewind (dense engines receive an empty slice).
+    ///
+    /// Default: no-op, which is sound for attention-masked caches — the
+    /// decode graphs mask attention to `idx <= pos`, so stale KV entries
+    /// beyond the rewound position are unreachable and the next write at
+    /// that position overwrites them (the same argument that makes
+    /// placeholder writes into free slots safe). Engines that keep
+    /// positional side state (the mock's history hash) must override.
+    fn rewind(&mut self, _slot: usize, _new_len: usize, _table: &[i32]) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// The chunked prefill fallback: feed the chunk through single decode
@@ -306,6 +357,78 @@ pub(crate) fn prefill_paged_by_steps<E: DecodeEngine + ?Sized>(
         for b in 0..n {
             if act[b] && j + 1 == tokens[b].len() {
                 out[b] = std::mem::take(&mut logits[b]);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The verify fallback: feed each slot's draft window through single decode
+/// steps, keeping **every** per-token logits row (unlike the prefill
+/// fallbacks, which only keep the last). Shared by the trait default so any
+/// `DecodeEngine` supports speculative verification unchanged.
+pub(crate) fn verify_by_steps<E: DecodeEngine + ?Sized>(
+    engine: &mut E,
+    tokens: &[Vec<i32>],
+    pos0: &[i32],
+    active: &[bool],
+) -> Result<Vec<Vec<Vec<f32>>>> {
+    let n = engine.slots();
+    if tokens.len() != n || pos0.len() != n || active.len() != n {
+        bail!("verify arity mismatch ({n} slots)");
+    }
+    let longest = (0..n).filter(|&b| active[b]).map(|b| tokens[b].len()).max().unwrap_or(0);
+    let mut out = vec![Vec::new(); n];
+    for j in 0..longest {
+        let mut toks = vec![0i32; n];
+        let mut pos = vec![0i32; n];
+        let mut act = vec![false; n];
+        for b in 0..n {
+            if active[b] && j < tokens[b].len() {
+                act[b] = true;
+                toks[b] = tokens[b][j];
+                pos[b] = pos0[b] + j as i32;
+            }
+        }
+        let mut logits = engine.step(&toks, &pos, &act)?;
+        for b in 0..n {
+            if act[b] {
+                out[b].push(std::mem::take(&mut logits[b]));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Paged twin of [`verify_by_steps`].
+pub(crate) fn verify_paged_by_steps<E: DecodeEngine + ?Sized>(
+    engine: &mut E,
+    tokens: &[Vec<i32>],
+    pos0: &[i32],
+    active: &[bool],
+    tables: &[Vec<i32>],
+) -> Result<Vec<Vec<Vec<f32>>>> {
+    let n = engine.slots();
+    if tokens.len() != n || pos0.len() != n || active.len() != n || tables.len() != n {
+        bail!("paged verify arity mismatch ({n} slots)");
+    }
+    let longest = (0..n).filter(|&b| active[b]).map(|b| tokens[b].len()).max().unwrap_or(0);
+    let mut out = vec![Vec::new(); n];
+    for j in 0..longest {
+        let mut toks = vec![0i32; n];
+        let mut pos = vec![0i32; n];
+        let mut act = vec![false; n];
+        for b in 0..n {
+            if active[b] && j < tokens[b].len() {
+                act[b] = true;
+                toks[b] = tokens[b][j];
+                pos[b] = pos0[b] + j as i32;
+            }
+        }
+        let mut logits = engine.step_paged(&toks, &pos, &act, tables)?;
+        for b in 0..n {
+            if act[b] {
+                out[b].push(std::mem::take(&mut logits[b]));
             }
         }
     }
@@ -989,6 +1112,16 @@ pub struct MockEngine {
     /// prefill call may carry more than `max(B - decode_lanes, guard)`
     /// prompt tokens, and tests assert it against this counter.
     pub max_prefill_call_tokens: usize,
+    /// Total speculative verify calls executed. Deliberately **not** folded
+    /// into `prefill_calls`: verify windows flow through the same ragged
+    /// multi-token graphs, but the budget-compliance observables above are
+    /// about *prompt* prefill, and conflating the two would let a
+    /// speculative run silently satisfy (or break) a prefill-budget assert.
+    pub verify_calls: usize,
+    /// Draft tokens checked across all verify calls — each lane of a verify
+    /// call carries `1 + drafts` tokens, and this counts the `drafts` part
+    /// (the `1` is the token a plain decode step would have fed anyway).
+    pub draft_tokens_verified: usize,
 }
 
 /// FNV-1a offset basis / prime: the history hash the mock's logits seed on.
@@ -1081,6 +1214,8 @@ impl MockEngine {
             prefill_calls: 0,
             prefill_tokens_fed: 0,
             max_prefill_call_tokens: 0,
+            verify_calls: 0,
+            draft_tokens_verified: 0,
         }
     }
 
@@ -1632,6 +1767,152 @@ impl DecodeEngine for MockEngine {
         }
         Ok(())
     }
+
+    fn verify(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        if tokens.len() != self.n_slots || pos0.len() != self.n_slots || active.len() != self.n_slots
+        {
+            bail!("mock engine: verify arity mismatch ({} slots)", self.n_slots);
+        }
+        if self.block_size.is_some() {
+            bail!("mock engine: paged engine verified without block tables (use verify_paged)");
+        }
+        // Its own counter pair, *not* steps/prefill_calls: verify windows
+        // must stay distinguishable from prompt prefill (and from plain
+        // decode) in every budget-compliance assertion.
+        self.verify_calls += 1;
+        self.draft_tokens_verified += (0..self.n_slots)
+            .filter(|&b| active[b] && !tokens[b].is_empty())
+            .map(|b| tokens[b].len() - 1)
+            .sum::<usize>();
+        let mut out = vec![Vec::new(); self.n_slots];
+        for b in 0..self.n_slots {
+            if !active[b] || tokens[b].is_empty() {
+                continue;
+            }
+            if pos0[b] as usize != self.history[b].len() {
+                bail!(
+                    "mock engine: slot {b} verified at pos {} but holds {} tokens \
+                     (scheduler position tracking broken, or slot reused without reset)",
+                    pos0[b],
+                    self.history[b].len()
+                );
+            }
+            if self.history[b].len() + tokens[b].len() > self.max_seq {
+                bail!("mock engine: slot {b} verify past cache ({} positions)", self.max_seq);
+            }
+            // One logits row per fed token, each computed after its token
+            // lands — byte-identical to the same tokens fed through
+            // sequential decode steps (the speculative correctness anchor).
+            for t in tokens[b].clone() {
+                self.push_token(b, t);
+                out[b].push(self.slot_logits(b, t));
+            }
+        }
+        Ok(out)
+    }
+
+    fn verify_paged(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+        tables: &[Vec<i32>],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        if tokens.len() != self.n_slots
+            || pos0.len() != self.n_slots
+            || active.len() != self.n_slots
+            || tables.len() != self.n_slots
+        {
+            bail!("mock engine: paged verify arity mismatch ({} slots)", self.n_slots);
+        }
+        if self.block_size.is_none() {
+            bail!("mock engine: dense engine got block tables (build with with_block_pool)");
+        }
+        self.verify_calls += 1;
+        self.draft_tokens_verified += (0..self.n_slots)
+            .filter(|&b| active[b] && !tokens[b].is_empty())
+            .map(|b| tokens[b].len() - 1)
+            .sum::<usize>();
+        let writes: Vec<(usize, usize)> = (0..self.n_slots)
+            .map(|b| if active[b] { (pos0[b] as usize, tokens[b].len()) } else { (0, 0) })
+            .collect();
+        self.check_exclusive_writes(&writes, tables)?;
+        let mut out = vec![Vec::new(); self.n_slots];
+        for b in 0..self.n_slots {
+            if !active[b] || tokens[b].is_empty() {
+                continue;
+            }
+            if pos0[b] as usize != self.history[b].len() {
+                bail!(
+                    "mock engine: slot {b} verified at pos {} but holds {} tokens \
+                     (scheduler position tracking broken, or slot reused without reset)",
+                    pos0[b],
+                    self.history[b].len()
+                );
+            }
+            if self.history[b].len() + tokens[b].len() > self.max_seq {
+                bail!("mock engine: slot {b} verify past cache ({} positions)", self.max_seq);
+            }
+            for t in 0..tokens[b].len() {
+                let tok = tokens[b][t];
+                self.paged_write(b, pos0[b] as usize + t, tok, &tables[b])?;
+                self.push_token(b, tok);
+                out[b].push(self.slot_logits(b, tok));
+            }
+        }
+        self.check_all_views(tables)?;
+        Ok(out)
+    }
+
+    fn rewind(&mut self, slot: usize, new_len: usize, table: &[i32]) -> Result<()> {
+        if new_len > self.history[slot].len() {
+            bail!(
+                "mock engine: slot {slot} rewound to {new_len} tokens but holds only {}",
+                self.history[slot].len()
+            );
+        }
+        self.history[slot].truncate(new_len);
+        // The hash and drift error are positional folds — rebuild them by
+        // replay over the surviving prefix (O(len), fine for the mock).
+        self.hash[slot] = self.history[slot].iter().fold(HASH_BASIS, |h, &t| hash_fold(h, t));
+        self.kv_err[slot] = self.history[slot]
+            .iter()
+            .enumerate()
+            .map(|(pos, &t)| Self::kv_round_trip_err(t, pos, self.kv_bits))
+            .sum();
+        if let Some(bs) = self.block_size {
+            // Truncate the boundary page so the next write at offset
+            // `new_len % bs` lands sequentially; pages wholly past the
+            // rewind were released by the scheduler and reset on their next
+            // offset-0 write, so they need no touch-up here.
+            let off = new_len % bs;
+            if off != 0 {
+                let j = new_len / bs;
+                let phys = table.get(j).copied().unwrap_or(-1);
+                if phys < 0 || phys as usize >= self.blocks.len() {
+                    bail!(
+                        "mock engine: slot {slot} rewind to {new_len} through unmapped \
+                         boundary page (table[{j}] = {phys})"
+                    );
+                }
+                let page = &mut self.blocks[phys as usize];
+                if page.len() < off {
+                    bail!(
+                        "mock engine: slot {slot} rewind boundary page {phys} holds {} \
+                         tokens, expected at least {off}",
+                        page.len()
+                    );
+                }
+                page.truncate(off);
+            }
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -1839,6 +2120,43 @@ impl<E: DecodeEngine> DecodeEngine for FaultInjector<E> {
             return Err(e.into());
         }
         self.inner.adopt_prefix(slot, table, cached)
+    }
+
+    fn verify(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        // One interception per scheduler-level verify, then the inner
+        // engine's own verify — never the by-steps default, which would
+        // re-enter `self.step` and consume extra schedule draws (same
+        // rationale as `prefill`).
+        if let Some(e) = self.decide(active) {
+            return Err(e.into());
+        }
+        self.inner.verify(tokens, pos0, active)
+    }
+
+    fn verify_paged(
+        &mut self,
+        tokens: &[Vec<i32>],
+        pos0: &[i32],
+        active: &[bool],
+        tables: &[Vec<i32>],
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        if let Some(e) = self.decide(active) {
+            return Err(e.into());
+        }
+        self.inner.verify_paged(tokens, pos0, active, tables)
+    }
+
+    fn rewind(&mut self, slot: usize, new_len: usize, table: &[i32]) -> Result<()> {
+        // Rollback is part of fault *recovery* bookkeeping, not an engine
+        // call the chaos schedule should be able to fail: no draws, plain
+        // forward (also keeps the draw-for-draw oracle protocol at exactly
+        // three draws per intercepted call).
+        self.inner.rewind(slot, new_len, table)
     }
 }
 
@@ -2459,5 +2777,151 @@ mod tests {
             anyhow::anyhow!("plain").downcast_ref::<ServeError>().is_none(),
             "unclassified errors must not look like ServeErrors"
         );
+    }
+
+    #[test]
+    fn mock_verify_rows_equal_sequential_steps() {
+        // The speculative correctness anchor at engine level: one verify
+        // call over [next, d1, d2, d3] returns exactly the logits rows the
+        // same four tokens fed through sequential decode steps produce.
+        let window = [5i32, 9, 2, 7];
+        let mut a = MockEngine::new(2, 32, 64);
+        a.step(&[3, 0], &[0, 0], &[true, false]).unwrap();
+        let rows = a.verify(&[window.to_vec(), Vec::new()], &[1, 0], &[true, false]).unwrap();
+        let mut b = MockEngine::new(2, 32, 64);
+        b.step(&[3, 0], &[0, 0], &[true, false]).unwrap();
+        for (j, &t) in window.iter().enumerate() {
+            let l = b.step(&[t, 0], &[1 + j as i32, 0], &[true, false]).unwrap();
+            assert_eq!(rows[0][j], l[0], "row {j} diverges from the sequential step");
+        }
+        assert_eq!(rows[0].len(), window.len());
+        assert_eq!(rows[1].len(), 0, "inactive lane must return no rows");
+        assert_eq!(a.history[0], b.history[0]);
+    }
+
+    #[test]
+    fn mock_verify_counters_stay_off_the_prefill_books() {
+        // Satellite: verify calls must be distinguishable from prompt
+        // prefill — they get their own counter pair and leave every
+        // budget-compliance observable untouched.
+        let mut e = MockEngine::new(2, 32, 64).with_prefill_chunk(8);
+        e.prefill(&[vec![1, 2, 3], Vec::new()], &[0, 0], &[true, false]).unwrap();
+        let (pc, pt, pm, st) =
+            (e.prefill_calls, e.prefill_tokens_fed, e.max_prefill_call_tokens, e.steps);
+        e.verify(&[vec![4, 5, 6], vec![7]], &[3, 0], &[true, true]).unwrap();
+        assert_eq!(e.verify_calls, 1);
+        // Lane 0 carried 2 drafts (3 tokens - the 1 a plain step feeds),
+        // lane 1 carried 0.
+        assert_eq!(e.draft_tokens_verified, 2);
+        assert_eq!(e.prefill_calls, pc, "verify must not count as prefill");
+        assert_eq!(e.prefill_tokens_fed, pt);
+        assert_eq!(e.max_prefill_call_tokens, pm);
+        assert_eq!(e.steps, st, "verify must not count as decode steps");
+    }
+
+    #[test]
+    fn mock_verify_rejects_position_drift_and_capacity() {
+        let mut e = MockEngine::new(1, 4, 16);
+        e.step(&[1], &[0], &[true]).unwrap();
+        assert!(e.verify(&[vec![2]], &[0], &[true]).is_err(), "stale pos0");
+        assert!(e.verify(&[vec![2, 3, 4, 5]], &[1], &[true]).is_err(), "past cache");
+        e.verify(&[vec![2, 3, 4]], &[1], &[true]).unwrap();
+    }
+
+    #[test]
+    fn mock_rewind_restores_sequential_state_dense() {
+        // Feed 5, rewind to 2, re-feed the same suffix: logits and hash
+        // state must be byte-identical to never having speculated at all.
+        let toks = [5i32, 9, 2, 7, 1];
+        let mut a = MockEngine::new(1, 16, 64);
+        for (j, &t) in toks.iter().enumerate() {
+            a.step(&[t], &[j as i32], &[true]).unwrap();
+        }
+        a.rewind(0, 2, &[]).unwrap();
+        assert_eq!(a.history[0], &toks[..2]);
+        let mut b = MockEngine::new(1, 16, 64);
+        for (j, &t) in toks[..2].iter().enumerate() {
+            b.step(&[t], &[j as i32], &[true]).unwrap();
+        }
+        assert_eq!(a.hash[0], b.hash[0], "rewound hash must equal the replayed prefix");
+        let la = a.step(&[8], &[2], &[true]).unwrap();
+        let lb = b.step(&[8], &[2], &[true]).unwrap();
+        assert_eq!(la[0], lb[0]);
+        assert!(a.rewind(0, 99, &[]).is_err(), "rewind past the held length must fail");
+    }
+
+    #[test]
+    fn mock_rewind_truncates_boundary_page_and_replays_identically() {
+        // Paged: rewind from pos 7 to pos 5 across a 4-token page boundary
+        // truncates the boundary page so the re-fed suffix lands
+        // sequentially, and kv drift error is rebuilt (kv_bits 4 so the
+        // error term is non-trivial).
+        let bs = 4;
+        let tables = vec![vec![0, 1]];
+        let toks = [5i32, 9, 2, 7, 1, 6, 3];
+        let mut a = MockEngine::new(1, 16, 64).with_block_pool(4, bs).with_kv_bits(4.0);
+        for (j, &t) in toks.iter().enumerate() {
+            a.step_paged(&[t], &[j as i32], &[true], &tables).unwrap();
+        }
+        a.rewind(0, 5, &tables[0]).unwrap();
+        assert_eq!(a.history[0], &toks[..5]);
+        assert_eq!(a.blocks[1].len(), 1, "boundary page truncated to 5 % 4 tokens");
+        let mut b = MockEngine::new(1, 16, 64).with_block_pool(4, bs).with_kv_bits(4.0);
+        for (j, &t) in toks[..5].iter().enumerate() {
+            b.step_paged(&[t], &[j as i32], &[true], &tables).unwrap();
+        }
+        assert_eq!(a.kv_err[0], b.kv_err[0], "drift error must be rebuilt by replay");
+        let la = a.step_paged(&[8], &[5], &[true], &tables).unwrap();
+        let lb = b.step_paged(&[8], &[5], &[true], &tables).unwrap();
+        assert_eq!(la[0], lb[0]);
+    }
+
+    #[test]
+    fn mock_paged_verify_matches_dense_at_16_bits_and_writes_pages() {
+        let bs = 4;
+        let tables = vec![vec![0, 1, 2]];
+        let mut p = MockEngine::new(1, 16, 64).with_block_pool(4, bs);
+        p.step_paged(&[3], &[0], &[true], &tables).unwrap();
+        let rows = p.verify_paged(&[vec![5, 9, 2, 7]], &[1], &[true], &tables).unwrap();
+        let mut d = MockEngine::new(1, 16, 64);
+        d.step(&[3], &[0], &[true]).unwrap();
+        let drows = d.verify(&[vec![5, 9, 2, 7]], &[1], &[true]).unwrap();
+        assert_eq!(rows[0], drows[0], "paged verify rows must equal dense at 16-bit KV");
+        assert_eq!(p.blocks[1].len(), 1, "verify writes land in physical pages");
+        assert_eq!(p.verify_calls, 1);
+        assert_eq!(p.draft_tokens_verified, 3);
+    }
+
+    #[test]
+    fn default_verify_falls_back_to_step_loop_keeping_every_row() {
+        // Engines without a verify override get the by-steps default — and
+        // unlike the prefill fallback it must keep every per-token row.
+        let window = [5i32, 9, 2];
+        let mut a = MockEngine::new(1, 16, 32);
+        let rows = super::verify_by_steps(&mut a, &[window.to_vec()], &[0], &[true]).unwrap();
+        assert_eq!(a.steps, 3);
+        let mut b = MockEngine::new(1, 16, 32);
+        let brows = b.verify(&[window.to_vec()], &[0], &[true]).unwrap();
+        assert_eq!(rows[0], brows[0]);
+        assert_eq!(b.steps, 0);
+    }
+
+    #[test]
+    fn fault_injector_intercepts_verify_but_never_rewind() {
+        let mut e = FaultInjector::new(MockEngine::new(1, 16, 64), 9, 1.0);
+        let err = e.verify(&[vec![5, 6]], &[0], &[true]).unwrap_err();
+        assert!(err.downcast_ref::<ServeError>().is_some());
+        assert_eq!(e.inner().verify_calls, 0, "faulted verify must not reach the inner engine");
+        assert_eq!(e.calls, 1, "verify consumes exactly one schedule slot");
+        e.rate = 0.0;
+        e.burst_left = 0;
+        e.verify(&[vec![5, 6]], &[0], &[true]).unwrap();
+        assert_eq!(e.inner().verify_calls, 1);
+        // Rollback must never fault and must consume no schedule draws.
+        e.rate = 1.0;
+        let calls_before = e.calls;
+        e.rewind(0, 1, &[]).unwrap();
+        assert_eq!(e.calls, calls_before, "rewind is not an intercepted call");
+        assert_eq!(e.inner().history[0].len(), 1);
     }
 }

@@ -100,6 +100,17 @@ pub struct ServingMetrics {
     /// Requests shed mid-flight (slot freed, partial output returned)
     /// because their deadline expired.
     pub deadline_shed_inflight: usize,
+    /// Speculative decoding: draft tokens that entered a verify call
+    /// (counted at plan time, so a faulted verify still counts its
+    /// proposal — mirroring the trace's `DraftProposed` events exactly).
+    pub draft_tokens_proposed: usize,
+    /// Speculative decoding: draft tokens the target engine agreed with
+    /// (the accepted prefix; bonus correction tokens are ordinary
+    /// generated tokens and are not counted here).
+    pub draft_tokens_accepted: usize,
+    /// Verify engine calls issued by the speculative decode path (each
+    /// replaces what would have been one plain decode step).
+    pub verify_calls: usize,
 }
 
 impl ServingMetrics {
@@ -263,6 +274,31 @@ impl ServingMetrics {
         self.deadline_shed_inflight += 1;
     }
 
+    /// Record a draft window entering a verify call (`tokens` proposed).
+    pub fn record_draft_proposed(&mut self, tokens: usize) {
+        self.draft_tokens_proposed += tokens;
+    }
+
+    /// Record how many of a window's drafts the target engine accepted.
+    pub fn record_draft_accepted(&mut self, accepted: usize) {
+        self.draft_tokens_accepted += accepted;
+    }
+
+    /// Record one verify engine call.
+    pub fn record_verify_call(&mut self) {
+        self.verify_calls += 1;
+    }
+
+    /// Fraction of proposed draft tokens the target engine accepted;
+    /// 0 when nothing was ever proposed. Proposals stranded by a verify
+    /// fault count against the rate (they cost a draft, bought nothing).
+    pub fn accept_rate(&self) -> f64 {
+        if self.draft_tokens_proposed == 0 {
+            return 0.0;
+        }
+        self.draft_tokens_accepted as f64 / self.draft_tokens_proposed as f64
+    }
+
     /// Requests that failed (quarantine or deadline shed) rather than
     /// completing — the goodput denominator's loss term.
     pub fn requests_failed(&self) -> usize {
@@ -369,6 +405,10 @@ impl ServingMetrics {
             ("requests_fault_evicted", json::num(self.requests_fault_evicted as f64)),
             ("deadline_shed_queued", json::num(self.deadline_shed_queued as f64)),
             ("deadline_shed_inflight", json::num(self.deadline_shed_inflight as f64)),
+            ("draft_tokens_proposed", json::num(self.draft_tokens_proposed as f64)),
+            ("draft_tokens_accepted", json::num(self.draft_tokens_accepted as f64)),
+            ("accept_rate", json::num(self.accept_rate())),
+            ("verify_calls", json::num(self.verify_calls as f64)),
             (
                 "histograms",
                 json::obj(vec![
@@ -634,6 +674,29 @@ mod tests {
         for header in ["faults", "failed"] {
             assert!(md.contains(header), "missing column {header:?} in:\n{md}");
         }
+    }
+
+    #[test]
+    fn speculation_counters_and_accept_rate() {
+        let mut m = ServingMetrics::new();
+        // Two verify calls: 4 drafts with 3 accepted, then 4 with 1.
+        m.record_verify_call();
+        m.record_draft_proposed(4);
+        m.record_draft_accepted(3);
+        m.record_verify_call();
+        m.record_draft_proposed(4);
+        m.record_draft_accepted(1);
+        assert_eq!(m.draft_tokens_proposed, 8);
+        assert_eq!(m.draft_tokens_accepted, 4);
+        assert_eq!(m.verify_calls, 2);
+        assert!((m.accept_rate() - 0.5).abs() < 1e-12);
+        let j = m.to_json();
+        assert_eq!(j.req("draft_tokens_proposed").unwrap().as_f64(), Some(8.0));
+        assert_eq!(j.req("draft_tokens_accepted").unwrap().as_f64(), Some(4.0));
+        assert_eq!(j.req("accept_rate").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.req("verify_calls").unwrap().as_f64(), Some(2.0));
+        // Nothing proposed: 0, not NaN.
+        assert_eq!(ServingMetrics::new().accept_rate(), 0.0);
     }
 
     #[test]

@@ -125,6 +125,31 @@
 //! back to full-precision pages with a loud warning rather than silently
 //! misreporting capacity.
 //!
+//! # Speculative decoding (`serve --spec-k K --spec-draft {ngram,engine}`)
+//!
+//! [`Scheduler::with_speculation`] turns the per-token decode batch into a
+//! draft/verify loop: each running slot proposes up to K tokens from a
+//! cheap draft source — [`scheduler::SpecDraft::NGram`] (prompt lookup:
+//! the longest recurring n-gram's continuation out of the slot's own
+//! history, zero extra compute) or [`scheduler::SpecDraft::Engine`] (a
+//! second, low-fidelity [`DecodeEngine`] — e.g. a lower-bit rung of the
+//! same quantization ladder — kept in lockstep with the target's
+//! committed history) — and the target engine scores all K+1 positions in
+//! **one** ragged verify call ([`DecodeEngine::verify`] /
+//! [`DecodeEngine::verify_paged`]). Greedy acceptance keeps the longest
+//! agreeing prefix plus the free correction token sampled from the first
+//! disagreeing row; rejected tokens roll back through
+//! [`DecodeEngine::rewind`] + [`SlotMap::rewind_by`] — positions *and*
+//! paged state, so pages grown for the window are released at the
+//! committed frontier, and speculative advances never donate to the
+//! prefix index, so a rejected token can never become cache-resident.
+//! Acceptance consumes the sampler's PRNG draws exactly as sequential
+//! decoding would, so output is **byte-identical** to the non-speculative
+//! run at any K, with any sampler, any draft source: speculation changes
+//! call counts (`verify_calls`, `accept_rate`, tokens-per-engine-call —
+//! the `spec_decode` bench section), never bytes. `--spec-k 0` (or
+//! omitting the flag) leaves every pre-existing path bit-untouched.
+//!
 //! # Failure model & recovery
 //!
 //! The step loop is an **error kernel**: every engine-touching path in
@@ -179,7 +204,8 @@ pub use engine::{
 pub use metrics::ServingMetrics;
 pub use sampling::{argmax, Sampler, SamplerKind};
 pub use scheduler::{
-    Completion, Deadline, GenRequest, Request, Response, Scheduler, Server, DEFAULT_RETRY_BUDGET,
+    Completion, Deadline, GenRequest, Request, Response, Scheduler, Server, SpecDraft,
+    DEFAULT_RETRY_BUDGET,
 };
 pub use slots::{SlotMap, SlotPhase};
 pub use trace::{

@@ -198,6 +198,54 @@ impl Sampler {
     }
 }
 
+/// Speculative acceptance over one verified window.
+///
+/// `rows[i]` is the target engine's logits row after feeding the window's
+/// token `i` (row 0 follows the slot's committed last token, row `i > 0`
+/// follows draft `i - 1`), and `drafts` are the window's proposed tokens —
+/// `rows.len() == drafts.len() + 1` in a full window. Walking rows in
+/// order, each row is sampled with `sampler` and committed; the walk stops
+/// at the first committed token that disagrees with its draft (every later
+/// row follows a token the target just refused, so its logits are
+/// counterfactual) or once `budget` tokens are committed (`budget >= 1`;
+/// a verify window always commits at least its first sample).
+///
+/// Returns `(committed, accepted)`: the tokens to commit, in order, and
+/// how many drafts agreed. The last committed token is always a fresh
+/// target sample — the free correction on rejection, the bonus token on
+/// full acceptance. A draft whose token matched but fell past the commit
+/// budget is not counted accepted (it bought nothing).
+///
+/// Rows are consumed strictly in order and each row's logits are exactly
+/// what a non-speculative run would have computed at that position, so
+/// the PRNG draw sequence matches sequential decoding draw for draw —
+/// greedy draws nothing, every other sampler draws exactly one uniform
+/// per committed token. That is the byte-identity anchor: speculation
+/// changes *when* logits are computed, never what is sampled from them.
+pub fn accept_speculative(
+    sampler: &Sampler,
+    rows: &[Vec<f32>],
+    drafts: &[i32],
+    rng: &mut Prng,
+    budget: usize,
+) -> (Vec<usize>, usize) {
+    let mut committed = Vec::with_capacity(rows.len());
+    let mut accepted = 0usize;
+    for (i, row) in rows.iter().enumerate() {
+        let tok = sampler.sample(row, rng);
+        committed.push(tok);
+        if committed.len() >= budget {
+            break;
+        }
+        if i < drafts.len() && tok as i32 == drafts[i] {
+            accepted += 1;
+        } else {
+            break;
+        }
+    }
+    (committed, accepted)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -446,6 +494,86 @@ mod tests {
             } else {
                 Err(format!("partial drew {got}, full sort drew {want} (k={k}, n={n})"))
             }
+        });
+    }
+
+    // -- speculative acceptance --------------------------------------------
+
+    fn one_hot(n: usize, i: usize) -> Vec<f32> {
+        let mut v = vec![0.0; n];
+        v[i] = 1.0;
+        v
+    }
+
+    #[test]
+    fn accept_speculative_keeps_longest_agreeing_prefix_plus_correction() {
+        let s = Sampler::greedy();
+        let mut rng = Prng::new(1);
+        let rows = vec![one_hot(8, 3), one_hot(8, 5), one_hot(8, 2)];
+        // Full agreement: both drafts accepted + the bonus token.
+        let (c, a) = accept_speculative(&s, &rows, &[3, 5], &mut rng, 16);
+        assert_eq!((c.as_slice(), a), ([3usize, 5, 2].as_slice(), 2));
+        // First draft diverges: one correction token, nothing accepted.
+        let (c, a) = accept_speculative(&s, &rows, &[4, 5], &mut rng, 16);
+        assert_eq!((c.as_slice(), a), ([3usize].as_slice(), 0));
+        // Second draft diverges: accepted prefix of 1 + correction.
+        let (c, a) = accept_speculative(&s, &rows, &[3, 4], &mut rng, 16);
+        assert_eq!((c.as_slice(), a), ([3usize, 5].as_slice(), 1));
+        // The commit budget caps the walk even under full agreement.
+        let (c, a) = accept_speculative(&s, &rows, &[3, 5], &mut rng, 2);
+        assert_eq!((c.as_slice(), a), ([3usize, 5].as_slice(), 1));
+        let (c, a) = accept_speculative(&s, &rows, &[3, 5], &mut rng, 1);
+        assert_eq!((c.as_slice(), a), ([3usize].as_slice(), 0));
+        // Empty draft window: a plain decode step in verify clothing.
+        let (c, a) = accept_speculative(&s, &rows[..1], &[], &mut rng, 16);
+        assert_eq!((c.as_slice(), a), ([3usize].as_slice(), 0));
+    }
+
+    #[test]
+    fn prop_accept_speculative_consumes_rng_exactly_like_sequential_decoding() {
+        use crate::testing::prop::forall;
+        forall(0x5bec, 300, |g| {
+            let n = g.int(2, 32);
+            let k = g.int(0, 4);
+            let rows: Vec<Vec<f32>> = (0..k + 1)
+                .map(|_| (0..n).map(|_| g.rng.normal() * 2.0).collect())
+                .collect();
+            let s = *g.pick(&vec![
+                Sampler::greedy(),
+                Sampler::temperature(0.8),
+                Sampler::top_k(4, 1.1),
+                Sampler::top_p(0.9, 0.7),
+            ]);
+            let seed = g.rng.next_u64();
+            let budget = g.int(1, k + 1);
+            // What sequential decoding over these rows would sample.
+            let mut seq_rng = Prng::new(seed);
+            let seq: Vec<usize> = rows.iter().map(|r| s.sample(r, &mut seq_rng)).collect();
+            // Drafts: the sequential samples themselves (full agreement),
+            // sometimes corrupted mid-window with an unmatchable token.
+            let mut drafts: Vec<i32> = seq[..k].iter().map(|&t| t as i32).collect();
+            if k > 0 && g.bool() {
+                drafts[g.int(0, k - 1)] = n as i32 + 1;
+            }
+            let mut rng = Prng::new(seed);
+            let (committed, accepted) = accept_speculative(&s, &rows, &drafts, &mut rng, budget);
+            // The committed tokens are exactly a sequential prefix...
+            if committed.as_slice() != &seq[..committed.len()] {
+                return Err(format!("committed {committed:?} diverges from sequential {seq:?}"));
+            }
+            if committed.is_empty() || committed.len() > budget || accepted > committed.len() {
+                return Err(format!("malformed result ({committed:?}, {accepted})"));
+            }
+            // ...and the PRNG advanced exactly as sampling them one step
+            // at a time would have: the very next draw agrees.
+            let mut check = Prng::new(seed);
+            for r in rows.iter().take(committed.len()) {
+                s.sample(r, &mut check);
+            }
+            if rng.next_u64() != check.next_u64() {
+                return Err("PRNG drifted from sequential decoding".into());
+            }
+            Ok(())
         });
     }
 

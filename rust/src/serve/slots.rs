@@ -405,6 +405,22 @@ impl SlotMap {
     /// duplicate content keeps the existing entry and the new page stays
     /// slot-exclusive.
     pub fn advance_by(&mut self, slot: usize, n: usize) -> Result<usize> {
+        self.advance_inner(slot, n, true)
+    }
+
+    /// Advance by `n` **speculative** (not yet verified-committed) tokens:
+    /// identical position accounting to [`SlotMap::advance_by`], but prefix
+    /// donation is structurally skipped. Draft tokens live past the prompt,
+    /// so the donation filter (`page end <= prompt.len()`) would already
+    /// reject their pages — this entry point makes the deferral a contract
+    /// rather than a coincidence: no page a speculative advance touches can
+    /// ever reach the [`PrefixIndex`], so a later [`SlotMap::rewind_by`]
+    /// can never strand a rejected token in (or adopt one from) the index.
+    pub fn advance_speculative(&mut self, slot: usize, n: usize) -> Result<usize> {
+        self.advance_inner(slot, n, false)
+    }
+
+    fn advance_inner(&mut self, slot: usize, n: usize, donate: bool) -> Result<usize> {
         let max_seq = self.max_seq;
         // Paged: the advance must stay inside the pages the table covers —
         // a position without a page would scatter into the out-of-range
@@ -441,9 +457,95 @@ impl SlotMap {
             Some(None) => bail!("slot {slot} advanced while free"),
             None => bail!("slot {slot} out of range (capacity {})", self.capacity()),
         };
-        if self.prefix.is_some() && !self.prompts[slot].is_empty() {
+        if donate && self.prefix.is_some() && !self.prompts[slot].is_empty() {
             self.donate_filled_pages(slot, old_pos, new_pos)?;
         }
+        Ok(new_pos)
+    }
+
+    /// Rewind an occupied slot's position by `n` tokens — the rollback half
+    /// of speculative decoding, unwinding what a speculative advance did:
+    /// the position moves back and, in paged mode, pages that no longer
+    /// cover any position are released back to the pool (a draft window
+    /// that grew across a page boundary and then got rejected must not leak
+    /// the freshly grown pages). Returns the new position; `n == 0` is a
+    /// no-op.
+    ///
+    /// Guards (all validated before anything changes, so a failed rewind
+    /// leaves slot and pool untouched and agreeing):
+    /// * `n` must not exceed the current position;
+    /// * the new position may not enter the slot's read-only shared pages
+    ///   (those tokens were never speculative);
+    /// * prefix-cache mode: the new position may not drop below the slot's
+    ///   processed-prompt frontier — pages up to there have been donated
+    ///   (or chain-walked) and re-advancing over them would double-donate.
+    ///   Draft tokens always live past the prompt, so a speculative rewind
+    ///   never hits this guard; it exists to reject API misuse loudly.
+    ///
+    /// Released pages are provably never index-resident (the frontier guard
+    /// keeps every donated page inside the kept range), and the paranoid
+    /// cross-check below turns any violation into a loud error rather than
+    /// a refcount leak.
+    pub fn rewind_by(&mut self, slot: usize, n: usize) -> Result<usize> {
+        let info = match self.state.get(slot) {
+            Some(Some(info)) => *info,
+            Some(None) => bail!("slot {slot} rewound while free"),
+            None => bail!("slot {slot} out of range (capacity {})", self.capacity()),
+        };
+        if n == 0 {
+            return Ok(info.pos);
+        }
+        if n > info.pos {
+            bail!("slot {slot}: rewind by {n} passes position 0 (pos {})", info.pos);
+        }
+        let new_pos = info.pos - n;
+        if let Some(pool) = self.pool.as_ref() {
+            let bs = pool.block_size();
+            if new_pos < self.shared[slot] * bs {
+                bail!(
+                    "slot {slot}: rewind to {new_pos} enters its {} read-only shared pages",
+                    self.shared[slot]
+                );
+            }
+            if self.prefix.is_some() && !self.prompts[slot].is_empty() {
+                let processed =
+                    (info.pos / bs).min(self.prompts[slot].len() / bs) * bs;
+                if new_pos < processed {
+                    bail!(
+                        "slot {slot}: rewind to {new_pos} drops below its processed-prompt \
+                         frontier {processed} (donated pages cannot be unwound)"
+                    );
+                }
+            }
+            let keep = pool.blocks_for(new_pos);
+            if keep < self.tables[slot].len() {
+                let released: Vec<u32> = self.tables[slot][keep..].to_vec();
+                if let Some(idx) = self.prefix.as_ref() {
+                    let resident = idx.pages();
+                    for &p in &released {
+                        if resident.contains(&p) {
+                            bail!(
+                                "slot {slot}: rewind would release page {p}, which is \
+                                 index-resident (unverified tokens were donated?!)"
+                            );
+                        }
+                    }
+                }
+                // Validate-then-free (batch-atomic): on error nothing —
+                // pool or slot — changes.
+                let pool = self.pool.as_mut().expect("checked paged");
+                pool.release(&released)?;
+                for &p in &released {
+                    self.trace.emit(TraceEvent::PageReleased {
+                        block: p,
+                        refcount: pool.refcount(p) as usize,
+                    });
+                }
+                self.tables[slot].truncate(keep);
+            }
+        }
+        let info = self.state[slot].as_mut().expect("checked occupied");
+        info.pos = new_pos;
         Ok(new_pos)
     }
 
@@ -814,6 +916,123 @@ mod tests {
         assert_eq!(m.pool().unwrap().used_blocks(), 1);
     }
 
+    // -- speculative rewind (accept-prefix rollback) -----------------------
+
+    #[test]
+    fn rewind_restores_position_dense_and_zero_is_noop() {
+        let mut m = SlotMap::new(1, 8);
+        let s = m.allocate(1).unwrap();
+        m.advance_by(s, 5).unwrap();
+        assert_eq!(m.rewind_by(s, 0).unwrap(), 5, "n == 0 is a no-op");
+        assert_eq!(m.rewind_by(s, 3).unwrap(), 2);
+        assert_eq!(m.pos(s), Some(2));
+        // Rewind composes with re-advance: the slot is fully usable.
+        m.advance_by(s, 6).unwrap();
+        assert_eq!(m.pos(s), Some(8));
+        assert!(m.rewind_by(s, 9).is_err(), "rewind past position 0");
+        assert_eq!(m.pos(s), Some(8), "failed rewind changes nothing");
+        assert!(m.rewind_by(7, 1).is_err(), "slot out of range");
+        m.release(s).unwrap();
+        assert!(m.rewind_by(s, 1).is_err(), "free slot cannot rewind");
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn paged_rewind_releases_pages_past_the_boundary() {
+        let mut m = SlotMap::paged(1, 32, 8, 4);
+        let s = m.allocate(1).unwrap();
+        assert!(m.ensure_capacity(s, 11).unwrap());
+        m.advance_by(s, 11).unwrap();
+        assert_eq!(m.table(s).len(), 3);
+        let free = m.pool().unwrap().free_blocks();
+        // 11 -> 5 crosses one page boundary: exactly one page comes back.
+        assert_eq!(m.rewind_by(s, 6).unwrap(), 5);
+        assert_eq!(m.table(s).len(), 2);
+        assert_eq!(m.pool().unwrap().free_blocks(), free + 1);
+        m.check_invariants().unwrap();
+        // Rewinding to zero releases everything the slot held.
+        assert_eq!(m.rewind_by(s, 5).unwrap(), 0);
+        assert_eq!(m.table(s).len(), 0);
+        assert_eq!(m.pool().unwrap().used_blocks(), 0);
+        m.check_invariants().unwrap();
+        // And the slot grows + advances again afterwards.
+        assert!(m.ensure_capacity(s, 3).unwrap());
+        m.advance_by(s, 3).unwrap();
+        assert_eq!(m.pos(s), Some(3));
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rewind_guards_shared_pages_and_donation_frontier() {
+        let mut m = SlotMap::paged(2, 32, 8, 4).with_prefix_cache();
+        let prompt: Vec<i32> = (0..8).collect();
+        let (a, _) = m.admit_paged(1, &prompt, 4).unwrap().unwrap();
+        feed(&mut m, a, 8); // donates pages 0 and 1
+        let (b, cached) = m.admit_paged(2, &prompt, 4).unwrap().unwrap();
+        assert_eq!(cached, 4, "page 0 mapped read-only");
+        feed(&mut m, b, 4); // finish the prompt: pos 8
+        feed(&mut m, b, 2); // generated tokens: pos 10
+        // Generated tokens roll back fine...
+        assert_eq!(m.rewind_by(b, 2).unwrap(), 8);
+        // ...but the processed-prompt frontier is a wall,
+        assert!(m.rewind_by(b, 1).is_err(), "donated prompt pages cannot be unwound");
+        // and the read-only shared page doubly so.
+        assert!(m.rewind_by(b, 5).is_err(), "shared pages are off limits");
+        assert_eq!(m.pos(b), Some(8), "failed rewinds left the position alone");
+        m.check_invariants().unwrap();
+    }
+
+    /// Satellite regression: a draft window that grew across a page
+    /// boundary and then got rejected must leave no trace — the grown
+    /// pages return to the pool and are never index-resident, because
+    /// `advance_speculative` structurally skips donation.
+    #[test]
+    fn rewound_speculative_pages_are_never_index_resident() {
+        let mut m = SlotMap::paged(1, 32, 8, 4).with_prefix_cache();
+        let prompt: Vec<i32> = (0..8).collect();
+        let (s, _) = m.admit_paged(1, &prompt, 4).unwrap().unwrap();
+        feed(&mut m, s, 8); // prompt committed: pages 0 and 1 donated
+        assert_eq!(m.prefix().unwrap().cached_pages(), 2);
+        // A 6-token draft window grows the table across a page boundary.
+        assert!(m.ensure_capacity(s, 14).unwrap());
+        m.advance_speculative(s, 6).unwrap();
+        assert_eq!(m.pos(s), Some(14));
+        assert_eq!(m.table(s).len(), 4);
+        assert_eq!(
+            m.prefix().unwrap().cached_pages(),
+            2,
+            "unverified draft pages never reach the index"
+        );
+        // The whole window is rejected: both grown pages come back clean.
+        let grown: Vec<u32> = m.table(s)[2..].to_vec();
+        assert_eq!(m.rewind_by(s, 6).unwrap(), 8);
+        assert_eq!(m.table(s).len(), 2);
+        for &p in &grown {
+            assert_eq!(m.pool().unwrap().refcount(p), 0, "rejected page left resident");
+            assert!(
+                !m.prefix().unwrap().pages().contains(&p),
+                "rejected page {p} is index-resident"
+            );
+        }
+        assert_eq!(m.prefix().unwrap().cached_pages(), 2);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn advance_speculative_never_donates_even_inside_the_prompt() {
+        let mut m = SlotMap::paged(1, 16, 4, 4).with_prefix_cache();
+        let prompt: Vec<i32> = (0..8).collect();
+        let (s, _) = m.admit_paged(1, &prompt, 3).unwrap().unwrap();
+        assert!(m.ensure_capacity(s, 8).unwrap());
+        m.advance_speculative(s, 8).unwrap();
+        assert_eq!(
+            m.prefix().unwrap().cached_pages(),
+            0,
+            "speculative writes are never donated, prompt-covered or not"
+        );
+        m.check_invariants().unwrap();
+    }
+
     /// Property (satellite): random interleavings of paged+prefix
     /// admit / grow / advance (with donation) / release keep
     /// `free + Σ(refcount > 0) == total`, every page's refcount equal to
@@ -1098,5 +1317,130 @@ mod tests {
             }
         }
         Ok(())
+    }
+
+    /// Property (satellite): adding `rewind_by` and `advance_speculative`
+    /// to random paged interleavings preserves every prior invariant
+    /// (`free + Σ(refcount > 0) == total`, used pages == table pages, no
+    /// page shared by two slots) and adds the rewind contract, checked
+    /// against a mirror position model: a granted rewind moves the
+    /// position by exactly `n` and truncates the table to
+    /// `ceil(pos / bs)` pages; a denied rewind (free slot, past zero)
+    /// changes nothing.
+    #[test]
+    fn prop_rewind_interleavings_keep_pool_honest() {
+        use crate::testing::prop::forall;
+        forall(0x4e71, 300, |g| {
+            let cap = g.int(1, 4);
+            let bs = g.int(1, 5);
+            let max_blocks = g.int(1, 8);
+            let max_seq = (max_blocks * bs).min(g.int(1, 24));
+            let mut m = SlotMap::paged(cap, max_seq, max_blocks, bs);
+            // Mirror: slot -> position; the pool is checked structurally.
+            let mut model: Vec<Option<usize>> = vec![None; cap];
+            let mut held: Vec<usize> = Vec::new();
+            for op in 0..g.int(5, 80) {
+                match g.int(0, 4) {
+                    0 => {
+                        if let Some(s) = m.allocate(op as u64) {
+                            model[s] = Some(0);
+                            held.push(s);
+                        }
+                    }
+                    1 => {
+                        if !held.is_empty() {
+                            let s = held.swap_remove(g.int(0, held.len() - 1));
+                            m.release(s).map_err(|e| e.to_string())?;
+                            model[s] = None;
+                        }
+                    }
+                    2 => {
+                        if !held.is_empty() {
+                            let s = *g.pick(&held);
+                            let pos = model[s].expect("held");
+                            let n = g.int(1, 4).min(max_seq - pos);
+                            if n > 0
+                                && m.ensure_capacity(s, pos + n).map_err(|e| e.to_string())?
+                            {
+                                // With the prefix cache off, speculative and
+                                // committed advances must account identically.
+                                let got = if g.bool() {
+                                    m.advance_speculative(s, n)
+                                } else {
+                                    m.advance_by(s, n)
+                                }
+                                .map_err(|e| e.to_string())?;
+                                if got != pos + n {
+                                    return Err(format!(
+                                        "op {op}: advance {got} != {}",
+                                        pos + n
+                                    ));
+                                }
+                                model[s] = Some(got);
+                            }
+                        }
+                    }
+                    _ => {
+                        // Rewind an arbitrary slot by an arbitrary
+                        // (sometimes illegal) amount.
+                        let s = g.int(0, cap - 1);
+                        let n = g.int(0, max_seq + 1);
+                        match (m.rewind_by(s, n), model[s]) {
+                            (Ok(p), Some(pos)) if n <= pos => {
+                                if p != pos - n {
+                                    return Err(format!(
+                                        "op {op}: rewind_by({s}, {n}) = {p} from pos {pos}"
+                                    ));
+                                }
+                                model[s] = Some(p);
+                                let keep = m.pool().unwrap().blocks_for(p);
+                                if n > 0 && m.table(s).len() != keep {
+                                    return Err(format!(
+                                        "op {op}: table holds {} pages after rewind to \
+                                         {p}, which needs {keep}",
+                                        m.table(s).len()
+                                    ));
+                                }
+                            }
+                            (Err(_), Some(pos)) if n > pos => {}
+                            (Err(_), None) => {}
+                            (r, state) => {
+                                return Err(format!(
+                                    "op {op}: rewind_by({s}, {n}) = {r:?} vs {state:?}"
+                                ))
+                            }
+                        }
+                    }
+                }
+                // Structural audit plus the same pool checks as the
+                // non-rewind suite, after every op.
+                m.check_invariants().map_err(|e| format!("op {op}: {e}"))?;
+                let pool = m.pool().unwrap();
+                if pool.free_blocks() + pool.used_blocks() != pool.total_blocks() {
+                    return Err(format!("op {op}: pool accounting leaked"));
+                }
+                let table_total: usize = (0..cap).map(|s| m.table(s).len()).sum();
+                if table_total != pool.used_blocks() {
+                    return Err(format!(
+                        "op {op}: tables hold {table_total} pages, pool says {}",
+                        pool.used_blocks()
+                    ));
+                }
+                let mut all: Vec<u32> =
+                    (0..cap).flat_map(|s| m.table(s).iter().copied()).collect();
+                all.sort_unstable();
+                let n = all.len();
+                all.dedup();
+                if all.len() != n {
+                    return Err(format!("op {op}: physical page shared between slots"));
+                }
+                for s in 0..cap {
+                    if m.pos(s) != model[s] {
+                        return Err(format!("op {op}: slot {s} pos {:?} drifted", m.pos(s)));
+                    }
+                }
+            }
+            Ok(())
+        });
     }
 }

@@ -21,6 +21,11 @@
 //! * [`TraceEvent::TokenDecoded`] — a token was sampled; for a *running*
 //!   slot it carries the engine-call stall count the decode-stall
 //!   histogram records.
+//! * [`TraceEvent::DraftProposed`] / [`TraceEvent::DraftAccepted`] /
+//!   [`TraceEvent::DraftRejected`] — the speculative plane: a draft
+//!   window entered the step's verify call, and how much of it survived
+//!   greedy acceptance (rejected drafts are rolled back through
+//!   `SlotMap::rewind_by` and never appear as decoded tokens).
 //! * [`TraceEvent::StepComposed`] — the step composer's plan for one
 //!   iteration (decode lanes vs budgeted prefill take).
 //! * [`TraceEvent::PrefixDonated`] / [`TraceEvent::PageAllocated`] /
@@ -109,6 +114,18 @@ pub enum TraceEvent {
     /// *running* (prompt fully fed) at the start of the iteration — exactly
     /// the tokens the decode-stall histogram samples.
     TokenDecoded { id: u64, slot: usize, stall_steps: Option<usize> },
+    /// A window of `tokens` draft tokens entered the step's verify call
+    /// for this slot. Emitted at plan time: a verify fault leaves it
+    /// standing with no matching accept/reject record — the step backs
+    /// off and proposes afresh on retry.
+    DraftProposed { id: u64, slot: usize, tokens: usize },
+    /// `accepted` of the proposed drafts agreed with the target engine
+    /// (the longest agreeing prefix). The bonus correction token is
+    /// counted by its own [`TraceEvent::TokenDecoded`], never here.
+    DraftAccepted { id: u64, slot: usize, accepted: usize },
+    /// `rejected` drafts diverged from the target and were rolled back —
+    /// positions and freshly grown pages rewound as if never written.
+    DraftRejected { id: u64, slot: usize, rejected: usize },
     Evicted { id: u64, slot: usize, reason: EvictReason },
     Completed { id: u64, slot: usize, reason: FinishReason },
     StepComposed { decode_lanes: usize, prefill_take: usize, budget: usize },
@@ -427,6 +444,8 @@ pub fn verify_against_metrics(
     let mut quarantined = 0usize;
     let mut shed_queued = 0usize;
     let mut shed_inflight = 0usize;
+    let mut drafts_proposed = 0usize;
+    let mut drafts_accepted = 0usize;
     for r in records {
         match r.event {
             TraceEvent::TokenDecoded { stall_steps, .. } => {
@@ -447,6 +466,8 @@ pub fn verify_against_metrics(
             TraceEvent::RequestFailed { .. } => quarantined += 1,
             TraceEvent::DeadlineExpired { queued: true, .. } => shed_queued += 1,
             TraceEvent::DeadlineExpired { queued: false, .. } => shed_inflight += 1,
+            TraceEvent::DraftProposed { tokens, .. } => drafts_proposed += tokens,
+            TraceEvent::DraftAccepted { accepted, .. } => drafts_accepted += accepted,
             _ => {}
         }
     }
@@ -476,6 +497,11 @@ pub fn verify_against_metrics(
         ("fault evictions", fault_evictions, m.requests_fault_evicted),
         ("queued deadline sheds", shed_queued, m.deadline_shed_queued),
         ("in-flight deadline sheds", shed_inflight, m.deadline_shed_inflight),
+        // The speculative plane too: both sides count proposals at plan
+        // time and acceptances after the verify call, so they agree even
+        // when a verify fault strands a proposal without a verdict.
+        ("draft tokens proposed", drafts_proposed, m.draft_tokens_proposed),
+        ("draft tokens accepted", drafts_accepted, m.draft_tokens_accepted),
     ] {
         if got != want {
             return Err(format!("trace has {got} {name}, metrics {want}"));
@@ -878,6 +904,11 @@ mod tests {
         assert!(TraceEvent::SlotRecovered { id: 0, slot: 1 }.in_oracle_scope());
         assert!(TraceEvent::RequestFailed { id: 0, slot: None, faults: 3 }.in_oracle_scope());
         assert!(TraceEvent::DeadlineExpired { id: 0, queued: true }.in_oracle_scope());
+        // The speculative plane is a decision stream: the oracle predicts
+        // every proposal, acceptance and rollback.
+        assert!(TraceEvent::DraftProposed { id: 0, slot: 1, tokens: 4 }.in_oracle_scope());
+        assert!(TraceEvent::DraftAccepted { id: 0, slot: 1, accepted: 2 }.in_oracle_scope());
+        assert!(TraceEvent::DraftRejected { id: 0, slot: 1, rejected: 2 }.in_oracle_scope());
         assert!(!TraceEvent::PageAllocated { block: 0, refcount: 1 }.in_oracle_scope());
         assert!(!TraceEvent::PageRetained { block: 0, refcount: 2 }.in_oracle_scope());
         assert!(!TraceEvent::PageReleased { block: 0, refcount: 0 }.in_oracle_scope());

@@ -53,7 +53,13 @@
 //! occupancy and queue depth, the exact number of decode steps and
 //! prefill calls, and — event by event — the trace stream itself. The shared-prefix suites additionally require the real
 //! scheduler's completions to be **byte-identical with the prefix cache on
-//! and off**. Failures print the seed/case (via [`super::prop::forall`])
+//! and off**. Speculative decoding (`spec_k > 0`) is deliberately outside
+//! the oracle's scope — acceptance depends on logit values, and this model
+//! has none — so the speculation suites are real-scheduler-only: spec-on
+//! runs must be **byte-identical to spec-off** at any window size, with
+//! either draft source, across dense / paged / prefix-cached / composed /
+//! fault-injected shapes, and the scheduler's n-gram drafting rule is
+//! cross-checked against an independent mirror implementation. Failures print the seed/case (via [`super::prop::forall`])
 //! so any divergence is reproducible. CI pins the seeds (see
 //! `.github/workflows/ci.yml`) so trace-equivalence regressions fail the
 //! build.
@@ -132,6 +138,16 @@ pub struct SimConfig {
     /// Faults a request (or step-wide streak) survives before quarantine
     /// (or warm-restart eviction) — `Scheduler::with_retry_budget`.
     pub retry_budget: usize,
+    /// Speculative window (`--spec-k`); 0 = speculation off. The oracle
+    /// deliberately does **not** model speculation — acceptance depends on
+    /// logit values, which the bookkeeping model has none of — so
+    /// oracle-equivalence traces keep this 0; `spec_k > 0` configurations
+    /// are consumed by the real-scheduler-only byte-identity suites
+    /// (speculation must reshape call counts, never bytes).
+    pub spec_k: usize,
+    /// Draft source when `spec_k > 0`: n-gram prompt lookup (`true`) or a
+    /// same-shape dense engine drafter (`false`).
+    pub spec_ngram: bool,
 }
 
 impl SimConfig {
@@ -151,6 +167,8 @@ impl SimConfig {
             fault_seed: 0,
             fault_burst: 1,
             retry_budget: DEFAULT_RETRY_BUDGET,
+            spec_k: 0,
+            spec_ngram: true,
         }
     }
 
@@ -1321,9 +1339,20 @@ pub fn simulate(cfg: &SimConfig, events: &[SimEvent]) -> SimResult {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::serve::{DecodeEngine, FaultInjector, GenRequest, MockEngine, Scheduler};
+    use crate::serve::{DecodeEngine, FaultInjector, GenRequest, MockEngine, Scheduler, SpecDraft};
     use crate::testing::prop::{forall, Gen};
     use std::collections::BTreeMap;
+
+    /// The draft source a `SimConfig` asks for (engine drafters are a
+    /// dense same-shape mock — a stand-in for a lower rung of the
+    /// quantization ladder).
+    fn spec_draft(cfg: &SimConfig) -> SpecDraft {
+        if cfg.spec_ngram {
+            SpecDraft::NGram
+        } else {
+            SpecDraft::Engine(Box::new(MockEngine::new(cfg.slots, cfg.max_seq, 64)))
+        }
+    }
 
     fn build_scheduler(cfg: &SimConfig) -> Scheduler<MockEngine> {
         let mut engine = MockEngine::new(cfg.slots, cfg.max_seq, 64)
@@ -1338,6 +1367,9 @@ mod tests {
         }
         if cfg.step_budget > 0 {
             s = s.with_step_budget(cfg.step_budget).expect("budget over a prefill engine");
+        }
+        if cfg.spec_k > 0 {
+            s = s.with_speculation(cfg.spec_k, spec_draft(cfg)).expect("speculation config");
         }
         s
     }
@@ -1359,6 +1391,9 @@ mod tests {
         }
         if cfg.step_budget > 0 {
             s = s.with_step_budget(cfg.step_budget).expect("budget over a prefill engine");
+        }
+        if cfg.spec_k > 0 {
+            s = s.with_speculation(cfg.spec_k, spec_draft(cfg)).expect("speculation config");
         }
         s.with_retry_budget(cfg.retry_budget).expect("retry budget")
     }
@@ -1511,6 +1546,8 @@ mod tests {
             fault_seed: 0,
             fault_burst: 1,
             retry_budget: DEFAULT_RETRY_BUDGET,
+            spec_k: 0,
+            spec_ngram: true,
         };
         let events = random_events(g, &cfg);
         (cfg, events)
@@ -1552,6 +1589,8 @@ mod tests {
             fault_seed: 0,
             fault_burst: 1,
             retry_budget: DEFAULT_RETRY_BUDGET,
+            spec_k: 0,
+            spec_ngram: true,
         };
         let n_events = g.int(4, 40);
         let mut events = Vec::with_capacity(n_events);
@@ -1607,6 +1646,8 @@ mod tests {
             fault_seed: 0,
             fault_burst: 1,
             retry_budget: DEFAULT_RETRY_BUDGET,
+            spec_k: 0,
+            spec_ngram: true,
         };
         let n_events = g.int(4, 40);
         let mut events = Vec::with_capacity(n_events);
@@ -1665,6 +1706,8 @@ mod tests {
             fault_seed: 0,
             fault_burst: 1,
             retry_budget: DEFAULT_RETRY_BUDGET,
+            spec_k: 0,
+            spec_ngram: true,
         };
         let off_cfg = SimConfig { step_budget: 0, ..on_cfg };
         let n_events = g.int(4, 30);
@@ -1896,6 +1939,8 @@ mod tests {
             fault_seed: 0,
             fault_burst: 1,
             retry_budget: DEFAULT_RETRY_BUDGET,
+            spec_k: 0,
+            spec_ngram: true,
         };
         let off_cfg = SimConfig { prefix_cache: false, ..on_cfg };
         let n_events = g.int(4, 30);
@@ -2080,6 +2125,8 @@ mod tests {
             fault_seed: g.int(0, 1 << 30) as u64,
             fault_burst: *g.pick(&[1usize, 2, 3]),
             retry_budget: *g.pick(&[1usize, 2, 3, 4]),
+            spec_k: 0,
+            spec_ngram: true,
         };
         let clean = SimConfig { fault_rate: 0.0, ..faulty };
         let n_events = g.int(4, 30);
@@ -2123,6 +2170,175 @@ mod tests {
             }
         }
         Ok(())
+    }
+
+    /// THE speculative-decoding acceptance property (real scheduler only —
+    /// the oracle models no logits, so it cannot model acceptance): on a
+    /// no-cancel, no-backpressure trace, every request's *bytes* are
+    /// identical with speculation on (any K, either draft source) and off.
+    /// Shapes sweep dense, paged (pool-starved, so speculation interleaves
+    /// with eviction) and prefix-cached pools, chunked prefill, and the
+    /// step composer — speculation reshapes engine calls, never content.
+    fn check_spec_on_off_bit_identical(g: &mut Gen) -> Result<(), String> {
+        let slots = g.int(1, 4);
+        let max_seq = g.int(8, 48);
+        let paged = g.bool();
+        let block_size = *g.pick(&[2usize, 4, 8]);
+        let full = slots * max_seq.div_ceil(block_size);
+        let step_budget = *g.pick(&[0usize, 0, 0, 4]);
+        let chunk = if step_budget > 0 {
+            *g.pick(&[2usize, 4, 8])
+        } else {
+            *g.pick(&[1usize, 1, 2, 4, 8])
+        };
+        let on_cfg = SimConfig {
+            slots,
+            max_seq,
+            // No backpressure, no cancels: ids line up run to run.
+            max_queue: 64,
+            prefill_chunk: chunk,
+            kv_blocks: if paged { g.int(2, full.max(3)) } else { 0 },
+            block_size,
+            prefix_cache: paged && g.bool(),
+            step_budget,
+            kv_bits: *g.pick(&[4.0, 8.0, 16.0]),
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_burst: 1,
+            retry_budget: DEFAULT_RETRY_BUDGET,
+            spec_k: *g.pick(&[1usize, 2, 4, 8]),
+            spec_ngram: g.bool(),
+        };
+        let off_cfg = SimConfig { spec_k: 0, ..on_cfg };
+        let n_events = g.int(4, 30);
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            if g.int(0, 2) == 0 {
+                if on_cfg.prefix_cache {
+                    events.push(random_shared_submit(g, &on_cfg));
+                } else {
+                    events.push(SimEvent::Submit(SimRequest::plain(
+                        g.int(1, (max_seq - 1).min(24)),
+                        g.int(0, 8),
+                    )));
+                }
+            } else {
+                events.push(SimEvent::Step);
+            }
+        }
+        let on = completions_by_id(&on_cfg, &events);
+        let off = completions_by_id(&off_cfg, &events);
+        if on.len() != off.len() {
+            return Err(format!(
+                "{on_cfg:?}: {} completions with speculation on, {} off",
+                on.len(),
+                off.len()
+            ));
+        }
+        for (id, bytes) in &on {
+            if off.get(id) != Some(bytes) {
+                return Err(format!(
+                    "{on_cfg:?}: request {id} diverged\nspec on:  {bytes:?}\nspec off: {:?}",
+                    off.get(id)
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Speculation x fault injection: the error kernel must absorb faults
+    /// raised by batched *verify* calls exactly as it absorbs decode
+    /// faults — a failed window restore-rewinds and retries, so every
+    /// surviving request's bytes match the fault-free, speculation-free
+    /// run, under the full invariant audit after every step.
+    fn check_spec_fault_survivors_bit_identical(g: &mut Gen) -> Result<(), String> {
+        let slots = g.int(1, 4);
+        let max_seq = g.int(8, 48);
+        let paged = g.bool();
+        let block_size = *g.pick(&[2usize, 4, 8]);
+        let full = slots * max_seq.div_ceil(block_size);
+        let faulty = SimConfig {
+            slots,
+            max_seq,
+            max_queue: 64,
+            prefill_chunk: *g.pick(&[1usize, 1, 2, 4]),
+            kv_blocks: if paged { g.int(2, full.max(3)) } else { 0 },
+            block_size,
+            prefix_cache: paged && g.bool(),
+            step_budget: 0,
+            kv_bits: 16.0,
+            fault_rate: *g.pick(&[0.01f64, 0.05]),
+            fault_seed: g.int(0, 1 << 30) as u64,
+            fault_burst: *g.pick(&[1usize, 2, 3]),
+            retry_budget: *g.pick(&[2usize, 3, 4]),
+            spec_k: *g.pick(&[1usize, 2, 4]),
+            spec_ngram: g.bool(),
+        };
+        let clean = SimConfig { fault_rate: 0.0, spec_k: 0, ..faulty };
+        let n_events = g.int(4, 30);
+        let mut events = Vec::with_capacity(n_events);
+        for _ in 0..n_events {
+            if g.int(0, 2) == 0 {
+                events.push(SimEvent::Submit(SimRequest::plain(
+                    g.int(1, (max_seq - 1).min(24)),
+                    g.int(0, 8),
+                )));
+            } else {
+                events.push(SimEvent::Step);
+            }
+        }
+        let faulty_out = fault_completions_by_id(&faulty, &events)?;
+        let clean_out = fault_completions_by_id(&clean, &events)?;
+        if faulty_out.len() != clean_out.len() {
+            return Err(format!(
+                "{faulty:?}: {} terminations under faults vs {} clean — a request was lost",
+                faulty_out.len(),
+                clean_out.len()
+            ));
+        }
+        for (id, (bytes, reason)) in &faulty_out {
+            if matches!(reason, FinishReason::Quarantined | FinishReason::DeadlineExpired) {
+                continue;
+            }
+            match clean_out.get(id) {
+                Some((clean_bytes, _)) if clean_bytes == bytes => {}
+                other => {
+                    return Err(format!(
+                        "{faulty:?}: surviving request {id} diverged\n\
+                         faulty+spec: {bytes:?}\nclean:       {other:?}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Independent reimplementation of the prompt-lookup rule the
+    /// scheduler's `ngram_draft` documents (longest n in 3..=1 with a
+    /// recurrence, most recent occurrence wins, continuation capped by k
+    /// and by the end of history) — written against the contract, not the
+    /// code, so the two stay honest about the rule.
+    fn mirror_ngram(toks: &[i32], k: usize) -> Vec<i32> {
+        if k == 0 {
+            return Vec::new();
+        }
+        for n in (1..=3).rev() {
+            if toks.len() < n + 1 {
+                continue;
+            }
+            let suffix = &toks[toks.len() - n..];
+            let mut latest = None;
+            for i in 0..toks.len() - n {
+                if &toks[i..i + n] == suffix {
+                    latest = Some(i);
+                }
+            }
+            if let Some(i) = latest {
+                let start = i + n;
+                return toks[start..(start + k).min(toks.len())].to_vec();
+            }
+        }
+        Vec::new()
     }
 
     // Three pinned seeds x 120 traces per suite in CI; any failure prints
@@ -2244,6 +2460,49 @@ mod tests {
         forall(2020, 120, check_fault_survivors_bit_identical);
     }
 
+    // Speculative decoding: the real-only byte-identity suites (the oracle
+    // models no logits, so acceptance is out of its scope by construction).
+    // Two pinned seeds x 120 spec-on-vs-off traces over dense / paged /
+    // prefix / composer shapes, plus 120 chaos traces where speculation,
+    // eviction, the prefix cache and the fault injector all interleave.
+
+    #[test]
+    fn sim_spec_on_off_bit_identical_seed_a() {
+        forall(2121, 120, check_spec_on_off_bit_identical);
+    }
+
+    #[test]
+    fn sim_spec_on_off_bit_identical_seed_b() {
+        forall(2222, 120, check_spec_on_off_bit_identical);
+    }
+
+    #[test]
+    fn sim_spec_fault_survivors_bit_identical() {
+        forall(2323, 120, check_spec_fault_survivors_bit_identical);
+    }
+
+    /// The drafting rule itself, cross-checked against an independent
+    /// mirror on random token streams (small vocabularies make recurrences
+    /// common, so the longest-n and most-recent tie-breaks really fire).
+    #[test]
+    fn sim_ngram_mirror_agrees_with_scheduler() {
+        forall(2424, 400, |g| {
+            let vocab = *g.pick(&[2usize, 3, 8, 64]);
+            let len = g.int(0, 40);
+            let toks: Vec<i32> = (0..len).map(|_| g.int(0, vocab - 1) as i32).collect();
+            let k = g.int(0, 6);
+            let real = crate::serve::scheduler::ngram_draft(&toks, k);
+            let mine = mirror_ngram(&toks, k);
+            if real == mine {
+                Ok(())
+            } else {
+                Err(format!(
+                    "ngram_draft({toks:?}, {k}) = {real:?}, mirror says {mine:?}"
+                ))
+            }
+        });
+    }
+
     /// Extra exploration knob: SPINQUANT_SIM_SEED=1234 cargo test — runs
     /// another 120 dense + 120 paged + 120 prefix traces from an arbitrary
     /// seed without a rebuild.
@@ -2321,6 +2580,8 @@ mod tests {
             fault_seed: 0,
             fault_burst: 1,
             retry_budget: DEFAULT_RETRY_BUDGET,
+            spec_k: 0,
+            spec_ngram: true,
         };
         let events = [
             SimEvent::Submit(SimRequest::plain(4, 8)),
@@ -2354,6 +2615,8 @@ mod tests {
             fault_seed: 0,
             fault_burst: 1,
             retry_budget: DEFAULT_RETRY_BUDGET,
+            spec_k: 0,
+            spec_ngram: true,
         };
         let events = [
             SimEvent::Submit(SimRequest::plain(2, 1)), // 1 page
@@ -2440,6 +2703,8 @@ mod tests {
             fault_seed: 0,
             fault_burst: 1,
             retry_budget: DEFAULT_RETRY_BUDGET,
+            spec_k: 0,
+            spec_ngram: true,
         };
         let shared = SimRequest {
             prompt_len: 9,
