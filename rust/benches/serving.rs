@@ -66,6 +66,16 @@
 //!   decode stall no worse, and adds one engine-drafter leg (a second
 //!   same-fidelity mock rung, so greedy acceptance must be 100% — the
 //!   drafter rung's own calls are free here and are not counted).
+//! * `serving_load` — the open-loop RPS sweep over the *real* HTTP/SSE
+//!   front on loopback: at each fixed offered-RPS point a seeded Poisson
+//!   schedule (mixed prompt/output lengths, 1/(rank+1) tenant skew) drives
+//!   `POST /generate` streams against a MockEngine scheduler behind a
+//!   shed watermark, recording goodput, TTFT p50/p99 (charged from the
+//!   *scheduled* arrival — no coordinated omission) and inter-token p99.
+//!   Quick mode shrinks the arrival window, never the point list or key
+//!   set (the CI jq schema pins both). A `byte_identical` leg asserts
+//!   that completions streamed through the front equal the same requests
+//!   run directly through `Scheduler::serve_all`.
 //! * `trace` — the flight recorder audited two ways on the decode-stall
 //!   scenario: (1) overhead — the identical leg with tracing off vs on
 //!   (ring capacity 2^20), mean step latency side by side, plus a
@@ -96,10 +106,11 @@ use spinquant::eval::QcfgVec;
 use spinquant::model::{Manifest, Weights};
 use spinquant::report;
 use spinquant::runtime::Runtime;
+use spinquant::serve::http::blocking_request;
 use spinquant::serve::{
-    blocks, chrome_trace, verify_against_metrics, DecodeVariant, FaultInjector, FinishReason,
-    GenRequest, MockEngine, PjrtEngine, Sampler, Scheduler, ServingMetrics, SpecDraft,
-    TraceRecord,
+    blocks, chrome_trace, run_open_loop, verify_against_metrics, DecodeVariant, FaultInjector,
+    FinishReason, GenRequest, HttpFront, HttpFrontConfig, LoadGenConfig, MockEngine, PjrtEngine,
+    Sampler, Scheduler, ServingMetrics, SpecDraft, TraceRecord,
 };
 use spinquant::util::json::{self, Json};
 use spinquant::util::prng::Prng;
@@ -1311,6 +1322,131 @@ fn sampler_cost() -> Json {
     json::obj(rows.iter().map(|(k, v)| (k.as_str(), v.clone())).collect())
 }
 
+// -- serving_load: open-loop RPS sweep over the real HTTP/SSE front ---------
+
+/// Fixed offered-RPS points. Identical in quick and full mode — the CI jq
+/// schema requires every point's keys, so quick mode shrinks the arrival
+/// window (`LOAD_WINDOW_SECS`), never this list.
+const LOAD_RPS_POINTS: [f64; 3] = [50.0, 150.0, 400.0];
+const LOAD_SHED_DEPTH: usize = 32;
+
+fn load_window_secs() -> f64 {
+    if quick() { 0.25 } else { 1.5 }
+}
+
+fn serving_load_sweep() -> Json {
+    let window = load_window_secs();
+    println!();
+    println!(
+        "{:>12} {:>9} {:>9} {:>9} {:>12} {:>12} {:>16}",
+        "offered rps", "offered", "done", "shed 429", "goodput", "ttft p99 ms", "intertok p99 ms"
+    );
+    let mut points = Vec::new();
+    for (i, &rps) in LOAD_RPS_POINTS.iter().enumerate() {
+        let mut sched = Scheduler::new(MockEngine::new(4, 256, 64), 64).expect("scheduler");
+        let mut front = HttpFront::bind(
+            "127.0.0.1:0",
+            HttpFrontConfig { rate_per_sec: None, burst: 8.0, shed_depth: LOAD_SHED_DEPTH },
+        )
+        .expect("bind loopback front");
+        front.install_token_hook(&mut sched);
+        let cfg = LoadGenConfig {
+            rps,
+            duration_secs: window,
+            seed: 4242 + i as u64,
+            tenants: 4,
+            prompt_len: (8, 24),
+            max_new: (4, 12),
+            timeout_secs: 20.0,
+        };
+        let r = run_open_loop(&mut front, &mut sched, &cfg).expect("open-loop run");
+        println!(
+            "{:>12.0} {:>9} {:>9} {:>9} {:>12.1} {:>12.2} {:>16.3}",
+            rps,
+            r.offered,
+            r.completed,
+            r.shed,
+            r.goodput_rps,
+            r.ttft_us.percentile_us(99.0) / 1e3,
+            r.inter_token_us.percentile_us(99.0) / 1e3,
+        );
+        assert_eq!(r.errors, 0, "loopback load run must not drop requests");
+        points.push(r.to_json(rps));
+    }
+    let byte_identical = load_byte_identity_leg();
+    assert!(byte_identical, "front-streamed completions diverged from the direct run");
+    json::obj(vec![
+        ("window_secs", json::num(window)),
+        ("shed_depth", json::num(LOAD_SHED_DEPTH as f64)),
+        ("points", json::arr(points)),
+        ("byte_identical", Json::Bool(byte_identical)),
+    ])
+}
+
+/// Stream a fixed request set through the front from worker threads and
+/// compare bytes against the identical requests run straight through
+/// `Scheduler::serve_all` on a fresh scheduler.
+fn load_byte_identity_leg() -> bool {
+    let prompts =
+        ["alpha alpha alpha", "bravo bravo bravo", "charlie charlie", "delta delta delta"];
+    let mut direct = Scheduler::new(MockEngine::new(2, 64, 64), 16).expect("scheduler");
+    let baseline = direct
+        .serve_all(prompts.iter().enumerate().map(|(i, p)| {
+            GenRequest::sampled(p.as_bytes(), 10, Sampler::top_k(4, 0.7), 7 + i as u64)
+        }))
+        .expect("direct run");
+
+    let mut sched = Scheduler::new(MockEngine::new(2, 64, 64), 16).expect("scheduler");
+    let mut front =
+        HttpFront::bind("127.0.0.1:0", HttpFrontConfig::default()).expect("bind front");
+    front.install_token_hook(&mut sched);
+    let addr = front.local_addr().expect("front addr");
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut handles = Vec::new();
+    for (i, p) in prompts.iter().enumerate() {
+        let body = format!(
+            "{{\"prompt\":\"{p}\",\"max_new_tokens\":10,\"seed\":{},\
+             \"sampler\":\"top-k\",\"top_k\":4,\"temperature\":0.7}}",
+            7 + i
+        );
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || {
+            let out = blocking_request(addr, &body, "bench", std::time::Duration::from_secs(20));
+            let _ = tx.send((i, out));
+        }));
+    }
+    drop(tx);
+    let mut got: Vec<Option<_>> = (0..prompts.len()).map(|_| None).collect();
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    let mut resolved = 0;
+    while resolved < prompts.len() && std::time::Instant::now() < deadline {
+        front.poll(&mut sched).expect("front poll");
+        while let Ok((i, out)) = rx.try_recv() {
+            got[i] = Some(out);
+            resolved += 1;
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    while let Ok((i, out)) = rx.try_recv() {
+        if got[i].is_none() {
+            got[i] = Some(out);
+        }
+    }
+    prompts.iter().enumerate().all(|(i, p)| match &got[i] {
+        Some(Ok(o)) if o.status == 200 && o.done.is_some() => {
+            let want = baseline
+                .iter()
+                .find(|c| c.prompt == p.as_bytes())
+                .expect("baseline completion");
+            o.bytes == want.completion
+        }
+        _ => false,
+    })
+}
+
 fn main() {
     let pjrt_ctx = Manifest::load(std::path::Path::new("artifacts"))
         .ok()
@@ -1409,6 +1545,7 @@ fn main() {
     let fault_recovery = fault_recovery_sweep();
     let spec_decode = spec_decode_sweep();
     let sampler = sampler_cost();
+    let serving_load = serving_load_sweep();
 
     let out = json::obj(vec![
         ("bench", json::s("serving")),
@@ -1426,6 +1563,7 @@ fn main() {
         ("fault_recovery", fault_recovery),
         ("spec_decode", spec_decode),
         ("sampler", sampler),
+        ("serving_load", serving_load),
         (
             "ttft",
             json::obj(

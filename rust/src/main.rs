@@ -98,7 +98,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: spinquant <quantize|eval|optimize|serve|bench-table|selftest|info> [--key value ...]\n\
+        "usage: spinquant <quantize|eval|optimize|serve|loadgen|bench-table|selftest|info> [--key value ...]\n\
          common flags: --model sq-2m --method spinquant-had --bits 4-4-4 --config run.toml\n\
          serve:        --batch 1|4|8 --sampler greedy|temperature|top-k|top-p --temperature 0.8\n\
                        --top-k 40 --top-p 0.95 --seed 0 --max-new-tokens 48 --prompt \"a|b|c\"\n\
@@ -117,6 +117,15 @@ fn usage() -> ! {
                        --fault-seed S --fault-burst K (fault schedule seed / burst length)\n\
                        --retry-budget N (faults per request before quarantine; 0 = default)\n\
                        --deadline-ms D (shed requests older than D ms; 0 = none)\n\
+                       --http PORT (HTTP/1.1 + SSE front on 127.0.0.1:PORT: POST /generate\n\
+                       streams one SSE event per token, GET /healthz; runs until killed)\n\
+                       --rate-limit N (per-tenant token bucket, N req/s sustained; tenant =\n\
+                       x-tenant header) --burst B (bucket capacity, default 8)\n\
+                       --shed-depth D (429 once queue depth reaches D; default 64)\n\
+         loadgen:      --rps R --duration SECS --seed S --tenants N (open-loop seeded\n\
+                       Poisson load against a loopback front over a MockEngine scheduler;\n\
+                       prints goodput/TTFT/inter-token JSON) --slots K --max-queue M\n\
+                       --rate-limit/--burst/--shed-depth as above [--out report.json]\n\
          bench-table:  --id table1|table2|table3|table4|table5|table6|table10|table11|table12|table13|fig2|fig3|fig4|fig7|fig8 [--models a,b] [--out EXPERIMENTS.md]"
     );
     std::process::exit(2);
@@ -179,6 +188,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(&cfg),
         "optimize" => cmd_optimize(&cfg),
         "serve" => cmd_serve(&cfg, &extra),
+        "loadgen" => cmd_loadgen(&extra),
         "bench-table" => {
             let id = get_extra(&extra, "id").ok_or_else(|| anyhow!("bench-table needs --id"))?;
             let models: Vec<String> = get_extra(&extra, "models")
@@ -664,6 +674,53 @@ fn serve_with<E: serve::DecodeEngine>(engine: E, k: &ServeKnobs) -> Result<()> {
         eprintln!("note: --trace-buffer has no effect without --trace out.json");
     }
 
+    // HTTP/SSE network front: `--http PORT` swaps the one-shot prompt list
+    // for a socket front serving `POST /generate` streams until killed.
+    // The scheduler stays on this thread (PJRT handles are not `Send`);
+    // the front multiplexes sockets around it. `--rate-limit N` (req/s
+    // sustained per tenant, capacity `--burst B`) and `--shed-depth D`
+    // turn overload into fast 429s instead of queue growth.
+    if let Some(port) = get_extra(k.extra, "http") {
+        let port: u16 = port.parse()?;
+        let rate_per_sec: Option<f64> =
+            get_extra(k.extra, "rate-limit").map(|v| v.parse()).transpose()?;
+        let burst: f64 =
+            get_extra(k.extra, "burst").map(|v| v.parse()).transpose()?.unwrap_or(8.0);
+        let shed_depth: usize =
+            get_extra(k.extra, "shed-depth").map(|v| v.parse()).transpose()?.unwrap_or(64);
+        let mut front = serve::HttpFront::bind(
+            &format!("127.0.0.1:{port}"),
+            serve::HttpFrontConfig { rate_per_sec, burst, shed_depth },
+        )?;
+        front.install_token_hook(&mut sched);
+        if get_extra(k.extra, "prompt").is_some() {
+            eprintln!("note: --prompt is ignored with --http — prompts arrive in request bodies");
+        }
+        println!(
+            "listening on http://{} (POST /generate streams SSE tokens, GET /healthz; \
+             rate limit {}, shed depth {shed_depth}; Ctrl-C to stop)",
+            front.local_addr()?,
+            match rate_per_sec {
+                Some(r) => format!("{r} req/s per tenant, burst {burst}"),
+                None => "off".to_string(),
+            },
+        );
+        loop {
+            front.poll(&mut sched)?;
+            if sched.is_idle() && front.conn_count() == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        }
+    } else if get_extra(k.extra, "rate-limit").is_some()
+        || get_extra(k.extra, "burst").is_some()
+        || get_extra(k.extra, "shed-depth").is_some()
+    {
+        eprintln!(
+            "note: --rate-limit/--burst/--shed-depth shape the HTTP front and have \
+             no effect without --http PORT"
+        );
+    }
+
     println!(
         "serving {} request(s) on {} slot(s), sampler {}, max {} new tokens, \
          prefill chunk {}{}{}{}{}{}{}",
@@ -732,6 +789,58 @@ fn serve_with<E: serve::DecodeEngine>(engine: E, k: &ServeKnobs) -> Result<()> {
              or ui.perfetto.dev)",
             records.len()
         );
+    }
+    Ok(())
+}
+
+/// Open-loop load harness (`spinquant loadgen`): seeded Poisson arrivals
+/// with tenant skew against a loopback HTTP/SSE front. Drives a
+/// deterministic [`serve::MockEngine`] scheduler — the harness measures
+/// the serving stack (scheduling + transport), not the model, and so runs
+/// without artifacts.
+fn cmd_loadgen(extra: &[(String, String)]) -> Result<()> {
+    let rps: f64 = get_extra(extra, "rps").map(|v| v.parse()).transpose()?.unwrap_or(50.0);
+    let duration: f64 =
+        get_extra(extra, "duration").map(|v| v.parse()).transpose()?.unwrap_or(2.0);
+    if rps <= 0.0 || duration <= 0.0 {
+        anyhow::bail!("loadgen needs --rps > 0 and --duration > 0 (got {rps}, {duration})");
+    }
+    let seed: u64 = get_extra(extra, "seed").map(|v| v.parse()).transpose()?.unwrap_or(0);
+    let tenants: usize =
+        get_extra(extra, "tenants").map(|v| v.parse()).transpose()?.unwrap_or(4);
+    let slots: usize = get_extra(extra, "slots").map(|v| v.parse()).transpose()?.unwrap_or(8);
+    let max_queue: usize =
+        get_extra(extra, "max-queue").map(|v| v.parse()).transpose()?.unwrap_or(256);
+    let rate_per_sec: Option<f64> =
+        get_extra(extra, "rate-limit").map(|v| v.parse()).transpose()?;
+    let burst: f64 = get_extra(extra, "burst").map(|v| v.parse()).transpose()?.unwrap_or(8.0);
+    let shed_depth: usize =
+        get_extra(extra, "shed-depth").map(|v| v.parse()).transpose()?.unwrap_or(64);
+
+    let mut sched = serve::Scheduler::new(serve::MockEngine::new(slots, 512, 64), max_queue)?;
+    let mut front = serve::HttpFront::bind(
+        "127.0.0.1:0",
+        serve::HttpFrontConfig { rate_per_sec, burst, shed_depth },
+    )?;
+    front.install_token_hook(&mut sched);
+    let cfg = serve::LoadGenConfig {
+        rps,
+        duration_secs: duration,
+        seed,
+        tenants,
+        ..serve::LoadGenConfig::default()
+    };
+    eprintln!(
+        "loadgen: offering {rps} req/s for {duration}s (seed {seed}, {tenants} tenants, \
+         {slots} slots) over http://{}",
+        front.local_addr()?
+    );
+    let report = serve::run_open_loop(&mut front, &mut sched, &cfg)?;
+    let j = report.to_json(rps);
+    println!("{}", j.to_string());
+    if let Some(path) = get_extra(extra, "out") {
+        spinquant::report::write_json(std::path::Path::new(path), &j)?;
+        eprintln!("report -> {path}");
     }
     Ok(())
 }

@@ -1,0 +1,350 @@
+//! Open-loop load generator for the HTTP/SSE front.
+//!
+//! *Open-loop* is the load-model that matters for "millions of users":
+//! arrivals follow a seeded Poisson process and are launched **on
+//! schedule whether or not earlier requests have finished** — a slow
+//! server faces a growing backlog exactly as it would in production.
+//! (A closed-loop client that waits for each response before sending the
+//! next one silently throttles itself to the server's pace and hides
+//! tail latency — the classic coordinated-omission trap. TTFT here is
+//! measured from the *scheduled* arrival instant, not from when the
+//! client thread got around to connecting, for the same reason.)
+//!
+//! The generator precomputes the full arrival schedule from one seed
+//! (exponential inter-arrivals at the offered RPS, per-request prompt and
+//! output lengths uniform over configured ranges, tenant picked with a
+//! 1/(rank+1) Zipf-ish skew), then drives the real front over loopback:
+//! worker threads own only their sockets while the scheduler stays on the
+//! driver thread, which alternates spawning due arrivals with
+//! [`HttpFront::poll`].
+//!
+//! [`LoadReport::to_json`] emits the `serving_load` point shape the CI
+//! schema pins: offered/goodput RPS, TTFT p50/p99, inter-token p99, shed
+//! and error counts.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::serve::engine::DecodeEngine;
+use crate::serve::http::{blocking_request, HttpFront, StreamOutcome};
+use crate::serve::scheduler::Scheduler;
+use crate::util::json::{self, Json};
+use crate::util::prng::Prng;
+use crate::util::timer::Samples;
+
+/// Knobs for one open-loop run (one RPS point of a sweep).
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    /// Offered arrival rate, requests/sec.
+    pub rps: f64,
+    /// Arrival window: requests are scheduled in [0, duration_secs).
+    pub duration_secs: f64,
+    /// Seed for the whole schedule (arrivals, lengths, tenants, sampling
+    /// seeds). Same seed ⇒ byte-identical offered load.
+    pub seed: u64,
+    /// Number of distinct tenant keys; tenant `t0` is the hottest
+    /// (weight ∝ 1/(rank+1)).
+    pub tenants: usize,
+    /// Uniform prompt-length range `[lo, hi]` in bytes.
+    pub prompt_len: (usize, usize),
+    /// Uniform `max_new_tokens` range `[lo, hi]`.
+    pub max_new: (usize, usize),
+    /// Per-read client socket timeout; also bounds the post-window drain.
+    pub timeout_secs: f64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        Self {
+            rps: 50.0,
+            duration_secs: 1.0,
+            seed: 0,
+            tenants: 4,
+            prompt_len: (8, 24),
+            max_new: (4, 16),
+            timeout_secs: 10.0,
+        }
+    }
+}
+
+/// One precomputed arrival.
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    /// Scheduled offset from the run start, seconds.
+    pub at_secs: f64,
+    pub tenant: String,
+    /// Ready-to-send `/generate` JSON body.
+    pub body: String,
+}
+
+/// Expand a config into its full deterministic arrival schedule.
+pub fn build_schedule(cfg: &LoadGenConfig) -> Vec<Arrival> {
+    let mut rng = Prng::new(cfg.seed);
+    // Tenant weights ∝ 1/(rank+1); sample by cumulative mass.
+    let weights: Vec<f64> = (0..cfg.tenants.max(1)).map(|i| 1.0 / (i + 1) as f64).collect();
+    let total_w: f64 = weights.iter().sum();
+    let mut plan = Vec::new();
+    let mut t = 0.0f64;
+    loop {
+        // Exponential inter-arrival at rate `rps`. uniform() < 1.0 always,
+        // so ln(1-u) is finite.
+        let u = rng.uniform() as f64;
+        t += -(1.0 - u).ln() / cfg.rps.max(1e-9);
+        if t >= cfg.duration_secs {
+            break;
+        }
+        let mut pick = rng.uniform() as f64 * total_w;
+        let mut tenant = 0usize;
+        for (i, w) in weights.iter().enumerate() {
+            if pick < *w {
+                tenant = i;
+                break;
+            }
+            pick -= w;
+        }
+        let (plo, phi) = cfg.prompt_len;
+        let plen = plo + rng.below(phi.saturating_sub(plo) + 1);
+        let prompt: String =
+            (0..plen.max(1)).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+        let (nlo, nhi) = cfg.max_new;
+        let max_new = nlo.max(1) + rng.below(nhi.saturating_sub(nlo) + 1);
+        let seed = rng.next_u64();
+        plan.push(Arrival {
+            at_secs: t,
+            tenant: format!("t{tenant}"),
+            body: format!(
+                "{{\"prompt\":\"{prompt}\",\"max_new_tokens\":{max_new},\"seed\":{seed}}}"
+            ),
+        });
+    }
+    plan
+}
+
+/// Aggregated outcome of one open-loop run.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    /// Requests the schedule offered (sent or attempted).
+    pub offered: usize,
+    /// Streams that reached their `done` event.
+    pub completed: usize,
+    /// 429 responses (rate-limit or watermark shed).
+    pub shed: usize,
+    /// Transport failures and timeouts.
+    pub errors: usize,
+    /// Wall-clock of the whole run (arrival window + drain), seconds.
+    pub elapsed_secs: f64,
+    /// `completed / elapsed_secs`.
+    pub goodput_rps: f64,
+    /// TTFT measured from the *scheduled* arrival instant (µs samples).
+    pub ttft_us: Samples,
+    /// Gaps between consecutive token events within a stream (µs).
+    pub inter_token_us: Samples,
+}
+
+impl LoadReport {
+    /// The `serving_load` point shape the CI jq schema requires.
+    pub fn to_json(&self, offered_rps: f64) -> Json {
+        json::obj(vec![
+            ("offered_rps", json::num(offered_rps)),
+            ("offered", json::num(self.offered as f64)),
+            ("completed", json::num(self.completed as f64)),
+            ("shed_429", json::num(self.shed as f64)),
+            ("errors", json::num(self.errors as f64)),
+            ("elapsed_secs", json::num(self.elapsed_secs)),
+            ("goodput_rps", json::num(self.goodput_rps)),
+            ("ttft_p50_ms", json::num(self.ttft_us.percentile_us(50.0) / 1e3)),
+            ("ttft_p99_ms", json::num(self.ttft_us.percentile_us(99.0) / 1e3)),
+            (
+                "inter_token_p99_ms",
+                json::num(self.inter_token_us.percentile_us(99.0) / 1e3),
+            ),
+        ])
+    }
+}
+
+/// Drive `front`/`sched` with the offered load described by `cfg`.
+///
+/// The scheduler never leaves this thread (PJRT handles are not `Send`);
+/// each worker thread owns exactly one socket. The driver loop spawns
+/// arrivals when they come due, polls the front, and drains finished
+/// workers until everything offered has resolved (or the hard deadline —
+/// window + timeout + slack — expires, with stragglers counted as
+/// errors).
+pub fn run_open_loop<E: DecodeEngine>(
+    front: &mut HttpFront,
+    sched: &mut Scheduler<E>,
+    cfg: &LoadGenConfig,
+) -> Result<LoadReport> {
+    let plan = build_schedule(cfg);
+    let addr = front.local_addr()?;
+    let timeout = Duration::from_secs_f64(cfg.timeout_secs);
+    let (tx, rx) = mpsc::channel::<(f64, Result<StreamOutcome>)>();
+    let mut handles = Vec::new();
+    let mut report = LoadReport { offered: plan.len(), ..LoadReport::default() };
+
+    let t0 = Instant::now();
+    let hard_deadline =
+        t0 + Duration::from_secs_f64(cfg.duration_secs + cfg.timeout_secs + 5.0);
+    let mut next = 0usize;
+    let mut resolved = 0usize;
+    let mut outcomes: Vec<(f64, Result<StreamOutcome>)> = Vec::new();
+    while resolved < plan.len() {
+        let now_secs = t0.elapsed().as_secs_f64();
+        let mut progressed = false;
+        while next < plan.len() && plan[next].at_secs <= now_secs {
+            let a = plan[next].clone();
+            let due = t0 + Duration::from_secs_f64(a.at_secs);
+            let tx = tx.clone();
+            handles.push(thread::spawn(move || {
+                // Open-loop accounting: latency is charged from the
+                // *scheduled* instant, so driver lateness counts against
+                // the server, not in its favor.
+                let lag_ms =
+                    Instant::now().saturating_duration_since(due).as_secs_f64() * 1e3;
+                let res = blocking_request(addr, &a.body, &a.tenant, timeout);
+                let _ = tx.send((lag_ms, res));
+            }));
+            next += 1;
+            progressed = true;
+        }
+        front.poll(sched)?;
+        while let Ok(done) = rx.try_recv() {
+            outcomes.push(done);
+            resolved += 1;
+            progressed = true;
+        }
+        if Instant::now() > hard_deadline {
+            break;
+        }
+        if !progressed && sched.is_idle() {
+            // Nothing due, nothing in flight server-side: don't busy-spin.
+            thread::sleep(Duration::from_micros(200));
+        }
+    }
+    drop(tx);
+    for h in handles {
+        let _ = h.join();
+    }
+    while let Ok(done) = rx.try_recv() {
+        outcomes.push(done);
+    }
+    report.elapsed_secs = t0.elapsed().as_secs_f64();
+
+    for (lag_ms, res) in outcomes {
+        match res {
+            Err(_) => report.errors += 1,
+            Ok(o) if o.status == 429 => report.shed += 1,
+            Ok(o) if o.status == 200 && o.done.is_some() => {
+                report.completed += 1;
+                if let Some(&first) = o.token_at_ms.first() {
+                    report.ttft_us.push((lag_ms + first) * 1e3);
+                }
+                for w in o.token_at_ms.windows(2) {
+                    report.inter_token_us.push((w[1] - w[0]) * 1e3);
+                }
+            }
+            Ok(_) => report.errors += 1,
+        }
+    }
+    // Stragglers past the hard deadline never reported back.
+    report.errors += report.offered - (report.completed + report.shed + report.errors);
+    report.goodput_rps = if report.elapsed_secs > 0.0 {
+        report.completed as f64 / report.elapsed_secs
+    } else {
+        0.0
+    };
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::MockEngine;
+    use crate::serve::http::HttpFrontConfig;
+
+    fn cfg(rps: f64, duration: f64, seed: u64) -> LoadGenConfig {
+        LoadGenConfig { rps, duration_secs: duration, seed, ..LoadGenConfig::default() }
+    }
+
+    #[test]
+    fn schedule_is_seeded_and_reproducible() {
+        let a = build_schedule(&cfg(100.0, 2.0, 9));
+        let b = build_schedule(&cfg(100.0, 2.0, 9));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_secs, y.at_secs);
+            assert_eq!(x.body, y.body);
+            assert_eq!(x.tenant, y.tenant);
+        }
+        let c = build_schedule(&cfg(100.0, 2.0, 10));
+        assert!(
+            a.len() != c.len() || a.iter().zip(&c).any(|(x, y)| x.body != y.body),
+            "different seeds must produce different load"
+        );
+    }
+
+    #[test]
+    fn arrivals_are_poisson_at_the_offered_rate() {
+        let plan = build_schedule(&cfg(200.0, 5.0, 3));
+        let expect = 200.0 * 5.0;
+        assert!(
+            (plan.len() as f64) > expect * 0.8 && (plan.len() as f64) < expect * 1.2,
+            "offered {} vs expected ~{expect}",
+            plan.len()
+        );
+        let mut last = 0.0;
+        for a in &plan {
+            assert!(a.at_secs > last, "arrivals must be strictly ordered");
+            last = a.at_secs;
+        }
+        assert!(last < 5.0, "no arrival outside the window");
+    }
+
+    #[test]
+    fn tenant_skew_prefers_low_ranks() {
+        let plan = build_schedule(&cfg(500.0, 4.0, 12));
+        let count = |t: &str| plan.iter().filter(|a| a.tenant == t).count();
+        assert!(
+            count("t0") > count("t3"),
+            "rank-0 tenant must dominate the tail ({} vs {})",
+            count("t0"),
+            count("t3")
+        );
+    }
+
+    /// End-to-end smoke: a short real open-loop run over loopback against
+    /// a MockEngine scheduler completes requests and produces a
+    /// well-formed report.
+    #[test]
+    fn open_loop_drives_the_real_front() {
+        let mut sched = Scheduler::new(MockEngine::new(4, 128, 64), 64).unwrap();
+        let mut front = HttpFront::bind("127.0.0.1:0", HttpFrontConfig::default()).unwrap();
+        front.install_token_hook(&mut sched);
+        let c = LoadGenConfig {
+            rps: 100.0,
+            duration_secs: 0.2,
+            seed: 7,
+            max_new: (2, 6),
+            timeout_secs: 10.0,
+            ..LoadGenConfig::default()
+        };
+        let r = run_open_loop(&mut front, &mut sched, &c).unwrap();
+        assert!(r.offered > 0);
+        assert_eq!(r.errors, 0, "loopback run must not drop requests");
+        assert_eq!(r.completed + r.shed, r.offered);
+        assert!(r.completed > 0);
+        assert!(r.goodput_rps > 0.0);
+        assert!(r.ttft_us.len() == r.completed);
+        let j = r.to_json(c.rps);
+        for key in
+            ["offered_rps", "goodput_rps", "ttft_p50_ms", "ttft_p99_ms", "inter_token_p99_ms", "shed_429"]
+        {
+            assert!(j.get(key).is_some(), "report missing {key}");
+        }
+        // The report must serialize to strict JSON (no NaN/inf).
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+}

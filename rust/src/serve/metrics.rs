@@ -111,6 +111,16 @@ pub struct ServingMetrics {
     /// Verify engine calls issued by the speculative decode path (each
     /// replaces what would have been one plain decode step).
     pub verify_calls: usize,
+    /// Engine-drafter time (us), one sample per drafted window: the
+    /// re-sync feed plus the K-step draft loop a [`SpecDraft::Engine`]
+    /// rung runs before each verify call. The n-gram drafter costs no
+    /// engine work and records nothing here. Counted into [`busy_secs`]
+    /// — leaving it out overstated `tokens_per_sec` whenever an engine
+    /// drafter was in the loop.
+    ///
+    /// [`SpecDraft::Engine`]: super::scheduler::SpecDraft::Engine
+    /// [`busy_secs`]: Self::busy_secs
+    pub draft_us: Samples,
 }
 
 impl ServingMetrics {
@@ -289,6 +299,12 @@ impl ServingMetrics {
         self.verify_calls += 1;
     }
 
+    /// Record the engine-drafter work behind one drafted window (re-sync
+    /// feed + draft loop), in microseconds.
+    pub fn record_draft_call(&mut self, draft_us: f64) {
+        self.draft_us.push(draft_us);
+    }
+
     /// Fraction of proposed draft tokens the target engine accepted;
     /// 0 when nothing was ever proposed. Proposals stranded by a verify
     /// fault count against the rate (they cost a draft, bought nothing).
@@ -314,12 +330,18 @@ impl ServingMetrics {
         }
     }
 
-    /// Engine busy time: the sum of decode-step and prefill-call latencies,
-    /// in seconds. In the single-threaded scheduler this is the serving
-    /// wall clock.
+    /// Engine busy time: the sum of decode-step, prefill-call, and
+    /// engine-drafter latencies, in seconds. In the single-threaded
+    /// scheduler this is the serving wall clock. Speculative *verify*
+    /// calls need no term of their own: each one is recorded through
+    /// `record_step` (it replaces a plain decode step), so verify latency
+    /// is already in this denominator exactly once — `verify_calls` is a
+    /// pure counter, never a second timing source, so nothing is
+    /// double-counted.
     pub fn busy_secs(&self) -> f64 {
         (self.step_us.mean_us() * self.step_us.len() as f64
-            + self.prefill_us.mean_us() * self.prefill_us.len() as f64)
+            + self.prefill_us.mean_us() * self.prefill_us.len() as f64
+            + self.draft_us.mean_us() * self.draft_us.len() as f64)
             / 1e6
     }
 
@@ -409,6 +431,8 @@ impl ServingMetrics {
             ("draft_tokens_accepted", json::num(self.draft_tokens_accepted as f64)),
             ("accept_rate", json::num(self.accept_rate())),
             ("verify_calls", json::num(self.verify_calls as f64)),
+            ("draft_calls", json::num(self.draft_us.len() as f64)),
+            ("draft_ms_mean", json::num(self.draft_us.mean_us() / 1e3)),
             (
                 "histograms",
                 json::obj(vec![

@@ -150,6 +150,42 @@
 //! the `spec_decode` bench section), never bytes. `--spec-k 0` (or
 //! omitting the flag) leaves every pre-existing path bit-untouched.
 //!
+//! # Network front & overload policy (`serve --http PORT`)
+//!
+//! [`http::HttpFront`] is the network edge: a dependency-free HTTP/1.1 +
+//! SSE front built as a non-blocking `TcpListener` poll loop *around* the
+//! scheduler on its owning thread (PJRT handles are not `Send`, so the
+//! scheduler never migrates; sockets multiplex to it). `POST /generate`
+//! opens a `text/event-stream` fed by the scheduler's per-token hook
+//! ([`Scheduler::set_token_hook`]):
+//!
+//! * `event: token`, `data: {"id":I,"idx":N,"byte":B}` — one event per
+//!   generated byte; `idx` is the absolute completion offset, so
+//!   eviction-restart replays dedupe against the stream's high-water mark
+//!   and a client never sees a byte twice.
+//! * `event: done`, `data: {completion bytes, reason, ttft_ms,
+//!   latency_ms}` — terminal; the connection then closes.
+//!
+//! Overload never queues unboundedly: admission is gated by a per-tenant
+//! token bucket (tenant = `x-tenant` header, default `anon`; `--rate-limit
+//! N` req/s sustained with a configurable burst) and by a queue-depth
+//! watermark (`--shed-depth D`) — either trips a complete, parseable
+//! `429` response, so the scheduler queue can never grow past the
+//! watermark. A client disconnect propagates to [`Scheduler::cancel`]
+//! *before* the next step runs: the slot and its pages free within one
+//! poll and in-flight pages are never donated to the prefix index
+//! (cancel tears down through the donation-free `release` path).
+//! `GET /healthz` reports queue depth / in-flight / slot capacity.
+//!
+//! [`loadgen`] is the matching measurement layer: a seeded *open-loop*
+//! Poisson load generator (`spinquant loadgen`, also the bench's
+//! `serving_load` sweep) that launches arrivals on schedule regardless of
+//! completions — so backlog builds exactly as under real load and TTFT is
+//! charged from the scheduled arrival instant (no coordinated omission) —
+//! with mixed prompt/output lengths and 1/(rank+1) tenant skew, driving
+//! the real front over loopback and reporting goodput, TTFT p50/p99 and
+//! inter-token p99 per offered-RPS point.
+//!
 //! # Failure model & recovery
 //!
 //! The step loop is an **error kernel**: every engine-touching path in
@@ -189,6 +225,8 @@
 
 pub mod blocks;
 pub mod engine;
+pub mod http;
+pub mod loadgen;
 pub mod metrics;
 pub mod prefix;
 pub mod sampling;
@@ -201,6 +239,8 @@ pub use engine::{
     DecodeEngine, DecodeVariant, FaultInjector, GenerationSession, MockEngine, PjrtEngine,
     ServeError,
 };
+pub use http::{HttpFront, HttpFrontConfig, TokenBucket};
+pub use loadgen::{run_open_loop, LoadGenConfig, LoadReport};
 pub use metrics::ServingMetrics;
 pub use sampling::{argmax, Sampler, SamplerKind};
 pub use scheduler::{

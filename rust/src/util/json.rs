@@ -85,7 +85,15 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                // JSON has no NaN/Infinity literals: `{n}` would emit
+                // `NaN`/`inf`, invalid JSON that silently breaks every
+                // downstream jq/schema consumer. A non-finite sample is a
+                // producer bug — assert loudly in debug builds, serialize
+                // as null in release so the report stays parseable.
+                debug_assert!(n.is_finite(), "non-finite number {n} in JSON output");
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -346,5 +354,19 @@ mod tests {
     fn unicode_escape() {
         let v = Json::parse(r#""AB""#).unwrap();
         assert_eq!(v.as_str(), Some("AB"));
+    }
+
+    /// Non-finite floats have no JSON literal: the writer must emit `null`
+    /// (never `NaN`/`inf`, which every strict parser — including the CI jq
+    /// schema gate — rejects). Debug builds assert on the producer bug, so
+    /// this regression test pins the release-mode serialization.
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "non-finite number"))]
+    fn non_finite_numbers_serialize_as_null() {
+        let v = arr(vec![num(f64::NAN), num(f64::INFINITY), num(f64::NEG_INFINITY), num(1.5)]);
+        let s = v.to_string();
+        assert_eq!(s, "[null,null,null,1.5]");
+        // The output must round-trip through our own strict parser too.
+        assert!(Json::parse(&s).is_ok());
     }
 }

@@ -49,6 +49,11 @@ impl Samples {
     /// are bit-identical — but `ServingMetrics::to_json` reads ~10
     /// percentiles of the same (growing) sample sets, and this does one
     /// clone-and-sort for all of them instead of one per call.
+    ///
+    /// `p` outside [0, 100] is a caller bug (the raw index formula would
+    /// read out of bounds and panic); it is clamped to the valid range so
+    /// release report code degrades to min/max instead of crashing, and
+    /// debug builds assert loudly.
     pub fn percentiles_us(&self, ps: &[f64]) -> Vec<f64> {
         if self.us.is_empty() {
             return vec![0.0; ps.len()];
@@ -56,7 +61,14 @@ impl Samples {
         let mut v = self.us.clone();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         ps.iter()
-            .map(|&p| v[((v.len() - 1) as f64 * p / 100.0).round() as usize])
+            .map(|&p| {
+                debug_assert!(
+                    (0.0..=100.0).contains(&p),
+                    "percentile {p} outside [0, 100]"
+                );
+                let p = p.clamp(0.0, 100.0);
+                v[((v.len() - 1) as f64 * p / 100.0).round() as usize]
+            })
             .collect()
     }
 
@@ -125,6 +137,33 @@ mod tests {
         assert_eq!(s.percentile_us(99.0), 0.0);
         assert_eq!(s.percentiles_us(&[50.0, 95.0, 99.0]), vec![0.0, 0.0, 0.0]);
         assert!(s.values().is_empty());
+    }
+
+    /// `p > 100` used to index `v[(len-1) * p / 100]` out of bounds and
+    /// panic unconditionally — on a public API the load-harness report code
+    /// calls with computed percentiles. Now: debug builds assert on the
+    /// misuse; release builds clamp to the max sample.
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "outside [0, 100]"))]
+    fn percentile_above_100_clamps_to_max() {
+        let mut s = Samples::new();
+        for v in [1.0, 2.0, 3.0] {
+            s.push(v);
+        }
+        assert_eq!(s.percentile_us(150.0), 3.0);
+        assert_eq!(s.percentiles_us(&[101.0, 1e9]), vec![3.0, 3.0]);
+    }
+
+    /// Negative percentiles are the mirror-image misuse: the rounded index
+    /// would be negative (a wrapping cast) — clamp to the min sample.
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "outside [0, 100]"))]
+    fn percentile_below_0_clamps_to_min() {
+        let mut s = Samples::new();
+        for v in [1.0, 2.0, 3.0] {
+            s.push(v);
+        }
+        assert_eq!(s.percentile_us(-5.0), 1.0);
     }
 
     #[test]
